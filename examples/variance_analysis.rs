@@ -1,0 +1,156 @@
+//! Lemma 2 / Eq. (35) validation (DESIGN.md experiment E10).
+//!
+//! The paper derives the asymptotic variance of the weighted-aggregating
+//! iterate on the quadratic F(x) = ½cx² with noisy gradients
+//! g(x) = cx − b̃x − h̃ (b̃, h̃ zero-mean, variances σ_b², σ_h²) and
+//! communication probability ζ per step:
+//!
+//!   lim Var(Σθᵢxᵢ) = η σ_h² ω (2c − ηc² − ησ_b²(1+δω)/(1+δ))⁻¹
+//!   with ω = Σθᵢ², δ = ζ / ((1−ζ)η(2c−ηc²)).
+//!
+//! This driver runs the actual stochastic recursion (pure rust — no PJRT
+//! needed: the lemma is about the update rule, not the model) for a grid
+//! of (p, ζ, weighting) and compares the empirical variance with the
+//! closed form. It also exercises Lemma 3's boundary: ζ=1 equal-weights
+//! ≡ mini-batch SGD.
+
+use wasgd::linalg;
+use wasgd::rng::Rng;
+
+/// Closed-form Eq. (35).
+fn predicted_variance(eta: f64, c: f64, sb2: f64, sh2: f64, omega: f64, zeta: f64) -> f64 {
+    let rho = 2.0 * c - eta * c * c;
+    let delta = if zeta >= 1.0 {
+        f64::INFINITY
+    } else {
+        zeta / ((1.0 - zeta) * eta * rho)
+    };
+    let frac = if delta.is_infinite() {
+        omega
+    } else {
+        (1.0 + delta * omega) / (1.0 + delta)
+    };
+    eta * sh2 * omega / (rho - eta * sb2 * frac)
+}
+
+/// Simulate the recursion and measure lim Var(Σθᵢxᵢ).
+fn empirical_variance(
+    p: usize,
+    theta: &[f32],
+    eta: f64,
+    c: f64,
+    sb: f64,
+    sh: f64,
+    zeta: f64,
+    steps: usize,
+    seed: u64,
+) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0f64; p];
+    let burn = steps / 4;
+    let mut acc = 0.0;
+    let mut acc2 = 0.0;
+    let mut n = 0usize;
+    for t in 0..steps {
+        for xi in x.iter_mut() {
+            let b = rng.normal() * sb;
+            let h = rng.normal() * sh;
+            // x ← x − η g(x),  g(x) = c x − b̃ x − h̃
+            *xi = (1.0 - eta * c) * *xi + eta * (b * *xi + h);
+        }
+        if rng.uniform() < zeta {
+            // Communication: everyone adopts the weighted aggregate (β=1).
+            let agg: f64 = x
+                .iter()
+                .zip(theta.iter())
+                .map(|(&xi, &th)| th as f64 * xi)
+                .sum();
+            for xi in x.iter_mut() {
+                *xi = agg;
+            }
+        }
+        if t >= burn {
+            let agg: f64 = x
+                .iter()
+                .zip(theta.iter())
+                .map(|(&xi, &th)| th as f64 * xi)
+                .sum();
+            acc += agg;
+            acc2 += agg * agg;
+            n += 1;
+        }
+    }
+    let mean = acc / n as f64;
+    acc2 / n as f64 - mean * mean
+}
+
+fn main() {
+    let eta = 0.05;
+    let c = 1.0;
+    let sb = 0.2;
+    let sh = 1.0;
+    let steps = 400_000;
+
+    println!("Lemma 2 (Eq. 35): predicted vs empirical asymptotic variance");
+    println!("{:<28} {:>6} {:>6} {:>12} {:>12} {:>8}", "weighting", "p", "ζ", "predicted", "empirical", "ratio");
+
+    let mut worst_ratio: f64 = 1.0;
+    for &p in &[2usize, 4, 8] {
+        for &zeta in &[0.1f64, 0.5, 0.9] {
+            for (name, theta) in [
+                ("equal", vec![1.0 / p as f32; p]),
+                (
+                    "boltzmann(ã=1, spread h)",
+                    linalg::boltzmann_weights(
+                        &(0..p).map(|i| 0.5 + i as f32 * 0.5).collect::<Vec<_>>(),
+                        1.0,
+                    ),
+                ),
+            ] {
+                let omega: f64 = theta.iter().map(|&t| (t as f64).powi(2)).sum();
+                let pred = predicted_variance(eta, c, sb * sb, sh * sh, omega, zeta);
+                let emp = empirical_variance(
+                    p, &theta, eta, c, sb, sh, zeta, steps, 1234 + p as u64,
+                );
+                let ratio = emp / pred;
+                worst_ratio = worst_ratio.max(ratio.max(1.0 / ratio));
+                println!(
+                    "{name:<28} {p:>6} {zeta:>6.1} {pred:>12.6} {emp:>12.6} {ratio:>8.3}"
+                );
+            }
+        }
+    }
+    println!("\nworst predicted/empirical mismatch: {worst_ratio:.3}×");
+    assert!(
+        worst_ratio < 1.35,
+        "empirical variance should track Eq. (35) within ~35% at this budget"
+    );
+
+    // Lemma 3: ζ=1 equal weights ≡ mini-batch SGD with batch p.
+    println!("\nLemma 3 boundary: ζ=1 equal-weight vs mini-batch (p=4)");
+    let p = 4;
+    let theta = vec![1.0 / p as f32; p];
+    let emp = empirical_variance(p, &theta, eta, c, sb, sh, 1.0, steps, 99);
+    // Mini-batch of p gradients: variance of noise term shrinks by p.
+    let mut rng = Rng::new(100);
+    let mut x = 0.0f64;
+    let (mut acc, mut acc2, mut n) = (0.0, 0.0, 0usize);
+    for t in 0..steps {
+        let mut g = 0.0;
+        for _ in 0..p {
+            let b = rng.normal() * sb;
+            let h = rng.normal() * sh;
+            g += c * x - b * x - h;
+        }
+        x -= eta * g / p as f64;
+        if t >= steps / 4 {
+            acc += x;
+            acc2 += x * x;
+            n += 1;
+        }
+    }
+    let mb = acc2 / n as f64 - (acc / n as f64).powi(2);
+    println!("aggregated ζ=1: {emp:.6}   mini-batch: {mb:.6}   ratio {:.3}", emp / mb);
+    assert!((emp / mb - 1.0).abs() < 0.25, "Lemma 3 equivalence violated");
+    println!("\nvariance analysis OK");
+}

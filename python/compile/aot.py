@@ -1,0 +1,122 @@
+"""AOT lowering: jax → HLO *text* artifacts consumed by the rust runtime.
+
+Run once at build time (``make artifacts``); python never appears on the
+training path. For every model variant we emit::
+
+    artifacts/<variant>/train_step.hlo.txt
+    artifacts/<variant>/eval_step.hlo.txt
+    artifacts/<variant>/aggregate_p{2,4,8,16}.hlo.txt
+    artifacts/<variant>/manifest.json
+
+Interchange format is HLO **text**, not ``lowered.compile().serialize()``:
+jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+DEFAULT_VARIANTS = [
+    "tiny_mlp",
+    "mnist_mlp",
+    "fashion_mlp",
+    "mnist_cnn",
+    "cifar_cnn10",
+    "cifar_cnn100",
+]
+WORKER_COUNTS = [2, 4, 8, 16]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    rust side unwraps one tuple regardless of arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(spec: M.ModelSpec, out_dir: str, worker_counts=None) -> dict:
+    """Lower all artifacts for one variant; returns its manifest dict."""
+    worker_counts = worker_counts or WORKER_COUNTS
+    os.makedirs(out_dir, exist_ok=True)
+    d = M.param_count(spec)
+    xdim = int(np.prod(spec.input_shape))
+
+    flat, x, y, lr = M.example_args(spec)
+    train = jax.jit(M.make_train_step(spec)).lower(flat, x, y, lr)
+    with open(os.path.join(out_dir, "train_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(train))
+
+    evl = jax.jit(M.make_eval_step(spec)).lower(flat, x, y)
+    with open(os.path.join(out_dir, "eval_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(evl))
+
+    s1 = jax.ShapeDtypeStruct((1,), np.float32)
+    for p in worker_counts:
+        stacked = jax.ShapeDtypeStruct((p, d), np.float32)
+        h = jax.ShapeDtypeStruct((p,), np.float32)
+        agg = jax.jit(M.make_aggregate(p)).lower(stacked, h, s1, s1)
+        with open(os.path.join(out_dir, f"aggregate_p{p}.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(agg))
+
+    manifest = {
+        "name": spec.name,
+        "param_count": d,
+        "batch": spec.batch,
+        "input_dim": xdim,
+        "input_shape": list(spec.input_shape),
+        "num_classes": spec.num_classes,
+        "worker_counts": worker_counts,
+        # Flat-ABI layout so the rust side can He-initialise without python.
+        "param_layout": [
+            {"name": n, "shape": list(s)} for n, s in M.param_shapes(spec)
+        ],
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts root")
+    ap.add_argument(
+        "--variants",
+        default=",".join(DEFAULT_VARIANTS),
+        help="comma-separated variant names (see compile.model.VARIANTS)",
+    )
+    ap.add_argument(
+        "--workers",
+        default=",".join(str(p) for p in WORKER_COUNTS),
+        help="comma-separated worker counts to lower aggregate kernels for",
+    )
+    args = ap.parse_args()
+
+    worker_counts = [int(p) for p in args.workers.split(",") if p]
+    names = [v for v in args.variants.split(",") if v]
+    top = {"variants": []}
+    for name in names:
+        spec = M.VARIANTS[name]
+        mf = lower_variant(spec, os.path.join(args.out, name), worker_counts)
+        top["variants"].append(name)
+        print(f"lowered {name}: D={mf['param_count']} B={mf['batch']}")
+    with open(os.path.join(args.out, "index.json"), "w") as f:
+        json.dump(top, f, indent=1)
+    print(f"artifacts written to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

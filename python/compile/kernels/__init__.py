@@ -1,0 +1,32 @@
+"""L1 Pallas kernels for the WASGD+ stack.
+
+- :mod:`.matmul` — MXU-tiled matmul (fwd + custom VJP), the model's GEMM.
+- :mod:`.softmax_xent` — fused cross-entropy loss + logits-grad.
+- :mod:`.aggregate` — the paper's Boltzmann weighted-aggregation update.
+- :mod:`.ref` — pure-jnp oracles used by the pytest suite.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); BlockSpecs are still written for the TPU memory system —
+see DESIGN.md §Hardware-Adaptation.
+"""
+
+from .matmul import matmul, matmul_with_blocks, vmem_bytes as matmul_vmem_bytes
+from .softmax_xent import softmax_xent, softmax_xent_with_grad
+from .aggregate import (
+    aggregate,
+    aggregate_with_blocks,
+    boltzmann_weights,
+    vmem_bytes as aggregate_vmem_bytes,
+)
+
+__all__ = [
+    "matmul",
+    "matmul_with_blocks",
+    "matmul_vmem_bytes",
+    "softmax_xent",
+    "softmax_xent_with_grad",
+    "aggregate",
+    "aggregate_with_blocks",
+    "boltzmann_weights",
+    "aggregate_vmem_bytes",
+]

@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: the paper's weighted aggregating update (Eq. 10+13).
+
+This is *the* contribution kernel. At every communication point all p
+workers hold parameters xⁱ ∈ R^D and loss energies hⁱ; the update is
+
+    h'ⁱ = hⁱ / Σⱼ hⱼ                       (scale-free normalisation)
+    θⁱ  = exp(-ã·h'ⁱ) / Σₖ exp(-ã·h'ᵏ)     (Boltzmann weights, Eq. 13)
+    xⁱ ← (1-β)·xⁱ + β·Σⱼ θⱼ·xʲ             (β-negotiation, Eq. 10)
+
+Shape view: stacked X is [p, D] with p ≤ 16 and D up to millions. The
+kernel tiles along D only; each grid step loads the full [p, bd] column
+panel into VMEM (p·bd·4 bytes — 512 KiB at p=16, bd=8192), computes the
+θ-weighted column sum with a [1, p]×[p, bd] matmul on the MXU, and writes
+the β-mixed panel back. θ itself is O(p) scalar work, computed once in
+jnp and passed in as a tiny operand (prologue — the SMEM-style scalar
+path on real TPU).
+
+The kernel is the TPU re-think of what the paper did with a parameter
+all-reduce on the K80 cluster: the reduction over workers becomes a tiny
+matvec per VMEM panel instead of a tree reduce over device buffers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Column-panel width. p·bd·4B + bd·4B ≈ 0.5 MiB (p=16, bd=8192): small
+# enough to double-buffer, large enough that the per-step θ·X matvec
+# saturates the VPU/MXU.
+DEFAULT_BD = 8192
+
+
+def _agg_kernel(theta_ref, beta_ref, x_ref, o_ref):
+    theta = theta_ref[...]           # [1, p]
+    beta = beta_ref[0, 0]            # scalar
+    x = x_ref[...]                   # [p, bd]
+    agg = jnp.dot(theta, x, preferred_element_type=jnp.float32)  # [1, bd]
+    o_ref[...] = (1.0 - beta) * x + beta * agg
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def boltzmann_weights(h: jnp.ndarray, a_tilde) -> jnp.ndarray:
+    """Eq. (13) — numerically-stable softmax of −ã·h/Σh."""
+    h = h.astype(jnp.float32)
+    hp = h / jnp.sum(h)
+    z = -a_tilde * hp
+    z = z - jnp.max(z)
+    e = jnp.exp(z)
+    return e / jnp.sum(e)
+
+
+@functools.partial(jax.jit, static_argnames=("bd",))
+def _aggregate_pallas(stacked, h, a_tilde, beta, bd: int):
+    p, d = stacked.shape
+    theta = boltzmann_weights(h, a_tilde).reshape(1, p)
+    beta_arr = jnp.asarray(beta, jnp.float32).reshape(1, 1)
+
+    bd = min(bd, _ceil_to(d, 8))
+    dp = _ceil_to(d, bd)
+    x = jnp.pad(stacked, ((0, 0), (0, dp - d))) if dp != d else stacked
+
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=(dp // bd,),
+        in_specs=[
+            pl.BlockSpec((1, p), lambda i: (0, 0)),     # θ: replicated
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),     # β: replicated
+            pl.BlockSpec((p, bd), lambda i: (0, i)),    # X column panel
+        ],
+        out_specs=pl.BlockSpec((p, bd), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((p, dp), jnp.float32),
+        interpret=True,
+    )(theta, beta_arr, x.astype(jnp.float32))
+    return out[:, :d]
+
+
+def aggregate(stacked: jnp.ndarray, h: jnp.ndarray, a_tilde, beta):
+    """Weighted-aggregating update for all workers at once → [p, D]."""
+    return _aggregate_pallas(stacked, h, a_tilde, beta, DEFAULT_BD)
+
+
+def aggregate_with_blocks(stacked, h, a_tilde, beta, bd=DEFAULT_BD):
+    """Perf-sweep entry exposing the panel width."""
+    return _aggregate_pallas(stacked, h, a_tilde, beta, bd)
+
+
+def vmem_bytes(p: int, bd: int = DEFAULT_BD, double_buffered: bool = True) -> int:
+    """VMEM footprint of one grid step (DESIGN.md §Perf)."""
+    mult = 2 if double_buffered else 1
+    return (p * bd * 4) * 2 * mult + p * 4 + 4

@@ -1,0 +1,167 @@
+"""L1 Pallas kernel: tiled matmul, the MXU-shaped workhorse of the model.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper trained on
+K80 GPUs where the hot spot is cuBLAS GEMM. On TPU the equivalent is a
+systolic-array (MXU) matmul fed from VMEM. We express the HBM↔VMEM
+schedule with a (M/bm, N/bn, K/bk) grid and BlockSpecs; the innermost K
+axis accumulates into the output block, which Pallas keeps resident in
+VMEM across the K steps (`dimension_semantics`: K is "arbitrary", M/N are
+"parallel").
+
+Everything runs under ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls — so the BlockSpec structure is what we
+optimise; wall-clock on CPU is *not* a TPU proxy.
+
+The public entry point :func:`matmul` is a ``jax.custom_vjp`` so that the
+L2 model can be differentiated straight through it (Pallas primitives do
+not carry automatic transpose rules): the backward pass is two more calls
+of the same kernel, dA = dY·Bᵀ and dB = Aᵀ·dY.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-friendly tile sizes. 128×128 matches the TPU systolic array;
+# bk=128 keeps the A/B tiles at 64 KiB each (f32) so a double-buffered
+# schedule fits comfortably in the ~16 MiB VMEM budget (see vmem_bytes()).
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+# Interpret-mode schedule (§Perf L1, EXPERIMENTS.md): pallas interpret=True
+# materialises a full-buffer dynamic-update-slice per grid step, so a
+# fine 128³ tiling of a [32768,144]@[144,16] im2col matmul costs ~512
+# full-output copies (measured 12.4 s vs 9 ms for the same math — 1300×).
+# For the CPU artifacts we therefore *coarsen* the tiles so the grid has
+# only a handful of steps, capping each block at ~16 MiB. The TPU-shaped
+# 128³ schedule remains the documented deployment tiling and is exercised
+# by the test suite; set WASGD_TPU_TILES=1 to lower with it.
+_FORCE_TPU_TILES = os.environ.get("WASGD_TPU_TILES", "") not in ("", "0")
+# Max f32 elements per block under the coarse interpret schedule (16 MiB).
+_COARSE_BLOCK_ELEMS = 1 << 22
+
+
+def vmem_bytes(bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+               dtype_bytes: int = 4, double_buffered: bool = True) -> int:
+    """Estimated VMEM footprint of one grid step of the kernel.
+
+    A-tile (bm×bk) + B-tile (bk×bn) + accumulator (bm×bn); the in/out
+    tiles double when the pipeline double-buffers HBM↔VMEM copies. Used by
+    DESIGN.md §Perf to pick block shapes: the footprint must stay well
+    under 16 MiB for the Mosaic pipeliner to overlap DMA with compute.
+    """
+    mult = 2 if double_buffered else 1
+    a = bm * bk * dtype_bytes * mult
+    b = bk * bn * dtype_bytes * mult
+    acc = bm * bn * 4  # accumulator is always f32
+    return a + b + acc
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] += a[i,k] @ b[k,j].
+
+    The output BlockSpec maps every k to the same (i, j) block, so o_ref
+    stays in VMEM across the K reduction; we zero it on the first step.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Pick a block size ≤ pref that keeps padding waste low.
+
+    For small problem dims (common in the classifier heads: C=10 or 100)
+    a full 128 block would be >90% padding; shrink to the padded dim
+    itself rounded to the 8-lane sublane granule.
+    """
+    if dim >= pref:
+        return pref
+    return max(8, _ceil_to(dim, 8))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def _matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, bm: int, bn: int, bk: int):
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {a.shape} @ {b.shape}"
+
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else a
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else b
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def _default_blocks(m: int, k: int, n: int):
+    """Block shapes for the default entry points: the MXU 128³ tiling when
+    WASGD_TPU_TILES is set, otherwise the coarse interpret schedule."""
+    if _FORCE_TPU_TILES:
+        return DEFAULT_BM, DEFAULT_BN, DEFAULT_BK
+    bk = _ceil_to(k, 8)
+    bn = _ceil_to(n, 8)
+    per_row = max(bk, bn, 1)
+    bm = max(8, min(_ceil_to(m, 8), _COARSE_BLOCK_ELEMS // per_row))
+    bm = _ceil_to(bm, 8)
+    return bm, bn, bk
+
+
+@jax.custom_vjp
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """``a @ b`` through the tiled Pallas kernel, differentiable."""
+    bm, bn, bk = _default_blocks(a.shape[0], a.shape[1], b.shape[1])
+    return _matmul_pallas(a, b, bm, bn, bk)
+
+
+def _matmul_fwd(a, b):
+    return matmul(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    # dA = g @ Bᵀ, dB = Aᵀ @ g — same kernel, transposed operands.
+    bm, bn, bk = _default_blocks(g.shape[0], g.shape[1], b.shape[0])
+    da = _matmul_pallas(g, b.T, bm, bn, bk)
+    bm, bn, bk = _default_blocks(a.shape[1], a.shape[0], g.shape[1])
+    db = _matmul_pallas(a.T, g, bm, bn, bk)
+    return da, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def matmul_with_blocks(a, b, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """Non-differentiable entry exposing block shapes, for the perf sweep."""
+    return _matmul_pallas(a, b, bm, bn, bk)

@@ -1,0 +1,59 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with nothing but `jax.numpy` ops. The pytest suite asserts
+`assert_allclose(kernel(...), ref(...))` over a hypothesis-driven sweep of
+shapes and dtypes — this is the core L1 correctness signal.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain dense matmul oracle: ``a @ b`` in float32 accumulation."""
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def softmax_xent_ref(logits: jnp.ndarray, onehot: jnp.ndarray):
+    """Fused softmax cross-entropy oracle.
+
+    Returns ``(per_example_loss [B], dlogits [B, C])`` where
+    ``loss_i = -log softmax(logits_i)[label_i]`` and
+    ``dlogits = softmax(logits) - onehot`` (the gradient of the *sum* of
+    per-example losses w.r.t. the logits).
+    """
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    z = logits - m
+    ez = jnp.exp(z)
+    denom = jnp.sum(ez, axis=-1, keepdims=True)
+    log_softmax = z - jnp.log(denom)
+    loss = -jnp.sum(onehot * log_softmax, axis=-1)
+    dlogits = ez / denom - onehot
+    return loss, dlogits
+
+
+def boltzmann_weights_ref(h: jnp.ndarray, a_tilde) -> jnp.ndarray:
+    """The paper's Eq. (13): θ = softmax(-ã · h / Σh).
+
+    ``h`` holds the per-worker loss energies (non-negative). The energies
+    are normalised by their sum before the Boltzmann exponent so the
+    temperature ã is scale-free (paper §3.2).
+    """
+    h = h.astype(jnp.float32)
+    hp = h / jnp.sum(h)
+    e = jnp.exp(-a_tilde * hp)
+    return e / jnp.sum(e)
+
+
+def aggregate_ref(stacked: jnp.ndarray, h: jnp.ndarray, a_tilde, beta):
+    """The paper's Eq. (10)+(13) in one shot for all p workers.
+
+    ``stacked`` is [p, D] (one row per worker), ``h`` is [p].
+    Returns [p, D] where row i = (1-β)·xᵢ + β·Σⱼ θⱼ xⱼ.
+    """
+    theta = boltzmann_weights_ref(h, a_tilde)  # [p]
+    agg = jnp.einsum("p,pd->d", theta, stacked.astype(jnp.float32))  # [D]
+    return (1.0 - beta) * stacked.astype(jnp.float32) + beta * agg[None, :]

@@ -1,0 +1,318 @@
+"""L2: the paper's models (CNN/MLP classifiers) as jitted jax functions.
+
+Everything here is build-time only. Each model *variant* bakes its shapes
+(batch size, input dims, class count, layer stack) and is lowered by
+:mod:`compile.aot` to three HLO-text artifacts:
+
+- ``train_step(params[D], x, y[B]i32, lr[1]) -> (params'[D], mean_loss, per_ex_loss[B])``
+- ``eval_step(params[D], x, y[B]i32)         -> (sum_loss, correct)``
+- ``aggregate(stacked[p,D], h[p], a_tilde[1], beta[1]) -> stacked'[p,D]``
+
+The flat-parameter ABI: the rust coordinator only ever sees ``f32[D]``;
+this module owns the (static) flatten/unflatten spec. The hot math —
+dense GEMMs, the classifier head and the aggregation — routes through the
+L1 Pallas kernels, so the lowered HLO contains exactly the schedules
+written in ``compile/kernels/``.
+
+Per-example losses come back from ``train_step`` for free (paper §3.3:
+the loss energy used for the communication weights is a byproduct of the
+forward pass — Eq. 26's estimation windows are then pure bookkeeping on
+the rust side).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import aggregate as pallas_aggregate
+from .kernels import matmul, softmax_xent
+
+
+# ---------------------------------------------------------------------------
+# Layer stack description
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    """3×3 SAME conv + ReLU, optionally followed by 2×2 max-pool."""
+
+    cin: int
+    cout: int
+    pool: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    """Fully-connected layer; ReLU unless it is the logits layer."""
+
+    din: int
+    dout: int
+    relu: bool = True
+
+
+Layer = object  # Conv | Dense
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """A fully static description of one model variant."""
+
+    name: str
+    input_shape: Tuple[int, ...]  # per-example, e.g. (28, 28, 1) or (784,)
+    num_classes: int
+    layers: Tuple[Layer, ...]
+    batch: int = 32
+
+    @property
+    def is_conv(self) -> bool:
+        return any(isinstance(l, Conv) for l in self.layers)
+
+
+def _mlp(name: str, din: int, hidden: Sequence[int], classes: int,
+         batch: int = 32) -> ModelSpec:
+    dims = [din, *hidden, classes]
+    layers = tuple(
+        Dense(dims[i], dims[i + 1], relu=(i + 1 < len(dims) - 1))
+        for i in range(len(dims) - 1)
+    )
+    return ModelSpec(name, (din,), classes, layers, batch)
+
+
+def _cnn(name: str, hw: int, cin: int, convs: Sequence[Tuple[int, bool]],
+         hidden: Sequence[int], classes: int, batch: int = 32) -> ModelSpec:
+    layers: List[Layer] = []
+    c, side = cin, hw
+    for cout, pool in convs:
+        layers.append(Conv(c, cout, pool))
+        c = cout
+        if pool:
+            side //= 2
+    flat = side * side * c
+    dims = [flat, *hidden, classes]
+    for i in range(len(dims) - 1):
+        layers.append(Dense(dims[i], dims[i + 1], relu=(i + 1 < len(dims) - 1)))
+    return ModelSpec(name, (hw, hw, cin), classes, tuple(layers), batch)
+
+
+#: Registry of lowerable variants. `tiny_mlp` exists for fast tests; the
+#: paper-scale `cifar_cnn_paper` reproduces the 8-conv/4-dense stack of §5.2.1.
+VARIANTS: Dict[str, ModelSpec] = {
+    s.name: s
+    for s in [
+        _mlp("tiny_mlp", 16, [8], 2, batch=8),
+        _mlp("mnist_mlp", 784, [256, 128], 10),
+        _mlp("fashion_mlp", 784, [256, 128], 10),
+        _cnn("mnist_cnn", 28, 1, [(16, True), (32, True)], [], 10),
+        _cnn("cifar_cnn10", 32, 3, [(16, True), (32, True), (64, True)], [128], 10),
+        _cnn("cifar_cnn100", 32, 3, [(16, True), (32, True), (64, True)], [128], 100),
+        _cnn(
+            "cifar_cnn_paper", 32, 3,
+            # (3,32)C(64,32)M(64,16)C(128,16)M(128,8)C(256,8)M(256,4)C(512,4)M(512,2)
+            [(64, True), (128, True), (256, True), (512, True)],
+            [128, 256, 512, 1024],
+            10,
+            batch=16,
+        ),
+    ]
+}
+
+
+# ---------------------------------------------------------------------------
+# Flat-parameter ABI
+# ---------------------------------------------------------------------------
+
+
+def param_shapes(spec: ModelSpec) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat layout."""
+    shapes: List[Tuple[str, Tuple[int, ...]]] = []
+    for i, layer in enumerate(spec.layers):
+        if isinstance(layer, Conv):
+            shapes.append((f"conv{i}_w", (3, 3, layer.cin, layer.cout)))
+            shapes.append((f"conv{i}_b", (layer.cout,)))
+        else:
+            shapes.append((f"dense{i}_w", (layer.din, layer.dout)))
+            shapes.append((f"dense{i}_b", (layer.dout,)))
+    return shapes
+
+
+def param_count(spec: ModelSpec) -> int:
+    return int(sum(np.prod(s) for _, s in param_shapes(spec)))
+
+
+def unflatten(spec: ModelSpec, flat: jnp.ndarray) -> List[jnp.ndarray]:
+    out, off = [], 0
+    for _, shape in param_shapes(spec):
+        n = int(np.prod(shape))
+        out.append(flat[off : off + n].reshape(shape))
+        off += n
+    return out
+
+
+def flatten(params: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    return jnp.concatenate([p.reshape(-1) for p in params])
+
+
+def init_params(spec: ModelSpec, seed: int = 0) -> np.ndarray:
+    """He-normal init, returned flat as numpy (consumed by rust via file)."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in param_shapes(spec):
+        if name.endswith("_b"):
+            chunks.append(np.zeros(shape, np.float32))
+        else:
+            fan_in = int(np.prod(shape[:-1]))
+            std = float(np.sqrt(2.0 / max(fan_in, 1)))
+            chunks.append(rng.normal(0.0, std, size=shape).astype(np.float32))
+    return np.concatenate([c.reshape(-1) for c in chunks])
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+#: Conv implementation: "lax" (direct XLA convolution — the CPU-artifact
+#: default; on TPU XLA maps convs to the MXU natively) or "pallas"
+#: (im2col + the L1 matmul kernel — the explicit MXU mapping, verified by
+#: pytest; ~3× slower under interpret mode because every pallas_call
+#: round-trips its operands through full-buffer copies — see
+#: EXPERIMENTS.md §Perf L2 iteration 2).
+import os
+
+CONV_IMPL = os.environ.get("WASGD_CONV_IMPL", "lax")
+
+
+def _conv3x3_pallas(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """SAME 3×3 conv as im2col + the Pallas matmul (MXU-shaped).
+
+    Patch extraction uses `conv_general_dilated_patches`, whose output
+    feature axis orders (cin, kh, kw) — the kernel reshape below matches
+    that ordering (verified against `lax.conv_general_dilated` in the
+    pytest suite).
+    """
+    n, h, wd, cin = x.shape
+    cout = w.shape[-1]
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(3, 3),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # [N, H, W, cin*9] ordered (cin, kh, kw)
+    mat = patches.reshape(n * h * wd, cin * 9)
+    # w is [kh, kw, cin, cout] → reorder to (cin, kh, kw, cout)
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(cin * 9, cout)
+    out = matmul(mat, wmat).reshape(n, h, wd, cout)
+    return out + b
+
+
+def _conv3x3_lax(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """SAME 3×3 conv through `lax.conv_general_dilated` (XLA native)."""
+    return (
+        jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        + b
+    )
+
+
+def _conv3x3(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    if CONV_IMPL == "pallas":
+        return _conv3x3_pallas(x, w, b)
+    return _conv3x3_lax(x, w, b)
+
+
+def _maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward(spec: ModelSpec, flat: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits [B, C] from flat params and a batch of inputs."""
+    params = unflatten(spec, flat)
+    b = x.shape[0]
+    if spec.is_conv:
+        h = x.reshape((b, *spec.input_shape))
+    else:
+        h = x.reshape((b, spec.input_shape[0]))
+    pi = 0
+    for layer in spec.layers:
+        if isinstance(layer, Conv):
+            w, bias = params[pi], params[pi + 1]
+            pi += 2
+            h = jax.nn.relu(_conv3x3(h, w, bias))
+            if layer.pool:
+                h = _maxpool2(h)
+        else:
+            if h.ndim > 2:
+                h = h.reshape(b, -1)
+            w, bias = params[pi], params[pi + 1]
+            pi += 2
+            h = matmul(h, w) + bias
+            if layer.relu:
+                h = jax.nn.relu(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# The three lowerable entry points
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(spec: ModelSpec) -> Callable:
+    """SGD step. Per-example losses are returned so the coordinator can
+    maintain the paper's free loss-estimation windows (Eq. 26)."""
+
+    def loss_fn(flat, x, onehot):
+        logits = forward(spec, flat, x)
+        per_ex = softmax_xent(logits, onehot)
+        return jnp.mean(per_ex), per_ex
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(flat, x, y, lr):
+        onehot = jax.nn.one_hot(y, spec.num_classes, dtype=jnp.float32)
+        (mean_loss, per_ex), g = grad_fn(flat, x, onehot)
+        new_flat = flat - lr[0] * g
+        return new_flat, mean_loss, per_ex
+
+    return train_step
+
+
+def make_eval_step(spec: ModelSpec) -> Callable:
+    def eval_step(flat, x, y):
+        logits = forward(spec, flat, x)
+        onehot = jax.nn.one_hot(y, spec.num_classes, dtype=jnp.float32)
+        per_ex = softmax_xent(logits, onehot)
+        pred = jnp.argmax(logits, axis=-1)
+        correct = jnp.sum((pred == y).astype(jnp.float32))
+        return jnp.sum(per_ex), correct
+
+    return eval_step
+
+
+def make_aggregate(p: int) -> Callable:
+    """The communication step for a cohort of p workers (Eq. 10+13)."""
+
+    def agg(stacked, h, a_tilde, beta):
+        return pallas_aggregate(stacked, h, a_tilde[0], beta[0])
+
+    return agg
+
+
+def example_args(spec: ModelSpec):
+    """ShapeDtypeStructs for lowering train/eval."""
+    d = param_count(spec)
+    xdim = int(np.prod(spec.input_shape))
+    flat = jax.ShapeDtypeStruct((d,), jnp.float32)
+    x = jax.ShapeDtypeStruct((spec.batch, xdim), jnp.float32)
+    y = jax.ShapeDtypeStruct((spec.batch,), jnp.int32)
+    lr = jax.ShapeDtypeStruct((1,), jnp.float32)
+    return flat, x, y, lr

@@ -1,0 +1,241 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py is the
+core correctness signal for the kernels that end up inside the AOT HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    aggregate,
+    aggregate_with_blocks,
+    boltzmann_weights,
+    matmul,
+    matmul_with_blocks,
+    softmax_xent,
+    softmax_xent_with_grad,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    a = _rand(seed, (m, k))
+    b = _rand(seed + 1, (k, n))
+    got = matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 64),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_vjp_matches_ref(m, k, n, seed):
+    a = _rand(seed, (m, k))
+    b = _rand(seed + 1, (k, n))
+    f = lambda a, b: jnp.sum(matmul(a, b) ** 2)
+    g = lambda a, b: jnp.sum(jnp.matmul(a, b) ** 2)
+    da1, db1 = jax.grad(f, argnums=(0, 1))(a, b)
+    da2, db2 = jax.grad(g, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(da1, da2, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(db1, db2, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (32, 16, 64), (128, 128, 128)])
+def test_matmul_block_shapes_equivalent(bm, bn, bk):
+    """Block shape is a schedule choice, never a numerics choice."""
+    a = _rand(7, (100, 70))
+    b = _rand(8, (70, 30))
+    want = ref.matmul_ref(a, b)
+    got = matmul_with_blocks(a, b, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_bf16_inputs():
+    a = _rand(1, (33, 17), dtype=jnp.bfloat16)
+    b = _rand(2, (17, 9), dtype=jnp.bfloat16)
+    got = matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    assert got.dtype == jnp.float32  # f32 accumulation
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_matmul_identity():
+    a = _rand(3, (50, 50))
+    np.testing.assert_allclose(matmul(a, jnp.eye(50)), a, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# softmax cross-entropy
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 150),
+    c=st.sampled_from([2, 10, 100]),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_xent_matches_ref(b, c, scale, seed):
+    logits = _rand(seed, (b, c), scale=scale)
+    y = jax.random.randint(jax.random.PRNGKey(seed + 1), (b,), 0, c)
+    onehot = jax.nn.one_hot(y, c)
+    l1, d1 = softmax_xent_with_grad(logits, onehot)
+    l2, d2 = ref.softmax_xent_ref(logits, onehot)
+    np.testing.assert_allclose(l1, l2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(d1, d2, rtol=1e-4, atol=1e-5)
+
+
+def test_xent_vjp_is_dlogits():
+    logits = _rand(5, (17, 10), scale=3.0)
+    y = jax.random.randint(jax.random.PRNGKey(6), (17,), 0, 10)
+    onehot = jax.nn.one_hot(y, 10)
+    g = jax.grad(lambda lg: jnp.sum(softmax_xent(lg, onehot)))(logits)
+    _, want = ref.softmax_xent_ref(logits, onehot)
+    np.testing.assert_allclose(g, want, rtol=1e-4, atol=1e-5)
+
+
+def test_xent_extreme_logits_stable():
+    """Max-subtraction must keep huge logits finite."""
+    logits = jnp.array([[1e4, -1e4, 0.0], [500.0, 499.0, -500.0]], jnp.float32)
+    onehot = jax.nn.one_hot(jnp.array([0, 1]), 3)
+    loss, dlg = softmax_xent_with_grad(logits, onehot)
+    assert bool(jnp.all(jnp.isfinite(loss)))
+    assert bool(jnp.all(jnp.isfinite(dlg)))
+    # Correct-and-confident row 0 → ~0 loss.
+    assert float(loss[0]) < 1e-3
+
+
+def test_xent_uniform_logits():
+    b, c = 9, 10
+    logits = jnp.zeros((b, c))
+    onehot = jax.nn.one_hot(jnp.arange(b) % c, c)
+    loss, _ = softmax_xent_with_grad(logits, onehot)
+    np.testing.assert_allclose(loss, np.full(b, np.log(c)), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# weighted aggregation (the paper's Eq. 10+13)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    p=st.sampled_from([2, 3, 4, 8, 16]),
+    d=st.integers(1, 3000),
+    a_tilde=st.sampled_from([0.0, 0.1, 1.0, 10.0]),
+    beta=st.sampled_from([0.0, 0.3, 0.7, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_aggregate_matches_ref(p, d, a_tilde, beta, seed):
+    x = _rand(seed, (p, d))
+    h = jnp.abs(_rand(seed + 1, (p,))) + 0.05
+    got = aggregate(x, h, a_tilde, beta)
+    want = ref.aggregate_ref(x, h, a_tilde, beta)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    p=st.sampled_from([2, 4, 8]),
+    a_tilde=st.sampled_from([0.0, 0.5, 2.0, 50.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_boltzmann_weights_simplex(p, a_tilde, seed):
+    """θ is always a probability vector (Σθ=1, θ≥0)."""
+    h = jnp.abs(_rand(seed, (p,))) + 1e-3
+    th = boltzmann_weights(h, a_tilde)
+    np.testing.assert_allclose(float(jnp.sum(th)), 1.0, rtol=1e-5)
+    assert bool(jnp.all(th >= 0))
+
+
+def test_boltzmann_property1_equal_limit():
+    """Paper Property 1: ã→0 ⇒ θ = 1/p exactly."""
+    h = jnp.array([0.1, 5.0, 2.0, 0.7])
+    th = boltzmann_weights(h, 0.0)
+    np.testing.assert_allclose(th, np.full(4, 0.25), rtol=1e-6)
+
+
+def test_boltzmann_property1_argmin_limit():
+    """Paper Property 1: ã→∞ ⇒ best (lowest-loss) worker dominates."""
+    h = jnp.array([0.1, 5.0, 2.0, 0.7])
+    th = np.asarray(boltzmann_weights(h, 1e4))
+    assert th.argmax() == 0
+    assert th[0] > 0.999
+
+
+def test_boltzmann_monotone_in_loss():
+    """Lower loss energy ⇒ weakly larger weight, any temperature."""
+    h = jnp.array([0.5, 1.0, 2.0, 4.0])
+    for a in [0.1, 1.0, 10.0]:
+        th = np.asarray(boltzmann_weights(h, a))
+        assert all(th[i] >= th[i + 1] - 1e-7 for i in range(3))
+
+
+def test_aggregate_beta0_identity():
+    x = _rand(11, (4, 257))
+    h = jnp.ones(4)
+    got = aggregate(x, h, 1.0, 0.0)
+    np.testing.assert_allclose(got, x, rtol=1e-5, atol=1e-6)
+
+
+def test_aggregate_beta1_consensus():
+    """β=1 ⇒ every worker holds the identical aggregate (paper §4.1)."""
+    x = _rand(12, (4, 257))
+    h = jnp.abs(_rand(13, (4,))) + 0.1
+    got = np.asarray(aggregate(x, h, 1.0, 1.0))
+    for i in range(1, 4):
+        np.testing.assert_allclose(got[i], got[0], rtol=1e-5, atol=1e-6)
+
+
+def test_aggregate_preserves_consensus_fixedpoint():
+    """If all workers agree already, aggregation is a no-op for any β, ã."""
+    row = _rand(14, (1, 129))
+    x = jnp.tile(row, (8, 1))
+    h = jnp.abs(_rand(15, (8,))) + 0.1
+    got = aggregate(x, h, 3.0, 0.6)
+    np.testing.assert_allclose(got, x, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bd", [8, 64, 1024, 8192])
+def test_aggregate_panel_width_equivalent(bd):
+    x = _rand(16, (4, 1234))
+    h = jnp.abs(_rand(17, (4,))) + 0.1
+    want = ref.aggregate_ref(x, h, 1.0, 0.8)
+    got = aggregate_with_blocks(x, h, 1.0, 0.8, bd=bd)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_aggregate_scale_free_energies():
+    """h is normalised by Σh (Eq. 12-13): scaling all energies is a no-op."""
+    x = _rand(18, (4, 100))
+    h = jnp.abs(_rand(19, (4,))) + 0.1
+    a = aggregate(x, h, 2.0, 0.9)
+    b = aggregate(x, h * 1000.0, 2.0, 0.9)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,186 @@
+"""L2 correctness: model shapes, flat-parameter ABI, training dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(42)
+
+
+def _batch(rng, spec, scale=1.0):
+    xdim = int(np.prod(spec.input_shape))
+    x = jnp.asarray(rng.normal(size=(spec.batch, xdim)).astype(np.float32) * scale)
+    y = jnp.asarray(rng.integers(0, spec.num_classes, size=(spec.batch,)).astype(np.int32))
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# Flat ABI
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(M.VARIANTS))
+def test_param_count_matches_layout(name):
+    spec = M.VARIANTS[name]
+    total = sum(int(np.prod(s)) for _, s in M.param_shapes(spec))
+    assert total == M.param_count(spec)
+
+
+@pytest.mark.parametrize("name", ["tiny_mlp", "mnist_mlp", "mnist_cnn"])
+def test_flatten_unflatten_roundtrip(name):
+    spec = M.VARIANTS[name]
+    flat = jnp.asarray(M.init_params(spec, 3))
+    parts = M.unflatten(spec, flat)
+    back = M.flatten(parts)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(back))
+
+
+def test_init_params_deterministic():
+    spec = M.VARIANTS["tiny_mlp"]
+    a = M.init_params(spec, 7)
+    b = M.init_params(spec, 7)
+    c = M.init_params(spec, 8)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_init_biases_zero():
+    spec = M.VARIANTS["tiny_mlp"]
+    flat = M.init_params(spec, 0)
+    parts = M.unflatten(spec, jnp.asarray(flat))
+    names = [n for n, _ in M.param_shapes(spec)]
+    for n, p in zip(names, parts):
+        if n.endswith("_b"):
+            assert float(jnp.abs(p).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Forward / conv correctness
+# ---------------------------------------------------------------------------
+
+
+def test_conv3x3_pallas_matches_lax_conv(rng):
+    """The explicit im2col+Pallas MXU mapping must equal XLA's native conv
+    (whichever of the two the artifacts were lowered with)."""
+    x = jnp.asarray(rng.normal(size=(2, 16, 16, 3)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, 3, 5)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(5,)).astype(np.float32))
+    got = M._conv3x3_pallas(x, w, b)
+    want = M._conv3x3_lax(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv3x3_dispatch_is_consistent(rng):
+    x = jnp.asarray(rng.normal(size=(1, 8, 8, 2)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, 2, 4)).astype(np.float32))
+    b = jnp.zeros(4, jnp.float32)
+    got = M._conv3x3(x, w, b)
+    want = (M._conv3x3_pallas if M.CONV_IMPL == "pallas" else M._conv3x3_lax)(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["tiny_mlp", "mnist_mlp", "mnist_cnn", "cifar_cnn10"])
+def test_forward_logit_shape(name, rng):
+    spec = M.VARIANTS[name]
+    flat = jnp.asarray(M.init_params(spec, 0))
+    x, _ = _batch(rng, spec)
+    logits = M.forward(spec, flat, x)
+    assert logits.shape == (spec.batch, spec.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_maxpool_halves_spatial(rng):
+    x = jnp.asarray(rng.normal(size=(1, 8, 8, 2)).astype(np.float32))
+    out = M._maxpool2(x)
+    assert out.shape == (1, 4, 4, 2)
+    assert float(out[0, 0, 0, 0]) == float(jnp.max(x[0, :2, :2, 0]))
+
+
+# ---------------------------------------------------------------------------
+# Training dynamics
+# ---------------------------------------------------------------------------
+
+
+def test_train_step_decreases_loss_tiny(rng):
+    spec = M.VARIANTS["tiny_mlp"]
+    flat = jnp.asarray(M.init_params(spec, 0))
+    ts = jax.jit(M.make_train_step(spec))
+    x, y = _batch(rng, spec)
+    lr = jnp.asarray([0.1], jnp.float32)
+    first = None
+    for _ in range(40):
+        flat, ml, per_ex = ts(flat, x, y, lr)
+        if first is None:
+            first = float(ml)
+    assert float(ml) < first * 0.7
+
+
+def test_train_step_per_example_loss_consistent(rng):
+    """mean_loss output must equal the mean of the per-example vector —
+    the coordinator's free loss-estimation (Eq. 26) relies on it."""
+    spec = M.VARIANTS["tiny_mlp"]
+    flat = jnp.asarray(M.init_params(spec, 1))
+    ts = jax.jit(M.make_train_step(spec))
+    x, y = _batch(rng, spec)
+    _, ml, per_ex = ts(flat, x, y, jnp.asarray([0.05], jnp.float32))
+    np.testing.assert_allclose(float(ml), float(jnp.mean(per_ex)), rtol=1e-5)
+
+
+def test_train_step_lr_zero_is_identity(rng):
+    spec = M.VARIANTS["tiny_mlp"]
+    flat = jnp.asarray(M.init_params(spec, 2))
+    ts = jax.jit(M.make_train_step(spec))
+    x, y = _batch(rng, spec)
+    new, _, _ = ts(flat, x, y, jnp.asarray([0.0], jnp.float32))
+    np.testing.assert_allclose(np.asarray(new), np.asarray(flat), atol=1e-7)
+
+
+def test_eval_step_counts(rng):
+    spec = M.VARIANTS["tiny_mlp"]
+    flat = jnp.asarray(M.init_params(spec, 0))
+    es = jax.jit(M.make_eval_step(spec))
+    x, y = _batch(rng, spec)
+    sl, correct = es(flat, x, y)
+    assert 0.0 <= float(correct) <= spec.batch
+    assert float(sl) > 0.0
+
+
+def test_gradient_matches_finite_difference(rng):
+    """Spot-check the full pallas-backed backward pass numerically."""
+    spec = M.VARIANTS["tiny_mlp"]
+    flat = jnp.asarray(M.init_params(spec, 5))
+    x, y = _batch(rng, spec)
+    onehot = jax.nn.one_hot(y, spec.num_classes)
+
+    def loss(f):
+        logits = M.forward(spec, f, x)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        z = logits - m
+        lse = jnp.log(jnp.sum(jnp.exp(z), axis=-1, keepdims=True))
+        return jnp.mean(-jnp.sum(onehot * (z - lse), axis=-1))
+
+    g = jax.grad(loss)(flat)
+    eps = 1e-3
+    for idx in [0, 17, int(M.param_count(spec)) - 1]:
+        e = jnp.zeros_like(flat).at[idx].set(eps)
+        fd = (float(loss(flat + e)) - float(loss(flat - e))) / (2 * eps)
+        assert abs(fd - float(g[idx])) < 5e-3, f"idx {idx}: fd={fd} ad={float(g[idx])}"
+
+
+# ---------------------------------------------------------------------------
+# Aggregate entry used by AOT
+# ---------------------------------------------------------------------------
+
+
+def test_make_aggregate_shapes():
+    agg = jax.jit(M.make_aggregate(4))
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 123)).astype(np.float32))
+    h = jnp.abs(x[:, 0]) + 0.1
+    out = agg(x, h, jnp.asarray([1.0], jnp.float32), jnp.asarray([0.8], jnp.float32))
+    assert out.shape == (4, 123)

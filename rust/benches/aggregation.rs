@@ -1,0 +1,71 @@
+//! Micro-bench: the weighted-aggregation boundary (the paper's hot
+//! communication step) — PJRT Pallas artifact vs the host fallback —
+//! plus the weight evaluation itself. Informs the DESIGN.md §Perf choice
+//! of when the artifact path pays off.
+
+use wasgd::algorithms::host_aggregate;
+use wasgd::bench::{black_box, Bencher};
+use wasgd::linalg;
+use wasgd::rng::Rng;
+use wasgd::runtime::Engine;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(1);
+
+    // Host weight evaluation.
+    for p in [4usize, 16] {
+        let h: Vec<f32> = (0..p).map(|_| rng.uniform_in(0.1, 2.0)).collect();
+        b.bench(&format!("boltzmann_weights p={p}"), || {
+            black_box(linalg::boltzmann_weights(black_box(&h), 1.0));
+        });
+    }
+
+    // Host aggregation across parameter sizes (D of tiny ≈ 154, mnist ≈ 235k).
+    for (dname, d) in [("tiny", 154usize), ("mnist_mlp", 235_146)] {
+        for p in [2usize, 4, 8] {
+            let mut params: Vec<Vec<f32>> = (0..p)
+                .map(|_| {
+                    let mut v = vec![0.0f32; d];
+                    rng.fill_normal(&mut v, 0.0, 1.0);
+                    v
+                })
+                .collect();
+            let h: Vec<f32> = (0..p).map(|_| rng.uniform_in(0.1, 2.0)).collect();
+            let theta = linalg::boltzmann_weights(&h, 1.0);
+            b.bench(&format!("host_aggregate {dname} p={p} (D={d})"), || {
+                host_aggregate(black_box(&mut params), black_box(&theta), 0.9);
+            });
+        }
+    }
+
+    // PJRT Pallas artifact path (needs artifacts on disk).
+    let root = std::path::Path::new("artifacts");
+    for variant in ["tiny_mlp", "mnist_mlp"] {
+        match Engine::load(root, variant) {
+            Ok(engine) => {
+                let d = engine.manifest.param_count;
+                for p in [2usize, 4, 8] {
+                    if !engine.has_aggregate(p) {
+                        continue;
+                    }
+                    let mut stacked = vec![0.0f32; p * d];
+                    rng.fill_normal(&mut stacked, 0.0, 1.0);
+                    let h: Vec<f32> = (0..p).map(|_| rng.uniform_in(0.1, 2.0)).collect();
+                    // Warm the executable cache.
+                    let _ = engine.aggregate(&stacked, &h, 1.0, 0.9).unwrap();
+                    b.bench(&format!("pjrt_aggregate {variant} p={p} (D={d})"), || {
+                        black_box(
+                            engine
+                                .aggregate(black_box(&stacked), black_box(&h), 1.0, 0.9)
+                                .unwrap(),
+                        );
+                    });
+                }
+            }
+            Err(e) => eprintln!("skipping {variant}: {e} (run `make artifacts`)"),
+        }
+    }
+
+    b.summary("aggregation boundary");
+}

@@ -1,0 +1,61 @@
+//! Micro-bench: simulated-cluster substrate (clock advance, collectives)
+//! and the deterministic PRNG — the coordinator's non-PJRT hot loop.
+//! These must stay negligible next to a PJRT step (~ms): the simulation
+//! layer may not become the bottleneck (DESIGN.md §Perf L3 target).
+
+use wasgd::bench::{black_box, Bencher};
+use wasgd::cluster::{ComputeModel, FabricConfig, SimCluster};
+use wasgd::data::order::{delta_blocked_order, OrderState, RecordWindow};
+use wasgd::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // PRNG primitives.
+    let mut rng = Rng::new(1);
+    b.bench("rng next_u64", || {
+        black_box(rng.next_u64());
+    });
+    b.bench("rng normal", || {
+        black_box(rng.normal());
+    });
+    b.bench("rng permutation n=8192", || {
+        black_box(rng.permutation(8192));
+    });
+
+    // Cluster ops.
+    for p in [4usize, 16] {
+        let mut c = SimCluster::new(p, FabricConfig::default(), ComputeModel::default(), 7);
+        b.bench(&format!("advance_compute p={p} (1 step each)"), || {
+            for i in 0..p {
+                c.advance_compute(i, 1);
+            }
+        });
+        b.bench(&format!("sync_allgather p={p} 1MiB"), || {
+            black_box(c.sync_allgather(1 << 20));
+        });
+        b.bench(&format!("async_gather p={p} quorum={}", p - 1), || {
+            black_box(c.async_gather(0, p - 1, 1 << 20));
+        });
+    }
+
+    // Order machinery.
+    let labels: Vec<i32> = (0..8192).map(|i| (i % 10) as i32).collect();
+    let mut orng = Rng::new(3);
+    b.bench("delta_blocked_order n=8192 δ=10", || {
+        black_box(delta_blocked_order(&labels, 10, &mut orng));
+    });
+    let mut st = OrderState::new(8192, 4, 5);
+    b.bench("order_for_part n=8192/4", || {
+        st.record_score(0, 0.5);
+        black_box(st.order_for_part(0));
+    });
+    let w = RecordWindow::new(1000, 100, 4);
+    let mut k = 0usize;
+    b.bench("record_window is_recorded", || {
+        k = (k + 1) % 1000;
+        black_box(w.is_recorded(k));
+    });
+
+    b.summary("fabric & substrates");
+}

@@ -1,0 +1,64 @@
+//! Micro-bench: the PJRT hot path — train_step / eval_batch per variant,
+//! and one full coordinator iteration per algorithm (the end-to-end step
+//! cost that every figure's wall-time depends on). §Perf L3: the
+//! coordinator overhead around `train_step` must stay in the noise.
+
+use wasgd::bench::{black_box, Bencher};
+use wasgd::config::{AlgoKind, ExperimentConfig};
+use wasgd::coordinator::run_experiment_full;
+use wasgd::data::synth::DatasetKind;
+use wasgd::rng::Rng;
+use wasgd::runtime::Engine;
+
+fn main() {
+    let mut b = Bencher::new();
+    let root = std::path::Path::new("artifacts");
+    let mut rng = Rng::new(1);
+
+    for variant in ["tiny_mlp", "mnist_mlp", "cifar_cnn10"] {
+        let engine = match Engine::load(root, variant) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("skipping {variant}: {e}");
+                continue;
+            }
+        };
+        let m = &engine.manifest;
+        let mut params = m.init_params(1);
+        let mut x = vec![0.0f32; m.batch * m.input_dim];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let y: Vec<i32> = (0..m.batch).map(|_| rng.below(m.num_classes) as i32).collect();
+        // Warm-up/compile.
+        let _ = engine.train_step(&params, &x, &y, 0.01).unwrap();
+        b.bench(&format!("train_step {variant} (D={})", m.param_count), || {
+            let (next, out) = engine
+                .train_step(black_box(&params), black_box(&x), black_box(&y), 0.01)
+                .unwrap();
+            params = next;
+            black_box(out.loss);
+        });
+        b.bench(&format!("eval_batch {variant}"), || {
+            black_box(engine.eval_batch(black_box(&params), &x, &y).unwrap());
+        });
+    }
+
+    // End-to-end: one full (short) coordinator run per algorithm on tiny.
+    for algo in [
+        AlgoKind::Sequential,
+        AlgoKind::Easgd,
+        AlgoKind::Wasgd,
+        AlgoKind::WasgdPlus,
+    ] {
+        let mut cfg = ExperimentConfig::paper_preset(DatasetKind::Tiny);
+        cfg.algo = algo;
+        cfg.p = 4;
+        cfg.epochs = 0.5;
+        cfg.eval_every = 1_000_000; // suppress eval inside the bench
+        cfg.backups = 1;
+        b.bench(&format!("short run {} (0.5 epoch, p=4)", algo.name()), || {
+            black_box(run_experiment_full(black_box(&cfg)).unwrap());
+        });
+    }
+
+    b.summary("step throughput");
+}

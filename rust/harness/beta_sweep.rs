@@ -1,0 +1,91 @@
+//! Fig. 5 — β exploration (DESIGN.md E3).
+//!
+//! β determines how much of the aggregation result each worker accepts
+//! (Eq. 10). Baseline is full acceptance (β = 1); candidates sweep
+//! β ∈ {0.1 … 0.9}. Paper shape: an optimum strictly below 1 (0.9 for
+//! MNIST/CIFAR-10, 0.8 for CIFAR-100, 0.7 for Fashion) and degradation
+//! toward the sequential case as β → 0.
+//!
+//! ```bash
+//! cargo run --release --bin bench_beta_sweep -- [--dataset mnist]
+//!     [--epochs 1.0] [--p 4] [--betas 0.1,...,1.0]
+//! ```
+
+use anyhow::Result;
+use wasgd::config::{AlgoKind, ExperimentConfig};
+use wasgd::data::synth::DatasetKind;
+use wasgd::harness::{eq47_point, print_sweep, write_sweep_csv, SharedEnv, RESULTS_DIR, SWEEP_SEEDS};
+use wasgd::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env()?;
+    let dataset_s = args.str_flag("dataset", "mnist");
+    let epochs = args.num_flag("epochs", 1.0f64)?;
+    let p = args.num_flag("p", 4usize)?;
+    let betas_s = args.str_flag("betas", "0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8,0.9");
+    let seeds_n = args.num_flag("seeds", 5usize)?;
+    args.finish()?;
+
+    let dataset = DatasetKind::parse(&dataset_s)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset_s:?}"))?;
+    let betas: Vec<f32> = betas_s
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse())
+        .collect::<Result<_, _>>()?;
+    let seeds = &SWEEP_SEEDS[..seeds_n.min(SWEEP_SEEDS.len())];
+
+    let mut base = ExperimentConfig::paper_preset(dataset);
+    base.algo = AlgoKind::WasgdPlus;
+    base.p = p;
+    base.epochs = epochs;
+    base.eval_every = (base.tau / 2).max(32);
+    base.eval_batches = 6;
+    let env = SharedEnv::new(&base)?;
+
+    println!(
+        "Fig. 5 β-sweep — {} (p={p}, {epochs} epochs, {} seeds); baseline β=1",
+        dataset.name(),
+        seeds.len()
+    );
+
+    let mut b1 = base.clone();
+    b1.beta = 1.0;
+    let baseline: Vec<_> = env.run_seeds(&b1, seeds)?.into_iter().map(|o| o.log).collect();
+
+    let mut loss_rows = Vec::new();
+    let mut err_rows = Vec::new();
+    for &beta in &betas {
+        let mut cfg = base.clone();
+        cfg.beta = beta;
+        let cand: Vec<_> = env.run_seeds(&cfg, seeds)?.into_iter().map(|o| o.log).collect();
+        let (dl, el) = eq47_point(&baseline, &cand, |r| r.train_loss);
+        let (de, ee) = eq47_point(&baseline, &cand, |r| r.train_error);
+        loss_rows.push((format!("{beta}"), dl, el));
+        err_rows.push((format!("{beta}"), de, ee));
+    }
+
+    print_sweep("Δ train loss vs β=1 baseline (positive = partial acceptance better)", "β", &loss_rows);
+    print_sweep("Δ train error vs β=1 baseline", "β", &err_rows);
+
+    write_sweep_csv(
+        &format!("{RESULTS_DIR}/fig5_beta_sweep_{}_loss.csv", dataset.name()),
+        "beta,delta_loss,err",
+        &loss_rows,
+    )?;
+    write_sweep_csv(
+        &format!("{RESULTS_DIR}/fig5_beta_sweep_{}_error.csv", dataset.name()),
+        "beta,delta_error,err",
+        &err_rows,
+    )?;
+
+    let best = loss_rows
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    println!(
+        "\noptimal β = {} (Δloss {:+.5}); paper: β* < 1, degrading as β→0",
+        best.0, best.1
+    );
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Fig. 6 — weight-estimation accuracy vs sample count m (DESIGN.md E4).
+//!
+//! At every communication boundary the coordinator estimates the
+//! Boltzmann weights from the m recorded batch losses (Eq. 26) and —
+//! with the probe enabled — also computes the exact weights from a
+//! full-dataset evaluation (Eq. 20). The per-boundary L1 gap is the
+//! paper's Eq. (27) error (∈ [0, 2]). Paper shape: m ∈ {1, 10} noisy and
+//! unstable, m ∈ {100, 1000} accurate; m = 100 is the efficiency pick.
+//!
+//! ```bash
+//! cargo run --release --bin bench_m_estimation -- [--dataset mnist]
+//!     [--epochs 2.0] [--p 4] [--ms 1,10,100,1000]
+//! ```
+
+use anyhow::Result;
+use wasgd::config::{AlgoKind, ExperimentConfig};
+use wasgd::harness::SharedEnv;
+use wasgd::data::synth::DatasetKind;
+use wasgd::harness::RESULTS_DIR;
+use wasgd::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env()?;
+    let dataset_s = args.str_flag("dataset", "mnist");
+    let epochs = args.num_flag("epochs", 2.0f64)?;
+    let p = args.num_flag("p", 4usize)?;
+    let ms_s = args.str_flag("ms", "1,10,100,1000");
+    args.finish()?;
+
+    let dataset = DatasetKind::parse(&dataset_s)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset_s:?}"))?;
+    let ms: Vec<usize> = ms_s
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse())
+        .collect::<Result<_, _>>()?;
+
+    let env = SharedEnv::new(&ExperimentConfig::paper_preset(dataset))?;
+
+    println!("Fig. 6 estimation accuracy — {} (p={p}, {epochs} epochs)", dataset.name());
+    println!("{:>6}  {:>10}  {:>10}  {:>10}  {:>10}", "m", "mean err", "max err", "min err", "boundaries");
+
+    let mut all_rows: Vec<(String, Vec<(u64, f32)>)> = Vec::new();
+    let mut means = Vec::new();
+    for &m in &ms {
+        let mut cfg = ExperimentConfig::paper_preset(dataset);
+        cfg.algo = AlgoKind::WasgdPlus;
+        cfg.p = p;
+        cfg.epochs = epochs;
+        cfg.m = m;
+        cfg.c = if m >= 4 { 4 } else { 1 };
+        cfg.track_estimation_error = true;
+        cfg.eval_every = usize::MAX / 2; // only the probe matters here
+        let out = env.run(&cfg)?;
+        let errs = &out.estimation_errors;
+        let mean = errs.iter().map(|&(_, e)| e as f64).sum::<f64>() / errs.len().max(1) as f64;
+        let max = errs.iter().map(|&(_, e)| e).fold(0.0f32, f32::max);
+        let min = errs.iter().map(|&(_, e)| e).fold(2.0f32, f32::min);
+        println!("{m:>6}  {mean:>10.5}  {max:>10.5}  {min:>10.5}  {:>10}", errs.len());
+        means.push((m, mean));
+        all_rows.push((format!("m={m}"), errs.clone()));
+    }
+
+    // CSV: iteration,error per m-series.
+    let path = format!("{RESULTS_DIR}/fig6_m_estimation_{}.csv", dataset.name());
+    {
+        use std::io::Write as _;
+        std::fs::create_dir_all(RESULTS_DIR)?;
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "series,iteration,eq27_error")?;
+        for (label, errs) in &all_rows {
+            for &(it, e) in errs {
+                writeln!(f, "{label},{it},{e:.6}")?;
+            }
+        }
+    }
+    println!("wrote {path}");
+
+    // Shape: error should shrink with m.
+    let first = means.first().unwrap();
+    let biggest = means.last().unwrap();
+    println!(
+        "\nshape: m={} mean err {:.4} vs m={} mean err {:.4} → {}",
+        first.0,
+        first.1,
+        biggest.0,
+        biggest.1,
+        if biggest.1 <= first.1 { "larger m estimates better (matches paper)" } else { "MISMATCH" }
+    );
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! Figs. 8–11 — the main results (DESIGN.md E6–E9): all seven schemes on
+//! one dataset analogue, across worker counts, plotting train/test
+//! loss/error against *simulated cluster time*.
+//!
+//! Paper shapes to reproduce:
+//! * WASGD+ dominates every baseline in time-to-loss at p ∈ {4, 8};
+//! * SPSGD destabilises as p grows (non-convex parameter averaging);
+//! * OMWU trails because full-dataset weight evaluation is charged;
+//! * MMWU ≈ sequential SGD; EASGD sits between SPSGD and WASGD.
+//!
+//! ```bash
+//! cargo run --release --bin bench_main -- --dataset mnist   # Fig. 11
+//! cargo run --release --bin bench_main -- --dataset fashion # Fig. 10
+//! cargo run --release --bin bench_main -- --dataset cifar10 --epochs 0.5   # Fig. 8
+//! cargo run --release --bin bench_main -- --dataset cifar100 --epochs 0.5  # Fig. 9
+//! ```
+
+use anyhow::Result;
+use wasgd::config::{AlgoKind, ExperimentConfig};
+use wasgd::harness::SharedEnv;
+use wasgd::data::synth::DatasetKind;
+use wasgd::harness::RESULTS_DIR;
+use wasgd::metrics::write_csv;
+use wasgd::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env()?;
+    let dataset_s = args.str_flag("dataset", "mnist");
+    let epochs = args.num_flag("epochs", 1.0f64)?;
+    let ps_s = args.opt_str("ps");
+    args.finish()?;
+
+    let dataset = DatasetKind::parse(&dataset_s)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset_s:?}"))?;
+    // Paper: GPUs p ∈ {2,4,8} for CIFAR, CPUs p ∈ {4,8,16} for (F)MNIST.
+    let default_ps = match dataset {
+        DatasetKind::Cifar10Like | DatasetKind::Cifar100Like => "2,4,8",
+        _ => "4,8,16",
+    };
+    let ps: Vec<usize> = ps_s
+        .unwrap_or_else(|| default_ps.to_string())
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse())
+        .collect::<Result<_, _>>()?;
+
+    let fig = match dataset {
+        DatasetKind::Cifar10Like => "fig8",
+        DatasetKind::Cifar100Like => "fig9",
+        DatasetKind::FashionLike => "fig10",
+        _ => "fig11",
+    };
+    println!(
+        "{} main results — {} ({} epochs, p ∈ {ps:?})",
+        fig,
+        dataset.name(),
+        epochs
+    );
+
+    let env = SharedEnv::new(&ExperimentConfig::paper_preset(dataset))?;
+    let mut logs = Vec::new();
+    for &p in &ps {
+        println!("\np = {p}");
+        println!(
+            "{:<12} {:>11} {:>10} {:>10} {:>10} {:>11}",
+            "algo", "train_loss", "train_err", "test_loss", "test_err", "sim_time_s"
+        );
+        let mut rows: Vec<(String, f64, f64)> = Vec::new();
+        for algo in AlgoKind::ALL {
+            let mut cfg = ExperimentConfig::paper_preset(dataset);
+            cfg.algo = algo;
+            cfg.p = p;
+            cfg.backups = 1;
+            cfg.epochs = epochs;
+            cfg.eval_every = (cfg.tau / 2).max(32);
+            cfg.eval_batches = 6;
+            let mut out = env.run(&cfg)?;
+            out.log.label = format!("{} p={p}", algo.name());
+            let r = out.log.records.last().unwrap().clone();
+            println!(
+                "{:<12} {:>11.4} {:>10.3} {:>10.4} {:>10.3} {:>11.2}",
+                algo.name(),
+                r.train_loss,
+                r.train_error,
+                r.test_loss,
+                r.test_error,
+                r.sim_time_s
+            );
+            rows.push((algo.name().to_string(), r.train_loss, r.sim_time_s));
+            logs.push(out.log);
+        }
+        // Shape check: WASGD+ should have the best (or near-best) loss.
+        let plus = rows.iter().find(|(n, _, _)| n == "wasgd+").unwrap().1;
+        let best = rows
+            .iter()
+            .map(|&(_, l, _)| l)
+            .fold(f64::INFINITY, f64::min);
+        println!(
+            "→ wasgd+ loss {plus:.4} vs best {best:.4} {}",
+            if plus <= best * 1.10 { "(wins/ties — matches paper)" } else { "(MISMATCH)" }
+        );
+    }
+
+    let path = format!("{RESULTS_DIR}/{fig}_main_{}.csv", dataset.name());
+    write_csv(&path, &logs)?;
+    println!("\nwrote {path}");
+    Ok(())
+}

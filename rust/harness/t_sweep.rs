@@ -1,0 +1,96 @@
+//! Fig. 4 — temperature sweep, T = 1/ã (DESIGN.md E2).
+//!
+//! For each T, WASGD+ runs 5 seeds × 1 epoch; the equally-weighted case
+//! (ã = 0) is the baseline. Points are the paper's Eq. (47) mean
+//! difference (positive = weighted case better) with error bars, on both
+//! the loss and the error metric. Paper shape: a finite optimal T
+//! (T*≈1 for MNIST/CIFAR-10, 10 for Fashion, 0.1 for CIFAR-100), decay
+//! to baseline as T→∞, and collapse below baseline as T→0 (Property 2).
+//!
+//! ```bash
+//! cargo run --release --bin bench_t_sweep -- [--dataset mnist]
+//!     [--epochs 1.0] [--p 4] [--ts 0.001,0.01,0.1,1,10,100,1000]
+//! ```
+
+use anyhow::Result;
+use wasgd::config::{AlgoKind, ExperimentConfig};
+use wasgd::data::synth::DatasetKind;
+use wasgd::harness::{eq47_point, print_sweep, write_sweep_csv, SharedEnv, RESULTS_DIR, SWEEP_SEEDS};
+use wasgd::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env()?;
+    let dataset_s = args.str_flag("dataset", "mnist");
+    let epochs = args.num_flag("epochs", 1.0f64)?;
+    let p = args.num_flag("p", 4usize)?;
+    let ts_s = args.str_flag("ts", "0.001,0.01,0.1,1,10,100,1000");
+    let seeds_n = args.num_flag("seeds", 5usize)?;
+    args.finish()?;
+
+    let dataset = DatasetKind::parse(&dataset_s)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset_s:?}"))?;
+    let ts: Vec<f64> = ts_s
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse())
+        .collect::<Result<_, _>>()?;
+    let seeds = &SWEEP_SEEDS[..seeds_n.min(SWEEP_SEEDS.len())];
+
+    let mut base = ExperimentConfig::paper_preset(dataset);
+    base.algo = AlgoKind::WasgdPlus;
+    base.p = p;
+    base.epochs = epochs;
+    base.eval_every = (base.tau / 2).max(32);
+    base.eval_batches = 6;
+    let env = SharedEnv::new(&base)?;
+
+    println!(
+        "Fig. 4 T-sweep — {} (p={p}, {epochs} epochs, {} seeds); baseline = equal weights (ã=0)",
+        dataset.name(),
+        seeds.len()
+    );
+
+    // Baseline: equally weighted (ã = 0 ⇒ T = ∞).
+    let mut eq = base.clone();
+    eq.a_tilde = 0.0;
+    let baseline: Vec<_> = env.run_seeds(&eq, seeds)?.into_iter().map(|o| o.log).collect();
+
+    let mut loss_rows = Vec::new();
+    let mut err_rows = Vec::new();
+    for &t in &ts {
+        let mut cfg = base.clone();
+        cfg.a_tilde = (1.0 / t) as f32;
+        let cand: Vec<_> = env.run_seeds(&cfg, seeds)?.into_iter().map(|o| o.log).collect();
+        let (dl, el) = eq47_point(&baseline, &cand, |r| r.train_loss);
+        let (de, ee) = eq47_point(&baseline, &cand, |r| r.train_error);
+        loss_rows.push((format!("{t}"), dl, el));
+        err_rows.push((format!("{t}"), de, ee));
+    }
+
+    print_sweep("Δ train loss vs equal-weight baseline (positive = weighted better)", "T", &loss_rows);
+    print_sweep("Δ train error vs equal-weight baseline", "T", &err_rows);
+
+    write_sweep_csv(
+        &format!("{RESULTS_DIR}/fig4_t_sweep_{}_loss.csv", dataset.name()),
+        "T,delta_loss,err",
+        &loss_rows,
+    )?;
+    write_sweep_csv(
+        &format!("{RESULTS_DIR}/fig4_t_sweep_{}_error.csv", dataset.name()),
+        "T,delta_error,err",
+        &err_rows,
+    )?;
+
+    // Shape summary.
+    let best = loss_rows
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    println!("\noptimal T = {} (Δloss {:+.5}); paper expects a finite optimum", best.0, best.1);
+    let tail = loss_rows.last().unwrap();
+    println!(
+        "T→∞ tail Δloss {:+.5} (should approach 0 — Property 2)",
+        tail.1
+    );
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Fig. 7 — communication-period sweep (DESIGN.md E5).
+//!
+//! Positions (train loss) after a fixed epoch budget for
+//! τ ∈ {5, 10, 25, 50, 100, 250} × p ∈ {2, 4, 8}
+//! (rescaled to this testbed's iterations-per-epoch — DESIGN.md §3), for EASGD vs WASGD vs
+//! WASGD+. Paper shape: WASGD+ ≻ WASGD ≻ EASGD at matched (τ, p), and
+//! WASGD+ at τ=1000 ≈ EASGD at τ=50 (large-τ robustness). Both the loss
+//! and the simulated time are reported — large τ trades convergence for
+//! communication.
+//!
+//! ```bash
+//! cargo run --release --bin bench_tau_sweep -- [--dataset mnist]
+//!     [--epochs 2.0] [--taus 5,10,25,50,100,250] [--ps 2,4,8]
+//! ```
+
+use anyhow::Result;
+use wasgd::config::{AlgoKind, ExperimentConfig};
+use wasgd::harness::SharedEnv;
+use wasgd::data::synth::DatasetKind;
+use wasgd::harness::RESULTS_DIR;
+use wasgd::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env()?;
+    let dataset_s = args.str_flag("dataset", "mnist");
+    let epochs = args.num_flag("epochs", 2.0f64)?;
+    let taus_s = args.str_flag("taus", "5,10,25,50,100,250");
+    let ps_s = args.str_flag("ps", "2,4,8");
+    args.finish()?;
+
+    let dataset = DatasetKind::parse(&dataset_s)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset_s:?}"))?;
+    let taus: Vec<usize> = taus_s.split(',').filter(|s| !s.is_empty()).map(|s| s.parse()).collect::<Result<_, _>>()?;
+    let ps: Vec<usize> = ps_s.split(',').filter(|s| !s.is_empty()).map(|s| s.parse()).collect::<Result<_, _>>()?;
+    let algos = [AlgoKind::Easgd, AlgoKind::Wasgd, AlgoKind::WasgdPlus];
+
+    println!(
+        "Fig. 7 τ-sweep — {} after {epochs} epochs (loss ↓ / sim-time shown)",
+        dataset.name()
+    );
+
+    let env = SharedEnv::new(&ExperimentConfig::paper_preset(dataset))?;
+    let mut csv_rows: Vec<String> = vec!["algo,p,tau,train_loss,test_error,sim_time_s".into()];
+    for &p in &ps {
+        println!("\np = {p}");
+        print!("{:>8}", "τ");
+        for a in &algos {
+            print!("  {:>22}", a.name());
+        }
+        println!();
+        for &tau in &taus {
+            print!("{tau:>8}");
+            for &algo in &algos {
+                let mut cfg = ExperimentConfig::paper_preset(dataset);
+                cfg.algo = algo;
+                cfg.p = p;
+                cfg.tau = tau;
+                cfg.m = cfg.m.min(tau);
+                cfg.epochs = epochs;
+                cfg.eval_every = usize::MAX / 2; // final record only
+                cfg.eval_batches = 8;
+                let out = env.run(&cfg)?;
+                let r = out.log.records.last().unwrap();
+                print!("  {:>12.4} @{:>7.2}s", r.train_loss, r.sim_time_s);
+                csv_rows.push(format!(
+                    "{},{p},{tau},{:.6},{:.6},{:.6}",
+                    algo.name(),
+                    r.train_loss,
+                    r.test_error,
+                    r.sim_time_s
+                ));
+            }
+            println!();
+        }
+    }
+
+    std::fs::create_dir_all(RESULTS_DIR)?;
+    let path = format!("{RESULTS_DIR}/fig7_tau_sweep_{}.csv", dataset.name());
+    std::fs::write(&path, csv_rows.join("\n") + "\n")?;
+    println!("\nwrote {path}");
+    Ok(())
+}

@@ -1,0 +1,165 @@
+//! Baseline schemes: sequential SGD, SimuParallelSGD, and EASGD.
+
+use anyhow::Result;
+
+use super::{host_aggregate, CommContext, CommPolicy};
+use crate::linalg;
+
+/// Plain sequential SGD — the p=1 reference; a boundary is a no-op.
+pub struct Sequential;
+
+impl CommPolicy for Sequential {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn at_boundary(&mut self, _ctx: &mut CommContext<'_>) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// SimuParallelSGD (Zinkevich et al., 2010). Data is split into p
+/// disjoint shards; workers never talk until a boundary, where all
+/// parameters are *equally* averaged. In the paper's framing this is the
+/// equally-weighted, β=1 special case — and its instability at larger p
+/// on non-convex losses (Fig. 8) is one of WASGD's motivations.
+pub struct Spsgd {
+    theta: Vec<f32>,
+}
+
+impl Spsgd {
+    pub fn new() -> Self {
+        Self { theta: Vec::new() }
+    }
+}
+
+impl Default for Spsgd {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CommPolicy for Spsgd {
+    fn name(&self) -> &'static str {
+        "spsgd"
+    }
+
+    fn shards_data(&self) -> bool {
+        true
+    }
+
+    fn at_boundary(&mut self, ctx: &mut CommContext<'_>) -> Result<()> {
+        let p = ctx.params.len();
+        self.theta = vec![1.0 / p as f32; p];
+        ctx.cluster.sync_allgather(ctx.msg_bytes);
+        host_aggregate(ctx.params, &self.theta, 1.0);
+        Ok(())
+    }
+
+    fn last_weights(&self) -> Option<&[f32]> {
+        if self.theta.is_empty() {
+            None
+        } else {
+            Some(&self.theta)
+        }
+    }
+}
+
+/// Elastic Averaging SGD (Zhang, Choromanska & LeCun, 2015).
+///
+/// A master stores the center variable x̃. At a boundary each worker i
+/// does the elastic round trip of Eq. (3)–(4):
+///
+/// ```text
+/// xᵢ ← xᵢ − α(xᵢ − x̃)
+/// x̃  ← x̃ + α(xᵢ − x̃)        (sequentially, worker by worker — Eq. 5)
+/// ```
+///
+/// The sequential-update form is exactly what §2 of the paper analyses:
+/// with small α the center keeps most of its (stale) mass, which is the
+/// mis-allocation WASGD removes.
+pub struct Easgd {
+    center: Vec<f32>,
+    alpha: f32,
+}
+
+impl Easgd {
+    pub fn new(cfg: &crate::config::ExperimentConfig) -> Self {
+        Self { center: Vec::new(), alpha: cfg.easgd_alpha() }
+    }
+
+    pub fn center(&self) -> &[f32] {
+        &self.center
+    }
+}
+
+impl CommPolicy for Easgd {
+    fn name(&self) -> &'static str {
+        "easgd"
+    }
+
+    fn at_boundary(&mut self, ctx: &mut CommContext<'_>) -> Result<()> {
+        if self.center.is_empty() {
+            // x̃ initialises to the mean of the cohort's starting points.
+            let p = ctx.params.len() as f32;
+            self.center = vec![0.0; ctx.params[0].len()];
+            let rows: Vec<&[f32]> = ctx.params.iter().map(|v| v.as_slice()).collect();
+            linalg::weighted_sum(&mut self.center, &rows, &vec![1.0 / p; rows.len()]);
+        }
+        let alpha = self.alpha;
+        for (i, x) in ctx.params.iter_mut().enumerate() {
+            // Worker↔master round trip (no global barrier — EASGD's
+            // communication is per-worker with the center).
+            ctx.cluster.p2p_roundtrip(i, ctx.msg_bytes);
+            for (xv, cv) in x.iter_mut().zip(self.center.iter_mut()) {
+                let diff = alpha * (*xv - *cv);
+                *xv -= diff;
+                *cv += diff;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::tests::test_cluster;
+    use crate::config::ExperimentConfig;
+
+    // Policy tests that need a real Engine (and therefore artifacts on
+    // disk) live in rust/tests/integration.rs; here we cover the pure
+    // math the policies are made of.
+
+    #[test]
+    fn spsgd_averages_equally() {
+        // Exercise host_aggregate directly (the policy's math) — the full
+        // policy is covered by the integration suite with a real Engine.
+        let mut params = vec![vec![1.0f32, 5.0], vec![3.0, 7.0]];
+        host_aggregate(&mut params, &[0.5, 0.5], 1.0);
+        assert_eq!(params[0], vec![2.0, 6.0]);
+        assert_eq!(params[0], params[1]);
+    }
+
+    #[test]
+    fn easgd_pull_shrinks_distance_to_center() {
+        let cfg = ExperimentConfig::default();
+        let mut pol = Easgd::new(&cfg);
+        pol.alpha = 0.25;
+        pol.center = vec![0.0, 0.0];
+        let mut cluster = test_cluster(2);
+        // Manual elastic update (mirrors at_boundary's inner loop).
+        let mut x = vec![4.0f32, -4.0];
+        let before = linalg::dist2(&x, &pol.center);
+        cluster.p2p_roundtrip(0, 64);
+        for (xv, cv) in x.iter_mut().zip(pol.center.iter_mut()) {
+            let diff = pol.alpha * (*xv - *cv);
+            *xv -= diff;
+            *cv += diff;
+        }
+        let after = linalg::dist2(&x, &pol.center);
+        assert!(after < before);
+        assert!(cluster.comm_time_total > 0.0);
+        let _ = ExperimentConfig::default();
+    }
+}

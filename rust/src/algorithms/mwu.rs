@@ -1,0 +1,153 @@
+//! Multiplicative Weight Update baselines (the paper's OMWU / MMWU).
+//!
+//! The classical MWU method (Arora–Hazan–Kale framing, cited in the paper
+//! via Dwork & Roth) maintains a multiplicative weight per expert — here,
+//! per worker. At a boundary each worker's weight is decayed by its loss,
+//! a leader is sampled from the induced distribution, and the leader's
+//! parameters are broadcast. Over enough rounds the distribution
+//! concentrates on the best-performing worker.
+//!
+//! * **OMWU** evaluates each worker's loss over the *entire training set*
+//!   at every boundary. That cost is real: the policy charges
+//!   `p · N/B · step_cost_fwd` to the simulated clocks, which is exactly
+//!   why the paper's Fig. 8 shows OMWU trailing — the weight signal is
+//!   precise but the time price is ruinous.
+//! * **MMWU** is the paper's fix applied to MWU: reuse the windowed
+//!   per-batch losses (Eq. 26) that the forward pass already produced, so
+//!   the boundary is free; the weight estimate is noisier.
+
+use anyhow::Result;
+
+use super::{CommContext, CommPolicy};
+
+/// Multiplicative-weights decay rate ε in w ← w·exp(−ε·normalised loss).
+const MWU_ETA: f64 = 0.5;
+
+pub struct Mwu {
+    /// Running multiplicative weights (unnormalised, in log space).
+    log_w: Vec<f64>,
+    /// Last boundary's selection distribution (telemetry).
+    theta: Vec<f32>,
+    use_full_loss: bool,
+}
+
+impl Mwu {
+    pub fn new(p: usize, use_full_loss: bool) -> Self {
+        Self { log_w: vec![0.0; p], theta: vec![1.0 / p as f32; p], use_full_loss }
+    }
+
+    /// The current selection distribution softmax(log_w).
+    fn distribution(&self) -> Vec<f64> {
+        let mx = self.log_w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let e: Vec<f64> = self.log_w.iter().map(|&v| (v - mx).exp()).collect();
+        let s: f64 = e.iter().sum();
+        e.iter().map(|&v| v / s).collect()
+    }
+}
+
+impl CommPolicy for Mwu {
+    fn name(&self) -> &'static str {
+        if self.use_full_loss {
+            "omwu"
+        } else {
+            "mmwu"
+        }
+    }
+
+    fn needs_full_losses(&self) -> bool {
+        self.use_full_loss
+    }
+
+    fn at_boundary(&mut self, ctx: &mut CommContext<'_>) -> Result<()> {
+        let p = ctx.params.len();
+        if self.log_w.len() != p {
+            self.log_w = vec![0.0; p];
+        }
+
+        // Loss signal: exact (OMWU) or the free windowed estimate (MMWU).
+        let losses: Vec<f64> = if self.use_full_loss {
+            let full = ctx
+                .full_losses
+                .ok_or_else(|| anyhow::anyhow!("OMWU needs full losses from the trainer"))?;
+            full.iter().map(|&v| v as f64).collect()
+        } else {
+            ctx.energies.iter().map(|&v| v as f64).collect()
+        };
+
+        // Normalise to [0,1] so ε has a scale-free meaning.
+        let total: f64 = losses.iter().sum();
+        if total > 0.0 {
+            for (lw, &l) in self.log_w.iter_mut().zip(losses.iter()) {
+                *lw -= MWU_ETA * l / total * p as f64;
+            }
+        }
+
+        // All workers exchange parameters (gather) then receive the leader.
+        ctx.cluster.sync_allgather(ctx.msg_bytes);
+
+        // Sample the leader from the MWU distribution.
+        let dist = self.distribution();
+        self.theta = dist.iter().map(|&v| v as f32).collect();
+        let u = ctx.rng.uniform();
+        let mut acc = 0.0;
+        let mut leader = p - 1;
+        for (i, &q) in dist.iter().enumerate() {
+            acc += q;
+            if u < acc {
+                leader = i;
+                break;
+            }
+        }
+
+        // Broadcast the leader's parameters.
+        let chosen = ctx.params[leader].clone();
+        for (i, x) in ctx.params.iter_mut().enumerate() {
+            if i != leader {
+                x.copy_from_slice(&chosen);
+            }
+        }
+        Ok(())
+    }
+
+    fn last_weights(&self) -> Option<&[f32]> {
+        Some(&self.theta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distribution_is_simplex() {
+        let mut m = Mwu::new(4, false);
+        m.log_w = vec![-0.1, -2.0, -0.5, 0.0];
+        let d = m.distribution();
+        let s: f64 = d.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        assert!(d.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn weights_concentrate_on_best_worker() {
+        let mut m = Mwu::new(3, false);
+        // Worker 0 always loses least.
+        for _ in 0..200 {
+            let losses = [0.1f64, 1.0, 1.0];
+            let total: f64 = losses.iter().sum();
+            for (lw, &l) in m.log_w.iter_mut().zip(losses.iter()) {
+                *lw -= MWU_ETA * l / total * 3.0;
+            }
+        }
+        let d = m.distribution();
+        assert!(d[0] > 0.99, "{d:?}");
+    }
+
+    #[test]
+    fn names_distinguish_variants() {
+        assert_eq!(Mwu::new(2, true).name(), "omwu");
+        assert_eq!(Mwu::new(2, false).name(), "mmwu");
+        assert!(Mwu::new(2, true).needs_full_losses());
+        assert!(!Mwu::new(2, false).needs_full_losses());
+    }
+}

@@ -1,0 +1,183 @@
+//! The paper's contributions: WASGD (ICDM'19) and WASGD+ (this paper).
+
+use anyhow::Result;
+
+use super::{host_aggregate, CommContext, CommPolicy};
+use crate::linalg;
+
+/// WASGD — Algorithm 3. Inverse-loss weights θᵢ ∝ 1/hᵢ, full acceptance
+/// (β = 1), loss energies from the tail window (c = 1) of each period.
+/// Aggregation runs on the host: the Pallas artifact computes the
+/// *Boltzmann* family, which WASGD predates.
+pub struct Wasgd {
+    theta: Vec<f32>,
+}
+
+impl Wasgd {
+    pub fn new() -> Self {
+        Self { theta: Vec::new() }
+    }
+}
+
+impl Default for Wasgd {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CommPolicy for Wasgd {
+    fn name(&self) -> &'static str {
+        "wasgd"
+    }
+
+    fn at_boundary(&mut self, ctx: &mut CommContext<'_>) -> Result<()> {
+        ctx.cluster.sync_allgather(ctx.msg_bytes);
+        self.theta = linalg::inverse_loss_weights(ctx.energies);
+        // β fixed to 1 in the ICDM'19 algorithm.
+        host_aggregate(ctx.params, &self.theta, 1.0);
+        Ok(())
+    }
+
+    fn last_weights(&self) -> Option<&[f32]> {
+        if self.theta.is_empty() {
+            None
+        } else {
+            Some(&self.theta)
+        }
+    }
+}
+
+/// WASGD+ — Algorithm 1 (sync) / Algorithm 4 (async).
+///
+/// Boltzmann weights θᵢ = e^(−ã·h′ᵢ)/Σe^(−ã·h′ᵏ) (Eq. 13) and the
+/// β-negotiated update xᵢ ← (1−β)xᵢ + β·Σθⱼxⱼ (Eq. 10). The numerical
+/// work runs through the **Pallas aggregation artifact** via PJRT when
+/// one was lowered for this cohort size, with a bit-compatible host
+/// fallback otherwise (the integration suite asserts the two agree).
+///
+/// The async flavour (Algorithm 4) proceeds once the first p−1 peers —
+/// out of p+b−1 — have reached the boundary; the trainer passes the
+/// quorum's members only, and the simulated clock uses
+/// [`SimCluster::async_gather`](crate::cluster::SimCluster::async_gather).
+pub struct WasgdPlus {
+    theta: Vec<f32>,
+    is_async: bool,
+    /// Number of boundaries served by the PJRT artifact vs host fallback
+    /// (telemetry for the perf pass).
+    pub pjrt_boundaries: u64,
+    pub host_boundaries: u64,
+}
+
+impl WasgdPlus {
+    pub fn new(is_async: bool) -> Self {
+        Self { theta: Vec::new(), is_async, pjrt_boundaries: 0, host_boundaries: 0 }
+    }
+}
+
+impl CommPolicy for WasgdPlus {
+    fn name(&self) -> &'static str {
+        if self.is_async {
+            "wasgd+async"
+        } else {
+            "wasgd+"
+        }
+    }
+
+    fn uses_order_search(&self) -> bool {
+        true
+    }
+
+    fn async_quorum(&self) -> Option<usize> {
+        if self.is_async {
+            Some(1) // placeholder; the trainer computes p−1 from cfg
+        } else {
+            None
+        }
+    }
+
+    fn at_boundary(&mut self, ctx: &mut CommContext<'_>) -> Result<()> {
+        let p = ctx.params.len();
+        let d = ctx.params[0].len();
+        // Clock charge: sync barrier + all-gather (the async trainer path
+        // charges async_gather itself before building the quorum context).
+        if !self.is_async {
+            ctx.cluster.sync_allgather(ctx.msg_bytes);
+        }
+
+        self.theta = linalg::boltzmann_weights(ctx.energies, ctx.cfg.a_tilde);
+
+        // On this CPU testbed the host path is ~20× faster at large D
+        // (bench: pjrt_aggregate mnist p=4 22 ms vs host 0.5 ms — the
+        // artifact pays interpret-mode copies + host↔device transfers);
+        // the artifact is the TPU-deployment path. WASGD_HOST_AGG=1
+        // forces the host twin (numerically equal, pinned by tests).
+        let force_host = std::env::var_os("WASGD_HOST_AGG").is_some();
+
+        if !force_host && ctx.engine.has_aggregate(p) {
+            // Hot path: the L1 Pallas kernel through PJRT.
+            let mut stacked = Vec::with_capacity(p * d);
+            for row in ctx.params.iter() {
+                stacked.extend_from_slice(row);
+            }
+            let out =
+                ctx.engine.aggregate(&stacked, ctx.energies, ctx.cfg.a_tilde, ctx.cfg.beta)?;
+            for (i, row) in ctx.params.iter_mut().enumerate() {
+                row.copy_from_slice(&out[i * d..(i + 1) * d]);
+            }
+            self.pjrt_boundaries += 1;
+        } else {
+            host_aggregate(ctx.params, &self.theta, ctx.cfg.beta);
+            self.host_boundaries += 1;
+        }
+        Ok(())
+    }
+
+    fn last_weights(&self) -> Option<&[f32]> {
+        if self.theta.is_empty() {
+            None
+        } else {
+            Some(&self.theta)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wasgd_weights_inverse_loss() {
+        let th = linalg::inverse_loss_weights(&[1.0, 2.0]);
+        assert!((th[0] - 2.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wasgd_plus_names() {
+        assert_eq!(WasgdPlus::new(false).name(), "wasgd+");
+        assert_eq!(WasgdPlus::new(true).name(), "wasgd+async");
+        assert!(WasgdPlus::new(false).uses_order_search());
+        assert!(WasgdPlus::new(true).async_quorum().is_some());
+        assert!(WasgdPlus::new(false).async_quorum().is_none());
+    }
+
+    #[test]
+    fn host_fallback_matches_manual_math() {
+        // θ from Boltzmann, then Eq. 10 by hand vs host_aggregate.
+        let h = [0.2f32, 0.8];
+        let a_tilde = 1.0;
+        let beta = 0.6;
+        let th = linalg::boltzmann_weights(&h, a_tilde);
+        let mut params = vec![vec![1.0f32, 0.0], vec![0.0, 1.0]];
+        let agg = [
+            th[0] * 1.0 + th[1] * 0.0,
+            th[0] * 0.0 + th[1] * 1.0,
+        ];
+        let expect0 = [
+            (1.0 - beta) * 1.0 + beta * agg[0],
+            (1.0 - beta) * 0.0 + beta * agg[1],
+        ];
+        host_aggregate(&mut params, &th, beta);
+        assert!((params[0][0] - expect0[0]).abs() < 1e-6);
+        assert!((params[0][1] - expect0[1]).abs() < 1e-6);
+    }
+}

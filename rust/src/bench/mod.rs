@@ -1,0 +1,168 @@
+//! Micro-benchmark harness — substrate replacing `criterion` in the
+//! offline build. Provides warm-up, calibrated iteration counts, robust
+//! statistics (median + MAD), and a criterion-like report format so
+//! `cargo bench` output stays familiar.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub mean_s: f64,
+    pub iters_per_sample: u64,
+}
+
+impl BenchStats {
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.median_s > 0.0 {
+            1.0 / self.median_s
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} time: [{:>10}]  ±{:>9}  ({} samples × {} iters, {:.1}/s)",
+            self.name,
+            fmt_time(self.median_s),
+            fmt_time(self.mad_s),
+            self.samples.len(),
+            self.iters_per_sample,
+            self.throughput_per_s()
+        )
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// A criterion-flavoured bench runner.
+pub struct Bencher {
+    /// Target time per measurement phase.
+    pub measure_time: Duration,
+    pub warmup_time: Duration,
+    pub sample_count: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // Honour the conventional quick-mode env var.
+        let quick = std::env::var("WASGD_BENCH_QUICK").is_ok();
+        Self {
+            measure_time: Duration::from_millis(if quick { 200 } else { 1500 }),
+            warmup_time: Duration::from_millis(if quick { 50 } else { 300 }),
+            sample_count: if quick { 5 } else { 15 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which performs ONE unit of work per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchStats {
+        // Warm-up + calibration: how many iters fit in one sample slot?
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup_time {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+        let slot = self.measure_time.as_secs_f64() / self.sample_count as f64;
+        let iters = ((slot / per_iter.max(1e-12)) as u64).clamp(1, 1_000_000);
+
+        let mut samples = Vec::with_capacity(self.sample_count);
+        for _ in 0..self.sample_count {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[sorted.len() / 2];
+        let mut devs: Vec<f64> = sorted.iter().map(|&v| (v - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[devs.len() / 2];
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+
+        let stats = BenchStats {
+            name: name.to_string(),
+            samples,
+            median_s: median,
+            mad_s: mad,
+            mean_s: mean,
+            iters_per_sample: iters,
+        };
+        println!("{}", stats.report());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+
+    /// Print a closing summary table.
+    pub fn summary(&self, title: &str) {
+        println!("\n== {title} ==");
+        for r in &self.results {
+            println!("  {:<44} {:>12}", r.name, fmt_time(r.median_s));
+        }
+    }
+}
+
+/// Prevent the optimiser from discarding a value (stable-rust black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("WASGD_BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        b.measure_time = Duration::from_millis(30);
+        b.warmup_time = Duration::from_millis(5);
+        b.sample_count = 3;
+        let mut acc = 0u64;
+        let st = b.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(st.median_s > 0.0);
+        assert!(st.median_s < 1e-3);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with("s"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2e-6).ends_with("µs"));
+        assert!(fmt_time(2e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,168 @@
+//! Checkpointing: durable snapshots of a training run.
+//!
+//! A checkpoint is a directory with one `state.json` (run metadata: the
+//! experiment label, iteration, epoch, per-worker seeds, sim clock) and
+//! one `worker_{i}.f32` flat little-endian parameter file per worker.
+//! The format is deliberately dumb — `xxd`-able, python-readable with
+//! `np.fromfile(..., '<f4')` — so checkpoints double as an interchange
+//! format with the build-time python side.
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+/// Everything needed to resume (or inspect) a run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub label: String,
+    pub iteration: u64,
+    pub epoch: f64,
+    pub sim_time_s: f64,
+    /// Flat parameter vector per worker.
+    pub workers: Vec<Vec<f32>>,
+}
+
+impl Checkpoint {
+    /// Write to `dir` (created if needed). Atomic per file: written to a
+    /// `.tmp` sibling then renamed, so a crash never leaves a torn
+    /// checkpoint behind.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        fs::create_dir_all(dir).with_context(|| format!("mkdir {}", dir.display()))?;
+        // Parameters first, meta last: an existing state.json implies
+        // complete parameter files.
+        for (i, params) in self.workers.iter().enumerate() {
+            let path = dir.join(format!("worker_{i}.f32"));
+            let tmp = dir.join(format!("worker_{i}.f32.tmp"));
+            {
+                let mut f = fs::File::create(&tmp)?;
+                let bytes: Vec<u8> =
+                    params.iter().flat_map(|v| v.to_le_bytes()).collect();
+                f.write_all(&bytes)?;
+                f.sync_all()?;
+            }
+            fs::rename(&tmp, &path)?;
+        }
+        let meta = format!(
+            r#"{{"label": {:?}, "iteration": {}, "epoch": {}, "sim_time_s": {}, "p": {}, "d": {}}}"#,
+            self.label,
+            self.iteration,
+            self.epoch,
+            self.sim_time_s,
+            self.workers.len(),
+            self.workers.first().map(|w| w.len()).unwrap_or(0),
+        );
+        let tmp = dir.join("state.json.tmp");
+        fs::write(&tmp, meta)?;
+        fs::rename(tmp, dir.join("state.json"))?;
+        Ok(())
+    }
+
+    /// Load a checkpoint written by [`Checkpoint::save`].
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta_path = dir.join("state.json");
+        let body = fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        let j = Json::parse(&body).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let p = j.req_usize("p")?;
+        let d = j.req_usize("d")?;
+        let mut workers = Vec::with_capacity(p);
+        for i in 0..p {
+            let path = dir.join(format!("worker_{i}.f32"));
+            let mut bytes = Vec::new();
+            fs::File::open(&path)
+                .with_context(|| format!("opening {}", path.display()))?
+                .read_to_end(&mut bytes)?;
+            anyhow::ensure!(
+                bytes.len() == d * 4,
+                "{}: expected {} bytes, found {}",
+                path.display(),
+                d * 4,
+                bytes.len()
+            );
+            let params: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            workers.push(params);
+        }
+        Ok(Self {
+            label: j.req_str("label")?.to_string(),
+            iteration: j.req_usize("iteration")? as u64,
+            epoch: j
+                .get("epoch")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("epoch missing"))?,
+            sim_time_s: j
+                .get("sim_time_s")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("sim_time_s missing"))?,
+            workers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("wasgd_ckpt_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            label: "wasgd+ p=2".into(),
+            iteration: 512,
+            epoch: 2.0,
+            sim_time_s: 3.25,
+            workers: vec![vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE], vec![9.5, 0.25, -1.0, 7.0]],
+        }
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let dir = tmpdir("rt");
+        let ck = sample();
+        ck.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(ck, back);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_is_idempotent_overwrite() {
+        let dir = tmpdir("ow");
+        let mut ck = sample();
+        ck.save(&dir).unwrap();
+        ck.iteration = 1024;
+        ck.workers[0][0] = 42.0;
+        ck.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(back.iteration, 1024);
+        assert_eq!(back.workers[0][0], 42.0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_rejects_truncated_params() {
+        let dir = tmpdir("trunc");
+        sample().save(&dir).unwrap();
+        // Truncate one worker file.
+        let path = dir.join("worker_1.f32");
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(Checkpoint::load(&dir).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_missing_dir_errors() {
+        assert!(Checkpoint::load(Path::new("/nonexistent/wasgd")).is_err());
+    }
+}

@@ -1,0 +1,263 @@
+//! Simulated cluster substrate (DESIGN.md §3 substitution: Tesla-K80 /
+//! CPU-cluster testbed → deterministic in-process simulation).
+//!
+//! The paper's time-to-loss curves (Figs. 8–11) are wall-clock on a real
+//! cluster. We reproduce the *cluster effects* — communication cost
+//! growing with τ⁻¹ and message size, stragglers hurting synchronous
+//! schemes, backup workers rescuing the async variant — with an explicit
+//! cost model driving per-worker virtual clocks:
+//!
+//! * compute: each local SGD step costs `step_time · (1 + jitter)`, with
+//!   a heavy-tail straggler mixture (probability `straggler_prob` of a
+//!   `straggler_factor×` slowdown — GC pauses / co-tenants / ECC stalls);
+//! * communication: an all-gather of `bytes` over p workers is modelled
+//!   as a ring: `(p−1) · (α + bytes/(p·B))` with per-hop latency α and
+//!   link bandwidth B — the standard LogP-flavoured collective estimate;
+//! * synchronous schemes advance every participant to the barrier max;
+//!   the asynchronous WASGD+ proceeds when the first p−1 peers (of
+//!   p+b−1) have arrived.
+//!
+//! Real wall-clock is *also* measured by the harness (the numerics run
+//! for real); the simulated clock is what the figures plot, so the
+//! curves are independent of this machine's core count.
+
+pub mod threads;
+
+use crate::rng::Rng;
+
+/// Per-message / per-byte cost model for the interconnect.
+#[derive(Clone, Copy, Debug)]
+pub struct FabricConfig {
+    /// Per-hop latency α (seconds). Default 50 µs — 10 GbE-ish RTT/2.
+    pub latency_s: f64,
+    /// Link bandwidth B (bytes/second). Default 1.25 GB/s (10 GbE).
+    pub bandwidth: f64,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        Self { latency_s: 50e-6, bandwidth: 1.25e9 }
+    }
+}
+
+impl FabricConfig {
+    /// Time for a p-way ring all-gather where each rank contributes
+    /// `bytes`: (p−1) hops, each sending one chunk of `bytes`.
+    pub fn allgather_time(&self, p: usize, bytes: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        (p as f64 - 1.0) * (self.latency_s + bytes as f64 / self.bandwidth)
+    }
+
+    /// Point-to-point send of `bytes` (EASGD worker↔master round trip is
+    /// two of these).
+    pub fn p2p_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth
+    }
+}
+
+/// Per-step compute-time model with straggler mixture.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeModel {
+    /// Mean seconds per local SGD step (calibrated from the real engine
+    /// by the harness, or set explicitly for what-if sweeps).
+    pub step_time_s: f64,
+    /// Lognormal-ish multiplicative jitter: step · (1 + cv·|N(0,1)|).
+    pub jitter_cv: f64,
+    /// Probability a step lands on a straggler event.
+    pub straggler_prob: f64,
+    /// Multiplicative slowdown of a straggler step.
+    pub straggler_factor: f64,
+}
+
+impl Default for ComputeModel {
+    /// Defaults model the paper's *dedicated* cluster (§5.2: synchronous
+    /// was chosen because "the time difference for computing each sample
+    /// is small"): light jitter, rare mild stragglers. The async/backup
+    /// experiments override these with heavy-tail settings.
+    fn default() -> Self {
+        Self {
+            step_time_s: 2e-3,
+            jitter_cv: 0.02,
+            straggler_prob: 0.002,
+            straggler_factor: 4.0,
+        }
+    }
+}
+
+impl ComputeModel {
+    /// Sample the duration of one local step.
+    pub fn sample_step(&self, rng: &mut Rng) -> f64 {
+        let mut t = self.step_time_s * (1.0 + self.jitter_cv * rng.normal().abs());
+        if self.straggler_prob > 0.0 && rng.uniform() < self.straggler_prob {
+            t *= self.straggler_factor;
+        }
+        t
+    }
+}
+
+/// The virtual cluster: one clock per worker plus the cost models.
+#[derive(Clone, Debug)]
+pub struct SimCluster {
+    pub clocks: Vec<f64>,
+    pub fabric: FabricConfig,
+    pub compute: ComputeModel,
+    rng: Rng,
+    /// Accumulated seconds spent inside collectives (telemetry).
+    pub comm_time_total: f64,
+    /// Accumulated seconds workers spent blocked at barriers (telemetry).
+    pub wait_time_total: f64,
+}
+
+impl SimCluster {
+    pub fn new(p: usize, fabric: FabricConfig, compute: ComputeModel, seed: u64) -> Self {
+        Self {
+            clocks: vec![0.0; p],
+            fabric,
+            compute,
+            rng: Rng::new(seed ^ 0xC1u64.rotate_left(17)),
+            comm_time_total: 0.0,
+            wait_time_total: 0.0,
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        self.clocks.len()
+    }
+
+    /// Advance worker `i` by `steps` local SGD steps.
+    pub fn advance_compute(&mut self, i: usize, steps: usize) {
+        for _ in 0..steps {
+            self.clocks[i] += self.compute.sample_step(&mut self.rng);
+        }
+    }
+
+    /// Synchronous all-gather among all workers, each contributing
+    /// `bytes`: everyone blocks to the slowest participant, then pays the
+    /// collective. Returns the post-collective common time.
+    pub fn sync_allgather(&mut self, bytes: usize) -> f64 {
+        let p = self.p();
+        let barrier = self.clocks.iter().cloned().fold(0.0f64, f64::max);
+        for c in self.clocks.iter_mut() {
+            self.wait_time_total += barrier - *c;
+            *c = barrier;
+        }
+        let cost = self.fabric.allgather_time(p, bytes);
+        self.comm_time_total += cost;
+        for c in self.clocks.iter_mut() {
+            *c += cost;
+        }
+        barrier + cost
+    }
+
+    /// Asynchronous gather for worker `i`: proceeds once the `need`
+    /// earliest peers (by clock) have reached the boundary; the straggling
+    /// others are ignored (paper Algorithm 4's backup-worker rule).
+    /// Returns the time at which worker `i` resumes.
+    pub fn async_gather(&mut self, i: usize, need: usize, bytes: usize) -> f64 {
+        let mut others: Vec<f64> = self
+            .clocks
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| *j != i)
+            .map(|(_, &t)| t)
+            .collect();
+        others.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let need = need.min(others.len());
+        let kth = if need == 0 { self.clocks[i] } else { others[need - 1] };
+        let start = self.clocks[i].max(kth);
+        self.wait_time_total += start - self.clocks[i];
+        let cost = self.fabric.allgather_time(need + 1, bytes);
+        self.comm_time_total += cost;
+        self.clocks[i] = start + cost;
+        self.clocks[i]
+    }
+
+    /// EASGD-style round trip of worker `i` with a central master.
+    pub fn p2p_roundtrip(&mut self, i: usize, bytes: usize) -> f64 {
+        let cost = 2.0 * self.fabric.p2p_time(bytes);
+        self.comm_time_total += cost;
+        self.clocks[i] += cost;
+        self.clocks[i]
+    }
+
+    /// Maximum clock — "the experiment has run this long".
+    pub fn now(&self) -> f64 {
+        self.clocks.iter().cloned().fold(0.0f64, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet_compute() -> ComputeModel {
+        ComputeModel { step_time_s: 1e-3, jitter_cv: 0.0, straggler_prob: 0.0, straggler_factor: 1.0 }
+    }
+
+    #[test]
+    fn allgather_scales_with_p_and_bytes() {
+        let f = FabricConfig::default();
+        assert_eq!(f.allgather_time(1, 1 << 20), 0.0);
+        let t2 = f.allgather_time(2, 1 << 20);
+        let t8 = f.allgather_time(8, 1 << 20);
+        assert!(t8 > t2 * 3.0);
+        let tbig = f.allgather_time(2, 16 << 20);
+        assert!(tbig > t2 * 8.0);
+    }
+
+    #[test]
+    fn sync_barrier_advances_to_max() {
+        let mut c = SimCluster::new(3, FabricConfig::default(), quiet_compute(), 1);
+        c.advance_compute(0, 10);
+        c.advance_compute(1, 5);
+        c.advance_compute(2, 1);
+        let before_max = c.now();
+        let after = c.sync_allgather(1024);
+        assert!(after > before_max);
+        for &t in &c.clocks {
+            assert!((t - after).abs() < 1e-12);
+        }
+        assert!(c.wait_time_total > 0.0);
+    }
+
+    #[test]
+    fn async_ignores_stragglers() {
+        let mut c = SimCluster::new(4, FabricConfig::default(), quiet_compute(), 2);
+        // Worker 3 is far behind.
+        c.advance_compute(0, 10);
+        c.advance_compute(1, 10);
+        c.advance_compute(2, 10);
+        c.advance_compute(3, 1000);
+        // Worker 0 needs 2 peers: should resume near worker 1/2's clocks,
+        // not worker 3's.
+        let resume = c.async_gather(0, 2, 1024);
+        assert!(resume < 0.5, "resume={resume}");
+    }
+
+    #[test]
+    fn straggler_mixture_increases_mean() {
+        let quiet = quiet_compute();
+        let noisy = ComputeModel { straggler_prob: 0.2, straggler_factor: 10.0, ..quiet };
+        let mut rng = Rng::new(3);
+        let n = 20_000;
+        let mean_noisy: f64 =
+            (0..n).map(|_| noisy.sample_step(&mut rng)).sum::<f64>() / n as f64;
+        // E[noisy] = step·(1 + 0.2·9) = 2.8·step
+        assert!(mean_noisy > 2.0e-3, "{mean_noisy}");
+        assert!(mean_noisy < 4.0e-3, "{mean_noisy}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mk = || {
+            let mut c = SimCluster::new(2, FabricConfig::default(), ComputeModel::default(), 7);
+            c.advance_compute(0, 100);
+            c.advance_compute(1, 100);
+            c.sync_allgather(4096);
+            c.now()
+        };
+        assert_eq!(mk(), mk());
+    }
+}

@@ -1,0 +1,314 @@
+//! Typed configuration for experiments.
+//!
+//! One [`ExperimentConfig`] fully determines a run: dataset, model
+//! variant (which artifact directory to load), algorithm, cohort
+//! geometry (p, backups), the paper's hyper-parameters (τ, β, ã, m, c,
+//! n), the cluster cost model and the seed. Presets reproduce the
+//! paper's §5.2 settings; the CLI (`wasgd run …`) and every bench binary
+//! construct these.
+
+use std::path::PathBuf;
+
+use crate::cluster::{ComputeModel, FabricConfig};
+use crate::data::synth::DatasetKind;
+
+/// Which parallel scheme to run — the paper's benchmark set (§5.2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AlgoKind {
+    /// Standard sequential SGD (one worker).
+    Sequential,
+    /// SimuParallelSGD — Zinkevich et al. 2010: split data, average once.
+    Spsgd,
+    /// Elastic Averaging SGD — Zhang et al. 2015 (center variable).
+    Easgd,
+    /// Original multiplicative-weight update (full-dataset weights).
+    Omwu,
+    /// MWU with the paper's free loss estimation.
+    Mmwu,
+    /// WASGD (ICDM'19): inverse-loss weights, β=1, tail estimation.
+    Wasgd,
+    /// WASGD+ (this paper): Boltzmann weights, β-negotiation, order search.
+    WasgdPlus,
+    /// Asynchronous WASGD+ with b backup workers (Algorithm 4).
+    WasgdPlusAsync,
+}
+
+impl AlgoKind {
+    pub const ALL: [AlgoKind; 8] = [
+        AlgoKind::Sequential,
+        AlgoKind::Spsgd,
+        AlgoKind::Easgd,
+        AlgoKind::Omwu,
+        AlgoKind::Mmwu,
+        AlgoKind::Wasgd,
+        AlgoKind::WasgdPlus,
+        AlgoKind::WasgdPlusAsync,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoKind::Sequential => "sgd",
+            AlgoKind::Spsgd => "spsgd",
+            AlgoKind::Easgd => "easgd",
+            AlgoKind::Omwu => "omwu",
+            AlgoKind::Mmwu => "mmwu",
+            AlgoKind::Wasgd => "wasgd",
+            AlgoKind::WasgdPlus => "wasgd+",
+            AlgoKind::WasgdPlusAsync => "wasgd+async",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "sgd" | "sequential" => AlgoKind::Sequential,
+            "spsgd" => AlgoKind::Spsgd,
+            "easgd" => AlgoKind::Easgd,
+            "omwu" => AlgoKind::Omwu,
+            "mmwu" => AlgoKind::Mmwu,
+            "wasgd" => AlgoKind::Wasgd,
+            "wasgd+" | "wasgdplus" => AlgoKind::WasgdPlus,
+            "wasgd+async" | "wasgd_async" => AlgoKind::WasgdPlusAsync,
+            _ => return None,
+        })
+    }
+}
+
+/// Full experiment description. `Default` is a fast tiny-workload run;
+/// [`ExperimentConfig::paper_preset`] reproduces §5.2 per dataset.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub dataset: DatasetKind,
+    /// Artifact directory name under `artifacts_root` (model variant).
+    pub variant: String,
+    pub artifacts_root: PathBuf,
+    pub algo: AlgoKind,
+    /// Number of primary workers p.
+    pub p: usize,
+    /// Backup workers b (async WASGD+ only).
+    pub backups: usize,
+    /// Communication period τ (local steps between collectives).
+    pub tau: usize,
+    /// Acceptance β of the aggregation result (Eq. 10).
+    pub beta: f32,
+    /// Boltzmann temperature ã (Eq. 13). T = 1/ã.
+    pub a_tilde: f32,
+    /// Estimation sample count m (recorded batches per period).
+    pub m: usize,
+    /// Estimation spreading blocks c (Eq. 26 / RecordIndex).
+    pub c: usize,
+    /// Number of order parts n (Algorithm 1).
+    pub n_parts: usize,
+    /// Learning rate η.
+    pub lr: f32,
+    /// Epoch budget (fractional allowed).
+    pub epochs: f64,
+    /// Evaluate every this many local iterations.
+    pub eval_every: usize,
+    /// Batches per evaluation pass (train and test each).
+    pub eval_batches: usize,
+    /// EASGD moving rate α (paper: 0.9/p or 0.009/p).
+    pub easgd_alpha: Option<f32>,
+    /// Base seed for everything stochastic.
+    pub seed: u64,
+    pub fabric: FabricConfig,
+    /// Compute model; `step_time_s = 0` means "calibrate from the real
+    /// engine at startup".
+    pub compute: ComputeModel,
+    /// Stop early once train loss reaches this value (None = run budget).
+    pub target_loss: Option<f64>,
+    /// Track Eq. (27) weight-estimation error at every communication
+    /// point (costs a full-dataset eval per boundary — Fig. 6 only).
+    pub track_estimation_error: bool,
+    /// Force a δ-label-blocked sample order (Fig. 3 order-effect study);
+    /// disables the order search.
+    pub force_delta_order: Option<usize>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            dataset: DatasetKind::Tiny,
+            variant: "tiny_mlp".to_string(),
+            artifacts_root: PathBuf::from("artifacts"),
+            algo: AlgoKind::WasgdPlus,
+            p: 4,
+            backups: 0,
+            tau: 50,
+            beta: 0.9,
+            a_tilde: 1.0,
+            m: 10,
+            c: 2,
+            n_parts: 4,
+            lr: 0.05,
+            epochs: 2.0,
+            eval_every: 50,
+            eval_batches: 4,
+            easgd_alpha: None,
+            seed: 42,
+            fabric: FabricConfig::default(),
+            compute: ComputeModel { step_time_s: 0.0, ..ComputeModel::default() },
+            target_loss: None,
+            track_estimation_error: false,
+            force_delta_order: None,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// The paper's §5.2 settings for one dataset, **rescaled to this
+    /// testbed** (DESIGN.md §3):
+    ///
+    /// * η — the paper runs per-sample SGD; our artifacts are B=32
+    ///   mini-batched, so η is scaled by √B (≈5.7×) to keep the gradient
+    ///   noise per unit progress — the regime the weighting scheme acts
+    ///   on — comparable (0.01 → 0.05 for (F)MNIST, 0.001 → 0.005 for
+    ///   CIFAR).
+    /// * τ — the paper's τ=1000 against 50–60k per-sample iterations per
+    ///   epoch is ~50–60 communications per epoch; at our 128–256
+    ///   batch-iterations per epoch the same *communication density* is
+    ///   τ≈50 (≈5/epoch, the paper's large-τ regime relative to machine
+    ///   throughput). The τ-sweep harness still explores 10…10⁴.
+    /// * m/τ — kept at the paper's ratio (m=100 of τ=1000 → m=10 of τ=50)
+    ///   with c=2 spreading blocks.
+    /// * β and T=1/ã — the §5.3 per-dataset optima, unchanged.
+    pub fn paper_preset(dataset: DatasetKind) -> Self {
+        let mut cfg = Self { dataset, ..Self::default() };
+        cfg.variant = dataset.default_variant().to_string();
+        cfg.tau = 50;
+        cfg.m = 10;
+        cfg.c = 2;
+        cfg.n_parts = 4;
+        match dataset {
+            DatasetKind::Tiny => {
+                cfg.lr = 0.05;
+            }
+            DatasetKind::MnistLike => {
+                cfg.lr = 0.05;
+                cfg.beta = 0.9; // §5.3.2
+                cfg.a_tilde = 1.0; // T* = 1 (§5.3.1)
+            }
+            DatasetKind::FashionLike => {
+                cfg.lr = 0.05;
+                cfg.beta = 0.7;
+                cfg.a_tilde = 0.1; // T* = 10
+            }
+            DatasetKind::Cifar10Like => {
+                cfg.lr = 0.005;
+                cfg.beta = 0.9;
+                cfg.a_tilde = 1.0; // T* = 1
+            }
+            DatasetKind::Cifar100Like => {
+                cfg.lr = 0.005;
+                cfg.beta = 0.8;
+                cfg.a_tilde = 10.0; // T* = 10⁻¹
+            }
+        }
+        cfg
+    }
+
+    /// EASGD α default per the paper: 0.9/p (CIFAR) or 0.009/p (MNIST).
+    pub fn easgd_alpha(&self) -> f32 {
+        self.easgd_alpha.unwrap_or(match self.dataset {
+            DatasetKind::Cifar10Like | DatasetKind::Cifar100Like => 0.9 / self.p as f32,
+            _ => 0.009 / self.p as f32,
+        })
+    }
+
+    /// Effective temperature T = 1/ã (∞ when ã=0).
+    pub fn temperature(&self) -> f32 {
+        if self.a_tilde == 0.0 {
+            f32::INFINITY
+        } else {
+            1.0 / self.a_tilde
+        }
+    }
+
+    /// Artifact directory for the chosen variant.
+    pub fn artifact_dir(&self) -> PathBuf {
+        self.artifacts_root.join(&self.variant)
+    }
+
+    /// A short run label for logs/CSV ("wasgd+ p=4 τ=1000").
+    pub fn label(&self) -> String {
+        format!("{} p={} tau={}", self.algo.name(), self.p, self.tau)
+    }
+
+    /// Sanity-check the geometry; returns a human-readable complaint.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.p == 0 {
+            return Err("p must be ≥ 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.beta) {
+            return Err(format!("β must be in [0,1], got {}", self.beta));
+        }
+        if self.a_tilde < 0.0 {
+            return Err("ã must be ≥ 0".into());
+        }
+        if self.tau == 0 {
+            return Err("τ must be ≥ 1".into());
+        }
+        if self.m == 0 || self.c == 0 {
+            return Err("m and c must be ≥ 1".into());
+        }
+        if self.algo == AlgoKind::WasgdPlusAsync && self.backups == 0 {
+            return Err("async WASGD+ needs backups ≥ 1".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_hyperparams() {
+        // η rescaled by √B≈5.7 (per-sample → B=32), τ by comm density
+        // (DESIGN.md §3); β and T stay at the paper's §5.3 optima.
+        let c10 = ExperimentConfig::paper_preset(DatasetKind::Cifar10Like);
+        assert_eq!(c10.lr, 0.005);
+        assert_eq!(c10.tau, 50);
+        assert_eq!(c10.m, 10);
+        assert_eq!(c10.beta, 0.9);
+        let mn = ExperimentConfig::paper_preset(DatasetKind::MnistLike);
+        assert_eq!(mn.lr, 0.05);
+        let fa = ExperimentConfig::paper_preset(DatasetKind::FashionLike);
+        assert_eq!(fa.beta, 0.7);
+        assert!((fa.temperature() - 10.0).abs() < 1e-6);
+        let c100 = ExperimentConfig::paper_preset(DatasetKind::Cifar100Like);
+        assert!((c100.temperature() - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn easgd_alpha_follows_paper() {
+        let mut c = ExperimentConfig::paper_preset(DatasetKind::Cifar10Like);
+        c.p = 4;
+        assert!((c.easgd_alpha() - 0.225).abs() < 1e-6);
+        let mut m = ExperimentConfig::paper_preset(DatasetKind::MnistLike);
+        m.p = 8;
+        assert!((m.easgd_alpha() - 0.009 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validation_rejects_bad_geometry() {
+        let mut c = ExperimentConfig::default();
+        assert!(c.validate().is_ok());
+        c.beta = 1.5;
+        assert!(c.validate().is_err());
+        c.beta = 0.5;
+        c.p = 0;
+        assert!(c.validate().is_err());
+        c.p = 2;
+        c.algo = AlgoKind::WasgdPlusAsync;
+        c.backups = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn algo_parse_roundtrip() {
+        for a in AlgoKind::ALL {
+            assert_eq!(AlgoKind::parse(a.name()), Some(a));
+        }
+        assert_eq!(AlgoKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,469 @@
+//! The decentralized training coordinator — the paper's Algorithm 1/4
+//! driving loop, shared by every scheme in [`crate::algorithms`].
+//!
+//! One [`Trainer`] owns the PJRT engine, the dataset, the simulated
+//! cluster, and `p (+ b)` [`worker::Worker`]s. The loop is the paper's:
+//! each worker takes local SGD steps through the engine; iterations that
+//! fall into the [`RecordWindow`](crate::data::RecordWindow) accumulate
+//! the worker's loss energy h (Eq. 26 — free, the losses are forward-pass
+//! byproducts); every τ steps the scheme's
+//! [`CommPolicy`](crate::algorithms::CommPolicy) rewrites the parameters;
+//! `Judge` scores feed the §3.4 sample-order search.
+//!
+//! Numerics are exact (every step executes the AOT HLO); *time* is
+//! virtual (DESIGN.md §3): compute and communication costs advance the
+//! [`SimCluster`] clocks so the recorded curves reflect the paper's
+//! cluster, not this host's core count.
+
+pub mod worker;
+
+use anyhow::Result;
+
+use crate::algorithms::{make_policy, CommContext, CommPolicy};
+use crate::cluster::SimCluster;
+use crate::config::{AlgoKind, ExperimentConfig};
+use crate::data::order::judge;
+use crate::data::synth::SynthConfig;
+use crate::data::{Dataset, RecordWindow};
+use crate::linalg;
+use crate::metrics::{Record, RunLog, Stopwatch};
+use crate::rng::Rng;
+use crate::runtime::Engine;
+
+use worker::Worker;
+
+/// Fraction of a train step charged for one forward-only (eval) batch in
+/// simulated time — OMWU's full-dataset weight evaluation pays this.
+const EVAL_STEP_FRACTION: f64 = 0.4;
+
+/// Everything a run produces beyond the record stream.
+#[derive(Debug)]
+pub struct RunOutput {
+    pub log: RunLog,
+    /// Eq. (27) weight-estimation error per boundary: (iteration, error).
+    pub estimation_errors: Vec<(u64, f32)>,
+    /// Simulated seconds spent in collectives.
+    pub comm_time_s: f64,
+    /// Simulated seconds workers were blocked at barriers.
+    pub wait_time_s: f64,
+    /// Order-search telemetry (WASGD+): parts kept / redrawn.
+    pub orders_kept: u64,
+    pub orders_redrawn: u64,
+    /// PJRT executions performed.
+    pub exec_count: u64,
+    /// Final per-worker parameter vectors (checkpointable via
+    /// [`RunOutput::to_checkpoint`]).
+    pub final_workers: Vec<Vec<f32>>,
+}
+
+impl RunOutput {
+    /// Snapshot the run's end state as a durable [`Checkpoint`].
+    pub fn to_checkpoint(&self) -> crate::checkpoint::Checkpoint {
+        let last = self.log.records.last();
+        crate::checkpoint::Checkpoint {
+            label: self.log.label.clone(),
+            iteration: last.map(|r| r.iteration).unwrap_or(0),
+            epoch: last.map(|r| r.epoch).unwrap_or(0.0),
+            sim_time_s: last.map(|r| r.sim_time_s).unwrap_or(0.0),
+            workers: self.final_workers.clone(),
+        }
+    }
+}
+
+/// Run one experiment, returning just the record stream.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunLog> {
+    Ok(run_experiment_full(cfg)?.log)
+}
+
+/// Run one experiment with full telemetry (loads the engine and builds
+/// the dataset itself; sweeps should use [`crate::harness::SharedEnv`]
+/// to amortise engine compilation and step-time calibration).
+pub fn run_experiment_full(cfg: &ExperimentConfig) -> Result<RunOutput> {
+    let engine = Engine::load(&cfg.artifacts_root, &cfg.variant)?;
+    let dataset = SynthConfig::preset(cfg.dataset).build(cfg.seed);
+    let mut tr = Trainer::new(cfg.clone(), &engine, &dataset)?;
+    tr.run()
+}
+
+/// The shared training loop. Borrows the engine and the dataset so
+/// sweeps can reuse both across dozens of runs.
+pub struct Trainer<'a> {
+    pub cfg: ExperimentConfig,
+    pub engine: &'a Engine,
+    pub dataset: &'a Dataset,
+    cluster: SimCluster,
+    policy: Box<dyn CommPolicy>,
+    workers: Vec<Worker>,
+    window: RecordWindow,
+    eval_rng: Rng,
+    comm_rng: Rng,
+    /// Reusable batch gather buffers (hot loop, allocation-free).
+    x_buf: Vec<f32>,
+    y_buf: Vec<i32>,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(cfg: ExperimentConfig, engine: &'a Engine, dataset: &'a Dataset) -> Result<Self> {
+        cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+        anyhow::ensure!(
+            dataset.dim == engine.manifest.input_dim,
+            "dataset dim {} ≠ model input dim {} (dataset {} vs variant {})",
+            dataset.dim,
+            engine.manifest.input_dim,
+            dataset.name,
+            engine.manifest.name
+        );
+
+        let p_primary = if cfg.algo == AlgoKind::Sequential { 1 } else { cfg.p };
+        let p_total = p_primary
+            + if cfg.algo == AlgoKind::WasgdPlusAsync { cfg.backups } else { 0 };
+
+        // Calibrate the compute model from the real engine if requested.
+        let mut compute = cfg.compute;
+        if compute.step_time_s <= 0.0 {
+            compute.step_time_s = engine.calibrate_step_time(3)?;
+        }
+        let cluster = SimCluster::new(p_total, cfg.fabric, compute, cfg.seed);
+
+        let policy = make_policy(&cfg);
+        let root = Rng::new(cfg.seed);
+        let n = dataset.n_train();
+        let batch = engine.manifest.batch;
+        anyhow::ensure!(n >= batch, "dataset smaller than one batch");
+
+        let mut workers = Vec::with_capacity(p_total);
+        for i in 0..p_total {
+            let shard = if policy.shards_data() {
+                let base = n / p_primary;
+                let lo = (i % p_primary) * base;
+                let hi = if i % p_primary == p_primary - 1 { n } else { lo + base };
+                Some((lo, hi))
+            } else {
+                None
+            };
+            let params = engine.manifest.init_params(cfg.seed ^ 0x9a9a);
+            workers.push(Worker::new(
+                i,
+                params,
+                root.child(100 + i as u64),
+                n,
+                batch,
+                shard,
+                policy.uses_order_search() && cfg.force_delta_order.is_none(),
+                cfg.n_parts,
+                cfg.force_delta_order,
+                dataset.train_y.clone(),
+            ));
+        }
+
+        Ok(Self {
+            window: RecordWindow::new(cfg.tau, cfg.m, cfg.c),
+            eval_rng: root.child(7),
+            comm_rng: root.child(8),
+            cfg,
+            engine,
+            dataset,
+            cluster,
+            policy,
+            workers,
+            x_buf: Vec::new(),
+            y_buf: Vec::new(),
+        })
+    }
+
+    /// Steps per epoch per worker (dataset passes ÷ batch).
+    pub fn steps_per_epoch(&self) -> usize {
+        (self.dataset.n_train() / self.engine.manifest.batch).max(1)
+    }
+
+    /// Drive the run to completion.
+    pub fn run(&mut self) -> Result<RunOutput> {
+        let spe = self.steps_per_epoch();
+        let total_steps = ((self.cfg.epochs * spe as f64).ceil() as usize).max(1);
+        let watch = Stopwatch::new();
+        let mut log = RunLog::new(self.cfg.label())
+            .tag("dataset", self.dataset.name.clone())
+            .tag("variant", &self.cfg.variant)
+            .tag("beta", self.cfg.beta)
+            .tag("a_tilde", self.cfg.a_tilde)
+            .tag("m", self.cfg.m)
+            .tag("seed", self.cfg.seed);
+        let mut estimation_errors = Vec::new();
+
+        // Initial point (iteration 0).
+        log.push(self.evaluate(0, 0.0, &watch)?);
+
+        for step in 1..=total_steps {
+            let k_in_period = (step - 1) % self.cfg.tau;
+            let recorded = self.window.is_recorded(k_in_period);
+
+            for wi in 0..self.workers.len() {
+                self.local_step(wi, recorded)?;
+            }
+
+            if step % self.cfg.tau == 0 {
+                self.communicate(step as u64, &mut estimation_errors)?;
+            }
+
+            if step % self.cfg.eval_every == 0 || step == total_steps {
+                let rec = self.evaluate(step as u64, step as f64 / spe as f64, &watch)?;
+                let done = self
+                    .cfg
+                    .target_loss
+                    .map(|t| rec.train_loss <= t)
+                    .unwrap_or(false);
+                log.push(rec);
+                if done {
+                    break;
+                }
+            }
+        }
+
+        Ok(RunOutput {
+            log,
+            estimation_errors,
+            comm_time_s: self.cluster.comm_time_total,
+            wait_time_s: self.cluster.wait_time_total,
+            orders_kept: self.workers.iter().map(|w| w.orders_kept()).sum(),
+            orders_redrawn: self.workers.iter().map(|w| w.orders_redrawn()).sum(),
+            exec_count: *self.engine.exec_count.borrow(),
+            final_workers: self.workers.iter().map(|w| w.params().to_vec()).collect(),
+        })
+    }
+
+    /// One local SGD step of worker `wi`.
+    fn local_step(&mut self, wi: usize, recorded: bool) -> Result<()> {
+        let w = &mut self.workers[wi];
+        let idx = w.next_batch();
+        self.dataset.gather_train(&idx, &mut self.x_buf, &mut self.y_buf);
+        let (new_params, out) =
+            self.engine
+                .train_step(w.params(), &self.x_buf, &self.y_buf, self.cfg.lr)?;
+        let w = &mut self.workers[wi];
+        w.set_params(new_params);
+        if recorded {
+            w.add_energy(out.loss);
+        }
+        self.cluster.advance_compute(wi, 1);
+        Ok(())
+    }
+
+    /// A τ-boundary: estimation, the scheme's exchange, Judge scores.
+    fn communicate(
+        &mut self,
+        iteration: u64,
+        estimation_errors: &mut Vec<(u64, f32)>,
+    ) -> Result<()> {
+        if matches!(self.cfg.algo, AlgoKind::Sequential) {
+            // No cohort — still reset windows so energies don't grow.
+            for w in self.workers.iter_mut() {
+                w.reset_energy();
+            }
+            return Ok(());
+        }
+
+        let energies: Vec<f32> = self.workers.iter().map(|w| w.energy()).collect();
+
+        // Full-dataset losses when the policy (OMWU) or the Eq. 27 probe
+        // needs them. OMWU is *charged* for this in simulated time; the
+        // probe is instrumentation and charges nothing.
+        let needs_full = self.policy.needs_full_losses() || self.cfg.track_estimation_error;
+        let full_losses = if needs_full {
+            let mut v = Vec::with_capacity(self.workers.len());
+            for w in 0..self.workers.len() {
+                v.push(self.full_train_loss(w)?);
+            }
+            if self.policy.needs_full_losses() {
+                let spe = self.steps_per_epoch() as f64;
+                let cost = spe * self.cluster.compute.step_time_s * EVAL_STEP_FRACTION;
+                for i in 0..self.cluster.clocks.len() {
+                    self.cluster.clocks[i] += cost;
+                }
+            }
+            Some(v)
+        } else {
+            None
+        };
+
+        let msg_bytes = self.engine.manifest.message_bytes();
+
+        if self.cfg.algo == AlgoKind::WasgdPlusAsync {
+            self.communicate_async(&energies, msg_bytes)?;
+        } else {
+            let mut params: Vec<Vec<f32>> =
+                self.workers.iter().map(|w| w.params().to_vec()).collect();
+            let mut ctx = CommContext {
+                params: &mut params,
+                energies: &energies,
+                engine: &self.engine,
+                cluster: &mut self.cluster,
+                cfg: &self.cfg,
+                rng: &mut self.comm_rng,
+                msg_bytes,
+                full_losses: full_losses.as_deref(),
+                iteration,
+            };
+            self.policy.at_boundary(&mut ctx)?;
+            for (w, p) in self.workers.iter_mut().zip(params.into_iter()) {
+                w.set_params(p);
+            }
+        }
+
+        // Eq. 27: |θ_est − θ_true|₁ against the same weight family
+        // computed from exact full-dataset losses.
+        if self.cfg.track_estimation_error {
+            if let (Some(est), Some(full)) = (self.policy.last_weights(), full_losses.as_deref())
+            {
+                let truth = true_weights(self.cfg.algo, full, self.cfg.a_tilde);
+                let err: f32 = est
+                    .iter()
+                    .zip(truth.iter())
+                    .map(|(a, b)| (a - b).abs())
+                    .sum();
+                estimation_errors.push((iteration, err));
+            }
+        }
+
+        // §3.4 order search: score every worker against the cohort.
+        if self.policy.uses_order_search() {
+            for (i, w) in self.workers.iter_mut().enumerate() {
+                w.record_judge_score(judge(&energies, i));
+            }
+        }
+
+        for w in self.workers.iter_mut() {
+            w.reset_energy();
+        }
+        Ok(())
+    }
+
+    /// Algorithm 4: every worker aggregates with the first p−1 peers (by
+    /// simulated clock) among the p+b−1 others; stragglers are ignored.
+    fn communicate_async(&mut self, energies: &[f32], msg_bytes: usize) -> Result<()> {
+        let p = self.cfg.p;
+        let total = self.workers.len();
+        let need = p.saturating_sub(1).max(1);
+        let snapshot: Vec<Vec<f32>> =
+            self.workers.iter().map(|w| w.params().to_vec()).collect();
+        let clocks = self.cluster.clocks.clone();
+
+        let mut new_params: Vec<Vec<f32>> = Vec::with_capacity(total);
+        for i in 0..total {
+            // Quorum: the `need` earliest peers.
+            let mut peers: Vec<usize> = (0..total).filter(|&j| j != i).collect();
+            peers.sort_by(|&a, &b| clocks[a].partial_cmp(&clocks[b]).unwrap());
+            peers.truncate(need);
+            self.cluster.async_gather(i, need, msg_bytes);
+
+            // Cohort = self + quorum; aggregate and keep row 0 (self).
+            let mut cohort_params: Vec<Vec<f32>> = Vec::with_capacity(need + 1);
+            let mut cohort_h: Vec<f32> = Vec::with_capacity(need + 1);
+            cohort_params.push(snapshot[i].clone());
+            cohort_h.push(energies[i].max(1e-12));
+            for &j in &peers {
+                cohort_params.push(snapshot[j].clone());
+                cohort_h.push(energies[j].max(1e-12));
+            }
+            let theta = linalg::boltzmann_weights(&cohort_h, self.cfg.a_tilde);
+            let d = snapshot[i].len();
+            let mut agg = vec![0.0f32; d];
+            {
+                let rows: Vec<&[f32]> =
+                    cohort_params.iter().map(|v| v.as_slice()).collect();
+                linalg::weighted_sum(&mut agg, &rows, &theta);
+            }
+            let mut mine = snapshot[i].clone();
+            linalg::lerp_into(&mut mine, self.cfg.beta, &agg);
+            new_params.push(mine);
+        }
+        for (w, pnew) in self.workers.iter_mut().zip(new_params.into_iter()) {
+            w.set_params(pnew);
+        }
+        Ok(())
+    }
+
+    /// Exact mean train loss of one worker over the whole training split.
+    fn full_train_loss(&mut self, wi: usize) -> Result<f32> {
+        let b = self.engine.manifest.batch;
+        let n = self.dataset.n_train();
+        let mut total = 0.0f64;
+        let mut count = 0usize;
+        let mut lo = 0;
+        while lo + b <= n {
+            let idx: Vec<u32> = (lo as u32..(lo + b) as u32).collect();
+            self.dataset.gather_train(&idx, &mut self.x_buf, &mut self.y_buf);
+            let out =
+                self.engine
+                    .eval_batch(self.workers[wi].params(), &self.x_buf, &self.y_buf)?;
+            total += out.sum_loss as f64;
+            count += b;
+            lo += b;
+        }
+        Ok((total / count.max(1) as f64) as f32)
+    }
+
+    /// Sampled train/test evaluation → one metrics record. Evaluates
+    /// worker 0 (the cohort is exchangeable; after a boundary with β=1
+    /// all workers coincide). Instrumentation only: charges no sim time.
+    fn evaluate(&mut self, iteration: u64, epoch: f64, watch: &Stopwatch) -> Result<Record> {
+        let b = self.engine.manifest.batch;
+        let params = self.workers[0].params().to_vec();
+
+        let sample = |n: usize, rng: &mut Rng| -> Vec<u32> {
+            (0..b).map(|_| rng.below(n) as u32).collect()
+        };
+
+        let mut tr_loss = 0.0f64;
+        let mut tr_correct = 0.0f64;
+        let mut te_loss = 0.0f64;
+        let mut te_correct = 0.0f64;
+        let batches = self.cfg.eval_batches.max(1);
+        for _ in 0..batches {
+            let idx = sample(self.dataset.n_train(), &mut self.eval_rng);
+            self.dataset.gather_train(&idx, &mut self.x_buf, &mut self.y_buf);
+            let out = self.engine.eval_batch(&params, &self.x_buf, &self.y_buf)?;
+            tr_loss += out.sum_loss as f64;
+            tr_correct += out.correct as f64;
+
+            let idx = sample(self.dataset.n_test(), &mut self.eval_rng);
+            self.dataset.gather_test(&idx, &mut self.x_buf, &mut self.y_buf);
+            let out = self.engine.eval_batch(&params, &self.x_buf, &self.y_buf)?;
+            te_loss += out.sum_loss as f64;
+            te_correct += out.correct as f64;
+        }
+        let denom = (batches * b) as f64;
+        Ok(Record {
+            iteration,
+            epoch,
+            sim_time_s: self.cluster.now(),
+            wall_time_s: watch.elapsed_s(),
+            train_loss: tr_loss / denom,
+            train_error: 1.0 - tr_correct / denom,
+            test_loss: te_loss / denom,
+            test_error: 1.0 - te_correct / denom,
+        })
+    }
+}
+
+/// The "exact" weights a scheme would compute from full-dataset losses —
+/// the θ_true of Eq. (20)/(27).
+pub fn true_weights(algo: AlgoKind, full_losses: &[f32], a_tilde: f32) -> Vec<f32> {
+    match algo {
+        AlgoKind::Wasgd => linalg::inverse_loss_weights(full_losses),
+        _ => linalg::boltzmann_weights(full_losses, a_tilde),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn true_weights_family_dispatch() {
+        let h = [0.5f32, 1.0];
+        let w_inv = true_weights(AlgoKind::Wasgd, &h, 1.0);
+        assert!((w_inv[0] - 2.0 / 3.0).abs() < 1e-6);
+        let w_b = true_weights(AlgoKind::WasgdPlus, &h, 0.0);
+        assert!((w_b[0] - 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,95 @@
+//! Data substrate: datasets, synthetic generators, and sample-order state.
+//!
+//! The paper evaluates on MNIST / Fashion-MNIST / CIFAR-10 / CIFAR-100.
+//! This environment has no network access, so per DESIGN.md §3 we build
+//! deterministic synthetic analogues whose *relative difficulty* matches
+//! (mnist < fashion < cifar10 < cifar100). Everything the algorithms
+//! under study exercise — loss landscapes, label structure for the
+//! order-effect experiment, batch streams — is preserved.
+
+pub mod order;
+pub mod synth;
+
+pub use order::{delta_blocked_order, OrderState, RecordWindow};
+pub use synth::{DatasetKind, SynthConfig};
+
+/// A fully materialised classification dataset (train + test split),
+/// row-major `x` with `dim` features per example.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub dim: usize,
+    pub classes: usize,
+    pub train_x: Vec<f32>,
+    pub train_y: Vec<i32>,
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn n_train(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn n_test(&self) -> usize {
+        self.test_y.len()
+    }
+
+    /// Row view of one training example.
+    #[inline]
+    pub fn train_row(&self, i: usize) -> &[f32] {
+        &self.train_x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Gather a batch of training examples (by index) into the caller's
+    /// reusable buffers — the hot-loop path, allocation-free.
+    pub fn gather_train(&self, idx: &[u32], x_out: &mut Vec<f32>, y_out: &mut Vec<i32>) {
+        x_out.clear();
+        y_out.clear();
+        x_out.reserve(idx.len() * self.dim);
+        y_out.reserve(idx.len());
+        for &i in idx {
+            let i = i as usize;
+            x_out.extend_from_slice(self.train_row(i));
+            y_out.push(self.train_y[i]);
+        }
+    }
+
+    /// Gather a batch of test examples.
+    pub fn gather_test(&self, idx: &[u32], x_out: &mut Vec<f32>, y_out: &mut Vec<i32>) {
+        x_out.clear();
+        y_out.clear();
+        for &i in idx {
+            let i = i as usize;
+            x_out.extend_from_slice(&self.test_x[i * self.dim..(i + 1) * self.dim]);
+            y_out.push(self.test_y[i]);
+        }
+    }
+
+    /// Per-class counts over the training labels (test helper / sanity).
+    pub fn train_class_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.classes];
+        for &y in &self.train_y {
+            h[y as usize] += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::synth::{DatasetKind, SynthConfig};
+
+    #[test]
+    fn gather_matches_rows() {
+        let ds = SynthConfig::preset(DatasetKind::MnistLike)
+            .with_sizes(64, 16)
+            .build(1);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        ds.gather_train(&[3, 0, 7], &mut x, &mut y);
+        assert_eq!(x.len(), 3 * ds.dim);
+        assert_eq!(&x[0..ds.dim], ds.train_row(3));
+        assert_eq!(y[1], ds.train_y[0]);
+    }
+}

@@ -1,0 +1,306 @@
+//! Sample-order machinery — the paper's §3.4 and Algorithm 2.
+//!
+//! Three pieces:
+//!
+//! * [`RecordWindow`] — `RecordIndex(D, m, c, τ)` (Algorithm 2, Function 1):
+//!   which iterations inside a communication period have their loss
+//!   recorded for the weight estimate. The m records are spread across c
+//!   blocks (the last m/c iterations of each τ/c block), the paper's
+//!   "assignment distribution" of Eq. (26) that samples the trajectory in
+//!   time instead of only at the boundary.
+//! * [`OrderState`] — per-worker seeds + scores for the n order parts.
+//!   `OrderGen` (Function 2): a part whose score satisfied the judgment
+//!   (≤ −1, i.e. better than ~84% of the cohort under the normality
+//!   assumption) keeps its shuffle seed for the next epoch; otherwise the
+//!   seed is redrawn. A sample order is therefore a pure function of the
+//!   seed, which is what lets "good orders" survive.
+//! * [`delta_blocked_order`] — the Fig. 3 workload generator: an order in
+//!   which δ consecutive samples share a label (δ=1 ≈ fully interleaved,
+//!   δ=1000 ≈ sorted by label).
+
+use crate::rng::Rng;
+
+/// Which iterations (k = 0-based index inside a communication period of
+/// length τ) get their per-batch loss recorded into the estimation window.
+#[derive(Clone, Copy, Debug)]
+pub struct RecordWindow {
+    pub tau: usize,
+    /// Total recorded iterations per period (the paper's m).
+    pub m: usize,
+    /// Number of blocks the records are spread over (the paper's c).
+    pub c: usize,
+}
+
+impl RecordWindow {
+    /// Construct, clamping to feasible values: 1 ≤ c ≤ m ≤ τ.
+    pub fn new(tau: usize, m: usize, c: usize) -> Self {
+        let tau = tau.max(1);
+        let m = m.clamp(1, tau);
+        let c = c.clamp(1, m).min(tau);
+        Self { tau, m, c }
+    }
+
+    /// Records-per-block (⌈m/c⌉, last block may be short).
+    fn per_block(&self) -> usize {
+        self.m.div_ceil(self.c)
+    }
+
+    /// Block length τ/c (floor, min 1).
+    fn block_len(&self) -> usize {
+        (self.tau / self.c).max(1)
+    }
+
+    /// Is iteration `k` (0-based, k ∈ [0, τ)) recorded?
+    /// True for the last `m/c` iterations of each `τ/c` block.
+    pub fn is_recorded(&self, k: usize) -> bool {
+        let k = k % self.tau;
+        let bl = self.block_len();
+        let pb = self.per_block();
+        let block = (k / bl).min(self.c - 1);
+        let end = ((block + 1) * bl).min(self.tau);
+        // Iterations past c·bl (τ not divisible by c) fold into the last block.
+        if block == self.c - 1 {
+            let end = self.tau;
+            return k + pb >= end && k < end;
+        }
+        k + pb >= end && k < end
+    }
+
+    /// How many iterations in one period are recorded.
+    pub fn count_per_period(&self) -> usize {
+        (0..self.tau).filter(|&k| self.is_recorded(k)).count()
+    }
+}
+
+/// Per-worker order state: the paper's `Scores`, `Seed` arrays plus the
+/// accept/reject rule of `OrderGen`.
+#[derive(Clone, Debug)]
+pub struct OrderState {
+    pub n_samples: usize,
+    pub n_parts: usize,
+    seeds: Vec<u64>,
+    scores: Vec<f32>,
+    fresh: Rng,
+    /// Count of parts that kept their seed across epochs (telemetry).
+    pub kept: u64,
+    /// Count of parts that redrew (telemetry).
+    pub redrawn: u64,
+}
+
+/// Paper's judgment threshold: keep an order whose z-score ≤ −1
+/// (better than ≈84% of the cohort under normality).
+pub const JUDGE_THRESHOLD: f32 = -1.0;
+
+impl OrderState {
+    pub fn new(n_samples: usize, n_parts: usize, seed: u64) -> Self {
+        let n_parts = n_parts.clamp(1, n_samples.max(1));
+        let mut fresh = Rng::new(seed ^ 0x0bde_05ee_d5);
+        let seeds = (0..n_parts).map(|_| fresh.next_u64()).collect();
+        Self {
+            n_samples,
+            n_parts,
+            seeds,
+            // Start "bad" so the first epoch always shuffles fresh.
+            scores: vec![f32::INFINITY; n_parts],
+            fresh,
+            kept: 0,
+            redrawn: 0,
+        }
+    }
+
+    /// Length of order part `l` (last part absorbs the remainder).
+    pub fn part_len(&self, part: usize) -> usize {
+        let base = self.n_samples / self.n_parts;
+        if part + 1 == self.n_parts {
+            self.n_samples - base * (self.n_parts - 1)
+        } else {
+            base
+        }
+    }
+
+    /// Global index offset of part `l`.
+    pub fn part_offset(&self, part: usize) -> usize {
+        (self.n_samples / self.n_parts) * part
+    }
+
+    /// The paper's `OrderGen`: keep the seed iff the recorded score
+    /// satisfied the judgment, then emit the permutation *of global
+    /// sample indices* for this part.
+    pub fn order_for_part(&mut self, part: usize) -> Vec<u32> {
+        assert!(part < self.n_parts);
+        if self.scores[part] > JUDGE_THRESHOLD {
+            self.seeds[part] = self.fresh.next_u64();
+            self.redrawn += 1;
+        } else {
+            self.kept += 1;
+        }
+        let mut rng = Rng::new(self.seeds[part]);
+        let off = self.part_offset(part) as u32;
+        let mut perm = rng.permutation(self.part_len(part));
+        for v in perm.iter_mut() {
+            *v += off;
+        }
+        perm
+    }
+
+    /// Record the score produced by `Judge` at the end of part `l`.
+    pub fn record_score(&mut self, part: usize, score: f32) {
+        self.scores[part] = score;
+    }
+
+    /// Current seed of a part (test hook).
+    pub fn seed_of(&self, part: usize) -> u64 {
+        self.seeds[part]
+    }
+}
+
+/// `Judge` (Algorithm 2, Function 3): z-score of worker i's loss energy
+/// against the cohort. Negative = better than average.
+pub fn judge(h: &[f32], i: usize) -> f32 {
+    let ave = crate::linalg::mean(h);
+    let stdv = crate::linalg::stddev(h);
+    if stdv <= f64::EPSILON {
+        return 0.0;
+    }
+    ((h[i] as f64 - ave) / stdv) as f32
+}
+
+/// Build a sample order where δ consecutive samples share a label — the
+/// Fig. 3 order-effect workload. δ=1 interleaves labels maximally;
+/// δ→n/classes degenerates to label-sorted order.
+pub fn delta_blocked_order(labels: &[i32], delta: usize, rng: &mut Rng) -> Vec<u32> {
+    let delta = delta.max(1);
+    let classes = labels.iter().map(|&y| y as usize + 1).max().unwrap_or(1);
+    let mut pools: Vec<Vec<u32>> = vec![Vec::new(); classes];
+    for (i, &y) in labels.iter().enumerate() {
+        pools[y as usize].push(i as u32);
+    }
+    for pool in pools.iter_mut() {
+        rng.shuffle(pool);
+    }
+    let mut cursors = vec![0usize; classes];
+    let mut out = Vec::with_capacity(labels.len());
+    let mut live: Vec<usize> = (0..classes).filter(|&c| !pools[c].is_empty()).collect();
+    while !live.is_empty() {
+        // Pick a random class that still has samples, emit up to δ of them.
+        let pick = live[rng.below(live.len())];
+        let start = cursors[pick];
+        let take = delta.min(pools[pick].len() - start);
+        out.extend_from_slice(&pools[pick][start..start + take]);
+        cursors[pick] += take;
+        if cursors[pick] == pools[pick].len() {
+            live.retain(|&c| c != pick);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_window_counts() {
+        // τ=1000, m=100, c=4: 25 records in each of 4 blocks of 250.
+        let w = RecordWindow::new(1000, 100, 4);
+        assert_eq!(w.count_per_period(), 100);
+        assert!(w.is_recorded(249));
+        assert!(w.is_recorded(225));
+        assert!(!w.is_recorded(224));
+        assert!(!w.is_recorded(0));
+        assert!(w.is_recorded(999));
+    }
+
+    #[test]
+    fn record_window_c1_is_tail() {
+        // c=1 reduces to WASGD's "last m iterations" (Algorithm 3: k ≥ τ−m).
+        let w = RecordWindow::new(50, 10, 1);
+        for k in 0..50 {
+            assert_eq!(w.is_recorded(k), k >= 40, "k={k}");
+        }
+    }
+
+    #[test]
+    fn record_window_clamps() {
+        let w = RecordWindow::new(10, 100, 7);
+        assert_eq!(w.m, 10);
+        assert!(w.count_per_period() <= 10);
+        assert!(w.count_per_period() >= 1);
+    }
+
+    #[test]
+    fn order_state_keeps_good_seed() {
+        let mut st = OrderState::new(100, 4, 1);
+        let first = st.order_for_part(0); // score=∞ ⇒ redraw
+        let seed_after = st.seed_of(0);
+        st.record_score(0, -1.5); // good ⇒ keep
+        let second = st.order_for_part(0);
+        assert_eq!(st.seed_of(0), seed_after);
+        assert_eq!(first.len(), second.len());
+        st.record_score(0, 0.3); // bad ⇒ redraw
+        st.order_for_part(0);
+        assert_ne!(st.seed_of(0), seed_after);
+    }
+
+    #[test]
+    fn order_covers_part_exactly() {
+        let mut st = OrderState::new(103, 4, 2);
+        for part in 0..4 {
+            let mut o = st.order_for_part(part);
+            o.sort_unstable();
+            let off = st.part_offset(part) as u32;
+            let len = st.part_len(part) as u32;
+            assert_eq!(o, (off..off + len).collect::<Vec<_>>());
+        }
+        // Parts tile the dataset.
+        assert_eq!((0..4).map(|p| st.part_len(p)).sum::<usize>(), 103);
+    }
+
+    #[test]
+    fn judge_zscore() {
+        let h = [1.0, 2.0, 3.0, 4.0];
+        let s = judge(&h, 0);
+        assert!(s < 0.0);
+        let s_hi = judge(&h, 3);
+        assert!(s_hi > 0.0);
+        assert!((judge(&[2.0, 2.0, 2.0], 1)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn delta_order_is_permutation() {
+        let labels: Vec<i32> = (0..500).map(|i| (i % 10) as i32).collect();
+        let mut rng = Rng::new(3);
+        for delta in [1usize, 10, 100, 1000] {
+            let mut o = delta_blocked_order(&labels, delta, &mut rng);
+            o.sort_unstable();
+            assert_eq!(o, (0..500u32).collect::<Vec<_>>(), "delta={delta}");
+        }
+    }
+
+    #[test]
+    fn delta_order_block_structure() {
+        let labels: Vec<i32> = (0..1000).map(|i| (i % 10) as i32).collect();
+        let mut rng = Rng::new(4);
+        let o = delta_blocked_order(&labels, 50, &mut rng);
+        // Average same-label run length should be close to δ.
+        let mut runs = Vec::new();
+        let mut len = 1;
+        for i in 1..o.len() {
+            if labels[o[i] as usize] == labels[o[i - 1] as usize] {
+                len += 1;
+            } else {
+                runs.push(len);
+                len = 1;
+            }
+        }
+        runs.push(len);
+        let avg = runs.iter().sum::<usize>() as f64 / runs.len() as f64;
+        assert!(avg > 25.0, "avg run {avg}");
+        // And δ=1 should interleave much more.
+        let o1 = delta_blocked_order(&labels, 1, &mut rng);
+        let switches = (1..o1.len())
+            .filter(|&i| labels[o1[i] as usize] != labels[o1[i - 1] as usize])
+            .count();
+        assert!(switches > o1.len() * 7 / 10, "switches={switches}");
+    }
+}

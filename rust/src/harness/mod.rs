@@ -1,0 +1,193 @@
+//! Shared machinery for the figure-regeneration harnesses (DESIGN.md §5).
+//!
+//! Every `bench_*` binary builds [`ExperimentConfig`]s, runs them through
+//! the coordinator, reduces the record streams with the paper's Eq. (47)
+//! scoring, and writes one CSV per figure under `results/`.
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{RunOutput, Trainer};
+use crate::data::synth::SynthConfig;
+use crate::data::Dataset;
+use crate::metrics::{Record, RunLog};
+use crate::runtime::Engine;
+
+/// Where harness CSVs land.
+pub const RESULTS_DIR: &str = "results";
+
+/// A shared engine + dataset + calibrated step time for a whole sweep:
+/// engine compilation (seconds) and step-time calibration happen once,
+/// and every run in the sweep uses the *same* simulated step cost so
+/// sim-time comparisons across configurations are exact.
+pub struct SharedEnv {
+    pub engine: Engine,
+    pub dataset: Dataset,
+    pub step_time_s: f64,
+}
+
+impl SharedEnv {
+    /// Build from a base config (dataset seed = base.seed).
+    pub fn new(base: &ExperimentConfig) -> Result<Self> {
+        let engine = Engine::load(&base.artifacts_root, &base.variant)?;
+        let dataset = SynthConfig::preset(base.dataset).build(base.seed);
+        let step_time_s = if base.compute.step_time_s > 0.0 {
+            base.compute.step_time_s
+        } else {
+            engine.calibrate_step_time(8)?
+        };
+        Ok(Self { engine, dataset, step_time_s })
+    }
+
+    /// Run one config against the shared engine/dataset.
+    pub fn run(&self, cfg: &ExperimentConfig) -> Result<RunOutput> {
+        let mut cfg = cfg.clone();
+        cfg.compute.step_time_s = self.step_time_s;
+        let mut tr = Trainer::new(cfg, &self.engine, &self.dataset)?;
+        tr.run()
+    }
+
+    /// Run one config across several seeds (the dataset stays fixed;
+    /// seeds vary inits, orders and the cluster's stochasticity).
+    pub fn run_seeds(&self, base: &ExperimentConfig, seeds: &[u64]) -> Result<Vec<RunOutput>> {
+        let mut outs = Vec::with_capacity(seeds.len());
+        for &s in seeds {
+            let mut cfg = base.clone();
+            cfg.seed = s;
+            outs.push(self.run(&cfg)?);
+        }
+        Ok(outs)
+    }
+}
+
+/// The paper's Eq. (47): for each candidate run i,
+/// dᵢ = (1/N)·Σⱼ (v̄_jud(j) − vᵢ(j)), where v̄_jud is the per-record mean
+/// of the baseline runs. Returns (mean over i, sample std over i) —
+/// the figure's point and error bar. Positive = candidate better (its
+/// metric is lower than the baseline's).
+pub fn eq47_point(
+    baselines: &[RunLog],
+    candidates: &[RunLog],
+    metric: impl Fn(&Record) -> f64,
+) -> (f64, f64) {
+    let n = baselines
+        .iter()
+        .chain(candidates.iter())
+        .map(|r| r.records.len())
+        .min()
+        .unwrap_or(0);
+    if n == 0 || baselines.is_empty() || candidates.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    // v̄_jud per record index.
+    let mut jud = vec![0.0f64; n];
+    for b in baselines {
+        for j in 0..n {
+            jud[j] += metric(&b.records[j]) / baselines.len() as f64;
+        }
+    }
+    let ds: Vec<f64> = candidates
+        .iter()
+        .map(|c| {
+            (0..n)
+                .map(|j| jud[j] - metric(&c.records[j]))
+                .sum::<f64>()
+                / n as f64
+        })
+        .collect();
+    let mean = ds.iter().sum::<f64>() / ds.len() as f64;
+    let var = if ds.len() > 1 {
+        ds.iter().map(|d| (d - mean).powi(2)).sum::<f64>() / (ds.len() - 1) as f64
+    } else {
+        0.0
+    };
+    (mean, var.sqrt())
+}
+
+/// Standard sweep-table printer: one row per swept value.
+pub fn print_sweep(
+    title: &str,
+    axis: &str,
+    rows: &[(String, f64, f64)], // (value label, point, err)
+) {
+    println!("\n== {title} ==");
+    println!("{axis:>12}  {:>14}  {:>12}", "Δ vs baseline", "± err");
+    for (label, point, err) in rows {
+        println!("{label:>12}  {point:>14.6}  {err:>12.6}");
+    }
+}
+
+/// Write a sweep CSV: `value,point,err` rows.
+pub fn write_sweep_csv(
+    path: &str,
+    header: &str,
+    rows: &[(String, f64, f64)],
+) -> std::io::Result<()> {
+    use std::io::Write as _;
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{header}")?;
+    for (label, point, err) in rows {
+        writeln!(f, "{label},{point:.8},{err:.8}")?;
+    }
+    Ok(())
+}
+
+/// Harness-wide default seeds (the paper uses 5 repetitions).
+pub const SWEEP_SEEDS: [u64; 5] = [11, 22, 33, 44, 55];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Record;
+
+    fn log_with(losses: &[f64]) -> RunLog {
+        let mut l = RunLog::new("x");
+        for (i, &v) in losses.iter().enumerate() {
+            l.push(Record {
+                iteration: i as u64,
+                epoch: i as f64,
+                sim_time_s: i as f64,
+                wall_time_s: i as f64,
+                train_loss: v,
+                train_error: v,
+                test_loss: v,
+                test_error: v,
+            });
+        }
+        l
+    }
+
+    #[test]
+    fn eq47_positive_when_candidate_lower() {
+        let base = vec![log_with(&[2.0, 2.0]), log_with(&[2.0, 2.0])];
+        let cand = vec![log_with(&[1.0, 1.0])];
+        let (point, err) = eq47_point(&base, &cand, |r| r.train_loss);
+        assert!((point - 1.0).abs() < 1e-12);
+        assert_eq!(err, 0.0);
+    }
+
+    #[test]
+    fn eq47_zero_for_identical() {
+        let base = vec![log_with(&[1.5, 0.5, 0.25])];
+        let cand = vec![log_with(&[1.5, 0.5, 0.25])];
+        let (point, _) = eq47_point(&base, &cand, |r| r.train_loss);
+        assert!(point.abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq47_handles_unequal_lengths() {
+        let base = vec![log_with(&[2.0, 2.0, 2.0])];
+        let cand = vec![log_with(&[1.0, 1.0])];
+        let (point, _) = eq47_point(&base, &cand, |r| r.train_loss);
+        assert!((point - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq47_empty_is_nan() {
+        let (p, e) = eq47_point(&[], &[log_with(&[1.0])], |r| r.train_loss);
+        assert!(p.is_nan() && e.is_nan());
+    }
+}

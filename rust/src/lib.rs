@@ -1,0 +1,49 @@
+//! # wasgd — Weighted Aggregating SGD for parallel deep learning
+//!
+//! A production-shaped reproduction of *"Weighted Aggregating Stochastic
+//! Gradient Descent for Parallel Deep Learning"* (Guo, Xiao, Ye, Zhu;
+//! 2020) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L1 (Pallas, build time)** — `python/compile/kernels/`: MXU-tiled
+//!   matmul, fused softmax-xent, and the paper's Boltzmann
+//!   weighted-aggregation kernel (Eq. 10+13).
+//! * **L2 (JAX, build time)** — `python/compile/model.py`: CNN/MLP
+//!   classifiers with a flat-parameter ABI, lowered once to HLO text.
+//! * **L3 (this crate, run time)** — the decentralized coordinator:
+//!   seven parallel-SGD schemes, the sample-order search, the free
+//!   loss-estimation windows, a simulated cluster, and the bench harness
+//!   that regenerates every figure of the paper's evaluation.
+//!
+//! Python never runs on the training path: artifacts are loaded through
+//! the PJRT C API (`xla` crate) and executed from rust.
+//!
+//! Quick taste (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use wasgd::config::{AlgoKind, ExperimentConfig};
+//! use wasgd::coordinator::run_experiment;
+//! use wasgd::data::synth::DatasetKind;
+//!
+//! let mut cfg = ExperimentConfig::paper_preset(DatasetKind::Tiny);
+//! cfg.algo = AlgoKind::WasgdPlus;
+//! cfg.p = 4;
+//! let log = run_experiment(&cfg).unwrap();
+//! println!("final loss {:.4}", log.final_train_loss());
+//! ```
+
+pub mod algorithms;
+pub mod bench;
+pub mod checkpoint;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod linalg;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod util;
+
+pub use config::{AlgoKind, ExperimentConfig};
+pub use coordinator::run_experiment;

@@ -1,0 +1,197 @@
+//! Host-side dense vector kernels used by the coordinator's hot loop.
+//!
+//! Parameter vectors are plain `Vec<f32>` (the flat ABI, DESIGN.md §1).
+//! Several baselines aggregate on the host (SPSGD's average, EASGD's
+//! elastic pull) and WASGD's aggregation has a host fallback used when no
+//! PJRT `aggregate_p{p}` artifact matches the cohort size. These loops
+//! are written to autovectorise: unit-stride, no bounds checks in the
+//! body (chunked iterators), f32 accumulation with an f64 reduction where
+//! the value is a statistic rather than a parameter.
+
+/// y ← y + a·x
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * *xi;
+    }
+}
+
+/// y ← (1-t)·y + t·x  (linear interpolation toward x)
+pub fn lerp_into(y: &mut [f32], t: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let keep = 1.0 - t;
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi = keep * *yi + t * *xi;
+    }
+}
+
+/// out ← Σᵢ wᵢ·rows[i]  (weighted combination of worker parameter rows)
+pub fn weighted_sum(out: &mut [f32], rows: &[&[f32]], w: &[f32]) {
+    debug_assert_eq!(rows.len(), w.len());
+    out.fill(0.0);
+    for (row, &wi) in rows.iter().zip(w.iter()) {
+        axpy(out, wi, row);
+    }
+}
+
+/// The paper's Eq. (10) on the host: xᵢ ← (1-β)xᵢ + β·agg, for every row.
+pub fn beta_mix_rows(rows: &mut [Vec<f32>], agg: &[f32], beta: f32) {
+    for row in rows.iter_mut() {
+        lerp_into(row, beta, agg);
+    }
+}
+
+/// Euclidean norm (f64 accumulation).
+pub fn norm2(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+/// ‖a − b‖₂ without materialising the difference.
+pub fn dist2(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Mean of a slice (f64 accumulation).
+pub fn mean(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().map(|&v| v as f64).sum::<f64>() / x.len() as f64
+}
+
+/// Sample standard deviation (n−1 denominator), the paper's `stdv` in
+/// Algorithm 2 Function 3 (`Judge`).
+pub fn stddev(x: &[f32]) -> f64 {
+    if x.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(x);
+    let ss: f64 = x.iter().map(|&v| (v as f64 - m).powi(2)).sum();
+    (ss / (x.len() - 1) as f64).sqrt()
+}
+
+/// Boltzmann weights, Eq. (13): θᵢ = exp(−ã·hᵢ/Σh) / Σ exp(·).
+/// Numerically stabilised by max-subtraction; this is the host twin of
+/// the Pallas `boltzmann_weights` and must match it bit-for-bit in
+/// semantics (the proptest suite cross-checks the two).
+pub fn boltzmann_weights(h: &[f32], a_tilde: f32) -> Vec<f32> {
+    let total: f64 = h.iter().map(|&v| v as f64).sum();
+    let p = h.len();
+    if total <= 0.0 || !total.is_finite() {
+        // Degenerate energies → equal weights (matches ã→0 limit).
+        return vec![1.0 / p as f32; p];
+    }
+    let z: Vec<f64> = h
+        .iter()
+        .map(|&v| -(a_tilde as f64) * (v as f64) / total)
+        .collect();
+    let zmax = z.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let e: Vec<f64> = z.iter().map(|&v| (v - zmax).exp()).collect();
+    let denom: f64 = e.iter().sum();
+    e.iter().map(|&v| (v / denom) as f32).collect()
+}
+
+/// Inverse-loss weights — the original WASGD weighting (Algorithm 3):
+/// θᵢ = (1/hᵢ) / Σⱼ (1/hⱼ).
+pub fn inverse_loss_weights(h: &[f32]) -> Vec<f32> {
+    let inv: Vec<f64> = h.iter().map(|&v| 1.0 / (v.max(1e-12) as f64)).collect();
+    let denom: f64 = inv.iter().sum();
+    inv.iter().map(|&v| (v / denom) as f32).collect()
+}
+
+/// argmax over f32 (first maximal index).
+pub fn argmax(x: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in x.iter().enumerate() {
+        if v > x[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(&mut y, 2.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn lerp_endpoints() {
+        let mut y = vec![1.0, 2.0];
+        lerp_into(&mut y, 0.0, &[5.0, 5.0]);
+        assert_eq!(y, vec![1.0, 2.0]);
+        lerp_into(&mut y, 1.0, &[5.0, 6.0]);
+        assert_eq!(y, vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn weighted_sum_recovers_average() {
+        let a = vec![2.0f32; 4];
+        let b = vec![4.0f32; 4];
+        let mut out = vec![0.0f32; 4];
+        weighted_sum(&mut out, &[&a, &b], &[0.5, 0.5]);
+        assert_eq!(out, vec![3.0; 4]);
+    }
+
+    #[test]
+    fn boltzmann_equal_limit() {
+        let th = boltzmann_weights(&[0.3, 2.0, 1.1], 0.0);
+        for &t in &th {
+            assert!((t - 1.0 / 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn boltzmann_argmin_limit() {
+        let th = boltzmann_weights(&[0.3, 2.0, 1.1], 1e5);
+        assert!(th[0] > 0.999, "{th:?}");
+    }
+
+    #[test]
+    fn boltzmann_sums_to_one() {
+        for a in [0.0, 0.5, 1.0, 10.0, 1e4] {
+            let th = boltzmann_weights(&[0.9, 0.1, 0.5, 3.0], a);
+            let s: f32 = th.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn boltzmann_degenerate_energies() {
+        let th = boltzmann_weights(&[0.0, 0.0], 1.0);
+        assert_eq!(th, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn inverse_weights_prefer_low_loss() {
+        let th = inverse_loss_weights(&[0.5, 1.0]);
+        assert!((th[0] - 2.0 / 3.0).abs() < 1e-6);
+        assert!((th[1] - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stddev_matches_known() {
+        let s = stddev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s - 2.138089935).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn dist_and_norm() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-9);
+        assert!((dist2(&[1.0, 1.0], &[4.0, 5.0]) - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,203 @@
+//! `wasgd` — CLI launcher for the WASGD/WASGD+ training coordinator.
+//!
+//! ```text
+//! wasgd run --dataset mnist --algo wasgd+ --p 8 --tau 1000 --epochs 2
+//! wasgd compare --dataset tiny --p 4            # all schemes, one table
+//! wasgd calibrate --variant mnist_mlp           # measure step time
+//! wasgd list                                    # algorithms & datasets
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use wasgd::config::{AlgoKind, ExperimentConfig};
+use wasgd::coordinator::run_experiment_full;
+use wasgd::data::synth::DatasetKind;
+use wasgd::metrics::{format_table, write_csv};
+use wasgd::runtime::Engine;
+use wasgd::util::Args;
+
+const USAGE: &str = "\
+wasgd — Weighted Aggregating SGD for parallel deep learning
+
+USAGE:
+  wasgd run       [--dataset D] [--algo A] [--p N] [--tau N] [--beta F]
+                  [--a-tilde F] [--m N] [--c N] [--lr F] [--epochs F]
+                  [--eval-every N] [--seed N] [--backups N] [--variant V]
+                  [--artifacts DIR] [--target-loss F] [--out FILE.csv]
+                  [--save-checkpoint DIR]
+  wasgd compare   (same flags; runs every algorithm)
+  wasgd calibrate [--variant V] [--artifacts DIR] [--reps N]
+  wasgd list
+
+datasets:   tiny mnist fashion cifar10 cifar100
+algorithms: sgd spsgd easgd omwu mmwu wasgd wasgd+ wasgd+async
+";
+
+fn config_from(args: &Args) -> Result<ExperimentConfig> {
+    let dataset_s = args.str_flag("dataset", "tiny");
+    let dataset = DatasetKind::parse(&dataset_s)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset_s:?}"))?;
+    let mut cfg = ExperimentConfig::paper_preset(dataset);
+
+    let algo_s = args.str_flag("algo", "wasgd+");
+    cfg.algo = AlgoKind::parse(&algo_s)
+        .ok_or_else(|| anyhow::anyhow!("unknown algorithm {algo_s:?}"))?;
+    cfg.artifacts_root = PathBuf::from(args.str_flag("artifacts", "artifacts"));
+    if let Some(v) = args.opt_str("variant") {
+        cfg.variant = v;
+    }
+    cfg.p = args.num_flag("p", 4usize)?;
+    cfg.backups = args.num_flag("backups", 1usize)?;
+    if let Some(v) = args.opt_num::<usize>("tau")? {
+        cfg.tau = v;
+    }
+    if let Some(v) = args.opt_num::<f32>("beta")? {
+        cfg.beta = v;
+    }
+    if let Some(v) = args.opt_num::<f32>("a-tilde")? {
+        cfg.a_tilde = v;
+    }
+    if let Some(v) = args.opt_num::<usize>("m")? {
+        cfg.m = v;
+    }
+    if let Some(v) = args.opt_num::<usize>("c")? {
+        cfg.c = v;
+    }
+    if let Some(v) = args.opt_num::<f32>("lr")? {
+        cfg.lr = v;
+    }
+    if let Some(v) = args.opt_num::<usize>("eval-every")? {
+        cfg.eval_every = v;
+    }
+    cfg.epochs = args.num_flag("epochs", 2.0f64)?;
+    cfg.seed = args.num_flag("seed", 42u64)?;
+    cfg.target_loss = args.opt_num::<f64>("target-loss")?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let out_path = args.opt_str("out");
+    let ckpt_dir = args.opt_str("save-checkpoint");
+    args.finish()?;
+    eprintln!(
+        "running {} on {} (p={}, τ={}, β={}, ã={}, m={}, η={})",
+        cfg.algo.name(),
+        cfg.dataset.name(),
+        cfg.p,
+        cfg.tau,
+        cfg.beta,
+        cfg.a_tilde,
+        cfg.m,
+        cfg.lr
+    );
+    let out = run_experiment_full(&cfg)?;
+    for r in &out.log.records {
+        println!(
+            "iter {:>7}  epoch {:>6.2}  sim {:>9.3}s  train_loss {:>8.4}  \
+             train_err {:>6.3}  test_loss {:>8.4}  test_err {:>6.3}",
+            r.iteration, r.epoch, r.sim_time_s, r.train_loss, r.train_error, r.test_loss, r.test_error
+        );
+    }
+    eprintln!(
+        "comm {:.3}s sim, wait {:.3}s sim, {} PJRT execs, orders kept/redrawn {}/{}",
+        out.comm_time_s, out.wait_time_s, out.exec_count, out.orders_kept, out.orders_redrawn
+    );
+    if let Some(path) = out_path {
+        write_csv(&path, std::slice::from_ref(&out.log))?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(dir) = ckpt_dir {
+        out.to_checkpoint().save(std::path::Path::new(&dir))?;
+        eprintln!("checkpoint saved to {dir}");
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let base = config_from(args)?;
+    let out_path = args.opt_str("out");
+    args.finish()?;
+    let mut rows = Vec::new();
+    let mut logs = Vec::new();
+    for algo in AlgoKind::ALL {
+        let mut cfg = base.clone();
+        cfg.algo = algo;
+        if algo == AlgoKind::WasgdPlusAsync && cfg.backups == 0 {
+            cfg.backups = 1;
+        }
+        eprintln!("… {}", algo.name());
+        let out = run_experiment_full(&cfg)?;
+        rows.push((algo.name().to_string(), out.log.final_train_loss()));
+        logs.push(out.log);
+    }
+    print!("{}", format_table("final train loss (lower is better)", &rows, ""));
+    if let Some(path) = out_path {
+        write_csv(&path, &logs)?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let variant = args.str_flag("variant", "tiny_mlp");
+    let artifacts = PathBuf::from(args.str_flag("artifacts", "artifacts"));
+    let reps = args.num_flag("reps", 20usize)?;
+    args.finish()?;
+    let engine = Engine::load(&artifacts, &variant)?;
+    let t = engine.calibrate_step_time(reps)?;
+    println!(
+        "{variant}: {:.3} ms/step  (D={}, batch={})",
+        t * 1e3,
+        engine.manifest.param_count,
+        engine.manifest.batch
+    );
+    Ok(())
+}
+
+fn cmd_list() {
+    println!("algorithms:");
+    for a in AlgoKind::ALL {
+        println!("  {}", a.name());
+    }
+    println!("datasets (→ default model variant / paper preset):");
+    for d in [
+        DatasetKind::Tiny,
+        DatasetKind::MnistLike,
+        DatasetKind::FashionLike,
+        DatasetKind::Cifar10Like,
+        DatasetKind::Cifar100Like,
+    ] {
+        let cfg = ExperimentConfig::paper_preset(d);
+        println!(
+            "  {:<9} → {:<13} η={} τ={} β={} T={}",
+            d.name(),
+            cfg.variant,
+            cfg.lr,
+            cfg.tau,
+            cfg.beta,
+            cfg.temperature()
+        );
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env()?;
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "run" => cmd_run(&args),
+        "compare" => cmd_compare(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "list" => {
+            cmd_list();
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}

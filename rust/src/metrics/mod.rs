@@ -1,0 +1,234 @@
+//! Metrics substrate: training records, curve summaries, CSV/JSON sinks.
+//!
+//! Every experiment emits a stream of [`Record`]s (one per evaluation
+//! point) tagged with both clocks: the *simulated* cluster time that the
+//! figures plot, and the real wall time of this host (reported in
+//! EXPERIMENTS.md for transparency). The bench harness writes one CSV per
+//! figure so the paper's plots can be regenerated with any plotting tool.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+/// One evaluation point of one run.
+#[derive(Clone, Debug)]
+pub struct Record {
+    /// Total local SGD iterations per worker so far.
+    pub iteration: u64,
+    /// Epochs completed (fractional).
+    pub epoch: f64,
+    /// Simulated cluster seconds (the figures' x-axis).
+    pub sim_time_s: f64,
+    /// Real wall seconds on this host.
+    pub wall_time_s: f64,
+    pub train_loss: f64,
+    pub train_error: f64,
+    pub test_loss: f64,
+    pub test_error: f64,
+}
+
+/// A labelled run: algorithm + parameters + its record stream.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub label: String,
+    pub records: Vec<Record>,
+    /// Free-form key=value annotations (p, τ, β, ã, dataset, …).
+    pub tags: Vec<(String, String)>,
+}
+
+impl RunLog {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), records: Vec::new(), tags: Vec::new() }
+    }
+
+    pub fn tag(mut self, k: &str, v: impl ToString) -> Self {
+        self.tags.push((k.to_string(), v.to_string()));
+        self
+    }
+
+    pub fn push(&mut self, r: Record) {
+        self.records.push(r);
+    }
+
+    pub fn last(&self) -> Option<&Record> {
+        self.records.last()
+    }
+
+    /// Final training loss (∞ if no records — treat as diverged).
+    pub fn final_train_loss(&self) -> f64 {
+        self.last().map(|r| r.train_loss).unwrap_or(f64::INFINITY)
+    }
+
+    /// First simulated time at which train loss ≤ target (time-to-loss,
+    /// the paper's headline comparison axis). None = never reached.
+    pub fn time_to_loss(&self, target: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| r.train_loss.is_finite() && r.train_loss <= target)
+            .map(|r| r.sim_time_s)
+    }
+
+    /// Area under the train-loss curve over sim time — a scalar summary
+    /// used by the sweeps (lower = converges faster), Eq. 47-flavoured.
+    pub fn loss_auc(&self) -> f64 {
+        if self.records.len() < 2 {
+            return self.final_train_loss();
+        }
+        let mut auc = 0.0;
+        for w in self.records.windows(2) {
+            let dt = w[1].sim_time_s - w[0].sim_time_s;
+            auc += 0.5 * (w[0].train_loss + w[1].train_loss) * dt;
+        }
+        let span = self.records.last().unwrap().sim_time_s - self.records[0].sim_time_s;
+        if span > 0.0 {
+            auc / span
+        } else {
+            self.final_train_loss()
+        }
+    }
+
+    /// Mean of a metric over all records — the paper's Eq. (47) reduces
+    /// to mean(baseline metric) − mean(candidate metric) when records are
+    /// aligned; sweeps compute that difference from two of these.
+    pub fn mean_metric(&self, f: impl Fn(&Record) -> f64) -> f64 {
+        if self.records.is_empty() {
+            return f64::INFINITY;
+        }
+        self.records.iter().map(&f).sum::<f64>() / self.records.len() as f64
+    }
+
+    /// CSV rows (no header) for this run.
+    pub fn to_csv_rows(&self) -> String {
+        let mut s = String::new();
+        for r in &self.records {
+            let _ = writeln!(
+                s,
+                "{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6}",
+                self.label,
+                r.iteration,
+                r.epoch,
+                r.sim_time_s,
+                r.wall_time_s,
+                r.train_loss,
+                r.train_error,
+                r.test_loss,
+                r.test_error
+            );
+        }
+        s
+    }
+}
+
+pub const CSV_HEADER: &str =
+    "label,iteration,epoch,sim_time_s,wall_time_s,train_loss,train_error,test_loss,test_error";
+
+/// Write a set of runs to one CSV file (creating parent dirs).
+pub fn write_csv(path: impl AsRef<Path>, runs: &[RunLog]) -> std::io::Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let mut f = fs::File::create(path)?;
+    writeln!(f, "{CSV_HEADER}")?;
+    for run in runs {
+        f.write_all(run.to_csv_rows().as_bytes())?;
+    }
+    Ok(())
+}
+
+/// Wall-clock stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Pretty-print a comparison table (label → scalar) in paper-row style.
+pub fn format_table(title: &str, rows: &[(String, f64)], unit: &str) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "== {title} ==");
+    let width = rows.iter().map(|(l, _)| l.len()).max().unwrap_or(8).max(8);
+    for (label, v) in rows {
+        let _ = writeln!(s, "  {label:<width$}  {v:>12.6} {unit}");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(t: f64, loss: f64) -> Record {
+        Record {
+            iteration: (t * 100.0) as u64,
+            epoch: t,
+            sim_time_s: t,
+            wall_time_s: t,
+            train_loss: loss,
+            train_error: loss / 10.0,
+            test_loss: loss * 1.1,
+            test_error: loss / 9.0,
+        }
+    }
+
+    #[test]
+    fn time_to_loss_finds_first_crossing() {
+        let mut run = RunLog::new("x");
+        for (t, l) in [(0.0, 2.0), (1.0, 1.0), (2.0, 0.5), (3.0, 0.4)] {
+            run.push(rec(t, l));
+        }
+        assert_eq!(run.time_to_loss(1.0), Some(1.0));
+        assert_eq!(run.time_to_loss(0.45), Some(3.0));
+        assert_eq!(run.time_to_loss(0.1), None);
+    }
+
+    #[test]
+    fn auc_of_constant_curve_is_constant() {
+        let mut run = RunLog::new("c");
+        for t in 0..5 {
+            run.push(rec(t as f64, 2.0));
+        }
+        assert!((run.loss_auc() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut run = RunLog::new("alg").tag("p", 4);
+        run.push(rec(0.0, 1.0));
+        run.push(rec(1.0, 0.5));
+        let rows = run.to_csv_rows();
+        assert_eq!(rows.lines().count(), 2);
+        assert!(rows.starts_with("alg,"));
+        assert_eq!(CSV_HEADER.split(',').count(), rows.lines().next().unwrap().split(',').count());
+    }
+
+    #[test]
+    fn write_csv_creates_dirs() {
+        let dir = std::env::temp_dir().join("wasgd_metrics_test");
+        let _ = fs::remove_dir_all(&dir);
+        let path = dir.join("a/b/run.csv");
+        let mut run = RunLog::new("z");
+        run.push(rec(0.0, 1.0));
+        write_csv(&path, &[run]).unwrap();
+        let body = fs::read_to_string(&path).unwrap();
+        assert!(body.contains("train_loss"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,239 @@
+//! The PJRT execution engine: loads HLO-text artifacts and runs them.
+//!
+//! One [`Engine`] wraps one PJRT CPU client plus the compiled
+//! executables of a model variant (`train_step`, `eval_step`, and one
+//! `aggregate_p{p}` per cohort size). The engine is deliberately
+//! *single-threaded* (`PjRtClient` is `Rc`-based); the threaded example
+//! constructs one engine per worker thread, while the deterministic
+//! simulation shares one engine across the round-robin worker schedule.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`) — see
+//! DESIGN.md §1 for why serialized protos from jax ≥ 0.5 are rejected by
+//! xla_extension 0.5.1.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::Manifest;
+
+/// Outputs of one training step.
+#[derive(Clone, Debug)]
+pub struct StepOut {
+    /// Mean batch loss.
+    pub loss: f32,
+    /// Per-example losses (length = batch) — feeds the paper's free
+    /// loss-estimation windows (Eq. 26).
+    pub per_example: Vec<f32>,
+}
+
+/// Outputs of one evaluation batch.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalOut {
+    pub sum_loss: f32,
+    pub correct: f32,
+}
+
+pub struct Engine {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    train: PjRtLoadedExecutable,
+    eval: PjRtLoadedExecutable,
+    /// Aggregation executables per cohort size, compiled on demand.
+    agg: RefCell<HashMap<usize, PjRtLoadedExecutable>>,
+    /// Executions performed (telemetry for the perf pass).
+    pub exec_count: RefCell<u64>,
+}
+
+impl Engine {
+    /// Load and compile the artifacts of `variant` under `artifacts_root`.
+    pub fn load(artifacts_root: &Path, variant: &str) -> Result<Self> {
+        let dir = artifacts_root.join(variant);
+        let manifest = Manifest::load(&dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let train = Self::compile_file(&client, &dir.join("train_step.hlo.txt"))?;
+        let eval = Self::compile_file(&client, &dir.join("eval_step.hlo.txt"))?;
+        Ok(Self {
+            client,
+            manifest,
+            dir,
+            train,
+            eval,
+            agg: RefCell::new(HashMap::new()),
+            exec_count: RefCell::new(0),
+        })
+    }
+
+    fn compile_file(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+        let proto = HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+    }
+
+    fn bump(&self) {
+        *self.exec_count.borrow_mut() += 1;
+    }
+
+    /// Host → device transfer producing an *owned* buffer.
+    ///
+    /// We never use `PjRtLoadedExecutable::execute` (literal inputs): the
+    /// crate's C shim leaks every input device buffer it creates
+    /// (`buffer.release()` without a matching delete — ~2·D bytes per
+    /// step at mnist_mlp scale, gigabytes per run). `execute_b` takes
+    /// caller-owned buffers, and `PjRtBuffer`'s Drop frees them.
+    fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("host→device f32 {dims:?}: {e:?}"))
+    }
+
+    fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("host→device i32 {dims:?}: {e:?}"))
+    }
+
+    /// Run an executable over owned device buffers, fetch the (single,
+    /// `return_tuple=True`) output literal.
+    fn exec(&self, exe: &PjRtLoadedExecutable, bufs: &[PjRtBuffer]) -> Result<Literal> {
+        let out = exe
+            .execute_b::<PjRtBuffer>(bufs)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        self.bump();
+        Ok(out)
+    }
+
+    /// One SGD step: consumes `params`, returns the updated vector plus
+    /// the loss outputs. `x` is row-major [batch × input_dim], `y` holds
+    /// the integer labels.
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, StepOut)> {
+        let b = self.manifest.batch;
+        let d = self.manifest.param_count;
+        anyhow::ensure!(params.len() == d, "params len {} ≠ D {}", params.len(), d);
+        anyhow::ensure!(
+            x.len() == b * self.manifest.input_dim,
+            "x len {} ≠ B·dim {}",
+            x.len(),
+            b * self.manifest.input_dim
+        );
+        anyhow::ensure!(y.len() == b, "y len {} ≠ B {}", y.len(), b);
+
+        let bufs = [
+            self.buf_f32(params, &[d])?,
+            self.buf_f32(x, &[b, self.manifest.input_dim])?,
+            self.buf_i32(y, &[b])?,
+            self.buf_f32(&[lr], &[1])?,
+        ];
+        let out = self.exec(&self.train, &bufs)?;
+        let (new_params, loss, per_ex) = out
+            .to_tuple3()
+            .map_err(|e| anyhow!("train_step tuple: {e:?}"))?;
+        let new_params = new_params.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let loss = loss
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let per_example = per_ex.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok((new_params, StepOut { loss, per_example }))
+    }
+
+    /// One evaluation batch: summed loss + correct count.
+    pub fn eval_batch(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<EvalOut> {
+        let b = self.manifest.batch;
+        let bufs = [
+            self.buf_f32(params, &[self.manifest.param_count])?,
+            self.buf_f32(x, &[b, self.manifest.input_dim])?,
+            self.buf_i32(y, &[b])?,
+        ];
+        let out = self.exec(&self.eval, &bufs)?;
+        let (sum_loss, correct) = out.to_tuple2().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(EvalOut {
+            sum_loss: sum_loss.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            correct: correct.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+        })
+    }
+
+    /// The paper's communication step via the Pallas aggregation artifact:
+    /// `stacked` is row-major [p × D]; returns the β-mixed rows.
+    /// Falls back with an error if no `aggregate_p{p}` artifact exists —
+    /// callers may then use the host path (`linalg`).
+    pub fn aggregate(
+        &self,
+        stacked: &[f32],
+        h: &[f32],
+        a_tilde: f32,
+        beta: f32,
+    ) -> Result<Vec<f32>> {
+        let p = h.len();
+        let d = self.manifest.param_count;
+        anyhow::ensure!(stacked.len() == p * d, "stacked len {} ≠ p·D", stacked.len());
+        self.ensure_agg(p)?;
+        let agg_map = self.agg.borrow();
+        let exe = agg_map.get(&p).unwrap();
+
+        let bufs = [
+            self.buf_f32(stacked, &[p, d])?,
+            self.buf_f32(h, &[p])?,
+            self.buf_f32(&[a_tilde], &[1])?,
+            self.buf_f32(&[beta], &[1])?,
+        ];
+        let out = self.exec(exe, &bufs)?;
+        let out = out.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Does an aggregation artifact exist for cohort size p?
+    pub fn has_aggregate(&self, p: usize) -> bool {
+        self.agg.borrow().contains_key(&p)
+            || self.dir.join(format!("aggregate_p{p}.hlo.txt")).exists()
+    }
+
+    fn ensure_agg(&self, p: usize) -> Result<()> {
+        if self.agg.borrow().contains_key(&p) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("aggregate_p{p}.hlo.txt"));
+        anyhow::ensure!(
+            path.exists(),
+            "no aggregation artifact for p={p} (looked at {}); regenerate with \
+             `python -m compile.aot --workers …`",
+            path.display()
+        );
+        let exe = Self::compile_file(&self.client, &path)
+            .with_context(|| format!("compiling aggregate_p{p}"))?;
+        self.agg.borrow_mut().insert(p, exe);
+        Ok(())
+    }
+
+    /// Measure mean seconds per train step over `n` reps (for calibrating
+    /// the simulated cluster's compute model).
+    pub fn calibrate_step_time(&self, n: usize) -> Result<f64> {
+        let m = &self.manifest;
+        let params = m.init_params(7);
+        let x = vec![0.1f32; m.batch * m.input_dim];
+        let y = vec![0i32; m.batch];
+        // Warm-up.
+        let _ = self.train_step(&params, &x, &y, 0.0)?;
+        let t0 = std::time::Instant::now();
+        let mut cur = params;
+        for _ in 0..n.max(1) {
+            let (next, _) = self.train_step(&cur, &x, &y, 0.0)?;
+            cur = next;
+        }
+        Ok(t0.elapsed().as_secs_f64() / n.max(1) as f64)
+    }
+}

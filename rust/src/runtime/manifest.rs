@@ -1,0 +1,201 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime. One `manifest.json` per model variant describes the
+//! flat-parameter ABI (so rust can He-initialise without python) and the
+//! baked shapes of every HLO artifact in the directory.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::rng::Rng;
+use crate::util::json::Json;
+
+/// One entry of the flat-parameter layout.
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Fan-in for He initialisation: product of all but the last dim.
+    pub fn fan_in(&self) -> usize {
+        if self.shape.len() <= 1 {
+            1
+        } else {
+            self.shape[..self.shape.len() - 1].iter().product()
+        }
+    }
+
+    pub fn is_bias(&self) -> bool {
+        self.name.ends_with("_b")
+    }
+}
+
+/// `manifest.json` as written by `compile.aot.lower_variant`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub param_count: usize,
+    pub batch: usize,
+    pub input_dim: usize,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub worker_counts: Vec<usize>,
+    pub param_layout: Vec<ParamEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let body = fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let m = Self::parse(&body).with_context(|| format!("parsing {}", path.display()))?;
+        m.check()?;
+        Ok(m)
+    }
+
+    /// Parse from JSON text (exposed for tests).
+    pub fn parse(body: &str) -> Result<Self> {
+        let j = Json::parse(body).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let usize_arr = |key: &str| -> Result<Vec<usize>> {
+            j.req_arr(key)?
+                .iter()
+                .map(|v| {
+                    v.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("{key}: non-integer element"))
+                })
+                .collect()
+        };
+        let mut param_layout = Vec::new();
+        for entry in j.req_arr("param_layout")? {
+            let name = entry.req_str("name")?.to_string();
+            let shape = entry
+                .req_arr("shape")?
+                .iter()
+                .map(|v| {
+                    v.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("param {name}: bad shape"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            param_layout.push(ParamEntry { name, shape });
+        }
+        Ok(Manifest {
+            name: j.req_str("name")?.to_string(),
+            param_count: j.req_usize("param_count")?,
+            batch: j.req_usize("batch")?,
+            input_dim: j.req_usize("input_dim")?,
+            input_shape: usize_arr("input_shape")?,
+            num_classes: j.req_usize("num_classes")?,
+            worker_counts: usize_arr("worker_counts")?,
+            param_layout,
+        })
+    }
+
+    /// Internal consistency: layout must tile `param_count` exactly.
+    pub fn check(&self) -> Result<()> {
+        let total: usize = self.param_layout.iter().map(|p| p.numel()).sum();
+        anyhow::ensure!(
+            total == self.param_count,
+            "param layout sums to {total}, manifest says {}",
+            self.param_count
+        );
+        let shape_prod: usize = self.input_shape.iter().product();
+        anyhow::ensure!(
+            shape_prod == self.input_dim,
+            "input_shape {:?} does not match input_dim {}",
+            self.input_shape,
+            self.input_dim
+        );
+        Ok(())
+    }
+
+    /// He-normal init of the flat parameter vector (weights N(0, √(2/fan)),
+    /// biases zero) — mirrors `compile.model.init_params`.
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed ^ 0x1417);
+        let mut flat = Vec::with_capacity(self.param_count);
+        for entry in &self.param_layout {
+            if entry.is_bias() {
+                flat.extend(std::iter::repeat(0.0f32).take(entry.numel()));
+            } else {
+                let std = (2.0 / entry.fan_in().max(1) as f32).sqrt();
+                for _ in 0..entry.numel() {
+                    flat.push(rng.normal_f32(0.0, std));
+                }
+            }
+        }
+        debug_assert_eq!(flat.len(), self.param_count);
+        flat
+    }
+
+    /// Bytes of one parameter message on the wire (f32 payload + h + tag).
+    pub fn message_bytes(&self) -> usize {
+        self.param_count * 4 + 4 + 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+              "name": "toy", "param_count": 14, "batch": 2,
+              "input_dim": 3, "input_shape": [3], "num_classes": 2,
+              "worker_counts": [2, 4],
+              "param_layout": [
+                {"name": "dense0_w", "shape": [3, 4]},
+                {"name": "dense0_b", "shape": [2]}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_extracts_fields() {
+        let m = toy_manifest();
+        assert_eq!(m.name, "toy");
+        assert_eq!(m.worker_counts, vec![2, 4]);
+        assert_eq!(m.param_layout.len(), 2);
+        assert_eq!(m.param_layout[0].shape, vec![3, 4]);
+        assert!(m.param_layout[1].is_bias());
+    }
+
+    #[test]
+    fn check_passes_consistent() {
+        assert!(toy_manifest().check().is_ok());
+    }
+
+    #[test]
+    fn check_rejects_bad_total() {
+        let mut m = toy_manifest();
+        m.param_count = 99;
+        assert!(m.check().is_err());
+    }
+
+    #[test]
+    fn parse_rejects_missing_field() {
+        assert!(Manifest::parse(r#"{"name": "x"}"#).is_err());
+    }
+
+    #[test]
+    fn init_is_deterministic_and_shaped() {
+        let m = toy_manifest();
+        let a = m.init_params(1);
+        let b = m.init_params(1);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 14);
+        // Bias tail is zero.
+        assert!(a[12..].iter().all(|&v| v == 0.0));
+        // Weights are not all zero.
+        assert!(a[..12].iter().any(|&v| v != 0.0));
+    }
+}

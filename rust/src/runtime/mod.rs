@@ -1,0 +1,15 @@
+//! PJRT runtime layer: artifact manifests + the execution engine.
+//!
+//! ```text
+//! python (build time)              rust (run time)
+//! ─────────────────────            ─────────────────────────────
+//! compile/aot.py  ──HLO text──▶    HloModuleProto::from_text_file
+//!                                  → XlaComputation → client.compile
+//! manifest.json  ──serde──▶        Manifest (flat ABI, shapes)
+//! ```
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, EvalOut, StepOut};
+pub use manifest::{Manifest, ParamEntry};

@@ -1,0 +1,164 @@
+//! Tiny CLI argument parser — substrate replacing `clap` in the offline
+//! build. Supports `--flag value`, `--flag=value`, bare `--flag` (bool),
+//! and positional arguments; unknown flags are an error so typos don't
+//! silently fall through to defaults.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    /// Flags the caller has read (for unknown-flag detection).
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — `std::env::args()` less
+    /// the program name in production.
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Result<Self> {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    flags.insert(name.to_string(), v);
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(tok);
+            }
+        }
+        Ok(Self { flags, positional, seen: Default::default() })
+    }
+
+    pub fn parse_env() -> Result<Self> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    /// String flag with default.
+    pub fn str_flag(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string flag.
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    /// Parsed numeric flag with default.
+    pub fn num_flag<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{key}={v}: {e}")),
+        }
+    }
+
+    /// Optional numeric flag.
+    pub fn opt_num<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key}={v}: {e}")),
+        }
+    }
+
+    /// Boolean presence flag.
+    pub fn bool_flag(&self, key: &str) -> bool {
+        self.mark(key);
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true" | "1" | "yes"))
+    }
+
+    /// Call after all flags are read: errors on unknown flags.
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for k in self.flags.keys() {
+            if !seen.iter().any(|s| s == k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse_from(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_flag_styles() {
+        let a = args(&["run", "--p", "8", "--beta=0.7", "--verbose", "--tau", "100"]);
+        assert_eq!(a.positional(), &["run".to_string()]);
+        assert_eq!(a.num_flag("p", 1usize).unwrap(), 8);
+        assert_eq!(a.num_flag("beta", 1.0f32).unwrap(), 0.7);
+        assert!(a.bool_flag("verbose"));
+        assert_eq!(a.num_flag("tau", 0usize).unwrap(), 100);
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let a = args(&[]);
+        assert_eq!(a.num_flag("p", 4usize).unwrap(), 4);
+        assert_eq!(a.opt_num::<f32>("beta").unwrap(), None);
+        assert_eq!(a.str_flag("dataset", "tiny"), "tiny");
+        assert!(!a.bool_flag("verbose"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = args(&["--p", "abc"]);
+        assert!(a.num_flag("p", 1usize).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = args(&["--typo", "1"]);
+        let _ = a.num_flag("p", 1usize);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = args(&["--shift", "-3"]);
+        // "-3" doesn't start with --, so it's consumed as the value.
+        assert_eq!(a.num_flag("shift", 0i64).unwrap(), -3);
+    }
+}

@@ -1,0 +1,8 @@
+//! Small self-contained utilities replacing external crates in the
+//! offline build: a JSON parser (`manifest.json`) and a CLI flag parser.
+
+pub mod cli;
+pub mod json;
+
+pub use cli::Args;
+pub use json::Json;

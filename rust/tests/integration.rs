@@ -1,0 +1,214 @@
+//! End-to-end integration: every scheme through the full coordinator on
+//! the tiny workload, plus cross-scheme invariants. Requires artifacts
+//! (`make artifacts` runs first via the Makefile).
+
+use wasgd::config::{AlgoKind, ExperimentConfig};
+use wasgd::coordinator::{run_experiment_full, RunOutput};
+use wasgd::data::synth::DatasetKind;
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_preset(DatasetKind::Tiny);
+    cfg.p = 4;
+    cfg.epochs = 3.0;
+    cfg.eval_every = 32;
+    cfg.eval_batches = 4;
+    cfg.seed = 7;
+    // Fixed compute model: step-time calibration measures *real* time and
+    // would break bitwise determinism of the simulated clocks.
+    cfg.compute.step_time_s = 1e-3;
+    cfg
+}
+
+fn run(algo: AlgoKind) -> RunOutput {
+    let mut cfg = base_cfg();
+    cfg.algo = algo;
+    if algo == AlgoKind::WasgdPlusAsync {
+        cfg.backups = 1;
+    }
+    run_experiment_full(&cfg).unwrap_or_else(|e| panic!("{}: {e:#}", algo.name()))
+}
+
+#[test]
+fn every_algorithm_trains_and_stays_finite() {
+    for algo in AlgoKind::ALL {
+        let out = run(algo);
+        let recs = &out.log.records;
+        assert!(recs.len() >= 3, "{}: too few records", algo.name());
+        for r in recs {
+            assert!(r.train_loss.is_finite(), "{}: non-finite loss", algo.name());
+            assert!(r.sim_time_s >= 0.0);
+            assert!((0.0..=1.0).contains(&r.train_error));
+            assert!((0.0..=1.0).contains(&r.test_error));
+        }
+        // Sim time strictly increases across records (after step 0).
+        for w in recs.windows(2) {
+            assert!(
+                w[1].sim_time_s >= w[0].sim_time_s,
+                "{}: sim time must be monotone",
+                algo.name()
+            );
+        }
+        let first = recs.first().unwrap().train_loss;
+        let last = recs.last().unwrap().train_loss;
+        assert!(
+            last < first,
+            "{}: training should reduce loss ({first:.4} → {last:.4})",
+            algo.name()
+        );
+    }
+}
+
+#[test]
+fn parallel_schemes_charge_communication() {
+    for algo in [AlgoKind::Spsgd, AlgoKind::Easgd, AlgoKind::Wasgd, AlgoKind::WasgdPlus] {
+        let out = run(algo);
+        assert!(out.comm_time_s > 0.0, "{} should pay comm time", algo.name());
+    }
+    let seq = run(AlgoKind::Sequential);
+    assert_eq!(seq.comm_time_s, 0.0, "sequential pays no comm");
+}
+
+#[test]
+fn wasgd_plus_uses_pjrt_aggregation_and_order_search() {
+    let out = run(AlgoKind::WasgdPlus);
+    // Order search ran: some parts were scored and regenerated or kept.
+    assert!(out.orders_kept + out.orders_redrawn > 0);
+    // Aggregation went through the engine (exec count ≫ steps means
+    // boundaries executed extra programs; just check it's substantial).
+    assert!(out.exec_count > 100);
+}
+
+#[test]
+fn omwu_pays_more_sim_time_than_mmwu() {
+    // Same iteration budget; OMWU's full-dataset weight evaluation is
+    // charged to the virtual clock (that's the paper's point in §5.5).
+    let omwu = run(AlgoKind::Omwu);
+    let mmwu = run(AlgoKind::Mmwu);
+    let t_omwu = omwu.log.records.last().unwrap().sim_time_s;
+    let t_mmwu = mmwu.log.records.last().unwrap().sim_time_s;
+    assert!(
+        t_omwu > t_mmwu * 1.2,
+        "OMWU {t_omwu:.3}s should be noticeably slower than MMWU {t_mmwu:.3}s"
+    );
+}
+
+#[test]
+fn deterministic_across_reruns() {
+    let mut cfg = base_cfg();
+    cfg.algo = AlgoKind::WasgdPlus;
+    cfg.epochs = 1.0;
+    let a = run_experiment_full(&cfg).unwrap();
+    let b = run_experiment_full(&cfg).unwrap();
+    assert_eq!(a.log.records.len(), b.log.records.len());
+    for (ra, rb) in a.log.records.iter().zip(b.log.records.iter()) {
+        assert_eq!(ra.iteration, rb.iteration);
+        assert!((ra.train_loss - rb.train_loss).abs() < 1e-9);
+        assert!((ra.sim_time_s - rb.sim_time_s).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn seed_changes_the_run() {
+    let mut cfg = base_cfg();
+    cfg.algo = AlgoKind::WasgdPlus;
+    cfg.epochs = 1.0;
+    let a = run_experiment_full(&cfg).unwrap();
+    cfg.seed = 1234;
+    let b = run_experiment_full(&cfg).unwrap();
+    let la = a.log.records.last().unwrap().train_loss;
+    let lb = b.log.records.last().unwrap().train_loss;
+    assert!((la - lb).abs() > 1e-9, "different seeds should differ");
+}
+
+#[test]
+fn estimation_error_probe_in_range() {
+    let mut cfg = base_cfg();
+    cfg.algo = AlgoKind::WasgdPlus;
+    cfg.track_estimation_error = true;
+    cfg.epochs = 2.0;
+    let out = run_experiment_full(&cfg).unwrap();
+    assert!(!out.estimation_errors.is_empty(), "probe should record boundaries");
+    for &(iter, err) in &out.estimation_errors {
+        assert!(iter > 0);
+        // Eq. 27: error = Σ|θ−θ_true| ∈ [0, 2].
+        assert!((0.0..=2.0).contains(&err), "error {err} out of range");
+    }
+}
+
+#[test]
+fn larger_m_estimates_weights_better() {
+    // Fig. 6's mechanism: more recorded batches → lower Eq. 27 error.
+    let err_for = |m: usize| {
+        let mut cfg = base_cfg();
+        cfg.algo = AlgoKind::WasgdPlus;
+        cfg.track_estimation_error = true;
+        cfg.m = m;
+        cfg.c = 1;
+        cfg.epochs = 3.0;
+        let out = run_experiment_full(&cfg).unwrap();
+        let errs = out.estimation_errors;
+        errs.iter().map(|&(_, e)| e as f64).sum::<f64>() / errs.len().max(1) as f64
+    };
+    let e1 = err_for(1);
+    let e16 = err_for(16);
+    assert!(
+        e16 <= e1 + 0.05,
+        "m=16 estimation ({e16:.4}) should not be worse than m=1 ({e1:.4})"
+    );
+}
+
+#[test]
+fn forced_delta_order_degrades_large_delta() {
+    // Fig. 3's shape: δ=1 (interleaved) should beat δ=64 (label-blocked)
+    // on final loss for the tiny workload.
+    let loss_for = |delta: usize| {
+        let mut cfg = base_cfg();
+        cfg.algo = AlgoKind::WasgdPlus;
+        cfg.force_delta_order = Some(delta);
+        cfg.epochs = 2.0;
+        run_experiment_full(&cfg).unwrap().log.final_train_loss()
+    };
+    let l1 = loss_for(1);
+    let l64 = loss_for(64);
+    assert!(
+        l1 < l64 * 1.5,
+        "δ=1 ({l1:.4}) should not be much worse than δ=64 ({l64:.4})"
+    );
+}
+
+#[test]
+fn async_ignores_stragglers_in_sim_time() {
+    // With heavy stragglers, async WASGD+ should finish its boundaries in
+    // less simulated time than the synchronous variant.
+    let mk = |algo: AlgoKind| {
+        let mut cfg = base_cfg();
+        cfg.algo = algo;
+        cfg.backups = 2;
+        cfg.epochs = 2.0;
+        cfg.compute.step_time_s = 1e-3;
+        cfg.compute.jitter_cv = 0.1;
+        cfg.compute.straggler_prob = 0.05;
+        cfg.compute.straggler_factor = 20.0;
+        run_experiment_full(&cfg).unwrap()
+    };
+    let sync = mk(AlgoKind::WasgdPlus);
+    let asyn = mk(AlgoKind::WasgdPlusAsync);
+    let t_sync = sync.log.records.last().unwrap().sim_time_s;
+    let t_async = asyn.log.records.last().unwrap().sim_time_s;
+    assert!(
+        t_async < t_sync,
+        "async ({t_async:.3}s) should beat sync ({t_sync:.3}s) under stragglers"
+    );
+}
+
+#[test]
+fn target_loss_stops_early() {
+    let mut cfg = base_cfg();
+    cfg.algo = AlgoKind::WasgdPlus;
+    cfg.epochs = 50.0; // would be long…
+    cfg.target_loss = Some(0.55);
+    let out = run_experiment_full(&cfg).unwrap();
+    let last = out.log.records.last().unwrap();
+    assert!(last.train_loss <= 0.56, "should stop at/near the target");
+    assert!(last.epoch < 50.0, "must stop before the full budget");
+}

@@ -1,0 +1,325 @@
+//! Property-based tests over the coordinator's invariants.
+//!
+//! The offline build has no `proptest`, so cases are generated with the
+//! in-repo deterministic PRNG — same idea: hundreds of random instances
+//! per property, with the failing seed printed on assert.
+
+use wasgd::algorithms::host_aggregate;
+use wasgd::cluster::{ComputeModel, FabricConfig, SimCluster};
+use wasgd::config::AlgoKind;
+use wasgd::coordinator::true_weights;
+use wasgd::data::order::{delta_blocked_order, judge, OrderState, RecordWindow};
+use wasgd::linalg;
+use wasgd::rng::Rng;
+use wasgd::util::Json;
+
+const CASES: usize = 300;
+
+fn rand_energies(rng: &mut Rng, p: usize) -> Vec<f32> {
+    (0..p).map(|_| rng.uniform_in(1e-3, 10.0)).collect()
+}
+
+#[test]
+fn prop_boltzmann_weights_form_a_simplex() {
+    let mut rng = Rng::new(0xB017);
+    for case in 0..CASES {
+        let p = 2 + rng.below(15);
+        let h = rand_energies(&mut rng, p);
+        let a_tilde = rng.uniform_in(0.0, 100.0);
+        let th = linalg::boltzmann_weights(&h, a_tilde);
+        let sum: f32 = th.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "case {case}: Σθ = {sum}");
+        assert!(th.iter().all(|&t| (0.0..=1.0).contains(&t)), "case {case}: {th:?}");
+    }
+}
+
+#[test]
+fn prop_boltzmann_monotone_lower_loss_higher_weight() {
+    let mut rng = Rng::new(0xB018);
+    for case in 0..CASES {
+        let p = 2 + rng.below(10);
+        let h = rand_energies(&mut rng, p);
+        let a_tilde = rng.uniform_in(0.01, 50.0);
+        let th = linalg::boltzmann_weights(&h, a_tilde);
+        for i in 0..p {
+            for j in 0..p {
+                if h[i] < h[j] {
+                    assert!(
+                        th[i] >= th[j] - 1e-6,
+                        "case {case}: h[{i}]={} < h[{j}]={} but θ {} < {}",
+                        h[i],
+                        h[j],
+                        th[i],
+                        th[j]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_inverse_weights_match_boltzmann_ordering() {
+    // Both weight families must agree on the ranking of workers.
+    let mut rng = Rng::new(0xB019);
+    for _ in 0..CASES {
+        let p = 2 + rng.below(8);
+        let h = rand_energies(&mut rng, p);
+        let inv = linalg::inverse_loss_weights(&h);
+        let bol = linalg::boltzmann_weights(&h, 5.0);
+        let rank = |w: &[f32]| {
+            let mut idx: Vec<usize> = (0..w.len()).collect();
+            idx.sort_by(|&a, &b| w[b].partial_cmp(&w[a]).unwrap());
+            idx
+        };
+        assert_eq!(rank(&inv)[0], rank(&bol)[0], "best worker must agree");
+    }
+}
+
+#[test]
+fn prop_host_aggregate_is_convex_combination() {
+    // Every output coordinate lies in the convex hull of the inputs.
+    let mut rng = Rng::new(0xA66);
+    for case in 0..CASES {
+        let p = 2 + rng.below(6);
+        let d = 1 + rng.below(64);
+        let mut params: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..d).map(|_| rng.uniform_in(-5.0, 5.0)).collect())
+            .collect();
+        let h = rand_energies(&mut rng, p);
+        let theta = linalg::boltzmann_weights(&h, rng.uniform_in(0.0, 10.0));
+        let beta = rng.uniform_in(0.0, 1.0);
+        let orig = params.clone();
+        host_aggregate(&mut params, &theta, beta);
+        for k in 0..d {
+            let lo = orig.iter().map(|r| r[k]).fold(f32::INFINITY, f32::min);
+            let hi = orig.iter().map(|r| r[k]).fold(f32::NEG_INFINITY, f32::max);
+            for (i, row) in params.iter().enumerate() {
+                assert!(
+                    row[k] >= lo - 1e-4 && row[k] <= hi + 1e-4,
+                    "case {case}: row {i} col {k}: {} outside [{lo}, {hi}]",
+                    row[k]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_host_aggregate_contracts_spread() {
+    // β > 0 must not increase the cohort diameter (the contraction that
+    // drives Theorem 1).
+    let mut rng = Rng::new(0xA67);
+    for case in 0..CASES {
+        let p = 2 + rng.below(6);
+        let d = 1 + rng.below(32);
+        let mut params: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..d).map(|_| rng.uniform_in(-3.0, 3.0)).collect())
+            .collect();
+        let theta = linalg::boltzmann_weights(&rand_energies(&mut rng, p), 1.0);
+        let beta = rng.uniform_in(0.0, 1.0);
+        let diam = |ps: &[Vec<f32>]| -> f64 {
+            let mut m = 0.0f64;
+            for i in 0..ps.len() {
+                for j in i + 1..ps.len() {
+                    m = m.max(linalg::dist2(&ps[i], &ps[j]));
+                }
+            }
+            m
+        };
+        let before = diam(&params);
+        host_aggregate(&mut params, &theta, beta);
+        let after = diam(&params);
+        assert!(
+            after <= before + 1e-5,
+            "case {case}: diameter grew {before} → {after} (β={beta})"
+        );
+        // And with β=1 the diameter is exactly 0.
+        host_aggregate(&mut params, &theta, 1.0);
+        assert!(diam(&params) < 1e-5, "case {case}: β=1 must reach consensus");
+    }
+}
+
+#[test]
+fn prop_record_window_counts_bounded_by_m() {
+    let mut rng = Rng::new(0x3EC);
+    for case in 0..CASES {
+        let tau = 1 + rng.below(2000);
+        let m = 1 + rng.below(300);
+        let c = 1 + rng.below(16);
+        let w = RecordWindow::new(tau, m, c);
+        let count = w.count_per_period();
+        assert!(count >= 1, "case {case}: τ={tau} m={m} c={c} recorded nothing");
+        assert!(
+            count <= w.m + w.c, // per-block ceil can overshoot by < 1 per block
+            "case {case}: τ={tau} m={m} c={c}: recorded {count} > m+c"
+        );
+        // Recorded positions must be within the period.
+        for k in 0..w.tau {
+            let _ = w.is_recorded(k);
+        }
+    }
+}
+
+#[test]
+fn prop_order_state_orders_are_permutations_of_parts() {
+    let mut rng = Rng::new(0x02d3);
+    for case in 0..120 {
+        let n = 10 + rng.below(5000);
+        let parts = 1 + rng.below(8);
+        let mut st = OrderState::new(n, parts, rng.next_u64());
+        let mut all: Vec<u32> = Vec::new();
+        for part in 0..st.n_parts {
+            // Randomly mark good/bad before regenerating.
+            st.record_score(part, rng.uniform_in(-3.0, 3.0));
+            all.extend(st.order_for_part(part));
+        }
+        all.sort_unstable();
+        let want: Vec<u32> = (0..n as u32).collect();
+        assert_eq!(all, want, "case {case}: n={n} parts={parts}");
+    }
+}
+
+#[test]
+fn prop_order_seed_survival_follows_judgment() {
+    let mut rng = Rng::new(0x02d4);
+    for _ in 0..CASES {
+        let n = 50 + rng.below(500);
+        let mut st = OrderState::new(n, 2, rng.next_u64());
+        let _ = st.order_for_part(0);
+        let seed = st.seed_of(0);
+        let score = rng.uniform_in(-2.5, 2.5);
+        st.record_score(0, score);
+        let _ = st.order_for_part(0);
+        if score <= -1.0 {
+            assert_eq!(st.seed_of(0), seed, "good score must keep the seed");
+        } else {
+            assert_ne!(st.seed_of(0), seed, "bad score must redraw the seed");
+        }
+    }
+}
+
+#[test]
+fn prop_judge_scores_are_zero_mean() {
+    let mut rng = Rng::new(0x10d6);
+    for case in 0..CASES {
+        let p = 2 + rng.below(14);
+        let h = rand_energies(&mut rng, p);
+        let scores: Vec<f32> = (0..p).map(|i| judge(&h, i)).collect();
+        let mean: f64 = scores.iter().map(|&s| s as f64).sum::<f64>() / p as f64;
+        assert!(mean.abs() < 1e-3, "case {case}: mean z-score {mean}");
+        // Best worker has the most negative score.
+        let best = (0..p).min_by(|&a, &b| h[a].partial_cmp(&h[b]).unwrap()).unwrap();
+        let min_score = scores.iter().cloned().fold(f32::INFINITY, f32::min);
+        assert!((scores[best] - min_score).abs() < 1e-6, "case {case}");
+    }
+}
+
+#[test]
+fn prop_delta_blocked_orders_are_permutations() {
+    let mut rng = Rng::new(0xDE17A);
+    for case in 0..120 {
+        let n = 20 + rng.below(2000);
+        let classes = 2 + rng.below(20);
+        let labels: Vec<i32> = (0..n).map(|_| rng.below(classes) as i32).collect();
+        let delta = 1 + rng.below(200);
+        let mut order = delta_blocked_order(&labels, delta, &mut rng);
+        order.sort_unstable();
+        assert_eq!(order, (0..n as u32).collect::<Vec<_>>(), "case {case}");
+    }
+}
+
+#[test]
+fn prop_sync_allgather_equalises_clocks_monotonically() {
+    let mut rng = Rng::new(0x57A6);
+    for case in 0..CASES {
+        let p = 1 + rng.below(16);
+        let mut c = SimCluster::new(
+            p,
+            FabricConfig::default(),
+            ComputeModel { step_time_s: 1e-3, jitter_cv: 0.3, straggler_prob: 0.1, straggler_factor: 5.0 },
+            rng.next_u64(),
+        );
+        for i in 0..p {
+            c.advance_compute(i, rng.below(50));
+        }
+        let max_before = c.now();
+        let after = c.sync_allgather(1 + rng.below(1 << 20));
+        assert!(after >= max_before, "case {case}");
+        for &t in &c.clocks {
+            assert!((t - after).abs() < 1e-12, "case {case}: clocks not equal");
+        }
+    }
+}
+
+#[test]
+fn prop_async_gather_never_exceeds_barrier_time() {
+    let mut rng = Rng::new(0x57A7);
+    for case in 0..CASES {
+        let p = 3 + rng.below(12);
+        let mut c = SimCluster::new(
+            p,
+            FabricConfig::default(),
+            ComputeModel { step_time_s: 1e-3, jitter_cv: 0.5, straggler_prob: 0.2, straggler_factor: 10.0 },
+            rng.next_u64(),
+        );
+        for i in 0..p {
+            c.advance_compute(i, 1 + rng.below(100));
+        }
+        let barrier = c.now();
+        let bytes = 1 + rng.below(1 << 16);
+        let need = 1 + rng.below(p - 1);
+        let mut c2 = c.clone();
+        let resume = c2.async_gather(0, need, bytes);
+        let full = c.sync_allgather(bytes);
+        assert!(
+            resume <= full + 1e-12,
+            "case {case}: async quorum resume {resume} after full barrier {full} (barrier {barrier})"
+        );
+    }
+}
+
+#[test]
+fn prop_true_weights_always_simplex() {
+    let mut rng = Rng::new(0x7347);
+    for _ in 0..CASES {
+        let p = 2 + rng.below(10);
+        let h = rand_energies(&mut rng, p);
+        for algo in [AlgoKind::Wasgd, AlgoKind::WasgdPlus, AlgoKind::Mmwu] {
+            let th = true_weights(algo, &h, rng.uniform_in(0.0, 20.0));
+            let s: f32 = th.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrips_random_manifest_shapes() {
+    let mut rng = Rng::new(0x150);
+    for case in 0..CASES {
+        let n = rng.below(6);
+        let arr: Vec<String> = (0..n).map(|i| format!("{}", i * 7)).collect();
+        let text = format!(
+            r#"{{"name":"v{case}","xs":[{}],"nested":{{"k":{} }},"f":{}}}"#,
+            arr.join(","),
+            rng.below(1000),
+            rng.uniform()
+        );
+        let j = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e} in {text}"));
+        assert_eq!(j.req_str("name").unwrap(), format!("v{case}"));
+        assert_eq!(j.req_arr("xs").unwrap().len(), n);
+        assert!(j.get("nested").unwrap().get("k").unwrap().as_usize().is_some());
+        assert!(j.get("f").unwrap().as_f64().is_some());
+    }
+}
+
+#[test]
+fn prop_rng_permutation_bijective() {
+    let mut rng = Rng::new(0x9e4);
+    for _ in 0..60 {
+        let n = 1 + rng.below(10_000);
+        let mut p = rng.permutation(n);
+        p.sort_unstable();
+        assert_eq!(p, (0..n as u32).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,210 @@
+//! Runtime round-trip: AOT artifacts → PJRT → numbers.
+//!
+//! Requires `make artifacts` (the Makefile runs it before `cargo test`).
+//! These tests pin the python↔rust ABI: manifest consistency, literal
+//! packing, tuple unpacking, and — most importantly — that the Pallas
+//! aggregation artifact agrees with the host implementation of Eq. 10+13.
+
+use std::path::Path;
+
+use wasgd::linalg;
+use wasgd::rng::Rng;
+use wasgd::runtime::Engine;
+
+fn artifacts_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").leak()
+}
+
+trait Leak {
+    fn leak(self) -> &'static Path;
+}
+
+impl Leak for std::path::PathBuf {
+    fn leak(self) -> &'static Path {
+        Box::leak(self.into_boxed_path())
+    }
+}
+
+fn tiny_engine() -> Engine {
+    Engine::load(artifacts_root(), "tiny_mlp").expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_is_consistent() {
+    let e = tiny_engine();
+    let m = &e.manifest;
+    assert_eq!(m.name, "tiny_mlp");
+    assert!(m.param_count > 0);
+    assert_eq!(m.input_dim, 16);
+    assert_eq!(m.num_classes, 2);
+    assert!(m.check().is_ok());
+    let total: usize = m.param_layout.iter().map(|p| p.numel()).sum();
+    assert_eq!(total, m.param_count);
+}
+
+#[test]
+fn train_step_runs_and_learns() {
+    let e = tiny_engine();
+    let m = &e.manifest;
+    let mut params = m.init_params(3);
+    let mut rng = Rng::new(1);
+    let mut x = vec![0.0f32; m.batch * m.input_dim];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+    let y: Vec<i32> = (0..m.batch).map(|_| rng.below(m.num_classes) as i32).collect();
+
+    let (_, first) = e.train_step(&params, &x, &y, 0.0).unwrap();
+    assert_eq!(first.per_example.len(), m.batch);
+    assert!(first.loss.is_finite());
+    // mean(per_example) == loss (the coordinator's estimator relies on it).
+    let mean: f32 = first.per_example.iter().sum::<f32>() / m.batch as f32;
+    assert!((mean - first.loss).abs() < 1e-4);
+
+    let mut last = first.loss;
+    for _ in 0..60 {
+        let (next, out) = e.train_step(&params, &x, &y, 0.1).unwrap();
+        params = next;
+        last = out.loss;
+    }
+    assert!(
+        last < first.loss * 0.7,
+        "overfitting one batch must reduce loss: {} → {last}",
+        first.loss
+    );
+}
+
+#[test]
+fn train_step_lr_zero_is_identity() {
+    let e = tiny_engine();
+    let m = &e.manifest;
+    let params = m.init_params(5);
+    let x = vec![0.25f32; m.batch * m.input_dim];
+    let y = vec![0i32; m.batch];
+    let (next, _) = e.train_step(&params, &x, &y, 0.0).unwrap();
+    assert_eq!(next.len(), params.len());
+    for (a, b) in next.iter().zip(params.iter()) {
+        assert!((a - b).abs() < 1e-7);
+    }
+}
+
+#[test]
+fn train_step_rejects_bad_shapes() {
+    let e = tiny_engine();
+    let m = &e.manifest;
+    let params = m.init_params(0);
+    let x = vec![0.0f32; m.batch * m.input_dim];
+    let y = vec![0i32; m.batch];
+    assert!(e.train_step(&params[..10], &x, &y, 0.1).is_err());
+    assert!(e.train_step(&params, &x[..4], &y, 0.1).is_err());
+    assert!(e.train_step(&params, &x, &y[..1], 0.1).is_err());
+}
+
+#[test]
+fn eval_batch_counts_are_sane() {
+    let e = tiny_engine();
+    let m = &e.manifest;
+    let params = m.init_params(0);
+    let mut rng = Rng::new(2);
+    let mut x = vec![0.0f32; m.batch * m.input_dim];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+    let y: Vec<i32> = (0..m.batch).map(|_| rng.below(m.num_classes) as i32).collect();
+    let out = e.eval_batch(&params, &x, &y).unwrap();
+    assert!(out.sum_loss.is_finite() && out.sum_loss > 0.0);
+    assert!(out.correct >= 0.0 && out.correct <= m.batch as f32);
+}
+
+#[test]
+fn aggregate_artifact_matches_host_math() {
+    let e = tiny_engine();
+    let d = e.manifest.param_count;
+    let mut rng = Rng::new(7);
+    for &p in &[2usize, 4, 8] {
+        assert!(e.has_aggregate(p), "aggregate_p{p} artifact missing");
+        let mut stacked = vec![0.0f32; p * d];
+        rng.fill_normal(&mut stacked, 0.0, 0.5);
+        let h: Vec<f32> = (0..p).map(|_| rng.uniform_in(0.05, 2.0)).collect();
+        for &(a_tilde, beta) in &[(0.0f32, 1.0f32), (1.0, 0.9), (10.0, 0.5), (0.5, 0.0)] {
+            let got = e.aggregate(&stacked, &h, a_tilde, beta).unwrap();
+            // Host twin of Eq. 10+13.
+            let theta = linalg::boltzmann_weights(&h, a_tilde);
+            let rows: Vec<&[f32]> = stacked.chunks(d).collect();
+            let mut agg = vec![0.0f32; d];
+            linalg::weighted_sum(&mut agg, &rows, &theta);
+            for i in 0..p {
+                for k in (0..d).step_by(7) {
+                    let want = (1.0 - beta) * stacked[i * d + k] + beta * agg[k];
+                    let diff = (got[i * d + k] - want).abs();
+                    assert!(
+                        diff < 1e-4,
+                        "p={p} ã={a_tilde} β={beta} row {i} col {k}: {} vs {want}",
+                        got[i * d + k]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn aggregate_beta1_reaches_consensus() {
+    let e = tiny_engine();
+    let d = e.manifest.param_count;
+    let p = 4;
+    let mut rng = Rng::new(9);
+    let mut stacked = vec![0.0f32; p * d];
+    rng.fill_normal(&mut stacked, 0.0, 1.0);
+    let h = vec![0.3f32, 0.9, 0.5, 1.5];
+    let out = e.aggregate(&stacked, &h, 1.0, 1.0).unwrap();
+    for i in 1..p {
+        for k in 0..d {
+            assert!((out[i * d + k] - out[k]).abs() < 1e-5);
+        }
+    }
+}
+
+/// Regression test for the input-buffer leak in the xla crate's
+/// `execute` C shim (it `release()`s every input device buffer). The
+/// engine must use `execute_b` with rust-owned buffers; RSS over many
+/// steps must stay flat.
+#[test]
+fn memory_stable_over_many_steps() {
+    fn rss_pages() -> usize {
+        std::fs::read_to_string("/proc/self/statm")
+            .ok()
+            .and_then(|s| s.split_whitespace().nth(1).map(|v| v.parse().unwrap_or(0)))
+            .unwrap_or(0)
+    }
+    let e = tiny_engine();
+    let m = &e.manifest;
+    let mut params = m.init_params(1);
+    let x = vec![0.1f32; m.batch * m.input_dim];
+    let y = vec![0i32; m.batch];
+    // Warm-up so allocator pools stabilise.
+    for _ in 0..500 {
+        let (p2, _) = e.train_step(&params, &x, &y, 0.01).unwrap();
+        params = p2;
+    }
+    let before = rss_pages();
+    for _ in 0..4000 {
+        let (p2, _) = e.train_step(&params, &x, &y, 0.01).unwrap();
+        params = p2;
+    }
+    let after = rss_pages();
+    let grown = after.saturating_sub(before);
+    // The old leak grew ~0.75 pages/step here (≈3000 pages); allow slack.
+    assert!(grown < 600, "RSS grew by {grown} pages over 4000 steps");
+}
+
+#[test]
+fn calibrate_step_time_positive() {
+    let e = tiny_engine();
+    let t = e.calibrate_step_time(3).unwrap();
+    assert!(t > 0.0 && t < 1.0, "step time {t}");
+}
+
+#[test]
+fn mnist_variant_loads_too() {
+    let e = Engine::load(artifacts_root(), "mnist_mlp").expect("mnist_mlp artifacts");
+    assert_eq!(e.manifest.input_dim, 784);
+    assert_eq!(e.manifest.num_classes, 10);
+    assert!(e.manifest.param_count > 200_000);
+}
