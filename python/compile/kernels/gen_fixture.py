@@ -1,0 +1,84 @@
+"""Generate the native-backend parity fixture
+(rust/tests/fixtures/native_parity.json).
+
+Records one `train_step` and one `aggregate` of the tiny-MLP variant,
+computed by the build-time Python pipeline (the L1/L2 kernels that the
+PJRT artifacts are lowered from), so the rust `NativeEngine` can be
+pinned against them at ≤1e-5 with **no Python at test time** — the JSON
+is committed.
+
+Run from the repo root:
+
+    PYTHONPATH=python python -m compile.kernels.gen_fixture
+
+Inputs are drawn from a fixed numpy seed; the fixture embeds them, so the
+rust side never needs to reproduce numpy's RNG.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from .. import model
+from . import ref
+
+
+OUT_PATH = pathlib.Path(__file__).resolve().parents[3] / "rust" / "tests" / "fixtures" / "native_parity.json"
+
+
+def _f(arr) -> list:
+    """Flatten to a plain list of Python floats (full repr precision)."""
+    return [float(v) for v in np.asarray(arr, np.float32).reshape(-1)]
+
+
+def main() -> None:
+    spec = model.VARIANTS["tiny_mlp"]
+    rng = np.random.default_rng(20260729)
+
+    params = model.init_params(spec, seed=7)
+    x = rng.normal(0.0, 1.0, size=(spec.batch, spec.input_shape[0])).astype(np.float32)
+    y = rng.integers(0, spec.num_classes, size=(spec.batch,)).astype(np.int32)
+    lr = np.float32(0.05)
+
+    train_step = model.make_train_step(spec)
+    new_params, mean_loss, per_example = train_step(params, x, y, np.array([lr]))
+
+    p = 3
+    d = model.param_count(spec)
+    stacked = rng.normal(0.0, 0.5, size=(p, d)).astype(np.float32)
+    h = rng.uniform(0.05, 2.0, size=(p,)).astype(np.float32)
+    a_tilde, beta = np.float32(1.3), np.float32(0.7)
+    agg_out = ref.aggregate_ref(stacked, h, a_tilde, beta)
+    theta = ref.boltzmann_weights_ref(h, a_tilde)
+
+    fixture = {
+        "variant": spec.name,
+        "lr": float(lr),
+        "train": {
+            "params": _f(params),
+            "x": _f(x),
+            "y": [int(v) for v in y],
+            "new_params": _f(new_params),
+            "loss": float(mean_loss),
+            "per_example": _f(per_example),
+        },
+        "aggregate": {
+            "p": p,
+            "stacked": _f(stacked),
+            "h": _f(h),
+            "a_tilde": float(a_tilde),
+            "beta": float(beta),
+            "theta": _f(theta),
+            "out": _f(agg_out),
+        },
+    }
+    OUT_PATH.parent.mkdir(parents=True, exist_ok=True)
+    OUT_PATH.write_text(json.dumps(fixture) + "\n")
+    print(f"wrote {OUT_PATH} ({OUT_PATH.stat().st_size} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,13 +1,15 @@
 //! Micro-bench: the weighted-aggregation boundary (the paper's hot
-//! communication step) — PJRT Pallas artifact vs the host fallback —
-//! plus the weight evaluation itself. Informs the DESIGN.md §Perf choice
-//! of when the artifact path pays off.
+//! communication step) — the backend kernel (native panel kernel, or the
+//! PJRT Pallas artifact when built with `--features pjrt` and artifacts
+//! exist) vs the host fallback — plus the weight evaluation itself.
+//! Informs the DESIGN.md §Perf choice of when each path pays off.
 
 use wasgd::algorithms::host_aggregate;
 use wasgd::bench::{black_box, Bencher};
+use wasgd::config::BackendKind;
 use wasgd::linalg;
 use wasgd::rng::Rng;
-use wasgd::runtime::Engine;
+use wasgd::runtime::{backend_for_variant, Backend as _};
 
 fn main() {
     let mut b = Bencher::new();
@@ -39,12 +41,13 @@ fn main() {
         }
     }
 
-    // PJRT Pallas artifact path (needs artifacts on disk).
+    // Backend kernel path: native always works; with `--features pjrt`
+    // and artifacts on disk, Auto picks the Pallas artifact instead.
     let root = std::path::Path::new("artifacts");
     for variant in ["tiny_mlp", "mnist_mlp"] {
-        match Engine::load(root, variant) {
+        match backend_for_variant(root, variant, BackendKind::Auto) {
             Ok(engine) => {
-                let d = engine.manifest.param_count;
+                let d = engine.manifest().param_count;
                 for p in [2usize, 4, 8] {
                     if !engine.has_aggregate(p) {
                         continue;
@@ -54,7 +57,8 @@ fn main() {
                     let h: Vec<f32> = (0..p).map(|_| rng.uniform_in(0.1, 2.0)).collect();
                     // Warm the executable cache.
                     let _ = engine.aggregate(&stacked, &h, 1.0, 0.9).unwrap();
-                    b.bench(&format!("pjrt_aggregate {variant} p={p} (D={d})"), || {
+                    let name = engine.name();
+                    b.bench(&format!("{name}_aggregate {variant} p={p} (D={d})"), || {
                         black_box(
                             engine
                                 .aggregate(black_box(&stacked), black_box(&h), 1.0, 0.9)
@@ -63,7 +67,7 @@ fn main() {
                     });
                 }
             }
-            Err(e) => eprintln!("skipping {variant}: {e} (run `make artifacts`)"),
+            Err(e) => eprintln!("skipping {variant}: {e}"),
         }
     }
 

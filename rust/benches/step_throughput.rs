@@ -1,14 +1,16 @@
-//! Micro-bench: the PJRT hot path — train_step / eval_batch per variant,
-//! and one full coordinator iteration per algorithm (the end-to-end step
-//! cost that every figure's wall-time depends on). §Perf L3: the
-//! coordinator overhead around `train_step` must stay in the noise.
+//! Micro-bench: the engine hot path — train_step / eval_batch per
+//! variant, and one full coordinator iteration per algorithm (the
+//! end-to-end step cost that every figure's wall-time depends on).
+//! §Perf L3: the coordinator overhead around `train_step` must stay in
+//! the noise. Runs on whichever backend Auto resolves to (native without
+//! artifacts; PJRT with `--features pjrt` + artifacts).
 
 use wasgd::bench::{black_box, Bencher};
-use wasgd::config::{AlgoKind, ExperimentConfig};
+use wasgd::config::{AlgoKind, BackendKind, ExperimentConfig};
 use wasgd::coordinator::run_experiment_full;
 use wasgd::data::synth::DatasetKind;
 use wasgd::rng::Rng;
-use wasgd::runtime::Engine;
+use wasgd::runtime::{backend_for_variant, Backend as _};
 
 fn main() {
     let mut b = Bencher::new();
@@ -16,14 +18,14 @@ fn main() {
     let mut rng = Rng::new(1);
 
     for variant in ["tiny_mlp", "mnist_mlp", "cifar_cnn10"] {
-        let engine = match Engine::load(root, variant) {
+        let engine = match backend_for_variant(root, variant, BackendKind::Auto) {
             Ok(e) => e,
             Err(e) => {
                 eprintln!("skipping {variant}: {e}");
                 continue;
             }
         };
-        let m = &engine.manifest;
+        let m = engine.manifest();
         let mut params = m.init_params(1);
         let mut x = vec![0.0f32; m.batch * m.input_dim];
         rng.fill_normal(&mut x, 0.0, 1.0);

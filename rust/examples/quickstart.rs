@@ -1,8 +1,9 @@
 //! Quickstart: train a small classifier with WASGD+ on the tiny synthetic
-//! workload and print the loss curve.
+//! workload and print the loss curve. Hermetic — the default `Auto`
+//! backend falls back to the native engine, so no artifacts are needed:
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
 use anyhow::Result;
@@ -40,7 +41,7 @@ fn main() -> Result<()> {
     let first = out.log.records.first().unwrap().train_loss;
     let last = out.log.records.last().unwrap().train_loss;
     println!(
-        "\ntrain loss {first:.4} → {last:.4}  ({} PJRT executions, \
+        "\ntrain loss {first:.4} → {last:.4}  ({} kernel executions, \
          comm {:.3}s sim, orders kept/redrawn {}/{})",
         out.exec_count, out.comm_time_s, out.orders_kept, out.orders_redrawn
     );

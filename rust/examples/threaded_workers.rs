@@ -1,5 +1,5 @@
-//! Real-thread WASGD+ launcher: p OS threads, each with its own PJRT
-//! engine, blocking all-gather at every τ — the deployment-shaped
+//! Real-thread WASGD+ launcher: p OS threads, each with its own
+//! execution backend, blocking all-gather at every τ — the deployment-shaped
 //! topology (the simulation used by the figures replaces only *time*,
 //! this replaces nothing).
 //!

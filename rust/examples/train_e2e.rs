@@ -1,12 +1,13 @@
 //! End-to-end driver (EXPERIMENTS.md §E2E): train the MNIST-analogue
 //! MLP (~235k params) for a few hundred steps with WASGD+ over p=4
 //! workers, against sequential SGD under the same budget, proving the
-//! full stack composes: synthetic data → rust coordinator → PJRT
-//! execution of the Pallas-backed AOT artifacts → weighted aggregation
-//! through the `aggregate_p4` artifact → metrics.
+//! full stack composes: synthetic data → rust coordinator → backend
+//! kernel execution (native MLP engine by default; the Pallas-backed
+//! PJRT artifacts with `--features pjrt` + artifacts on disk) → weighted
+//! aggregation → metrics.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example train_e2e
+//! cargo run --release --example train_e2e
 //! ```
 
 use anyhow::Result;
@@ -74,7 +75,7 @@ fn main() -> Result<()> {
         println!("time-to-loss({target:.3}): wasgd+ {tp:.2}s vs sgd {ts:.2}s → {:.2}× speedup", ts / tp);
     }
     println!(
-        "PJRT execs: {} | comm {:.3}s sim | wait {:.3}s sim | orders kept/redrawn {}/{}",
+        "kernel execs: {} | comm {:.3}s sim | wait {:.3}s sim | orders kept/redrawn {}/{}",
         plus.exec_count, plus.comm_time_s, plus.wait_time_s, plus.orders_kept, plus.orders_redrawn
     );
 

@@ -27,7 +27,7 @@ use anyhow::Result;
 use crate::cluster::SimCluster;
 use crate::config::{AlgoKind, ExperimentConfig};
 use crate::rng::Rng;
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 
 /// Everything a policy can see/touch at a communication boundary.
 pub struct CommContext<'a> {
@@ -35,9 +35,10 @@ pub struct CommContext<'a> {
     pub params: &'a mut [Vec<f32>],
     /// Per-worker estimated loss energies h (windowed sums, Eq. 26).
     pub energies: &'a [f32],
-    /// The PJRT engine (for the Pallas aggregation artifact and for
-    /// full-dataset evals — OMWU pays for those in simulated time too).
-    pub engine: &'a Engine,
+    /// The execution backend (for the Eq. 10+13 aggregation kernel and
+    /// for full-dataset evals — OMWU pays for those in simulated time
+    /// too).
+    pub engine: &'a dyn Backend,
     /// Virtual cluster: policies charge their communication here.
     pub cluster: &'a mut SimCluster,
     pub cfg: &'a ExperimentConfig,

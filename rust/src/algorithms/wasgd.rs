@@ -51,9 +51,10 @@ impl CommPolicy for Wasgd {
 ///
 /// Boltzmann weights θᵢ = e^(−ã·h′ᵢ)/Σe^(−ã·h′ᵏ) (Eq. 13) and the
 /// β-negotiated update xᵢ ← (1−β)xᵢ + β·Σθⱼxⱼ (Eq. 10). The numerical
-/// work runs through the **Pallas aggregation artifact** via PJRT when
-/// one was lowered for this cohort size, with a bit-compatible host
-/// fallback otherwise (the integration suite asserts the two agree).
+/// work runs through the backend's aggregation kernel (the Pallas PJRT
+/// artifact, or the native engine's panel kernel) when the backend can
+/// serve this cohort size, with a bit-compatible host fallback otherwise
+/// (the test suites assert the paths agree).
 ///
 /// The async flavour (Algorithm 4) proceeds once the first p−1 peers —
 /// out of p+b−1 — have reached the boundary; the trainer passes the
@@ -62,15 +63,15 @@ impl CommPolicy for Wasgd {
 pub struct WasgdPlus {
     theta: Vec<f32>,
     is_async: bool,
-    /// Number of boundaries served by the PJRT artifact vs host fallback
-    /// (telemetry for the perf pass).
-    pub pjrt_boundaries: u64,
+    /// Number of boundaries served by the backend kernel vs the host
+    /// fallback (telemetry for the perf pass).
+    pub engine_boundaries: u64,
     pub host_boundaries: u64,
 }
 
 impl WasgdPlus {
     pub fn new(is_async: bool) -> Self {
-        Self { theta: Vec::new(), is_async, pjrt_boundaries: 0, host_boundaries: 0 }
+        Self { theta: Vec::new(), is_async, engine_boundaries: 0, host_boundaries: 0 }
     }
 }
 
@@ -114,7 +115,8 @@ impl CommPolicy for WasgdPlus {
         let force_host = std::env::var_os("WASGD_HOST_AGG").is_some();
 
         if !force_host && ctx.engine.has_aggregate(p) {
-            // Hot path: the L1 Pallas kernel through PJRT.
+            // Hot path: the backend's aggregation kernel (Pallas via PJRT,
+            // or the native panel kernel).
             let mut stacked = Vec::with_capacity(p * d);
             for row in ctx.params.iter() {
                 stacked.extend_from_slice(row);
@@ -124,7 +126,7 @@ impl CommPolicy for WasgdPlus {
             for (i, row) in ctx.params.iter_mut().enumerate() {
                 row.copy_from_slice(&out[i * d..(i + 1) * d]);
             }
-            self.pjrt_boundaries += 1;
+            self.engine_boundaries += 1;
         } else {
             host_aggregate(ctx.params, &self.theta, ctx.cfg.beta);
             self.host_boundaries += 1;

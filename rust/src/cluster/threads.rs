@@ -1,11 +1,11 @@
 //! Real-thread execution mode: one OS thread per worker, each owning its
-//! own PJRT engine, synchronising through an in-process all-gather.
+//! own execution backend, synchronising through an in-process all-gather.
 //!
 //! The deterministic simulation (`coordinator::Trainer`) is what the
 //! figures use; this module is the *launcher-grade* mode proving the
 //! decentralized protocol composes with genuinely concurrent workers:
-//! `PjRtClient` is `Rc`-based (not `Send`), so every thread constructs
-//! its own engine from the artifact directory — exactly the process
+//! backends are single-threaded (the PJRT client is `Rc`-based, not
+//! `Send`), so every thread constructs its own — exactly the process
 //! topology a multi-host deployment would have, with the [`AllGather`]
 //! channel standing in for the NIC.
 
@@ -19,7 +19,7 @@ use crate::data::synth::SynthConfig;
 use crate::data::Dataset;
 use crate::linalg;
 use crate::rng::Rng;
-use crate::runtime::Engine;
+use crate::runtime::{load_backend, Backend as _};
 
 /// A reusable p-way all-gather barrier carrying one `T` per participant.
 ///
@@ -91,11 +91,11 @@ pub struct ThreadedOutcome {
 /// Run WASGD+ (Eq. 10+13) with `cfg.p` real threads for
 /// `total_steps` local iterations each.
 ///
-/// Each thread: own engine (compiled from `cfg.artifact_dir()`), own
-/// shuffle stream, local SGD; at every τ-boundary, a real blocking
-/// all-gather of `(h, params)` followed by the Boltzmann β-negotiation
-/// applied locally (every worker computes the same aggregate —
-/// decentralized, no parameter server).
+/// Each thread: own backend (selected by `cfg.backend` — PJRT artifacts
+/// or the native engine), own shuffle stream, local SGD; at every
+/// τ-boundary, a real blocking all-gather of `(h, params)` followed by
+/// the Boltzmann β-negotiation applied locally (every worker computes
+/// the same aggregate — decentralized, no parameter server).
 pub fn run_wasgd_plus_threaded(
     cfg: &ExperimentConfig,
     total_steps: usize,
@@ -111,10 +111,10 @@ pub fn run_wasgd_plus_threaded(
         let dataset = Arc::clone(&dataset);
         let gather = Arc::clone(&gather);
         handles.push(thread::spawn(move || -> Result<(f32, Vec<f32>)> {
-            // Engine is built *inside* the thread: PjRtClient is !Send.
-            let engine = Engine::load(&cfg.artifacts_root, &cfg.variant)?;
-            let b = engine.manifest.batch;
-            let mut params = engine.manifest.init_params(cfg.seed ^ 0x9a9a);
+            // Backend is built *inside* the thread: PjRtClient is !Send.
+            let engine = load_backend(&cfg)?;
+            let b = engine.manifest().batch;
+            let mut params = engine.manifest().init_params(cfg.seed ^ 0x9a9a);
             let mut rng = Rng::new(cfg.seed).child(100 + i as u64);
             let n = dataset.n_train();
             let mut order = rng.permutation(n);
@@ -181,6 +181,22 @@ pub fn run_wasgd_plus_threaded(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::BackendKind;
+    use crate::data::synth::DatasetKind;
+
+    #[test]
+    fn threaded_run_native_backend_learns() {
+        // Hermetic: real threads, one native backend each, two boundaries.
+        let mut cfg = ExperimentConfig::paper_preset(DatasetKind::Tiny);
+        cfg.backend = BackendKind::Native;
+        cfg.p = 2;
+        cfg.tau = 16;
+        cfg.m = 4;
+        let out = run_wasgd_plus_threaded(&cfg, 96).unwrap();
+        assert_eq!(out.final_energies.len(), 2);
+        assert!(out.final_energies.iter().all(|&e| e.is_finite() && e < 1.0));
+        assert!(!out.params.is_empty());
+    }
 
     #[test]
     fn allgather_roundtrip_two_threads() {

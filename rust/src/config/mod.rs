@@ -12,6 +12,40 @@ use std::path::PathBuf;
 use crate::cluster::{ComputeModel, FabricConfig};
 use crate::data::synth::DatasetKind;
 
+/// Which execution backend drives the numerics (see `crate::runtime`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// PJRT when the build has the `pjrt` feature and artifacts exist on
+    /// disk; the pure-Rust native engine otherwise.
+    #[default]
+    Auto,
+    /// Force the pure-Rust native engine (hermetic: no artifacts).
+    Native,
+    /// Force the PJRT artifact engine (errors without `--features pjrt`).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 3] = [BackendKind::Auto, BackendKind::Native, BackendKind::Pjrt];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "auto" => BackendKind::Auto,
+            "native" => BackendKind::Native,
+            "pjrt" => BackendKind::Pjrt,
+            _ => return None,
+        })
+    }
+}
+
 /// Which parallel scheme to run — the paper's benchmark set (§5.2.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum AlgoKind {
@@ -81,6 +115,8 @@ pub struct ExperimentConfig {
     /// Artifact directory name under `artifacts_root` (model variant).
     pub variant: String,
     pub artifacts_root: PathBuf,
+    /// Execution backend (PJRT artifacts vs the pure-Rust native engine).
+    pub backend: BackendKind,
     pub algo: AlgoKind,
     /// Number of primary workers p.
     pub p: usize,
@@ -130,6 +166,7 @@ impl Default for ExperimentConfig {
             dataset: DatasetKind::Tiny,
             variant: "tiny_mlp".to_string(),
             artifacts_root: PathBuf::from("artifacts"),
+            backend: BackendKind::Auto,
             algo: AlgoKind::WasgdPlus,
             p: 4,
             backups: 0,
@@ -310,5 +347,14 @@ mod tests {
             assert_eq!(AlgoKind::parse(a.name()), Some(a));
         }
         assert_eq!(AlgoKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn backend_parse_roundtrip_and_default() {
+        for b in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(b.name()), Some(b));
+        }
+        assert_eq!(BackendKind::parse("tpu"), None);
+        assert_eq!(ExperimentConfig::default().backend, BackendKind::Auto);
     }
 }

@@ -1,8 +1,9 @@
 //! The decentralized training coordinator — the paper's Algorithm 1/4
 //! driving loop, shared by every scheme in [`crate::algorithms`].
 //!
-//! One [`Trainer`] owns the PJRT engine, the dataset, the simulated
-//! cluster, and `p (+ b)` [`worker::Worker`]s. The loop is the paper's:
+//! One [`Trainer`] borrows an execution [`Backend`] (PJRT artifacts or
+//! the pure-Rust native engine), the dataset, the simulated cluster, and
+//! `p (+ b)` [`worker::Worker`]s. The loop is the paper's:
 //! each worker takes local SGD steps through the engine; iterations that
 //! fall into the [`RecordWindow`](crate::data::RecordWindow) accumulate
 //! the worker's loss energy h (Eq. 26 — free, the losses are forward-pass
@@ -10,7 +11,7 @@
 //! [`CommPolicy`](crate::algorithms::CommPolicy) rewrites the parameters;
 //! `Judge` scores feed the §3.4 sample-order search.
 //!
-//! Numerics are exact (every step executes the AOT HLO); *time* is
+//! Numerics are exact (every step runs the backend's kernels); *time* is
 //! virtual (DESIGN.md §3): compute and communication costs advance the
 //! [`SimCluster`] clocks so the recorded curves reflect the paper's
 //! cluster, not this host's core count.
@@ -28,7 +29,7 @@ use crate::data::{Dataset, RecordWindow};
 use crate::linalg;
 use crate::metrics::{Record, RunLog, Stopwatch};
 use crate::rng::Rng;
-use crate::runtime::Engine;
+use crate::runtime::{load_backend, Backend};
 
 use worker::Worker;
 
@@ -49,7 +50,7 @@ pub struct RunOutput {
     /// Order-search telemetry (WASGD+): parts kept / redrawn.
     pub orders_kept: u64,
     pub orders_redrawn: u64,
-    /// PJRT executions performed.
+    /// Backend kernel executions performed (PJRT programs or native calls).
     pub exec_count: u64,
     /// Final per-worker parameter vectors (checkpointable via
     /// [`RunOutput::to_checkpoint`]).
@@ -75,21 +76,22 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunLog> {
     Ok(run_experiment_full(cfg)?.log)
 }
 
-/// Run one experiment with full telemetry (loads the engine and builds
-/// the dataset itself; sweeps should use [`crate::harness::SharedEnv`]
-/// to amortise engine compilation and step-time calibration).
+/// Run one experiment with full telemetry (loads the backend selected by
+/// `cfg.backend` and builds the dataset itself; sweeps should use
+/// [`crate::harness::SharedEnv`] to amortise backend construction and
+/// step-time calibration).
 pub fn run_experiment_full(cfg: &ExperimentConfig) -> Result<RunOutput> {
-    let engine = Engine::load(&cfg.artifacts_root, &cfg.variant)?;
+    let engine = load_backend(cfg)?;
     let dataset = SynthConfig::preset(cfg.dataset).build(cfg.seed);
-    let mut tr = Trainer::new(cfg.clone(), &engine, &dataset)?;
+    let mut tr = Trainer::new(cfg.clone(), engine.as_ref(), &dataset)?;
     tr.run()
 }
 
-/// The shared training loop. Borrows the engine and the dataset so
+/// The shared training loop. Borrows the backend and the dataset so
 /// sweeps can reuse both across dozens of runs.
 pub struct Trainer<'a> {
     pub cfg: ExperimentConfig,
-    pub engine: &'a Engine,
+    pub engine: &'a dyn Backend,
     pub dataset: &'a Dataset,
     cluster: SimCluster,
     policy: Box<dyn CommPolicy>,
@@ -103,15 +105,19 @@ pub struct Trainer<'a> {
 }
 
 impl<'a> Trainer<'a> {
-    pub fn new(cfg: ExperimentConfig, engine: &'a Engine, dataset: &'a Dataset) -> Result<Self> {
+    pub fn new(
+        cfg: ExperimentConfig,
+        engine: &'a dyn Backend,
+        dataset: &'a Dataset,
+    ) -> Result<Self> {
         cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
         anyhow::ensure!(
-            dataset.dim == engine.manifest.input_dim,
+            dataset.dim == engine.manifest().input_dim,
             "dataset dim {} ≠ model input dim {} (dataset {} vs variant {})",
             dataset.dim,
-            engine.manifest.input_dim,
+            engine.manifest().input_dim,
             dataset.name,
-            engine.manifest.name
+            engine.manifest().name
         );
 
         let p_primary = if cfg.algo == AlgoKind::Sequential { 1 } else { cfg.p };
@@ -128,7 +134,7 @@ impl<'a> Trainer<'a> {
         let policy = make_policy(&cfg);
         let root = Rng::new(cfg.seed);
         let n = dataset.n_train();
-        let batch = engine.manifest.batch;
+        let batch = engine.manifest().batch;
         anyhow::ensure!(n >= batch, "dataset smaller than one batch");
 
         let mut workers = Vec::with_capacity(p_total);
@@ -141,7 +147,7 @@ impl<'a> Trainer<'a> {
             } else {
                 None
             };
-            let params = engine.manifest.init_params(cfg.seed ^ 0x9a9a);
+            let params = engine.manifest().init_params(cfg.seed ^ 0x9a9a);
             workers.push(Worker::new(
                 i,
                 params,
@@ -173,7 +179,7 @@ impl<'a> Trainer<'a> {
 
     /// Steps per epoch per worker (dataset passes ÷ batch).
     pub fn steps_per_epoch(&self) -> usize {
-        (self.dataset.n_train() / self.engine.manifest.batch).max(1)
+        (self.dataset.n_train() / self.engine.manifest().batch).max(1)
     }
 
     /// Drive the run to completion.
@@ -226,7 +232,7 @@ impl<'a> Trainer<'a> {
             wait_time_s: self.cluster.wait_time_total,
             orders_kept: self.workers.iter().map(|w| w.orders_kept()).sum(),
             orders_redrawn: self.workers.iter().map(|w| w.orders_redrawn()).sum(),
-            exec_count: *self.engine.exec_count.borrow(),
+            exec_count: self.engine.exec_count(),
             final_workers: self.workers.iter().map(|w| w.params().to_vec()).collect(),
         })
     }
@@ -285,7 +291,7 @@ impl<'a> Trainer<'a> {
             None
         };
 
-        let msg_bytes = self.engine.manifest.message_bytes();
+        let msg_bytes = self.engine.manifest().message_bytes();
 
         if self.cfg.algo == AlgoKind::WasgdPlusAsync {
             self.communicate_async(&energies, msg_bytes)?;
@@ -295,7 +301,7 @@ impl<'a> Trainer<'a> {
             let mut ctx = CommContext {
                 params: &mut params,
                 energies: &energies,
-                engine: &self.engine,
+                engine: self.engine,
                 cluster: &mut self.cluster,
                 cfg: &self.cfg,
                 rng: &mut self.comm_rng,
@@ -384,7 +390,7 @@ impl<'a> Trainer<'a> {
 
     /// Exact mean train loss of one worker over the whole training split.
     fn full_train_loss(&mut self, wi: usize) -> Result<f32> {
-        let b = self.engine.manifest.batch;
+        let b = self.engine.manifest().batch;
         let n = self.dataset.n_train();
         let mut total = 0.0f64;
         let mut count = 0usize;
@@ -406,7 +412,7 @@ impl<'a> Trainer<'a> {
     /// worker 0 (the cohort is exchangeable; after a boundary with β=1
     /// all workers coincide). Instrumentation only: charges no sim time.
     fn evaluate(&mut self, iteration: u64, epoch: f64, watch: &Stopwatch) -> Result<Record> {
-        let b = self.engine.manifest.batch;
+        let b = self.engine.manifest().batch;
         let params = self.workers[0].params().to_vec();
 
         let sample = |n: usize, rng: &mut Rng| -> Vec<u32> {

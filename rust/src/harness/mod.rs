@@ -11,25 +11,27 @@ use crate::coordinator::{RunOutput, Trainer};
 use crate::data::synth::SynthConfig;
 use crate::data::Dataset;
 use crate::metrics::{Record, RunLog};
-use crate::runtime::Engine;
+use crate::runtime::{load_backend, Backend};
 
 /// Where harness CSVs land.
 pub const RESULTS_DIR: &str = "results";
 
-/// A shared engine + dataset + calibrated step time for a whole sweep:
-/// engine compilation (seconds) and step-time calibration happen once,
-/// and every run in the sweep uses the *same* simulated step cost so
-/// sim-time comparisons across configurations are exact.
+/// A shared backend + dataset + calibrated step time for a whole sweep:
+/// backend construction (for PJRT: seconds of XLA compilation) and
+/// step-time calibration happen once, and every run in the sweep uses
+/// the *same* simulated step cost so sim-time comparisons across
+/// configurations are exact.
 pub struct SharedEnv {
-    pub engine: Engine,
+    pub engine: Box<dyn Backend>,
     pub dataset: Dataset,
     pub step_time_s: f64,
 }
 
 impl SharedEnv {
-    /// Build from a base config (dataset seed = base.seed).
+    /// Build from a base config (dataset seed = base.seed; backend from
+    /// `base.backend` — PJRT artifacts or the hermetic native engine).
     pub fn new(base: &ExperimentConfig) -> Result<Self> {
-        let engine = Engine::load(&base.artifacts_root, &base.variant)?;
+        let engine = load_backend(base)?;
         let dataset = SynthConfig::preset(base.dataset).build(base.seed);
         let step_time_s = if base.compute.step_time_s > 0.0 {
             base.compute.step_time_s
@@ -39,11 +41,11 @@ impl SharedEnv {
         Ok(Self { engine, dataset, step_time_s })
     }
 
-    /// Run one config against the shared engine/dataset.
+    /// Run one config against the shared backend/dataset.
     pub fn run(&self, cfg: &ExperimentConfig) -> Result<RunOutput> {
         let mut cfg = cfg.clone();
         cfg.compute.step_time_s = self.step_time_s;
-        let mut tr = Trainer::new(cfg, &self.engine, &self.dataset)?;
+        let mut tr = Trainer::new(cfg, self.engine.as_ref(), &self.dataset)?;
         tr.run()
     }
 
@@ -141,7 +143,23 @@ pub const SWEEP_SEEDS: [u64; 5] = [11, 22, 33, 44, 55];
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::BackendKind;
     use crate::metrics::Record;
+
+    #[test]
+    fn shared_env_runs_native_sweeps() {
+        let mut base = ExperimentConfig::default();
+        base.backend = BackendKind::Native;
+        base.compute.step_time_s = 1e-3;
+        base.epochs = 0.5;
+        base.eval_every = 16;
+        let env = SharedEnv::new(&base).unwrap();
+        assert_eq!(env.engine.name(), "native");
+        let out = env.run(&base).unwrap();
+        assert!(out.log.records.len() >= 2);
+        let outs = env.run_seeds(&base, &[1, 2]).unwrap();
+        assert_eq!(outs.len(), 2);
+    }
 
     fn log_with(losses: &[f64]) -> RunLog {
         let mut l = RunLog::new("x");

@@ -14,10 +14,37 @@
 //!   loss-estimation windows, a simulated cluster, and the bench harness
 //!   that regenerates every figure of the paper's evaluation.
 //!
-//! Python never runs on the training path: artifacts are loaded through
-//! the PJRT C API (`xla` crate) and executed from rust.
+//! # Execution backends
 //!
-//! Quick taste (see `examples/quickstart.rs`):
+//! The aggregation protocol is numerics-agnostic, and the runtime makes
+//! that explicit with a pluggable [`runtime::Backend`] seam. Two
+//! implementations exist:
+//!
+//! * [`runtime::NativeEngine`] — a pure-Rust forward/backward for the
+//!   MLP variants plus the Eq. 10+13 Boltzmann-aggregation kernel.
+//!   Hermetic: a clean checkout builds and trains with **no Python, no
+//!   JAX, and no HLO artifacts** (`cargo build --release && cargo test`
+//!   is fully self-contained). Initialisation and data synthesis run
+//!   through the in-crate deterministic PRNG, so runs are
+//!   bit-reproducible across hosts.
+//! * [`runtime::Engine`] (cargo feature **`pjrt`**) — the PJRT executor
+//!   for the Pallas-backed AOT artifacts lowered by `python/compile/`.
+//!   Enable by uncommenting the `xla` dependency in `rust/Cargo.toml`
+//!   (kept out of the default graph so hermetic builds never resolve
+//!   it), building with `--features pjrt`, and generating artifacts
+//!   (`python -m compile.aot`); Python never runs on the training path
+//!   — artifacts are loaded through the PJRT C API (`xla` crate) and
+//!   executed from rust.
+//!
+//! Selection is per-experiment via
+//! [`config::BackendKind`]: `Auto` (the default) prefers PJRT when the
+//! feature is compiled in *and* artifacts exist on disk, and falls back
+//! to the native engine otherwise; `native`/`pjrt` force a provider
+//! (CLI: `wasgd run --backend native …`). The parity suite
+//! (`tests/native_parity.rs`) pins the native kernels against the Python
+//! reference kernels' recorded fixtures at ≤1e-5.
+//!
+//! Quick taste (see `examples/quickstart.rs` — no artifacts needed):
 //!
 //! ```no_run
 //! use wasgd::config::{AlgoKind, ExperimentConfig};

@@ -11,11 +11,11 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-use wasgd::config::{AlgoKind, ExperimentConfig};
+use wasgd::config::{AlgoKind, BackendKind, ExperimentConfig};
 use wasgd::coordinator::run_experiment_full;
 use wasgd::data::synth::DatasetKind;
 use wasgd::metrics::{format_table, write_csv};
-use wasgd::runtime::Engine;
+use wasgd::runtime::{backend_for_variant, Backend as _};
 use wasgd::util::Args;
 
 const USAGE: &str = "\
@@ -25,14 +25,15 @@ USAGE:
   wasgd run       [--dataset D] [--algo A] [--p N] [--tau N] [--beta F]
                   [--a-tilde F] [--m N] [--c N] [--lr F] [--epochs F]
                   [--eval-every N] [--seed N] [--backups N] [--variant V]
-                  [--artifacts DIR] [--target-loss F] [--out FILE.csv]
-                  [--save-checkpoint DIR]
+                  [--artifacts DIR] [--backend B] [--target-loss F]
+                  [--out FILE.csv] [--save-checkpoint DIR]
   wasgd compare   (same flags; runs every algorithm)
-  wasgd calibrate [--variant V] [--artifacts DIR] [--reps N]
+  wasgd calibrate [--variant V] [--artifacts DIR] [--backend B] [--reps N]
   wasgd list
 
 datasets:   tiny mnist fashion cifar10 cifar100
 algorithms: sgd spsgd easgd omwu mmwu wasgd wasgd+ wasgd+async
+backends:   auto native pjrt   (auto prefers pjrt artifacts when present)
 ";
 
 fn config_from(args: &Args) -> Result<ExperimentConfig> {
@@ -48,6 +49,9 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.opt_str("variant") {
         cfg.variant = v;
     }
+    let backend_s = args.str_flag("backend", "auto");
+    cfg.backend = BackendKind::parse(&backend_s)
+        .ok_or_else(|| anyhow::anyhow!("unknown backend {backend_s:?}"))?;
     cfg.p = args.num_flag("p", 4usize)?;
     cfg.backups = args.num_flag("backups", 1usize)?;
     if let Some(v) = args.opt_num::<usize>("tau")? {
@@ -102,7 +106,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         );
     }
     eprintln!(
-        "comm {:.3}s sim, wait {:.3}s sim, {} PJRT execs, orders kept/redrawn {}/{}",
+        "comm {:.3}s sim, wait {:.3}s sim, {} kernel execs, orders kept/redrawn {}/{}",
         out.comm_time_s, out.wait_time_s, out.exec_count, out.orders_kept, out.orders_redrawn
     );
     if let Some(path) = out_path {
@@ -144,15 +148,19 @@ fn cmd_compare(args: &Args) -> Result<()> {
 fn cmd_calibrate(args: &Args) -> Result<()> {
     let variant = args.str_flag("variant", "tiny_mlp");
     let artifacts = PathBuf::from(args.str_flag("artifacts", "artifacts"));
+    let backend_s = args.str_flag("backend", "auto");
+    let kind = BackendKind::parse(&backend_s)
+        .ok_or_else(|| anyhow::anyhow!("unknown backend {backend_s:?}"))?;
     let reps = args.num_flag("reps", 20usize)?;
     args.finish()?;
-    let engine = Engine::load(&artifacts, &variant)?;
+    let engine = backend_for_variant(&artifacts, &variant, kind)?;
     let t = engine.calibrate_step_time(reps)?;
     println!(
-        "{variant}: {:.3} ms/step  (D={}, batch={})",
+        "{variant} [{}]: {:.3} ms/step  (D={}, batch={})",
+        engine.name(),
         t * 1e3,
-        engine.manifest.param_count,
-        engine.manifest.batch
+        engine.manifest().param_count,
+        engine.manifest().batch
     );
     Ok(())
 }

@@ -1,0 +1,198 @@
+//! The execution-backend seam.
+//!
+//! The paper's weighted-aggregation protocol (Eqs. 10/13/26) is
+//! numerics-agnostic: its correctness claims are about *what the workers
+//! exchange*, not about which kernel provider computed the gradients. The
+//! [`Backend`] trait captures exactly the surface the coordinator needs —
+//! one SGD step, one eval batch, the Boltzmann aggregation, and the model
+//! manifest — so the trainer, the threaded cluster, the harness and the
+//! benches can run against any provider:
+//!
+//! * [`NativeEngine`](super::native::NativeEngine) — pure-Rust
+//!   forward/backward for the MLP variants. Hermetic: no Python, no JAX,
+//!   no HLO artifacts; this is what CI and a clean checkout run.
+//! * [`Engine`](super::engine::Engine) (feature `pjrt`) — the PJRT
+//!   executor for the Pallas-backed AOT artifacts; the TPU-deployment
+//!   path, available when artifacts exist on disk.
+//!
+//! Selection happens through [`BackendKind`](crate::config::BackendKind)
+//! on the experiment config: `Auto` prefers PJRT when the build has the
+//! feature *and* the artifact directory exists, and falls back to the
+//! native engine otherwise.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::{BackendKind, ExperimentConfig};
+
+use super::manifest::Manifest;
+use super::native::NativeEngine;
+
+/// Outputs of one training step.
+#[derive(Clone, Debug)]
+pub struct StepOut {
+    /// Mean batch loss.
+    pub loss: f32,
+    /// Per-example losses (length = batch) — feeds the paper's free
+    /// loss-estimation windows (Eq. 26).
+    pub per_example: Vec<f32>,
+}
+
+/// Outputs of one evaluation batch.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalOut {
+    pub sum_loss: f32,
+    pub correct: f32,
+}
+
+/// One model-execution provider: everything the coordinator calls into.
+///
+/// Implementations are *single-threaded* (the PJRT client is `Rc`-based);
+/// concurrent modes construct one backend per worker thread via
+/// [`load_backend`], exactly the process topology of a multi-host
+/// deployment.
+pub trait Backend {
+    /// Short provider name for logs/telemetry ("native", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// The model variant's flat-parameter ABI and baked shapes.
+    fn manifest(&self) -> &Manifest;
+
+    /// One SGD step: consumes `params`, returns the updated vector plus
+    /// the loss outputs. `x` is row-major [batch × input_dim], `y` holds
+    /// the integer labels.
+    fn train_step(&self, params: &[f32], x: &[f32], y: &[i32], lr: f32)
+        -> Result<(Vec<f32>, StepOut)>;
+
+    /// One evaluation batch: summed loss + correct count.
+    fn eval_batch(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<EvalOut>;
+
+    /// The paper's communication step (Eq. 10+13): `stacked` is row-major
+    /// [p × D]; returns the β-mixed rows.
+    fn aggregate(&self, stacked: &[f32], h: &[f32], a_tilde: f32, beta: f32) -> Result<Vec<f32>>;
+
+    /// Can this backend aggregate a cohort of size `p`? (The PJRT engine
+    /// needs a lowered `aggregate_p{p}` artifact; the native engine
+    /// handles any p.)
+    fn has_aggregate(&self, p: usize) -> bool;
+
+    /// Kernel executions performed so far (telemetry for the perf pass).
+    fn exec_count(&self) -> u64;
+
+    /// Measure mean seconds per train step over `n` reps (for calibrating
+    /// the simulated cluster's compute model).
+    fn calibrate_step_time(&self, n: usize) -> Result<f64> {
+        let m = self.manifest();
+        let params = m.init_params(7);
+        let x = vec![0.1f32; m.batch * m.input_dim];
+        let y = vec![0i32; m.batch];
+        // Warm-up.
+        let _ = self.train_step(&params, &x, &y, 0.0)?;
+        let t0 = std::time::Instant::now();
+        let mut cur = params;
+        for _ in 0..n.max(1) {
+            let (next, _) = self.train_step(&cur, &x, &y, 0.0)?;
+            cur = next;
+        }
+        Ok(t0.elapsed().as_secs_f64() / n.max(1) as f64)
+    }
+}
+
+/// Build the backend an experiment config asks for.
+pub fn load_backend(cfg: &ExperimentConfig) -> Result<Box<dyn Backend>> {
+    backend_for_variant(&cfg.artifacts_root, &cfg.variant, cfg.backend)
+}
+
+/// Build a backend for one model variant directly (benches, calibration).
+pub fn backend_for_variant(
+    artifacts_root: &Path,
+    variant: &str,
+    kind: BackendKind,
+) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Native => native_backend(artifacts_root, variant),
+        BackendKind::Pjrt => pjrt_backend(artifacts_root, variant),
+        BackendKind::Auto => {
+            if pjrt_available() && artifacts_root.join(variant).join("manifest.json").exists() {
+                pjrt_backend(artifacts_root, variant)
+            } else {
+                native_backend(artifacts_root, variant)
+            }
+        }
+    }
+}
+
+/// Was this build compiled with PJRT support?
+pub fn pjrt_available() -> bool {
+    cfg!(feature = "pjrt")
+}
+
+fn native_backend(artifacts_root: &Path, variant: &str) -> Result<Box<dyn Backend>> {
+    let dir = artifacts_root.join(variant);
+    // An on-disk manifest (if artifacts were generated) is authoritative;
+    // otherwise the built-in MLP presets make the backend fully hermetic.
+    let manifest = if dir.join("manifest.json").exists() {
+        Manifest::load(&dir)?
+    } else {
+        Manifest::native_variant(variant).ok_or_else(|| {
+            anyhow::anyhow!(
+                "variant {variant:?} has no built-in native preset and no manifest.json \
+                 under {} — MLP variants (tiny_mlp, mnist_mlp, fashion_mlp) run natively; \
+                 CNN variants need PJRT artifacts",
+                dir.display()
+            )
+        })?
+    };
+    Ok(Box::new(NativeEngine::new(manifest)?))
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_backend(artifacts_root: &Path, variant: &str) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(super::engine::Engine::load(artifacts_root, variant)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend(_artifacts_root: &Path, _variant: &str) -> Result<Box<dyn Backend>> {
+    anyhow::bail!(
+        "this build has no PJRT support — uncomment the `xla` dependency in \
+         rust/Cargo.toml, rebuild with `--features pjrt`, and generate \
+         artifacts with `python -m compile.aot`"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    #[test]
+    fn auto_falls_back_to_native_without_artifacts() {
+        let cfg = ExperimentConfig::default(); // artifacts/ does not exist
+        let b = load_backend(&cfg).unwrap();
+        assert_eq!(b.name(), "native");
+        assert_eq!(b.manifest().name, "tiny_mlp");
+    }
+
+    #[test]
+    fn explicit_native_works_for_mlp_variants() {
+        for v in ["tiny_mlp", "mnist_mlp", "fashion_mlp"] {
+            let b = backend_for_variant(Path::new("artifacts"), v, BackendKind::Native).unwrap();
+            assert_eq!(b.manifest().name, v);
+            assert!(b.has_aggregate(4));
+        }
+    }
+
+    #[test]
+    fn native_rejects_cnn_variants() {
+        let r = backend_for_variant(Path::new("artifacts"), "cifar_cnn10", BackendKind::Native);
+        assert!(r.is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_kind_errors_without_feature() {
+        let r = backend_for_variant(Path::new("artifacts"), "tiny_mlp", BackendKind::Pjrt);
+        assert!(r.is_err());
+    }
+}

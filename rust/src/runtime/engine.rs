@@ -1,4 +1,7 @@
-//! The PJRT execution engine: loads HLO-text artifacts and runs them.
+//! The PJRT execution engine (feature `pjrt`): loads HLO-text artifacts
+//! and runs them. One of the two [`Backend`] implementations — the
+//! artifact-backed deployment path; `runtime::native` is the hermetic
+//! twin.
 //!
 //! One [`Engine`] wraps one PJRT CPU client plus the compiled
 //! executables of a model variant (`train_step`, `eval_step`, and one
@@ -18,24 +21,8 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Context, Result};
 use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
+use super::backend::{Backend, EvalOut, StepOut};
 use super::manifest::Manifest;
-
-/// Outputs of one training step.
-#[derive(Clone, Debug)]
-pub struct StepOut {
-    /// Mean batch loss.
-    pub loss: f32,
-    /// Per-example losses (length = batch) — feeds the paper's free
-    /// loss-estimation windows (Eq. 26).
-    pub per_example: Vec<f32>,
-}
-
-/// Outputs of one evaluation batch.
-#[derive(Clone, Copy, Debug)]
-pub struct EvalOut {
-    pub sum_loss: f32,
-    pub correct: f32,
-}
 
 pub struct Engine {
     client: PjRtClient,
@@ -219,21 +206,40 @@ impl Engine {
         Ok(())
     }
 
-    /// Measure mean seconds per train step over `n` reps (for calibrating
-    /// the simulated cluster's compute model).
-    pub fn calibrate_step_time(&self, n: usize) -> Result<f64> {
-        let m = &self.manifest;
-        let params = m.init_params(7);
-        let x = vec![0.1f32; m.batch * m.input_dim];
-        let y = vec![0i32; m.batch];
-        // Warm-up.
-        let _ = self.train_step(&params, &x, &y, 0.0)?;
-        let t0 = std::time::Instant::now();
-        let mut cur = params;
-        for _ in 0..n.max(1) {
-            let (next, _) = self.train_step(&cur, &x, &y, 0.0)?;
-            cur = next;
-        }
-        Ok(t0.elapsed().as_secs_f64() / n.max(1) as f64)
+}
+
+impl Backend for Engine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn train_step(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, StepOut)> {
+        Engine::train_step(self, params, x, y, lr)
+    }
+
+    fn eval_batch(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<EvalOut> {
+        Engine::eval_batch(self, params, x, y)
+    }
+
+    fn aggregate(&self, stacked: &[f32], h: &[f32], a_tilde: f32, beta: f32) -> Result<Vec<f32>> {
+        Engine::aggregate(self, stacked, h, a_tilde, beta)
+    }
+
+    fn has_aggregate(&self, p: usize) -> bool {
+        Engine::has_aggregate(self, p)
+    }
+
+    fn exec_count(&self) -> u64 {
+        *self.exec_count.borrow()
     }
 }

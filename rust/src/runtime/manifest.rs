@@ -138,6 +138,53 @@ impl Manifest {
     pub fn message_bytes(&self) -> usize {
         self.param_count * 4 + 4 + 8
     }
+
+    /// Build an MLP manifest programmatically — the native backend's
+    /// artifact-free path. Layout mirrors `compile.model.param_shapes`:
+    /// alternating `dense{i}_w [din, dout]` / `dense{i}_b [dout]`.
+    pub fn mlp(
+        name: &str,
+        input_dim: usize,
+        hidden: &[usize],
+        classes: usize,
+        batch: usize,
+    ) -> Self {
+        let mut dims = Vec::with_capacity(hidden.len() + 2);
+        dims.push(input_dim);
+        dims.extend_from_slice(hidden);
+        dims.push(classes);
+        let mut param_layout = Vec::new();
+        for i in 0..dims.len() - 1 {
+            param_layout.push(ParamEntry {
+                name: format!("dense{i}_w"),
+                shape: vec![dims[i], dims[i + 1]],
+            });
+            param_layout.push(ParamEntry { name: format!("dense{i}_b"), shape: vec![dims[i + 1]] });
+        }
+        let param_count = param_layout.iter().map(|p| p.numel()).sum();
+        Manifest {
+            name: name.to_string(),
+            param_count,
+            batch,
+            input_dim,
+            input_shape: vec![input_dim],
+            num_classes: classes,
+            worker_counts: vec![2, 4, 8, 16],
+            param_layout,
+        }
+    }
+
+    /// Built-in manifests for the MLP variants — shape-identical to the
+    /// registry in `python/compile/model.py` (`VARIANTS`), so the native
+    /// backend speaks the same flat ABI the PJRT artifacts would.
+    pub fn native_variant(variant: &str) -> Option<Self> {
+        Some(match variant {
+            "tiny_mlp" => Self::mlp("tiny_mlp", 16, &[8], 2, 8),
+            "mnist_mlp" => Self::mlp("mnist_mlp", 784, &[256, 128], 10, 32),
+            "fashion_mlp" => Self::mlp("fashion_mlp", 784, &[256, 128], 10, 32),
+            _ => return None,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -184,6 +231,23 @@ mod tests {
     #[test]
     fn parse_rejects_missing_field() {
         assert!(Manifest::parse(r#"{"name": "x"}"#).is_err());
+    }
+
+    #[test]
+    fn mlp_presets_match_python_variants() {
+        // Shape math mirrors compile.model.param_count for the registry.
+        let tiny = Manifest::native_variant("tiny_mlp").unwrap();
+        assert_eq!(tiny.param_count, 16 * 8 + 8 + 8 * 2 + 2);
+        assert_eq!(tiny.batch, 8);
+        assert!(tiny.check().is_ok());
+        let mnist = Manifest::native_variant("mnist_mlp").unwrap();
+        assert_eq!(
+            mnist.param_count,
+            784 * 256 + 256 + 256 * 128 + 128 + 128 * 10 + 10
+        );
+        assert_eq!(mnist.batch, 32);
+        assert!(mnist.check().is_ok());
+        assert!(Manifest::native_variant("cifar_cnn10").is_none());
     }
 
     #[test]

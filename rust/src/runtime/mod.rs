@@ -1,15 +1,30 @@
-//! PJRT runtime layer: artifact manifests + the execution engine.
+//! Execution runtime: the [`Backend`] seam, the model manifests, and the
+//! pluggable engines behind them.
 //!
 //! ```text
-//! python (build time)              rust (run time)
-//! ─────────────────────            ─────────────────────────────
-//! compile/aot.py  ──HLO text──▶    HloModuleProto::from_text_file
-//!                                  → XlaComputation → client.compile
-//! manifest.json  ──serde──▶        Manifest (flat ABI, shapes)
+//!                         coordinator / cluster / harness / benches
+//!                                        │  (dyn Backend)
+//!                 ┌──────────────────────┴──────────────────────┐
+//!  NativeEngine (always built)                    Engine (feature "pjrt")
+//!  pure-Rust MLP fwd/bwd + Eq. 10+13              HLO text → XlaComputation
+//!  kernel; hermetic, bit-deterministic            → client.compile → PJRT
+//!                 └──────────── Manifest (flat ABI, shapes) ─────┘
+//!                    on disk (manifest.json) or built-in preset
 //! ```
+//!
+//! `BackendKind::Auto` (the default) picks PJRT when this build has the
+//! `pjrt` feature *and* artifacts exist under the configured root, and
+//! the native engine otherwise — so a clean checkout trains with zero
+//! Python/JAX/artifact dependencies.
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
+pub mod native;
 
-pub use engine::{Engine, EvalOut, StepOut};
+pub use backend::{backend_for_variant, load_backend, pjrt_available, Backend, EvalOut, StepOut};
+#[cfg(feature = "pjrt")]
+pub use engine::Engine;
 pub use manifest::{Manifest, ParamEntry};
+pub use native::NativeEngine;

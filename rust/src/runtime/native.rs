@@ -1,0 +1,544 @@
+//! The native execution engine: pure-Rust forward/backward for the MLP
+//! variants plus the paper's Boltzmann aggregation kernel — no Python,
+//! no JAX, no HLO artifacts.
+//!
+//! This is the hermetic twin of the PJRT [`Engine`](super::engine::Engine):
+//! it implements the same flat-parameter ABI ([`Manifest`]) and the same
+//! three entry points (`train_step`, `eval_step`, `aggregate`) with the
+//! same semantics as `python/compile/model.py` and
+//! `python/compile/kernels/aggregate.py`:
+//!
+//! * `train_step` — dense layers `a ← relu(a·W + b)`, fused softmax
+//!   cross-entropy with per-example losses (the free Eq. 26 byproduct),
+//!   exact reverse-mode gradients, plain SGD update `θ ← θ − η·∇`;
+//! * `eval_step` — summed loss + correct count (first-max argmax, like
+//!   `jnp.argmax`);
+//! * `aggregate` — Eq. 10+13: θ = softmax(−ã·h/Σh), then
+//!   `xᵢ ← (1−β)xᵢ + β·Σⱼθⱼxⱼ`, computed over column panels exactly like
+//!   the Pallas kernel tiles VMEM (the `tests/native_parity.rs` fixture
+//!   pins it against the Python reference kernels at ≤1e-5).
+//!
+//! All state is a pure function of the [`Manifest`] and the caller's
+//! parameter vector; initialisation runs through [`crate::rng::Rng`]
+//! (`Manifest::init_params`), so runs are bit-deterministic across hosts
+//! without any artifacts on disk.
+
+use std::cell::Cell;
+
+use anyhow::{ensure, Result};
+
+use crate::linalg;
+
+use super::backend::{Backend, EvalOut, StepOut};
+use super::manifest::Manifest;
+
+/// Column-panel width of the aggregation loop — mirrors the Pallas
+/// kernel's VMEM tiling (`DEFAULT_BD` in `aggregate.py`); here it keeps
+/// the θ·X panel resident in L1/L2.
+const AGG_PANEL: usize = 8192;
+
+/// One dense layer's slice of the flat parameter vector.
+#[derive(Clone, Copy, Debug)]
+struct DenseLayer {
+    din: usize,
+    dout: usize,
+    /// Offset of the [din × dout] weight block in the flat vector.
+    w_off: usize,
+    /// Offset of the [dout] bias block.
+    b_off: usize,
+    /// ReLU after the affine map (false for the logits layer).
+    relu: bool,
+}
+
+/// Pure-Rust MLP engine implementing [`Backend`].
+pub struct NativeEngine {
+    manifest: Manifest,
+    layers: Vec<DenseLayer>,
+    exec_count: Cell<u64>,
+}
+
+impl NativeEngine {
+    /// Build from a manifest. Fails for non-MLP layouts (conv weights are
+    /// 4-D — those variants need the PJRT backend).
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        manifest.check()?;
+        let entries = &manifest.param_layout;
+        ensure!(
+            entries.len() >= 2 && entries.len() % 2 == 0,
+            "native backend expects (weight, bias) pairs, got {} layout entries",
+            entries.len()
+        );
+        let mut layers = Vec::with_capacity(entries.len() / 2);
+        let mut off = 0usize;
+        for pair in entries.chunks(2) {
+            let (w, b) = (&pair[0], &pair[1]);
+            ensure!(
+                w.shape.len() == 2 && !w.is_bias() && b.shape.len() == 1 && b.is_bias(),
+                "native backend supports dense (w[din,dout], b[dout]) pairs only; \
+                 got {:?}{:?} / {:?}{:?} — use the pjrt backend for CNN variants",
+                w.name,
+                w.shape,
+                b.name,
+                b.shape
+            );
+            let (din, dout) = (w.shape[0], w.shape[1]);
+            ensure!(b.shape[0] == dout, "bias {} does not match weight {}", b.name, w.name);
+            let w_off = off;
+            off += w.numel();
+            let b_off = off;
+            off += b.numel();
+            layers.push(DenseLayer { din, dout, w_off, b_off, relu: true });
+        }
+        ensure!(
+            layers.first().unwrap().din == manifest.input_dim,
+            "first layer din {} ≠ input_dim {}",
+            layers[0].din,
+            manifest.input_dim
+        );
+        ensure!(
+            layers.last().unwrap().dout == manifest.num_classes,
+            "last layer dout {} ≠ num_classes {}",
+            layers.last().unwrap().dout,
+            manifest.num_classes
+        );
+        for w in layers.windows(2) {
+            ensure!(w[0].dout == w[1].din, "layer dims do not chain");
+        }
+        layers.last_mut().unwrap().relu = false;
+        Ok(Self { manifest, layers, exec_count: Cell::new(0) })
+    }
+
+    /// Build for a built-in variant preset (`tiny_mlp`, `mnist_mlp`, …).
+    pub fn for_variant(variant: &str) -> Result<Self> {
+        let m = Manifest::native_variant(variant)
+            .ok_or_else(|| anyhow::anyhow!("no native preset for variant {variant:?}"))?;
+        Self::new(m)
+    }
+
+    fn bump(&self) {
+        self.exec_count.set(self.exec_count.get() + 1);
+    }
+
+    fn check_shapes(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<()> {
+        let m = &self.manifest;
+        ensure!(
+            params.len() == m.param_count,
+            "params len {} ≠ D {}",
+            params.len(),
+            m.param_count
+        );
+        ensure!(
+            x.len() == m.batch * m.input_dim,
+            "x len {} ≠ B·dim {}",
+            x.len(),
+            m.batch * m.input_dim
+        );
+        ensure!(y.len() == m.batch, "y len {} ≠ B {}", y.len(), m.batch);
+        for &label in y {
+            ensure!(
+                (0..m.num_classes as i32).contains(&label),
+                "label {label} out of range [0, {})",
+                m.num_classes
+            );
+        }
+        Ok(())
+    }
+
+    /// Forward pass: returns the per-layer activations (a₀ = x, …,
+    /// a_L = logits), post-ReLU for hidden layers.
+    fn forward(&self, params: &[f32], x: &[f32], batch: usize) -> Vec<Vec<f32>> {
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.layers.len() + 1);
+        acts.push(x.to_vec());
+        for layer in &self.layers {
+            let a_prev = acts.last().unwrap();
+            let w = &params[layer.w_off..layer.w_off + layer.din * layer.dout];
+            let b = &params[layer.b_off..layer.b_off + layer.dout];
+            let mut z = vec![0.0f32; batch * layer.dout];
+            matmul_bias(a_prev, w, b, batch, layer.din, layer.dout, &mut z);
+            if layer.relu {
+                for v in z.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            acts.push(z);
+        }
+        acts
+    }
+
+    /// Fused softmax cross-entropy over logits: per-example losses and,
+    /// optionally, dlogits = softmax − onehot (gradient of the *sum*).
+    fn softmax_xent(
+        logits: &[f32],
+        y: &[i32],
+        classes: usize,
+        mut dlogits: Option<&mut [f32]>,
+    ) -> Vec<f32> {
+        let batch = y.len();
+        let mut per_ex = vec![0.0f32; batch];
+        for n in 0..batch {
+            let row = &logits[n * classes..(n + 1) * classes];
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f32;
+            for &v in row {
+                denom += (v - m).exp();
+            }
+            let ln_denom = denom.ln();
+            let label = y[n] as usize;
+            per_ex[n] = ln_denom - (row[label] - m);
+            if let Some(dl) = dlogits.as_deref_mut() {
+                let drow = &mut dl[n * classes..(n + 1) * classes];
+                for (k, &v) in row.iter().enumerate() {
+                    drow[k] = (v - m).exp() / denom;
+                }
+                drow[label] -= 1.0;
+            }
+        }
+        per_ex
+    }
+}
+
+/// z[n,k] = Σⱼ a[n,j]·w[j,k] + b[k] — unit-stride inner loops so the
+/// autovectoriser gets contiguous rows of `w`.
+fn matmul_bias(
+    a: &[f32],
+    w: &[f32],
+    b: &[f32],
+    batch: usize,
+    din: usize,
+    dout: usize,
+    z: &mut [f32],
+) {
+    for n in 0..batch {
+        let zrow = &mut z[n * dout..(n + 1) * dout];
+        zrow.copy_from_slice(b);
+        let arow = &a[n * din..(n + 1) * din];
+        for (j, &aj) in arow.iter().enumerate() {
+            if aj == 0.0 {
+                continue; // ReLU sparsity: skip dead activations
+            }
+            let wrow = &w[j * dout..(j + 1) * dout];
+            for (zk, &wk) in zrow.iter_mut().zip(wrow.iter()) {
+                *zk += aj * wk;
+            }
+        }
+    }
+}
+
+impl Backend for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn train_step(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, StepOut)> {
+        self.check_shapes(params, x, y)?;
+        let batch = self.manifest.batch;
+        let classes = self.manifest.num_classes;
+
+        let acts = self.forward(params, x, batch);
+        let logits = acts.last().unwrap();
+        let mut dlogits = vec![0.0f32; batch * classes];
+        let per_example = Self::softmax_xent(logits, y, classes, Some(&mut dlogits));
+        let loss = per_example.iter().sum::<f32>() / batch as f32;
+
+        // Gradient of the *mean* loss.
+        let inv_b = 1.0 / batch as f32;
+        for v in dlogits.iter_mut() {
+            *v *= inv_b;
+        }
+
+        // Reverse pass. dz starts as dlogits; per layer:
+        //   dW[j,k] = Σₙ a_prev[n,j]·dz[n,k]     db[k] = Σₙ dz[n,k]
+        //   da_prev[n,j] = Σₖ dz[n,k]·W[j,k], masked by ReLU (a_prev > 0).
+        let mut grad = vec![0.0f32; params.len()];
+        let mut dz = dlogits;
+        for (li, layer) in self.layers.iter().enumerate().rev() {
+            let a_prev = &acts[li];
+            {
+                let gw = &mut grad[layer.w_off..layer.w_off + layer.din * layer.dout];
+                for n in 0..batch {
+                    let arow = &a_prev[n * layer.din..(n + 1) * layer.din];
+                    let dzrow = &dz[n * layer.dout..(n + 1) * layer.dout];
+                    for (j, &aj) in arow.iter().enumerate() {
+                        if aj == 0.0 {
+                            continue;
+                        }
+                        let grow = &mut gw[j * layer.dout..(j + 1) * layer.dout];
+                        for (g, &d) in grow.iter_mut().zip(dzrow.iter()) {
+                            *g += aj * d;
+                        }
+                    }
+                }
+            }
+            {
+                let gb = &mut grad[layer.b_off..layer.b_off + layer.dout];
+                for n in 0..batch {
+                    let dzrow = &dz[n * layer.dout..(n + 1) * layer.dout];
+                    for (g, &d) in gb.iter_mut().zip(dzrow.iter()) {
+                        *g += d;
+                    }
+                }
+            }
+            if li > 0 {
+                let w = &params[layer.w_off..layer.w_off + layer.din * layer.dout];
+                let mut da = vec![0.0f32; batch * layer.din];
+                for n in 0..batch {
+                    let dzrow = &dz[n * layer.dout..(n + 1) * layer.dout];
+                    let darow = &mut da[n * layer.din..(n + 1) * layer.din];
+                    let arow = &a_prev[n * layer.din..(n + 1) * layer.din];
+                    for (j, dv) in darow.iter_mut().enumerate() {
+                        if arow[j] <= 0.0 {
+                            continue; // ReLU gate (hidden activations are post-ReLU)
+                        }
+                        let wrow = &w[j * layer.dout..(j + 1) * layer.dout];
+                        let mut acc = 0.0f32;
+                        for (&d, &wk) in dzrow.iter().zip(wrow.iter()) {
+                            acc += d * wk;
+                        }
+                        *dv = acc;
+                    }
+                }
+                dz = da;
+            }
+        }
+
+        let mut new_params = params.to_vec();
+        linalg::axpy(&mut new_params, -lr, &grad);
+        self.bump();
+        Ok((new_params, StepOut { loss, per_example }))
+    }
+
+    fn eval_batch(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<EvalOut> {
+        self.check_shapes(params, x, y)?;
+        let batch = self.manifest.batch;
+        let classes = self.manifest.num_classes;
+        let acts = self.forward(params, x, batch);
+        let logits = acts.last().unwrap();
+        let per_ex = Self::softmax_xent(logits, y, classes, None);
+        let mut correct = 0.0f32;
+        for n in 0..batch {
+            let row = &logits[n * classes..(n + 1) * classes];
+            if linalg::argmax(row) as i32 == y[n] {
+                correct += 1.0;
+            }
+        }
+        self.bump();
+        Ok(EvalOut { sum_loss: per_ex.iter().sum(), correct })
+    }
+
+    fn aggregate(&self, stacked: &[f32], h: &[f32], a_tilde: f32, beta: f32) -> Result<Vec<f32>> {
+        let p = h.len();
+        ensure!(p > 0, "empty cohort");
+        ensure!(stacked.len() % p == 0, "stacked len {} not divisible by p={p}", stacked.len());
+        let d = stacked.len() / p;
+        let theta = linalg::boltzmann_weights(h, a_tilde);
+        let keep = 1.0 - beta;
+
+        let mut out = vec![0.0f32; p * d];
+        let mut agg = vec![0.0f32; AGG_PANEL.min(d)];
+        // Column panels, mirroring the Pallas kernel's grid over D.
+        let mut col = 0;
+        while col < d {
+            let w = AGG_PANEL.min(d - col);
+            let agg = &mut agg[..w];
+            agg.fill(0.0);
+            for (i, &th) in theta.iter().enumerate() {
+                let row = &stacked[i * d + col..i * d + col + w];
+                linalg::axpy(agg, th, row);
+            }
+            for i in 0..p {
+                let src = &stacked[i * d + col..i * d + col + w];
+                let dst = &mut out[i * d + col..i * d + col + w];
+                for ((o, &x), &a) in dst.iter_mut().zip(src.iter()).zip(agg.iter()) {
+                    *o = keep * x + beta * a;
+                }
+            }
+            col += w;
+        }
+        self.bump();
+        Ok(out)
+    }
+
+    fn has_aggregate(&self, _p: usize) -> bool {
+        true
+    }
+
+    fn exec_count(&self) -> u64 {
+        self.exec_count.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn tiny() -> NativeEngine {
+        NativeEngine::for_variant("tiny_mlp").unwrap()
+    }
+
+    fn rand_batch(e: &NativeEngine, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
+        let m = e.manifest();
+        let mut rng = Rng::new(seed);
+        let params = m.init_params(seed);
+        let mut x = vec![0.0f32; m.batch * m.input_dim];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let y: Vec<i32> = (0..m.batch).map(|_| rng.below(m.num_classes) as i32).collect();
+        (params, x, y)
+    }
+
+    #[test]
+    fn lr_zero_is_identity_and_counts_execs() {
+        let e = tiny();
+        let (params, x, y) = rand_batch(&e, 1);
+        let (next, out) = e.train_step(&params, &x, &y, 0.0).unwrap();
+        assert_eq!(next, params);
+        assert!(out.loss.is_finite());
+        assert_eq!(out.per_example.len(), e.manifest().batch);
+        let mean: f32 = out.per_example.iter().sum::<f32>() / out.per_example.len() as f32;
+        assert!((mean - out.loss).abs() < 1e-5);
+        assert_eq!(e.exec_count(), 1);
+    }
+
+    #[test]
+    fn overfitting_one_batch_reduces_loss() {
+        let e = tiny();
+        let (mut params, x, y) = rand_batch(&e, 3);
+        let (_, first) = e.train_step(&params, &x, &y, 0.0).unwrap();
+        let mut last = first.loss;
+        for _ in 0..80 {
+            let (next, out) = e.train_step(&params, &x, &y, 0.1).unwrap();
+            params = next;
+            last = out.loss;
+        }
+        assert!(last < first.loss * 0.7, "{} → {last}", first.loss);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let e = tiny();
+        let (params, x, y) = rand_batch(&e, 5);
+        let d = params.len();
+        // Analytic gradient, recovered from one lr=1 step.
+        let (stepped, base) = e.train_step(&params, &x, &y, 1.0).unwrap();
+        let grad: Vec<f32> = params.iter().zip(stepped.iter()).map(|(p, s)| p - s).collect();
+        let loss_at = |th: &[f32]| -> f64 {
+            let (_, out) = e.train_step(th, &x, &y, 0.0).unwrap();
+            out.loss as f64
+        };
+        assert!((loss_at(&params) - base.loss as f64).abs() < 1e-6);
+        // Spot-check coordinates across the whole vector.
+        let eps = 1e-3f32;
+        let mut rng = Rng::new(17);
+        for _ in 0..24 {
+            let k = rng.below(d);
+            let mut plus = params.clone();
+            plus[k] += eps;
+            let mut minus = params.clone();
+            minus[k] -= eps;
+            let numeric = (loss_at(&plus) - loss_at(&minus)) / (2.0 * eps as f64);
+            let analytic = grad[k] as f64;
+            assert!(
+                (numeric - analytic).abs() < 2e-3,
+                "coord {k}: numeric {numeric:.6} vs analytic {analytic:.6}"
+            );
+        }
+    }
+
+    #[test]
+    fn eval_matches_train_loss_semantics() {
+        let e = tiny();
+        let (params, x, y) = rand_batch(&e, 7);
+        let (_, step) = e.train_step(&params, &x, &y, 0.0).unwrap();
+        let ev = e.eval_batch(&params, &x, &y).unwrap();
+        let sum: f32 = step.per_example.iter().sum();
+        assert!((ev.sum_loss - sum).abs() < 1e-4);
+        assert!(ev.correct >= 0.0 && ev.correct <= e.manifest().batch as f32);
+    }
+
+    #[test]
+    fn aggregate_matches_host_linalg() {
+        let e = tiny();
+        let d = e.manifest().param_count;
+        let mut rng = Rng::new(11);
+        for &p in &[2usize, 4, 8] {
+            let mut stacked = vec![0.0f32; p * d];
+            rng.fill_normal(&mut stacked, 0.0, 0.5);
+            let h: Vec<f32> = (0..p).map(|_| rng.uniform_in(0.05, 2.0)).collect();
+            for &(a_tilde, beta) in &[(0.0f32, 1.0f32), (1.0, 0.9), (10.0, 0.5), (0.5, 0.0)] {
+                let got = e.aggregate(&stacked, &h, a_tilde, beta).unwrap();
+                let theta = linalg::boltzmann_weights(&h, a_tilde);
+                let rows: Vec<&[f32]> = stacked.chunks(d).collect();
+                let mut agg = vec![0.0f32; d];
+                linalg::weighted_sum(&mut agg, &rows, &theta);
+                for i in 0..p {
+                    for k in (0..d).step_by(7) {
+                        let want = (1.0 - beta) * stacked[i * d + k] + beta * agg[k];
+                        assert!(
+                            (got[i * d + k] - want).abs() < 1e-5,
+                            "p={p} ã={a_tilde} β={beta} row {i} col {k}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn aggregate_beta1_reaches_consensus() {
+        let e = tiny();
+        let d = e.manifest().param_count;
+        let p = 4;
+        let mut rng = Rng::new(9);
+        let mut stacked = vec![0.0f32; p * d];
+        rng.fill_normal(&mut stacked, 0.0, 1.0);
+        let out = e.aggregate(&stacked, &[0.3, 0.9, 0.5, 1.5], 1.0, 1.0).unwrap();
+        for i in 1..p {
+            for k in 0..d {
+                assert!((out[i * d + k] - out[k]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn shape_checks_reject_bad_inputs() {
+        let e = tiny();
+        let (params, x, y) = rand_batch(&e, 13);
+        assert!(e.train_step(&params[..10], &x, &y, 0.1).is_err());
+        assert!(e.train_step(&params, &x[..4], &y, 0.1).is_err());
+        assert!(e.train_step(&params, &x, &y[..1], 0.1).is_err());
+        let mut bad_y = y.clone();
+        bad_y[0] = 99;
+        assert!(e.train_step(&params, &x, &bad_y, 0.1).is_err());
+    }
+
+    #[test]
+    fn rejects_conv_layout() {
+        let m = Manifest::parse(
+            r#"{
+              "name": "convish", "param_count": 294, "batch": 2,
+              "input_dim": 16, "input_shape": [4, 4, 1], "num_classes": 2,
+              "worker_counts": [2],
+              "param_layout": [
+                {"name": "conv0_w", "shape": [3, 3, 1, 4]},
+                {"name": "conv0_b", "shape": [4]},
+                {"name": "dense1_w", "shape": [126, 2]},
+                {"name": "dense1_b", "shape": [2]}
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert!(NativeEngine::new(m).is_err());
+    }
+}

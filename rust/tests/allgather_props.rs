@@ -1,0 +1,84 @@
+//! Stress properties for `cluster::threads::AllGather` — the in-process
+//! collective the threaded execution mode uses as its NIC stand-in.
+//!
+//! Extends the two fixed-shape unit tests with a proptest sweep over the
+//! cohort size `p ∈ 2..8` and *controlled* per-round deposit orderings: a
+//! shared turn counter forces workers to enter `exchange` in a random
+//! permutation each round, exploring schedules (including a round-`r`
+//! waiter still asleep while a fast worker already deposits for round
+//! `r+1`) that free-running threads rarely hit. Invariants: no lost
+//! generation (every worker observes every round exactly once) and all
+//! workers observe identical published vectors, in slot order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use proptest::prelude::*;
+use proptest::test_runner::TestCaseError;
+
+use wasgd::cluster::threads::AllGather;
+
+/// Run `p` workers for `orders.len()` rounds, forcing round `r`'s deposits
+/// to happen in the order `orders[r]`; verify every worker saw every
+/// round's full, identical vector.
+fn run_case(p: usize, orders: Vec<Vec<usize>>) -> Result<(), TestCaseError> {
+    let rounds = orders.len();
+    let ag: Arc<AllGather<(usize, usize)>> = Arc::new(AllGather::new(p));
+    let turn = Arc::new(AtomicUsize::new(0));
+    let orders = Arc::new(orders);
+
+    let mut handles = Vec::new();
+    for i in 0..p {
+        let ag = Arc::clone(&ag);
+        let turn = Arc::clone(&turn);
+        let orders = Arc::clone(&orders);
+        handles.push(thread::spawn(move || {
+            let mut seen: Vec<Vec<(usize, usize)>> = Vec::with_capacity(rounds);
+            for (r, order) in orders.iter().enumerate() {
+                let pos = order.iter().position(|&w| w == i).unwrap();
+                // Spin until this worker's scheduled deposit slot.
+                while turn.load(Ordering::SeqCst) != r * p + pos {
+                    thread::yield_now();
+                }
+                turn.fetch_add(1, Ordering::SeqCst);
+                seen.push(ag.exchange(i, (i, r)).to_vec());
+            }
+            seen
+        }));
+    }
+
+    let results: Vec<Vec<Vec<(usize, usize)>>> =
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect();
+
+    for (i, res) in results.iter().enumerate() {
+        prop_assert_eq!(res.len(), rounds, "worker {} lost a generation", i);
+        for (r, vals) in res.iter().enumerate() {
+            // Published vector is in slot order and carries round r's
+            // value from *every* worker, whatever the deposit order was.
+            let expect: Vec<(usize, usize)> = (0..p).map(|w| (w, r)).collect();
+            prop_assert_eq!(vals, &expect, "worker {} round {}", i, r);
+        }
+    }
+    // And identical across workers.
+    for res in &results[1..] {
+        prop_assert_eq!(res, &results[0]);
+    }
+    Ok(())
+}
+
+proptest! {
+    // Each case spawns p threads for several rounds; keep the case count
+    // modest so the suite stays in the hundreds of milliseconds.
+    #![proptest_config(ProptestConfig::with_cases(16))]
+
+    #[test]
+    fn allgather_survives_random_deposit_orderings(
+        (p, orders) in (2usize..8).prop_flat_map(|p| {
+            let idx: Vec<usize> = (0..p).collect();
+            (Just(p), prop::collection::vec(Just(idx).prop_shuffle(), 3..10))
+        })
+    ) {
+        run_case(p, orders)?;
+    }
+}

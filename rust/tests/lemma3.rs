@@ -4,10 +4,13 @@
 //!
 //! Two levels of evidence:
 //! 1. exact algebra on the quadratic model (deterministic identity), and
-//! 2. the full PJRT trainer: τ=1, β=1, ã=0 must (a) keep all workers in
-//!    consensus and (b) track a p·B mini-batch run statistically.
+//! 2. the full trainer on the hermetic native backend: τ=1, β=1, ã=0
+//!    must (a) keep all workers in consensus and (b) track a p·B
+//!    mini-batch run statistically. (The same invariants hold through
+//!    PJRT — run with `--features pjrt` + `WASGD_ARTIFACTS` and
+//!    `BackendKind::Pjrt` to exercise that path.)
 
-use wasgd::config::{AlgoKind, ExperimentConfig};
+use wasgd::config::{AlgoKind, BackendKind, ExperimentConfig};
 use wasgd::coordinator::run_experiment_full;
 use wasgd::data::synth::DatasetKind;
 use wasgd::rng::Rng;
@@ -48,7 +51,9 @@ fn quadratic_identity_exact() {
 
 fn consensus_cfg() -> ExperimentConfig {
     let mut cfg = ExperimentConfig::paper_preset(DatasetKind::Tiny);
+    cfg.backend = BackendKind::Native;
     cfg.algo = AlgoKind::WasgdPlus;
+    cfg.compute.step_time_s = 1e-3; // fixed: don't calibrate wall time
     cfg.p = 4;
     cfg.tau = 1; // ζ = 1: communicate after every step
     cfg.beta = 1.0;

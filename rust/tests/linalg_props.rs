@@ -1,0 +1,128 @@
+//! Property suites over the host `linalg` kernels — the numerical core
+//! every aggregation path (native, PJRT host-fallback, threaded cluster)
+//! leans on. Driven by `proptest` so the shapes, magnitudes and
+//! temperatures sweep far wider than the fixed-case unit tests.
+
+use proptest::prelude::*;
+
+use wasgd::linalg;
+
+/// Non-degenerate per-worker loss energies for cohorts of 2..16.
+fn energies() -> impl Strategy<Value = Vec<f32>> {
+    prop::collection::vec(1e-3f32..10.0, 2..16)
+}
+
+/// Energies plus a random permutation of their indices.
+fn energies_with_perm() -> impl Strategy<Value = (Vec<f32>, Vec<usize>)> {
+    energies().prop_flat_map(|h| {
+        let idx: Vec<usize> = (0..h.len()).collect();
+        (Just(h), Just(idx).prop_shuffle())
+    })
+}
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(256))]
+
+    /// Eq. 13 weights are a point on the probability simplex.
+    #[test]
+    fn boltzmann_is_simplex_point(h in energies(), a_tilde in 0.0f32..100.0) {
+        let th = linalg::boltzmann_weights(&h, a_tilde);
+        prop_assert_eq!(th.len(), h.len());
+        let sum: f32 = th.iter().sum();
+        prop_assert!((sum - 1.0).abs() < 1e-4, "Σθ = {}", sum);
+        prop_assert!(th.iter().all(|&t| (0.0..=1.0).contains(&t)), "{:?}", th);
+    }
+
+    /// Relabelling workers relabels weights identically: θ(h∘π) = θ(h)∘π.
+    #[test]
+    fn boltzmann_is_permutation_equivariant(
+        (h, perm) in energies_with_perm(),
+        a_tilde in 0.0f32..50.0,
+    ) {
+        let permuted: Vec<f32> = perm.iter().map(|&j| h[j]).collect();
+        let th = linalg::boltzmann_weights(&h, a_tilde);
+        let th_p = linalg::boltzmann_weights(&permuted, a_tilde);
+        for (i, &j) in perm.iter().enumerate() {
+            prop_assert!(
+                (th_p[i] - th[j]).abs() < 1e-6,
+                "π({i})={j}: {} vs {}", th_p[i], th[j]
+            );
+        }
+    }
+
+    /// Lower loss energy never gets a smaller weight (monotone in h).
+    #[test]
+    fn boltzmann_weights_monotone_decreasing_in_h(
+        h in energies(),
+        a_tilde in 0.01f32..50.0,
+    ) {
+        let th = linalg::boltzmann_weights(&h, a_tilde);
+        for i in 0..h.len() {
+            for j in 0..h.len() {
+                if h[i] < h[j] {
+                    prop_assert!(
+                        th[i] >= th[j] - 1e-6,
+                        "h[{i}]={} < h[{j}]={} but θ {} < {}", h[i], h[j], th[i], th[j]
+                    );
+                }
+            }
+        }
+    }
+
+    /// WASGD's inverse-loss weights against an independent f64 scalar
+    /// implementation.
+    #[test]
+    fn inverse_loss_weights_match_scalar_reference(h in energies()) {
+        let got = linalg::inverse_loss_weights(&h);
+        let inv: Vec<f64> = h.iter().map(|&v| 1.0 / v as f64).collect();
+        let denom: f64 = inv.iter().sum();
+        for (i, &g) in got.iter().enumerate() {
+            let want = inv[i] / denom;
+            prop_assert!((g as f64 - want).abs() < 1e-5, "i={i}: {g} vs {want}");
+        }
+    }
+
+    /// Σθⱼ·rowⱼ against a per-column f64 scalar reference.
+    #[test]
+    fn weighted_sum_matches_scalar_reference(
+        rows in prop::collection::vec(
+            prop::collection::vec(-5.0f32..5.0, 1..48),
+            1..8,
+        ),
+        seed_w in prop::collection::vec(0.01f32..1.0, 8),
+    ) {
+        let d = rows[0].len();
+        let rows: Vec<Vec<f32>> = rows.into_iter().map(|mut r| { r.resize(d, 0.0); r }).collect();
+        let w = &seed_w[..rows.len()];
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut out = vec![0.0f32; d];
+        linalg::weighted_sum(&mut out, &refs, w);
+        for k in 0..d {
+            let want: f64 = rows
+                .iter()
+                .zip(w.iter())
+                .map(|(r, &wi)| r[k] as f64 * wi as f64)
+                .sum();
+            prop_assert!((out[k] as f64 - want).abs() < 1e-3, "col {k}: {} vs {want}", out[k]);
+        }
+    }
+
+    /// Eq. 10's β-mix against the scalar formula, including endpoints.
+    #[test]
+    fn lerp_into_matches_scalar_reference(
+        y0 in prop::collection::vec(-10.0f32..10.0, 1..64),
+        x_seed in prop::collection::vec(-10.0f32..10.0, 64),
+        t in 0.0f32..=1.0,
+    ) {
+        let x = &x_seed[..y0.len()];
+        let mut y = y0.clone();
+        linalg::lerp_into(&mut y, t, x);
+        for k in 0..y0.len() {
+            let want = (1.0 - t) * y0[k] + t * x[k];
+            prop_assert!((y[k] - want).abs() < 1e-5, "col {k}: {} vs {want}", y[k]);
+        }
+        if t == 0.0 {
+            prop_assert_eq!(&y, &y0);
+        }
+    }
+}

@@ -1,37 +1,46 @@
 //! Runtime round-trip: AOT artifacts → PJRT → numbers.
 //!
-//! Requires `make artifacts` (the Makefile runs it before `cargo test`).
+//! Compiled only with `--features pjrt`. At run time the artifacts are
+//! located through the `WASGD_ARTIFACTS` env var (falling back to
+//! `<crate>/artifacts`); when none are present, every test skips with a
+//! note instead of panicking — the hermetic native-backend suites carry
+//! the default `cargo test` signal.
+//!
 //! These tests pin the python↔rust ABI: manifest consistency, literal
 //! packing, tuple unpacking, and — most importantly — that the Pallas
 //! aggregation artifact agrees with the host implementation of Eq. 10+13.
+#![cfg(feature = "pjrt")]
 
-use std::path::Path;
+use std::path::PathBuf;
 
 use wasgd::linalg;
 use wasgd::rng::Rng;
-use wasgd::runtime::Engine;
+use wasgd::runtime::{Backend as _, Engine};
 
-fn artifacts_root() -> &'static Path {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").leak()
+fn artifacts_root() -> PathBuf {
+    std::env::var_os("WASGD_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
 }
 
-trait Leak {
-    fn leak(self) -> &'static Path;
-}
-
-impl Leak for std::path::PathBuf {
-    fn leak(self) -> &'static Path {
-        Box::leak(self.into_boxed_path())
+/// Load the tiny variant, or `None` (→ the test skips) when no artifacts
+/// are on disk.
+fn tiny_engine() -> Option<Engine> {
+    let root = artifacts_root();
+    if !root.join("tiny_mlp").join("manifest.json").exists() {
+        eprintln!(
+            "no artifacts under {} — set WASGD_ARTIFACTS (and run `python -m compile.aot`); \
+             skipping",
+            root.display()
+        );
+        return None;
     }
-}
-
-fn tiny_engine() -> Engine {
-    Engine::load(artifacts_root(), "tiny_mlp").expect("run `make artifacts` first")
+    Some(Engine::load(&root, "tiny_mlp").expect("artifacts present but failed to load"))
 }
 
 #[test]
 fn manifest_is_consistent() {
-    let e = tiny_engine();
+    let Some(e) = tiny_engine() else { return };
     let m = &e.manifest;
     assert_eq!(m.name, "tiny_mlp");
     assert!(m.param_count > 0);
@@ -44,7 +53,7 @@ fn manifest_is_consistent() {
 
 #[test]
 fn train_step_runs_and_learns() {
-    let e = tiny_engine();
+    let Some(e) = tiny_engine() else { return };
     let m = &e.manifest;
     let mut params = m.init_params(3);
     let mut rng = Rng::new(1);
@@ -74,7 +83,7 @@ fn train_step_runs_and_learns() {
 
 #[test]
 fn train_step_lr_zero_is_identity() {
-    let e = tiny_engine();
+    let Some(e) = tiny_engine() else { return };
     let m = &e.manifest;
     let params = m.init_params(5);
     let x = vec![0.25f32; m.batch * m.input_dim];
@@ -88,7 +97,7 @@ fn train_step_lr_zero_is_identity() {
 
 #[test]
 fn train_step_rejects_bad_shapes() {
-    let e = tiny_engine();
+    let Some(e) = tiny_engine() else { return };
     let m = &e.manifest;
     let params = m.init_params(0);
     let x = vec![0.0f32; m.batch * m.input_dim];
@@ -100,7 +109,7 @@ fn train_step_rejects_bad_shapes() {
 
 #[test]
 fn eval_batch_counts_are_sane() {
-    let e = tiny_engine();
+    let Some(e) = tiny_engine() else { return };
     let m = &e.manifest;
     let params = m.init_params(0);
     let mut rng = Rng::new(2);
@@ -114,7 +123,7 @@ fn eval_batch_counts_are_sane() {
 
 #[test]
 fn aggregate_artifact_matches_host_math() {
-    let e = tiny_engine();
+    let Some(e) = tiny_engine() else { return };
     let d = e.manifest.param_count;
     let mut rng = Rng::new(7);
     for &p in &[2usize, 4, 8] {
@@ -146,7 +155,7 @@ fn aggregate_artifact_matches_host_math() {
 
 #[test]
 fn aggregate_beta1_reaches_consensus() {
-    let e = tiny_engine();
+    let Some(e) = tiny_engine() else { return };
     let d = e.manifest.param_count;
     let p = 4;
     let mut rng = Rng::new(9);
@@ -173,7 +182,7 @@ fn memory_stable_over_many_steps() {
             .and_then(|s| s.split_whitespace().nth(1).map(|v| v.parse().unwrap_or(0)))
             .unwrap_or(0)
     }
-    let e = tiny_engine();
+    let Some(e) = tiny_engine() else { return };
     let m = &e.manifest;
     let mut params = m.init_params(1);
     let x = vec![0.1f32; m.batch * m.input_dim];
@@ -196,14 +205,19 @@ fn memory_stable_over_many_steps() {
 
 #[test]
 fn calibrate_step_time_positive() {
-    let e = tiny_engine();
+    let Some(e) = tiny_engine() else { return };
     let t = e.calibrate_step_time(3).unwrap();
     assert!(t > 0.0 && t < 1.0, "step time {t}");
 }
 
 #[test]
 fn mnist_variant_loads_too() {
-    let e = Engine::load(artifacts_root(), "mnist_mlp").expect("mnist_mlp artifacts");
+    let root = artifacts_root();
+    if !root.join("mnist_mlp").join("manifest.json").exists() {
+        eprintln!("no mnist_mlp artifacts — skipping");
+        return;
+    }
+    let e = Engine::load(&root, "mnist_mlp").expect("mnist_mlp artifacts");
     assert_eq!(e.manifest.input_dim, 784);
     assert_eq!(e.manifest.num_classes, 10);
     assert!(e.manifest.param_count > 200_000);
