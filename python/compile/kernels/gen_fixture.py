@@ -1,11 +1,13 @@
 """Generate the native-backend parity fixture
 (rust/tests/fixtures/native_parity.json).
 
-Records one `train_step` and one `aggregate` of the tiny-MLP variant,
-computed by the build-time Python pipeline (the L1/L2 kernels that the
-PJRT artifacts are lowered from), so the rust `NativeEngine` can be
-pinned against them at ≤1e-5 with **no Python at test time** — the JSON
-is committed.
+Records one `train_step` each of the tiny-MLP and tiny-CNN variants
+(the CNN section pins the native conv/maxpool path: 3×3 SAME convs +
+2×2 max-pools through `lax`/Pallas) and one `aggregate`, computed by
+the build-time Python pipeline (the L1/L2 kernels that the PJRT
+artifacts are lowered from), so the rust `NativeEngine` can be pinned
+against them at ≤1e-5 with **no Python at test time** — the JSON is
+committed.
 
 Run from the repo root:
 
@@ -34,17 +36,32 @@ def _f(arr) -> list:
     return [float(v) for v in np.asarray(arr, np.float32).reshape(-1)]
 
 
+def _train_section(variant: str, rng, seed: int, lr: np.float32) -> dict:
+    """One recorded train_step of `variant` with embedded inputs."""
+    spec = model.VARIANTS[variant]
+    xdim = int(np.prod(spec.input_shape))
+    params = model.init_params(spec, seed=seed)
+    x = rng.normal(0.0, 1.0, size=(spec.batch, xdim)).astype(np.float32)
+    y = rng.integers(0, spec.num_classes, size=(spec.batch,)).astype(np.int32)
+    train_step = model.make_train_step(spec)
+    new_params, mean_loss, per_example = train_step(params, x, y, np.array([lr]))
+    return {
+        "variant": variant,
+        "params": _f(params),
+        "x": _f(x),
+        "y": [int(v) for v in y],
+        "new_params": _f(new_params),
+        "loss": float(mean_loss),
+        "per_example": _f(per_example),
+    }
+
+
 def main() -> None:
     spec = model.VARIANTS["tiny_mlp"]
     rng = np.random.default_rng(20260729)
-
-    params = model.init_params(spec, seed=7)
-    x = rng.normal(0.0, 1.0, size=(spec.batch, spec.input_shape[0])).astype(np.float32)
-    y = rng.integers(0, spec.num_classes, size=(spec.batch,)).astype(np.int32)
     lr = np.float32(0.05)
 
-    train_step = model.make_train_step(spec)
-    new_params, mean_loss, per_example = train_step(params, x, y, np.array([lr]))
+    train = _train_section("tiny_mlp", rng, seed=7, lr=lr)
 
     p = 3
     d = model.param_count(spec)
@@ -54,17 +71,16 @@ def main() -> None:
     agg_out = ref.aggregate_ref(stacked, h, a_tilde, beta)
     theta = ref.boltzmann_weights_ref(h, a_tilde)
 
+    # A second RNG stream so adding the conv section does not disturb the
+    # MLP/aggregate draws (the committed MLP numbers stay comparable).
+    conv_rng = np.random.default_rng(20260730)
+    conv_train = _train_section("tiny_cnn", conv_rng, seed=11, lr=lr)
+
     fixture = {
         "variant": spec.name,
         "lr": float(lr),
-        "train": {
-            "params": _f(params),
-            "x": _f(x),
-            "y": [int(v) for v in y],
-            "new_params": _f(new_params),
-            "loss": float(mean_loss),
-            "per_example": _f(per_example),
-        },
+        "train": train,
+        "conv_train": conv_train,
         "aggregate": {
             "p": p,
             "stacked": _f(stacked),

@@ -108,6 +108,7 @@ VARIANTS: Dict[str, ModelSpec] = {
         _mlp("tiny_mlp", 16, [8], 2, batch=8),
         _mlp("mnist_mlp", 784, [256, 128], 10),
         _mlp("fashion_mlp", 784, [256, 128], 10),
+        _cnn("tiny_cnn", 8, 1, [(4, True), (8, True)], [], 2, batch=4),
         _cnn("mnist_cnn", 28, 1, [(16, True), (32, True)], [], 10),
         _cnn("cifar_cnn10", 32, 3, [(16, True), (32, True), (64, True)], [128], 10),
         _cnn("cifar_cnn100", 32, 3, [(16, True), (32, True), (64, True)], [128], 100),

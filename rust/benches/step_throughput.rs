@@ -3,7 +3,9 @@
 //! end-to-end step cost that every figure's wall-time depends on).
 //! §Perf L3: the coordinator overhead around `train_step` must stay in
 //! the noise. Runs on whichever backend Auto resolves to (native without
-//! artifacts; PJRT with `--features pjrt` + artifacts).
+//! artifacts; PJRT with `--features pjrt` + artifacts). `cifar_cnn10`
+//! exercises the native conv path (im2col GEMMs) — no longer skipped on
+//! hermetic builds.
 
 use wasgd::bench::{black_box, Bencher};
 use wasgd::config::{AlgoKind, BackendKind, ExperimentConfig};

@@ -14,6 +14,10 @@
 //! cargo run --release --bin bench_main -- --dataset cifar10 --epochs 0.5   # Fig. 8
 //! cargo run --release --bin bench_main -- --dataset cifar100 --epochs 0.5  # Fig. 9
 //! ```
+//!
+//! Every dataset — including the CIFAR analogues, whose `cifar_cnn*`
+//! variants run on the native conv path — works from a clean checkout
+//! with no artifacts; `--backend pjrt` switches to lowered artifacts.
 
 use anyhow::Result;
 use wasgd::config::{AlgoKind, ExperimentConfig};

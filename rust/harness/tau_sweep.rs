@@ -12,6 +12,9 @@
 //! cargo run --release --bin bench_tau_sweep -- [--dataset mnist]
 //!     [--epochs 2.0] [--taus 5,10,25,50,100,250] [--ps 2,4,8]
 //! ```
+//!
+//! Runs hermetically on any dataset (the CIFAR analogues use the native
+//! conv path when no artifacts are present).
 
 use anyhow::Result;
 use wasgd::config::{AlgoKind, ExperimentConfig};

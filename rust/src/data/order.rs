@@ -40,33 +40,49 @@ impl RecordWindow {
         Self { tau, m, c }
     }
 
-    /// Records-per-block (⌈m/c⌉, last block may be short).
-    fn per_block(&self) -> usize {
-        self.m.div_ceil(self.c)
+    /// End (exclusive) of block `b` — blocks tile [0, τ) proportionally.
+    fn block_end(&self, b: usize) -> usize {
+        ((b + 1) * self.tau) / self.c
     }
 
-    /// Block length τ/c (floor, min 1).
-    fn block_len(&self) -> usize {
-        (self.tau / self.c).max(1)
+    /// Records assigned to block `b` — quotas tile m proportionally, so
+    /// they sum to exactly m over the c blocks.
+    fn quota(&self, b: usize) -> usize {
+        ((b + 1) * self.m) / self.c - (b * self.m) / self.c
     }
 
     /// Is iteration `k` (0-based, k ∈ [0, τ)) recorded?
-    /// True for the last `m/c` iterations of each `τ/c` block.
+    ///
+    /// True for the last `quota(b)` iterations of each block — the
+    /// paper's Eq. (26) assignment distribution (tail samples approximate
+    /// the boundary loss best). Intervals are packed right-to-left: when
+    /// a block's quota exceeds its length (τ and m both barely above c),
+    /// the interval spills into the preceding block's free tail instead
+    /// of overlapping, so **exactly m** iterations per period are
+    /// recorded for every clamped (τ, m, c) — see `recorded_count`.
     pub fn is_recorded(&self, k: usize) -> bool {
         let k = k % self.tau;
-        let bl = self.block_len();
-        let pb = self.per_block();
-        let block = (k / bl).min(self.c - 1);
-        let end = ((block + 1) * bl).min(self.tau);
-        // Iterations past c·bl (τ not divisible by c) fold into the last block.
-        if block == self.c - 1 {
-            let end = self.tau;
-            return k + pb >= end && k < end;
+        let mut hi = self.tau;
+        for b in (0..self.c).rev() {
+            let end = self.block_end(b).min(hi);
+            let start = end - self.quota(b);
+            if (start..end).contains(&k) {
+                return true;
+            }
+            hi = start;
         }
-        k + pb >= end && k < end
+        false
     }
 
-    /// How many iterations in one period are recorded.
+    /// Exact number of recorded iterations per period: always m (the
+    /// clamped value). `Σ_{k<τ} is_recorded(k) == recorded_count()` is
+    /// asserted property-style in `tests/proptests.rs`.
+    pub fn recorded_count(&self) -> usize {
+        self.m
+    }
+
+    /// How many iterations in one period are recorded, counted the slow
+    /// way (test oracle for [`RecordWindow::recorded_count`]).
     pub fn count_per_period(&self) -> usize {
         (0..self.tau).filter(|&k| self.is_recorded(k)).count()
     }
@@ -224,8 +240,18 @@ mod tests {
     fn record_window_clamps() {
         let w = RecordWindow::new(10, 100, 7);
         assert_eq!(w.m, 10);
-        assert!(w.count_per_period() <= 10);
-        assert!(w.count_per_period() >= 1);
+        assert_eq!(w.recorded_count(), 10);
+        assert_eq!(w.count_per_period(), 10);
+    }
+
+    #[test]
+    fn record_window_exact_when_quota_spills() {
+        // τ=8, m=7, c=5: block 2 spans [3,4) but owes 2 records — the
+        // naive per-block tail would overlap and under-record; the
+        // right-packed intervals must still record exactly m.
+        let w = RecordWindow::new(8, 7, 5);
+        assert_eq!(w.count_per_period(), w.recorded_count());
+        assert_eq!(w.recorded_count(), 7);
     }
 
     #[test]

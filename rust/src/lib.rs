@@ -20,13 +20,16 @@
 //! that explicit with a pluggable [`runtime::Backend`] seam. Two
 //! implementations exist:
 //!
-//! * [`runtime::NativeEngine`] — a pure-Rust forward/backward for the
-//!   MLP variants plus the Eq. 10+13 Boltzmann-aggregation kernel.
-//!   Hermetic: a clean checkout builds and trains with **no Python, no
-//!   JAX, and no HLO artifacts** (`cargo build --release && cargo test`
-//!   is fully self-contained). Initialisation and data synthesis run
-//!   through the in-crate deterministic PRNG, so runs are
-//!   bit-reproducible across hosts.
+//! * [`runtime::NativeEngine`] — a pure-Rust forward/backward for **all
+//!   built-in variants, MLP and CNN** (a small layer IR: dense, 3×3 SAME
+//!   conv lowered to im2col over the shared GEMM kernel, 2×2 max-pool,
+//!   flatten) plus the Eq. 10+13 Boltzmann-aggregation kernel. Hermetic:
+//!   a clean checkout builds and trains — including the paper's
+//!   CIFAR-10/100 presets — with **no Python, no JAX, and no HLO
+//!   artifacts** (`cargo build --release && cargo test` is fully
+//!   self-contained). Initialisation and data synthesis run through the
+//!   in-crate deterministic PRNG, so runs are bit-reproducible across
+//!   hosts.
 //! * [`runtime::Engine`] (cargo feature **`pjrt`**) — the PJRT executor
 //!   for the Pallas-backed AOT artifacts lowered by `python/compile/`.
 //!   Enable by uncommenting the `xla` dependency in `rust/Cargo.toml`
@@ -41,8 +44,18 @@
 //! feature is compiled in *and* artifacts exist on disk, and falls back
 //! to the native engine otherwise; `native`/`pjrt` force a provider
 //! (CLI: `wasgd run --backend native …`). The parity suite
-//! (`tests/native_parity.rs`) pins the native kernels against the Python
-//! reference kernels' recorded fixtures at ≤1e-5.
+//! (`tests/native_parity.rs`) pins the native kernels — dense *and*
+//! conv/pool — against the Python reference kernels' recorded fixtures
+//! at ≤1e-5.
+//!
+//! | backend  | variants                                   | needs                  |
+//! |----------|--------------------------------------------|------------------------|
+//! | `native` | every built-in preset (`tiny_mlp`,         | nothing — hermetic     |
+//! |          | `mnist_mlp`, `fashion_mlp`, `tiny_cnn`,    |                        |
+//! |          | `mnist_cnn`, `cifar_cnn10`, `cifar_cnn100`,|                        |
+//! |          | `cifar_cnn_paper`)                         |                        |
+//! | `pjrt`   | any variant with lowered artifacts         | `--features pjrt` +    |
+//! |          |                                            | `python -m compile.aot`|
 //!
 //! Quick taste (see `examples/quickstart.rs` — no artifacts needed):
 //!

@@ -9,8 +9,9 @@
 //! benches can run against any provider:
 //!
 //! * [`NativeEngine`](super::native::NativeEngine) — pure-Rust
-//!   forward/backward for the MLP variants. Hermetic: no Python, no JAX,
-//!   no HLO artifacts; this is what CI and a clean checkout run.
+//!   forward/backward for the MLP *and* CNN variants (dense, 3×3 SAME
+//!   conv via im2col, 2×2 max-pool). Hermetic: no Python, no JAX, no HLO
+//!   artifacts; this is what CI and a clean checkout run.
 //! * [`Engine`](super::engine::Engine) (feature `pjrt`) — the PJRT
 //!   executor for the Pallas-backed AOT artifacts; the TPU-deployment
 //!   path, available when artifacts exist on disk.
@@ -110,14 +111,24 @@ pub fn backend_for_variant(
     variant: &str,
     kind: BackendKind,
 ) -> Result<Box<dyn Backend>> {
+    use anyhow::Context as _;
     match kind {
-        BackendKind::Native => native_backend(artifacts_root, variant),
-        BackendKind::Pjrt => pjrt_backend(artifacts_root, variant),
+        BackendKind::Native => native_backend(artifacts_root, variant)
+            .with_context(|| format!("--backend native failed for variant {variant:?}")),
+        BackendKind::Pjrt => pjrt_backend(artifacts_root, variant)
+            .with_context(|| format!("--backend pjrt failed for variant {variant:?}")),
         BackendKind::Auto => {
             if pjrt_available() && artifacts_root.join(variant).join("manifest.json").exists() {
-                pjrt_backend(artifacts_root, variant)
+                pjrt_backend(artifacts_root, variant).with_context(|| {
+                    format!("--backend auto selected pjrt (artifacts found) for variant {variant:?}")
+                })
             } else {
-                native_backend(artifacts_root, variant)
+                native_backend(artifacts_root, variant).with_context(|| {
+                    format!(
+                        "--backend auto fell back to native (pjrt {}) for variant {variant:?}",
+                        if pjrt_available() { "artifacts missing" } else { "not compiled in" }
+                    )
+                })
             }
         }
     }
@@ -138,9 +149,10 @@ fn native_backend(artifacts_root: &Path, variant: &str) -> Result<Box<dyn Backen
         Manifest::native_variant(variant).ok_or_else(|| {
             anyhow::anyhow!(
                 "variant {variant:?} has no built-in native preset and no manifest.json \
-                 under {} — MLP variants (tiny_mlp, mnist_mlp, fashion_mlp) run natively; \
-                 CNN variants need PJRT artifacts",
-                dir.display()
+                 under {} — native presets: {}; for anything else generate artifacts \
+                 (`python -m compile.aot`) and rebuild with `--features pjrt`",
+                dir.display(),
+                Manifest::NATIVE_VARIANTS.join(", ")
             )
         })?
     };
@@ -175,8 +187,8 @@ mod tests {
     }
 
     #[test]
-    fn explicit_native_works_for_mlp_variants() {
-        for v in ["tiny_mlp", "mnist_mlp", "fashion_mlp"] {
+    fn explicit_native_works_for_all_preset_variants() {
+        for v in Manifest::NATIVE_VARIANTS {
             let b = backend_for_variant(Path::new("artifacts"), v, BackendKind::Native).unwrap();
             assert_eq!(b.manifest().name, v);
             assert!(b.has_aggregate(4));
@@ -184,9 +196,25 @@ mod tests {
     }
 
     #[test]
-    fn native_rejects_cnn_variants() {
-        let r = backend_for_variant(Path::new("artifacts"), "cifar_cnn10", BackendKind::Native);
-        assert!(r.is_err());
+    fn auto_runs_cifar_variants_natively() {
+        // The paper's CIFAR presets must work out of the box on a clean
+        // checkout: `--backend auto` with no artifacts anywhere.
+        for v in ["cifar_cnn10", "cifar_cnn100"] {
+            let b = backend_for_variant(Path::new("artifacts"), v, BackendKind::Auto).unwrap();
+            assert_eq!(b.name(), "native");
+            assert_eq!(b.manifest().name, v);
+        }
+    }
+
+    #[test]
+    fn unknown_variant_error_names_variant_backend_and_remedy() {
+        let err = backend_for_variant(Path::new("artifacts"), "resnet152", BackendKind::Auto)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("resnet152"), "{msg}");
+        assert!(msg.contains("native"), "{msg}");
+        assert!(msg.contains("tiny_mlp"), "should list native presets: {msg}");
+        assert!(msg.contains("--features pjrt"), "should name the remedy: {msg}");
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -174,7 +174,85 @@ impl Manifest {
         }
     }
 
-    /// Built-in manifests for the MLP variants — shape-identical to the
+    /// Build a CNN manifest programmatically — mirrors
+    /// `compile.model._cnn`: a stack of 3×3 SAME convs (`conv{i}_w
+    /// [3, 3, cin, cout]` / `conv{i}_b [cout]`), each followed by a 2×2
+    /// max-pool when its `pool` flag is set, then dense layers over the
+    /// flattened NHWC activations. Layer indices run over the whole
+    /// stack, matching the Python registry's naming.
+    pub fn cnn(
+        name: &str,
+        hw: usize,
+        cin: usize,
+        convs: &[(usize, bool)],
+        hidden: &[usize],
+        classes: usize,
+        batch: usize,
+    ) -> Self {
+        // The flat ABI cannot record pool placement; the native engine
+        // re-infers the pool count from the head's fan-in and attaches
+        // the pools to the *leading* convs. Reject stacks the inference
+        // would silently reorder (a pooled conv after an unpooled one)
+        // instead of training a different network than the layout's
+        // author wrote. Every registry variant pools after every conv.
+        let mut seen_unpooled = false;
+        for &(_, pool) in convs {
+            assert!(
+                !(pool && seen_unpooled),
+                "{name}: pool flags must be leading (pooled convs before unpooled ones) — \
+                 the flat ABI cannot represent trailing pools"
+            );
+            seen_unpooled |= !pool;
+        }
+        let mut param_layout = Vec::new();
+        let (mut c, mut side) = (cin, hw);
+        for (i, &(cout, pool)) in convs.iter().enumerate() {
+            param_layout.push(ParamEntry { name: format!("conv{i}_w"), shape: vec![3, 3, c, cout] });
+            param_layout.push(ParamEntry { name: format!("conv{i}_b"), shape: vec![cout] });
+            c = cout;
+            if pool {
+                side /= 2;
+            }
+        }
+        let mut dims = Vec::with_capacity(hidden.len() + 2);
+        dims.push(side * side * c);
+        dims.extend_from_slice(hidden);
+        dims.push(classes);
+        for i in 0..dims.len() - 1 {
+            let li = convs.len() + i;
+            param_layout.push(ParamEntry {
+                name: format!("dense{li}_w"),
+                shape: vec![dims[i], dims[i + 1]],
+            });
+            param_layout.push(ParamEntry { name: format!("dense{li}_b"), shape: vec![dims[i + 1]] });
+        }
+        let param_count = param_layout.iter().map(|p| p.numel()).sum();
+        Manifest {
+            name: name.to_string(),
+            param_count,
+            batch,
+            input_dim: hw * hw * cin,
+            input_shape: vec![hw, hw, cin],
+            num_classes: classes,
+            worker_counts: vec![2, 4, 8, 16],
+            param_layout,
+        }
+    }
+
+    /// Variant names with a built-in native preset (what the native
+    /// backend runs with zero artifacts) — kept in registry order.
+    pub const NATIVE_VARIANTS: [&'static str; 8] = [
+        "tiny_mlp",
+        "mnist_mlp",
+        "fashion_mlp",
+        "tiny_cnn",
+        "mnist_cnn",
+        "cifar_cnn10",
+        "cifar_cnn100",
+        "cifar_cnn_paper",
+    ];
+
+    /// Built-in manifests for the model variants — shape-identical to the
     /// registry in `python/compile/model.py` (`VARIANTS`), so the native
     /// backend speaks the same flat ABI the PJRT artifacts would.
     pub fn native_variant(variant: &str) -> Option<Self> {
@@ -182,6 +260,30 @@ impl Manifest {
             "tiny_mlp" => Self::mlp("tiny_mlp", 16, &[8], 2, 8),
             "mnist_mlp" => Self::mlp("mnist_mlp", 784, &[256, 128], 10, 32),
             "fashion_mlp" => Self::mlp("fashion_mlp", 784, &[256, 128], 10, 32),
+            "tiny_cnn" => Self::cnn("tiny_cnn", 8, 1, &[(4, true), (8, true)], &[], 2, 4),
+            "mnist_cnn" => Self::cnn("mnist_cnn", 28, 1, &[(16, true), (32, true)], &[], 10, 32),
+            "cifar_cnn10" => {
+                Self::cnn("cifar_cnn10", 32, 3, &[(16, true), (32, true), (64, true)], &[128], 10, 32)
+            }
+            "cifar_cnn100" => Self::cnn(
+                "cifar_cnn100",
+                32,
+                3,
+                &[(16, true), (32, true), (64, true)],
+                &[128],
+                100,
+                32,
+            ),
+            // §5.2.1's 8-layer stack: (3,32)C(64,32)M … M(512,2).
+            "cifar_cnn_paper" => Self::cnn(
+                "cifar_cnn_paper",
+                32,
+                3,
+                &[(64, true), (128, true), (256, true), (512, true)],
+                &[128, 256, 512, 1024],
+                10,
+                16,
+            ),
             _ => return None,
         })
     }
@@ -247,7 +349,64 @@ mod tests {
         );
         assert_eq!(mnist.batch, 32);
         assert!(mnist.check().is_ok());
-        assert!(Manifest::native_variant("cifar_cnn10").is_none());
+        assert!(Manifest::native_variant("not_a_variant").is_none());
+    }
+
+    #[test]
+    fn cnn_presets_match_python_variants() {
+        // Shape math mirrors compile.model.param_count for the registry.
+        let tiny = Manifest::native_variant("tiny_cnn").unwrap();
+        // conv0: 3·3·1·4+4, conv1: 3·3·4·8+8, dense2: (2·2·8)·2+2.
+        assert_eq!(tiny.param_count, 36 + 4 + 288 + 8 + 64 + 2);
+        assert_eq!(tiny.input_shape, vec![8, 8, 1]);
+        assert_eq!(tiny.input_dim, 64);
+        assert!(tiny.check().is_ok());
+
+        let c10 = Manifest::native_variant("cifar_cnn10").unwrap();
+        // convs: 3·3·3·16+16, 3·3·16·32+32, 3·3·32·64+64;
+        // dense3: (4·4·64)·128+128; dense4: 128·10+10.
+        assert_eq!(
+            c10.param_count,
+            432 + 16 + 4608 + 32 + 18432 + 64 + 1024 * 128 + 128 + 1280 + 10
+        );
+        assert_eq!(c10.input_dim, 3072);
+        assert_eq!(c10.input_shape, vec![32, 32, 3]);
+        assert_eq!(c10.batch, 32);
+        assert!(c10.check().is_ok());
+        // Layout names follow the Python layer enumeration (convs first).
+        assert_eq!(c10.param_layout[0].name, "conv0_w");
+        assert_eq!(c10.param_layout[6].name, "dense3_w");
+        assert!(c10.param_layout[1].is_bias());
+
+        let c100 = Manifest::native_variant("cifar_cnn100").unwrap();
+        assert_eq!(c100.num_classes, 100);
+        assert_eq!(c100.param_count, c10.param_count - 1290 + 128 * 100 + 100);
+        assert!(c100.check().is_ok());
+
+        let mn = Manifest::native_variant("mnist_cnn").unwrap();
+        assert_eq!(mn.param_count, 144 + 16 + 4608 + 32 + 7 * 7 * 32 * 10 + 10);
+        assert!(mn.check().is_ok());
+
+        let paper = Manifest::native_variant("cifar_cnn_paper").unwrap();
+        assert_eq!(paper.batch, 16);
+        assert!(paper.check().is_ok());
+        // Leading-pool stacks other than all-pool are representable too.
+        let partial = Manifest::cnn("partial", 8, 1, &[(4, true), (8, false)], &[], 2, 4);
+        assert!(partial.check().is_ok());
+        assert_eq!(partial.param_layout[4].shape, vec![4 * 4 * 8, 2]);
+        // Every listed native variant must build and be self-consistent.
+        for v in Manifest::NATIVE_VARIANTS {
+            assert!(Manifest::native_variant(v).unwrap().check().is_ok(), "{v}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "pool flags must be leading")]
+    fn cnn_rejects_trailing_pools() {
+        // The flat ABI cannot say *where* pools sit; the native engine
+        // re-infers them onto the leading convs, so a trailing-pool stack
+        // would silently train a different network — reject at build.
+        let _ = Manifest::cnn("trailing", 8, 1, &[(4, false), (8, true)], &[], 2, 4);
     }
 
     #[test]

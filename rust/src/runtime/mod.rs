@@ -6,8 +6,9 @@
 //!                                        │  (dyn Backend)
 //!                 ┌──────────────────────┴──────────────────────┐
 //!  NativeEngine (always built)                    Engine (feature "pjrt")
-//!  pure-Rust MLP fwd/bwd + Eq. 10+13              HLO text → XlaComputation
-//!  kernel; hermetic, bit-deterministic            → client.compile → PJRT
+//!  pure-Rust MLP+CNN fwd/bwd (dense, im2col       HLO text → XlaComputation
+//!  conv, max-pool) + Eq. 10+13 kernel;            → client.compile → PJRT
+//!  hermetic, bit-deterministic
 //!                 └──────────── Manifest (flat ABI, shapes) ─────┘
 //!                    on disk (manifest.json) or built-in preset
 //! ```

@@ -1,6 +1,6 @@
 //! The native execution engine: pure-Rust forward/backward for the MLP
-//! variants plus the paper's Boltzmann aggregation kernel — no Python,
-//! no JAX, no HLO artifacts.
+//! *and* CNN variants plus the paper's Boltzmann aggregation kernel — no
+//! Python, no JAX, no HLO artifacts.
 //!
 //! This is the hermetic twin of the PJRT [`Engine`](super::engine::Engine):
 //! it implements the same flat-parameter ABI ([`Manifest`]) and the same
@@ -8,15 +8,20 @@
 //! same semantics as `python/compile/model.py` and
 //! `python/compile/kernels/aggregate.py`:
 //!
-//! * `train_step` — dense layers `a ← relu(a·W + b)`, fused softmax
-//!   cross-entropy with per-example losses (the free Eq. 26 byproduct),
-//!   exact reverse-mode gradients, plain SGD update `θ ← θ − η·∇`;
-//! * `eval_step` — summed loss + correct count (first-max argmax, like
-//!   `jnp.argmax`);
+//! * `train_step` — the model is a small layer IR (`Op`) parsed from the
+//!   manifest's flat layout: `Dense` (`a ← relu(a·W + b)`), `Conv2d`
+//!   (3×3 SAME + ReLU over NHWC, lowered to im2col + the same
+//!   `matmul_bias` kernel the dense path uses), `MaxPool2x2` (stride-2
+//!   VALID, first-max argmax like `jnp.argmax`) and `Flatten`; fused
+//!   softmax cross-entropy with per-example losses (the free Eq. 26
+//!   byproduct), exact reverse-mode gradients (col2im scatter for conv,
+//!   argmax routing for pool), plain SGD update `θ ← θ − η·∇`;
+//! * `eval_step` — summed loss + correct count (first-max argmax);
 //! * `aggregate` — Eq. 10+13: θ = softmax(−ã·h/Σh), then
 //!   `xᵢ ← (1−β)xᵢ + β·Σⱼθⱼxⱼ`, computed over column panels exactly like
 //!   the Pallas kernel tiles VMEM (the `tests/native_parity.rs` fixture
-//!   pins it against the Python reference kernels at ≤1e-5).
+//!   pins both the MLP and conv paths against the Python reference
+//!   kernels at ≤1e-5).
 //!
 //! All state is a pure function of the [`Manifest`] and the caller's
 //! parameter vector; initialisation runs through [`crate::rng::Rng`]
@@ -37,29 +42,54 @@ use super::manifest::Manifest;
 /// the θ·X panel resident in L1/L2.
 const AGG_PANEL: usize = 8192;
 
-/// One dense layer's slice of the flat parameter vector.
+/// One op of the executable layer IR, parsed from the manifest's flat
+/// parameter layout (2-D weights → `Dense`, 4-D `[3,3,cin,cout]`
+/// weights → `Conv2d`). Spatial ops carry their *input* NHWC dims.
 #[derive(Clone, Copy, Debug)]
-struct DenseLayer {
-    din: usize,
-    dout: usize,
-    /// Offset of the [din × dout] weight block in the flat vector.
-    w_off: usize,
-    /// Offset of the [dout] bias block.
-    b_off: usize,
-    /// ReLU after the affine map (false for the logits layer).
-    relu: bool,
+enum Op {
+    /// Affine map + optional ReLU (off for the logits layer).
+    Dense { din: usize, dout: usize, w_off: usize, b_off: usize, relu: bool },
+    /// 3×3 SAME convolution + bias + ReLU, NHWC, HWIO weights — matches
+    /// `compile.model._conv3x3` followed by `jax.nn.relu`.
+    Conv2d { h: usize, w: usize, cin: usize, cout: usize, w_off: usize, b_off: usize },
+    /// 2×2 max-pool, stride 2, VALID; first max wins ties.
+    MaxPool2x2 { h: usize, w: usize, c: usize },
+    /// NHWC → flat. Row-major NHWC is already flat, so this is a logical
+    /// reshape; it stays in the IR so tapes line up one-to-one with ops.
+    Flatten { dim: usize },
 }
 
-/// Pure-Rust MLP engine implementing [`Backend`].
+impl Op {
+    /// Did this op apply a ReLU to its own output? (Backward gates the
+    /// incoming gradient by `output > 0` exactly where ReLU ran.)
+    fn applies_relu(&self) -> bool {
+        matches!(self, Op::Conv2d { .. } | Op::Dense { relu: true, .. })
+    }
+}
+
+/// One (weight, bias) pair of the layout with resolved offsets.
+struct LayerPair {
+    shape: Vec<usize>,
+    w_off: usize,
+    b_off: usize,
+    b_len: usize,
+}
+
+/// Pure-Rust MLP/CNN engine implementing [`Backend`].
 pub struct NativeEngine {
     manifest: Manifest,
-    layers: Vec<DenseLayer>,
+    ops: Vec<Op>,
     exec_count: Cell<u64>,
 }
 
 impl NativeEngine {
-    /// Build from a manifest. Fails for non-MLP layouts (conv weights are
-    /// 4-D — those variants need the PJRT backend).
+    /// Build from a manifest, classifying the flat layout by weight rank:
+    /// 2-D `[din, dout]` entries become `Dense` layers, 4-D
+    /// `[3, 3, cin, cout]` entries become `Conv2d` layers. Max-pools are
+    /// not part of the flat ABI, so their count is inferred from the
+    /// first dense layer's fan-in (each pool halves H and W) and they are
+    /// assigned to the leading convs — the registry variants pool after
+    /// every conv, for which the assignment is exact.
     pub fn new(manifest: Manifest) -> Result<Self> {
         manifest.check()?;
         let entries = &manifest.param_layout;
@@ -68,50 +98,147 @@ impl NativeEngine {
             "native backend expects (weight, bias) pairs, got {} layout entries",
             entries.len()
         );
-        let mut layers = Vec::with_capacity(entries.len() / 2);
+
+        // Pass 1: resolve offsets and split the pairs by weight rank.
+        let mut convs: Vec<LayerPair> = Vec::new();
+        let mut denses: Vec<LayerPair> = Vec::new();
         let mut off = 0usize;
         for pair in entries.chunks(2) {
             let (w, b) = (&pair[0], &pair[1]);
             ensure!(
-                w.shape.len() == 2 && !w.is_bias() && b.shape.len() == 1 && b.is_bias(),
-                "native backend supports dense (w[din,dout], b[dout]) pairs only; \
-                 got {:?}{:?} / {:?}{:?} — use the pjrt backend for CNN variants",
+                !w.is_bias() && b.is_bias() && b.shape.len() == 1,
+                "layout pair {:?}{:?} / {:?}{:?} is not a (weight, bias[n]) pair",
                 w.name,
                 w.shape,
                 b.name,
                 b.shape
             );
-            let (din, dout) = (w.shape[0], w.shape[1]);
-            ensure!(b.shape[0] == dout, "bias {} does not match weight {}", b.name, w.name);
             let w_off = off;
             off += w.numel();
             let b_off = off;
             off += b.numel();
-            layers.push(DenseLayer { din, dout, w_off, b_off, relu: true });
+            let lp = LayerPair { shape: w.shape.clone(), w_off, b_off, b_len: b.shape[0] };
+            match w.shape.len() {
+                2 => denses.push(lp),
+                4 => {
+                    ensure!(
+                        denses.is_empty(),
+                        "conv weight {} appears after a dense layer — conv stacks must precede \
+                         the classifier head",
+                        w.name
+                    );
+                    ensure!(
+                        w.shape[0] == 3 && w.shape[1] == 3,
+                        "conv weight {} has kernel {}×{}; the native backend implements 3×3 \
+                         SAME convs only",
+                        w.name,
+                        w.shape[0],
+                        w.shape[1]
+                    );
+                    convs.push(lp);
+                }
+                n => anyhow::bail!(
+                    "weight {} has rank {n}; the native backend supports dense [din,dout] and \
+                     conv [3,3,cin,cout] weights",
+                    w.name
+                ),
+            }
         }
         ensure!(
-            layers.first().unwrap().din == manifest.input_dim,
-            "first layer din {} ≠ input_dim {}",
-            layers[0].din,
-            manifest.input_dim
+            !denses.is_empty(),
+            "layout has no dense layer — every variant ends in a classifier head"
         );
+
+        // Pass 2: chain shapes into the op list.
+        let mut ops: Vec<Op> = Vec::new();
+        let mut flat_dim = manifest.input_dim;
+        if !convs.is_empty() {
+            ensure!(
+                manifest.input_shape.len() == 3,
+                "conv layout needs an [H, W, C] input_shape, got {:?}",
+                manifest.input_shape
+            );
+            let (mut h, mut w) = (manifest.input_shape[0], manifest.input_shape[1]);
+            let mut c = manifest.input_shape[2];
+            for (i, conv) in convs.iter().enumerate() {
+                let (cin, cout) = (conv.shape[2], conv.shape[3]);
+                ensure!(
+                    cin == c,
+                    "conv layer {i} expects {cin} input channels, activations have {c}"
+                );
+                ensure!(conv.b_len == cout, "conv layer {i} bias ≠ {cout} output channels");
+                c = cout;
+            }
+            // Infer the pool count from the head's fan-in: k pools halve
+            // H and W k times. Exactly one k can match (strictly
+            // monotone), and the registry stacks pool after every conv.
+            let din0 = denses[0].shape[0];
+            let mut pools = None;
+            let (mut ph, mut pw) = (h, w);
+            for k in 0..=convs.len() {
+                if ph * pw * c == din0 {
+                    pools = Some(k);
+                    break;
+                }
+                if ph % 2 != 0 || pw % 2 != 0 {
+                    break;
+                }
+                ph /= 2;
+                pw /= 2;
+            }
+            let pools = pools.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "cannot tile input {:?} through {} convs into the head's fan-in {din0}: \
+                     no 2×2 max-pool count matches (layout is not a conv→pool→dense stack \
+                     this backend understands)",
+                    manifest.input_shape,
+                    convs.len()
+                )
+            })?;
+            for (i, conv) in convs.iter().enumerate() {
+                let (cin, cout) = (conv.shape[2], conv.shape[3]);
+                ops.push(Op::Conv2d { h, w, cin, cout, w_off: conv.w_off, b_off: conv.b_off });
+                if i < pools {
+                    ops.push(Op::MaxPool2x2 { h, w, c: cout });
+                    h /= 2;
+                    w /= 2;
+                }
+            }
+            flat_dim = h * w * c;
+            ops.push(Op::Flatten { dim: flat_dim });
+        }
+        for (i, dense) in denses.iter().enumerate() {
+            let (din, dout) = (dense.shape[0], dense.shape[1]);
+            ensure!(
+                din == flat_dim,
+                "dense layer {i} fan-in {din} ≠ incoming activation dim {flat_dim}"
+            );
+            ensure!(dense.b_len == dout, "dense layer {i} bias ≠ {dout} outputs");
+            ops.push(Op::Dense {
+                din,
+                dout,
+                w_off: dense.w_off,
+                b_off: dense.b_off,
+                relu: i + 1 < denses.len(),
+            });
+            flat_dim = dout;
+        }
         ensure!(
-            layers.last().unwrap().dout == manifest.num_classes,
-            "last layer dout {} ≠ num_classes {}",
-            layers.last().unwrap().dout,
+            flat_dim == manifest.num_classes,
+            "head emits {flat_dim} logits ≠ num_classes {}",
             manifest.num_classes
         );
-        for w in layers.windows(2) {
-            ensure!(w[0].dout == w[1].din, "layer dims do not chain");
-        }
-        layers.last_mut().unwrap().relu = false;
-        Ok(Self { manifest, layers, exec_count: Cell::new(0) })
+        Ok(Self { manifest, ops, exec_count: Cell::new(0) })
     }
 
-    /// Build for a built-in variant preset (`tiny_mlp`, `mnist_mlp`, …).
+    /// Build for a built-in variant preset (`tiny_mlp`, `cifar_cnn10`, …).
     pub fn for_variant(variant: &str) -> Result<Self> {
-        let m = Manifest::native_variant(variant)
-            .ok_or_else(|| anyhow::anyhow!("no native preset for variant {variant:?}"))?;
+        let m = Manifest::native_variant(variant).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no native preset for variant {variant:?} — built-ins: {}",
+                Manifest::NATIVE_VARIANTS.join(", ")
+            )
+        })?;
         Self::new(m)
     }
 
@@ -144,27 +271,68 @@ impl NativeEngine {
         Ok(())
     }
 
-    /// Forward pass: returns the per-layer activations (a₀ = x, …,
-    /// a_L = logits), post-ReLU for hidden layers.
-    fn forward(&self, params: &[f32], x: &[f32], batch: usize) -> Vec<Vec<f32>> {
-        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.layers.len() + 1);
+    /// Forward pass: returns per-op output tapes (`acts[0] = x`,
+    /// `acts[i+1] =` output of op i, post-ReLU where the op applies one),
+    /// the argmax tape of every pool op, and — when `keep_patches` is set
+    /// (the training path) — each conv's im2col patch matrix so the
+    /// backward pass does not re-extract it (empty tapes otherwise).
+    fn forward(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        batch: usize,
+        keep_patches: bool,
+    ) -> (Vec<Vec<f32>>, Vec<Vec<u32>>, Vec<Vec<f32>>) {
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.ops.len() + 1);
+        let mut pool_idx: Vec<Vec<u32>> = Vec::with_capacity(self.ops.len());
+        let mut patch_tape: Vec<Vec<f32>> = Vec::with_capacity(self.ops.len());
         acts.push(x.to_vec());
-        for layer in &self.layers {
+        for op in &self.ops {
             let a_prev = acts.last().unwrap();
-            let w = &params[layer.w_off..layer.w_off + layer.din * layer.dout];
-            let b = &params[layer.b_off..layer.b_off + layer.dout];
-            let mut z = vec![0.0f32; batch * layer.dout];
-            matmul_bias(a_prev, w, b, batch, layer.din, layer.dout, &mut z);
-            if layer.relu {
-                for v in z.iter_mut() {
-                    if *v < 0.0 {
-                        *v = 0.0;
+            let (out, idx, patches) = match *op {
+                Op::Dense { din, dout, w_off, b_off, relu } => {
+                    let mut z = vec![0.0f32; batch * dout];
+                    matmul_bias(
+                        a_prev,
+                        &params[w_off..w_off + din * dout],
+                        &params[b_off..b_off + dout],
+                        batch,
+                        din,
+                        dout,
+                        &mut z,
+                    );
+                    if relu {
+                        relu_inplace(&mut z);
                     }
+                    (z, Vec::new(), Vec::new())
                 }
-            }
-            acts.push(z);
+                Op::Conv2d { h, w, cin, cout, w_off, b_off } => {
+                    let rows = batch * h * w;
+                    let patches = im2col(a_prev, batch, h, w, cin);
+                    let mut z = vec![0.0f32; rows * cout];
+                    matmul_bias(
+                        &patches,
+                        &params[w_off..w_off + 9 * cin * cout],
+                        &params[b_off..b_off + cout],
+                        rows,
+                        9 * cin,
+                        cout,
+                        &mut z,
+                    );
+                    relu_inplace(&mut z);
+                    (z, Vec::new(), if keep_patches { patches } else { Vec::new() })
+                }
+                Op::MaxPool2x2 { h, w, c } => {
+                    let (out, idx) = maxpool_fwd(a_prev, batch, h, w, c);
+                    (out, idx, Vec::new())
+                }
+                Op::Flatten { .. } => (a_prev.clone(), Vec::new(), Vec::new()),
+            };
+            acts.push(out);
+            pool_idx.push(idx);
+            patch_tape.push(patches);
         }
-        acts
+        (acts, pool_idx, patch_tape)
     }
 
     /// Fused softmax cross-entropy over logits: per-example losses and,
@@ -200,27 +368,179 @@ impl NativeEngine {
 }
 
 /// z[n,k] = Σⱼ a[n,j]·w[j,k] + b[k] — unit-stride inner loops so the
-/// autovectoriser gets contiguous rows of `w`.
+/// autovectoriser gets contiguous rows of `w`. Shared by the dense path
+/// (rows = batch) and the im2col conv path (rows = batch·H·W).
 fn matmul_bias(
     a: &[f32],
     w: &[f32],
     b: &[f32],
-    batch: usize,
+    rows: usize,
     din: usize,
     dout: usize,
     z: &mut [f32],
 ) {
-    for n in 0..batch {
+    for n in 0..rows {
         let zrow = &mut z[n * dout..(n + 1) * dout];
         zrow.copy_from_slice(b);
         let arow = &a[n * din..(n + 1) * din];
         for (j, &aj) in arow.iter().enumerate() {
             if aj == 0.0 {
-                continue; // ReLU sparsity: skip dead activations
+                continue; // ReLU/padding sparsity: skip dead activations
             }
             let wrow = &w[j * dout..(j + 1) * dout];
             for (zk, &wk) in zrow.iter_mut().zip(wrow.iter()) {
                 *zk += aj * wk;
+            }
+        }
+    }
+}
+
+fn relu_inplace(z: &mut [f32]) {
+    for v in z.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// 3×3 SAME patch extraction, NHWC → [B·H·W, 9·C] with (kh, kw, cin)
+/// feature order — exactly the row-major flattening of the HWIO weight
+/// tensor, so `patches · w.reshape(9·cin, cout)` is the convolution.
+fn im2col(x: &[f32], batch: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let pf = 9 * c;
+    let mut out = vec![0.0f32; batch * h * w * pf];
+    for n in 0..batch {
+        for oh in 0..h {
+            for ow in 0..w {
+                let row = ((n * h + oh) * w + ow) * pf;
+                for kh in 0..3 {
+                    let ih = oh + kh;
+                    if ih < 1 || ih > h {
+                        continue; // zero padding row
+                    }
+                    let ih = ih - 1;
+                    for kw in 0..3 {
+                        let iw = ow + kw;
+                        if iw < 1 || iw > w {
+                            continue; // zero padding col
+                        }
+                        let iw = iw - 1;
+                        let src = ((n * h + ih) * w + iw) * c;
+                        let dst = row + (kh * 3 + kw) * c;
+                        out[dst..dst + c].copy_from_slice(&x[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Adjoint of [`im2col`]: scatter-add patch gradients back onto the
+/// input image (padding positions are dropped).
+fn col2im(dpatches: &[f32], batch: usize, h: usize, w: usize, c: usize, dx: &mut [f32]) {
+    let pf = 9 * c;
+    for n in 0..batch {
+        for oh in 0..h {
+            for ow in 0..w {
+                let row = ((n * h + oh) * w + ow) * pf;
+                for kh in 0..3 {
+                    let ih = oh + kh;
+                    if ih < 1 || ih > h {
+                        continue;
+                    }
+                    let ih = ih - 1;
+                    for kw in 0..3 {
+                        let iw = ow + kw;
+                        if iw < 1 || iw > w {
+                            continue;
+                        }
+                        let iw = iw - 1;
+                        let dst = ((n * h + ih) * w + iw) * c;
+                        let src = row + (kh * 3 + kw) * c;
+                        for (d, &g) in dx[dst..dst + c].iter_mut().zip(&dpatches[src..src + c]) {
+                            *d += g;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// 2×2 stride-2 max-pool over NHWC; returns the pooled map and, per
+/// output element, the flat index of its max in the input buffer (scan
+/// order (0,0),(0,1),(1,0),(1,1); first max wins ties, like
+/// `jnp.argmax`).
+fn maxpool_fwd(x: &[f32], batch: usize, h: usize, w: usize, c: usize) -> (Vec<f32>, Vec<u32>) {
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0.0f32; batch * oh * ow * c];
+    let mut idx = vec![0u32; batch * oh * ow * c];
+    for n in 0..batch {
+        for i in 0..oh {
+            for j in 0..ow {
+                let dst = ((n * oh + i) * ow + j) * c;
+                for k in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_at = 0u32;
+                    for di in 0..2 {
+                        for dj in 0..2 {
+                            let src = ((n * h + 2 * i + di) * w + 2 * j + dj) * c + k;
+                            let v = x[src];
+                            if v > best {
+                                best = v;
+                                best_at = src as u32;
+                            }
+                        }
+                    }
+                    out[dst + k] = best;
+                    idx[dst + k] = best_at;
+                }
+            }
+        }
+    }
+    (out, idx)
+}
+
+/// dW[j,k] += Σₙ a[n,j]·dz[n,k], db[k] += Σₙ dz[n,k], and optionally
+/// da[n,j] = Σₖ dz[n,k]·W[j,k] — the shared affine adjoint (dense rows
+/// or im2col patch rows).
+#[allow(clippy::too_many_arguments)]
+fn affine_backward(
+    a: &[f32],
+    w: &[f32],
+    dz: &[f32],
+    rows: usize,
+    din: usize,
+    dout: usize,
+    gw: &mut [f32],
+    gb: &mut [f32],
+    mut da: Option<&mut [f32]>,
+) {
+    for n in 0..rows {
+        let arow = &a[n * din..(n + 1) * din];
+        let dzrow = &dz[n * dout..(n + 1) * dout];
+        for (j, &aj) in arow.iter().enumerate() {
+            if aj == 0.0 {
+                continue;
+            }
+            let grow = &mut gw[j * dout..(j + 1) * dout];
+            for (g, &d) in grow.iter_mut().zip(dzrow.iter()) {
+                *g += aj * d;
+            }
+        }
+        for (g, &d) in gb.iter_mut().zip(dzrow.iter()) {
+            *g += d;
+        }
+        if let Some(da) = da.as_deref_mut() {
+            let darow = &mut da[n * din..(n + 1) * din];
+            for (j, dv) in darow.iter_mut().enumerate() {
+                let wrow = &w[j * dout..(j + 1) * dout];
+                let mut acc = 0.0f32;
+                for (&d, &wk) in dzrow.iter().zip(wrow.iter()) {
+                    acc += d * wk;
+                }
+                *dv = acc;
             }
         }
     }
@@ -246,7 +566,7 @@ impl Backend for NativeEngine {
         let batch = self.manifest.batch;
         let classes = self.manifest.num_classes;
 
-        let acts = self.forward(params, x, batch);
+        let (acts, pool_idx, patch_tape) = self.forward(params, x, batch, true);
         let logits = acts.last().unwrap();
         let mut dlogits = vec![0.0f32; batch * classes];
         let per_example = Self::softmax_xent(logits, y, classes, Some(&mut dlogits));
@@ -258,57 +578,87 @@ impl Backend for NativeEngine {
             *v *= inv_b;
         }
 
-        // Reverse pass. dz starts as dlogits; per layer:
-        //   dW[j,k] = Σₙ a_prev[n,j]·dz[n,k]     db[k] = Σₙ dz[n,k]
-        //   da_prev[n,j] = Σₖ dz[n,k]·W[j,k], masked by ReLU (a_prev > 0).
+        // Reverse pass over the op tape. `dz` always matches op i's
+        // output; the ReLU gate is applied where the forward applied one
+        // (the tape stores post-ReLU outputs, so `out <= 0` ⇔ dead).
         let mut grad = vec![0.0f32; params.len()];
         let mut dz = dlogits;
-        for (li, layer) in self.layers.iter().enumerate().rev() {
-            let a_prev = &acts[li];
-            {
-                let gw = &mut grad[layer.w_off..layer.w_off + layer.din * layer.dout];
-                for n in 0..batch {
-                    let arow = &a_prev[n * layer.din..(n + 1) * layer.din];
-                    let dzrow = &dz[n * layer.dout..(n + 1) * layer.dout];
-                    for (j, &aj) in arow.iter().enumerate() {
-                        if aj == 0.0 {
-                            continue;
-                        }
-                        let grow = &mut gw[j * layer.dout..(j + 1) * layer.dout];
-                        for (g, &d) in grow.iter_mut().zip(dzrow.iter()) {
-                            *g += aj * d;
-                        }
+        for (oi, op) in self.ops.iter().enumerate().rev() {
+            let a_prev = &acts[oi];
+            if op.applies_relu() {
+                for (d, &o) in dz.iter_mut().zip(acts[oi + 1].iter()) {
+                    if o <= 0.0 {
+                        *d = 0.0;
                     }
                 }
             }
-            {
-                let gb = &mut grad[layer.b_off..layer.b_off + layer.dout];
-                for n in 0..batch {
-                    let dzrow = &dz[n * layer.dout..(n + 1) * layer.dout];
-                    for (g, &d) in gb.iter_mut().zip(dzrow.iter()) {
-                        *g += d;
+            let need_da = oi > 0;
+            let da = match *op {
+                Op::Dense { din, dout, w_off, b_off, .. } => {
+                    let mut da = if need_da { Some(vec![0.0f32; batch * din]) } else { None };
+                    {
+                        let (gw, gb) = split_grad(&mut grad, w_off, din * dout, b_off, dout);
+                        affine_backward(
+                            a_prev,
+                            &params[w_off..w_off + din * dout],
+                            &dz,
+                            batch,
+                            din,
+                            dout,
+                            gw,
+                            gb,
+                            da.as_deref_mut(),
+                        );
+                    }
+                    da
+                }
+                Op::Conv2d { h, w, cin, cout, w_off, b_off } => {
+                    let rows = batch * h * w;
+                    let din = 9 * cin;
+                    // Patch matrix saved by the forward pass — no re-extraction.
+                    let patches = &patch_tape[oi];
+                    let mut dpatches =
+                        if need_da { Some(vec![0.0f32; rows * din]) } else { None };
+                    {
+                        let (gw, gb) = split_grad(&mut grad, w_off, din * cout, b_off, cout);
+                        affine_backward(
+                            patches,
+                            &params[w_off..w_off + din * cout],
+                            &dz,
+                            rows,
+                            din,
+                            cout,
+                            gw,
+                            gb,
+                            dpatches.as_deref_mut(),
+                        );
+                    }
+                    dpatches.map(|dp| {
+                        let mut da = vec![0.0f32; batch * h * w * cin];
+                        col2im(&dp, batch, h, w, cin, &mut da);
+                        da
+                    })
+                }
+                Op::MaxPool2x2 { h, w, c } => {
+                    if need_da {
+                        let mut da = vec![0.0f32; batch * h * w * c];
+                        for (&d, &i) in dz.iter().zip(pool_idx[oi].iter()) {
+                            da[i as usize] += d;
+                        }
+                        Some(da)
+                    } else {
+                        None
                     }
                 }
-            }
-            if li > 0 {
-                let w = &params[layer.w_off..layer.w_off + layer.din * layer.dout];
-                let mut da = vec![0.0f32; batch * layer.din];
-                for n in 0..batch {
-                    let dzrow = &dz[n * layer.dout..(n + 1) * layer.dout];
-                    let darow = &mut da[n * layer.din..(n + 1) * layer.din];
-                    let arow = &a_prev[n * layer.din..(n + 1) * layer.din];
-                    for (j, dv) in darow.iter_mut().enumerate() {
-                        if arow[j] <= 0.0 {
-                            continue; // ReLU gate (hidden activations are post-ReLU)
-                        }
-                        let wrow = &w[j * layer.dout..(j + 1) * layer.dout];
-                        let mut acc = 0.0f32;
-                        for (&d, &wk) in dzrow.iter().zip(wrow.iter()) {
-                            acc += d * wk;
-                        }
-                        *dv = acc;
+                Op::Flatten { .. } => {
+                    if need_da {
+                        Some(std::mem::take(&mut dz))
+                    } else {
+                        None
                     }
                 }
+            };
+            if let Some(da) = da {
                 dz = da;
             }
         }
@@ -323,7 +673,7 @@ impl Backend for NativeEngine {
         self.check_shapes(params, x, y)?;
         let batch = self.manifest.batch;
         let classes = self.manifest.num_classes;
-        let acts = self.forward(params, x, batch);
+        let (acts, _, _) = self.forward(params, x, batch, false);
         let logits = acts.last().unwrap();
         let per_ex = Self::softmax_xent(logits, y, classes, None);
         let mut correct = 0.0f32;
@@ -341,6 +691,16 @@ impl Backend for NativeEngine {
         let p = h.len();
         ensure!(p > 0, "empty cohort");
         ensure!(stacked.len() % p == 0, "stacked len {} not divisible by p={p}", stacked.len());
+        // A single non-finite loss energy would poison every worker's
+        // parameters through the softmax — reject with the culprit named.
+        for (i, &hi) in h.iter().enumerate() {
+            ensure!(
+                hi.is_finite(),
+                "worker {i}: non-finite loss energy h = {hi} (diverged before aggregation?)"
+            );
+        }
+        ensure!(a_tilde.is_finite(), "non-finite ã = {a_tilde}");
+        ensure!(beta.is_finite(), "non-finite β = {beta}");
         let d = stacked.len() / p;
         let theta = linalg::boltzmann_weights(h, a_tilde);
         let keep = 1.0 - beta;
@@ -379,6 +739,19 @@ impl Backend for NativeEngine {
     }
 }
 
+/// Disjoint weight/bias gradient slices out of the flat gradient vector.
+fn split_grad(
+    grad: &mut [f32],
+    w_off: usize,
+    w_len: usize,
+    b_off: usize,
+    b_len: usize,
+) -> (&mut [f32], &mut [f32]) {
+    debug_assert_eq!(w_off + w_len, b_off, "bias must follow its weight block");
+    let (head, tail) = grad.split_at_mut(b_off);
+    (&mut head[w_off..w_off + w_len], &mut tail[..b_len])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -386,6 +759,10 @@ mod tests {
 
     fn tiny() -> NativeEngine {
         NativeEngine::for_variant("tiny_mlp").unwrap()
+    }
+
+    fn tiny_cnn() -> NativeEngine {
+        NativeEngine::for_variant("tiny_cnn").unwrap()
     }
 
     fn rand_batch(e: &NativeEngine, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
@@ -396,6 +773,36 @@ mod tests {
         rng.fill_normal(&mut x, 0.0, 1.0);
         let y: Vec<i32> = (0..m.batch).map(|_| rng.below(m.num_classes) as i32).collect();
         (params, x, y)
+    }
+
+    /// Finite-difference check shared by the MLP and CNN variants.
+    fn check_gradient(e: &NativeEngine, seed: u64, coords: usize, tol: f64) {
+        let (params, x, y) = rand_batch(e, seed);
+        let d = params.len();
+        // Analytic gradient, recovered from one lr=1 step.
+        let (stepped, base) = e.train_step(&params, &x, &y, 1.0).unwrap();
+        let grad: Vec<f32> = params.iter().zip(stepped.iter()).map(|(p, s)| p - s).collect();
+        let loss_at = |th: &[f32]| -> f64 {
+            let (_, out) = e.train_step(th, &x, &y, 0.0).unwrap();
+            out.loss as f64
+        };
+        assert!((loss_at(&params) - base.loss as f64).abs() < 1e-6);
+        // Spot-check coordinates across the whole vector.
+        let eps = 1e-3f32;
+        let mut rng = Rng::new(17);
+        for _ in 0..coords {
+            let k = rng.below(d);
+            let mut plus = params.clone();
+            plus[k] += eps;
+            let mut minus = params.clone();
+            minus[k] -= eps;
+            let numeric = (loss_at(&plus) - loss_at(&minus)) / (2.0 * eps as f64);
+            let analytic = grad[k] as f64;
+            assert!(
+                (numeric - analytic).abs() < tol,
+                "coord {k}: numeric {numeric:.6} vs analytic {analytic:.6}"
+            );
+        }
     }
 
     #[test]
@@ -426,45 +833,93 @@ mod tests {
     }
 
     #[test]
+    fn conv_overfitting_one_batch_reduces_loss() {
+        let e = tiny_cnn();
+        let (mut params, x, y) = rand_batch(&e, 3);
+        let (_, first) = e.train_step(&params, &x, &y, 0.0).unwrap();
+        let mut last = first.loss;
+        for _ in 0..80 {
+            let (next, out) = e.train_step(&params, &x, &y, 0.1).unwrap();
+            params = next;
+            last = out.loss;
+        }
+        assert!(last < first.loss * 0.7, "{} → {last}", first.loss);
+    }
+
+    #[test]
     fn gradient_matches_finite_differences() {
-        let e = tiny();
-        let (params, x, y) = rand_batch(&e, 5);
-        let d = params.len();
-        // Analytic gradient, recovered from one lr=1 step.
-        let (stepped, base) = e.train_step(&params, &x, &y, 1.0).unwrap();
-        let grad: Vec<f32> = params.iter().zip(stepped.iter()).map(|(p, s)| p - s).collect();
-        let loss_at = |th: &[f32]| -> f64 {
-            let (_, out) = e.train_step(th, &x, &y, 0.0).unwrap();
-            out.loss as f64
-        };
-        assert!((loss_at(&params) - base.loss as f64).abs() < 1e-6);
-        // Spot-check coordinates across the whole vector.
-        let eps = 1e-3f32;
-        let mut rng = Rng::new(17);
-        for _ in 0..24 {
-            let k = rng.below(d);
-            let mut plus = params.clone();
-            plus[k] += eps;
-            let mut minus = params.clone();
-            minus[k] -= eps;
-            let numeric = (loss_at(&plus) - loss_at(&minus)) / (2.0 * eps as f64);
-            let analytic = grad[k] as f64;
-            assert!(
-                (numeric - analytic).abs() < 2e-3,
-                "coord {k}: numeric {numeric:.6} vs analytic {analytic:.6}"
-            );
+        check_gradient(&tiny(), 5, 24, 2e-3);
+    }
+
+    #[test]
+    fn conv_gradient_matches_finite_differences() {
+        // Covers Conv2d (im2col/col2im), MaxPool2x2 (argmax routing) and
+        // the ReLU gates between them.
+        check_gradient(&tiny_cnn(), 5, 32, 5e-3);
+    }
+
+    #[test]
+    fn conv_ir_has_expected_ops() {
+        let e = tiny_cnn();
+        // conv → pool → conv → pool → flatten → dense(logits).
+        assert_eq!(e.ops.len(), 6);
+        assert!(matches!(e.ops[0], Op::Conv2d { h: 8, w: 8, cin: 1, cout: 4, .. }));
+        assert!(matches!(e.ops[1], Op::MaxPool2x2 { h: 8, w: 8, c: 4 }));
+        assert!(matches!(e.ops[2], Op::Conv2d { h: 4, w: 4, cin: 4, cout: 8, .. }));
+        assert!(matches!(e.ops[3], Op::MaxPool2x2 { h: 4, w: 4, c: 8 }));
+        assert!(matches!(e.ops[4], Op::Flatten { dim: 32 }));
+        assert!(matches!(e.ops[5], Op::Dense { din: 32, dout: 2, relu: false, .. }));
+    }
+
+    #[test]
+    fn cifar_presets_build_natively() {
+        for v in ["cifar_cnn10", "cifar_cnn100", "mnist_cnn"] {
+            let e = NativeEngine::for_variant(v).unwrap();
+            assert_eq!(e.manifest().name, v);
+            assert!(e.ops.iter().any(|o| matches!(o, Op::Conv2d { .. })), "{v}");
         }
     }
 
     #[test]
+    fn maxpool_routes_gradient_to_first_max() {
+        // 2×2 input, 1 channel, batch 1: max at (0,1); ties break first.
+        let x = [1.0f32, 7.0, 3.0, 5.0];
+        let (out, idx) = maxpool_fwd(&x, 1, 2, 2, 1);
+        assert_eq!(out, vec![7.0]);
+        assert_eq!(idx, vec![1]);
+        let tied = [2.0f32, 2.0, 2.0, 2.0];
+        let (_, idx) = maxpool_fwd(&tied, 1, 2, 2, 1);
+        assert_eq!(idx, vec![0], "first max must win ties");
+    }
+
+    #[test]
+    fn im2col_col2im_are_adjoint() {
+        // <im2col(x), p> == <x, col2im(p)> for random x, p — the defining
+        // property of the pair used by the conv backward.
+        let (b, h, w, c) = (2usize, 4usize, 3usize, 2usize);
+        let mut rng = Rng::new(23);
+        let mut x = vec![0.0f32; b * h * w * c];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let patches = im2col(&x, b, h, w, c);
+        let mut p = vec![0.0f32; patches.len()];
+        rng.fill_normal(&mut p, 0.0, 1.0);
+        let mut back = vec![0.0f32; x.len()];
+        col2im(&p, b, h, w, c, &mut back);
+        let lhs: f64 = patches.iter().zip(p.iter()).map(|(&a, &b)| (a * b) as f64).sum();
+        let rhs: f64 = x.iter().zip(back.iter()).map(|(&a, &b)| (a * b) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+
+    #[test]
     fn eval_matches_train_loss_semantics() {
-        let e = tiny();
-        let (params, x, y) = rand_batch(&e, 7);
-        let (_, step) = e.train_step(&params, &x, &y, 0.0).unwrap();
-        let ev = e.eval_batch(&params, &x, &y).unwrap();
-        let sum: f32 = step.per_example.iter().sum();
-        assert!((ev.sum_loss - sum).abs() < 1e-4);
-        assert!(ev.correct >= 0.0 && ev.correct <= e.manifest().batch as f32);
+        for e in [tiny(), tiny_cnn()] {
+            let (params, x, y) = rand_batch(&e, 7);
+            let (_, step) = e.train_step(&params, &x, &y, 0.0).unwrap();
+            let ev = e.eval_batch(&params, &x, &y).unwrap();
+            let sum: f32 = step.per_example.iter().sum();
+            assert!((ev.sum_loss - sum).abs() < 1e-4);
+            assert!(ev.correct >= 0.0 && ev.correct <= e.manifest().batch as f32);
+        }
     }
 
     #[test]
@@ -512,6 +967,19 @@ mod tests {
     }
 
     #[test]
+    fn aggregate_rejects_non_finite_inputs() {
+        let e = tiny();
+        let d = e.manifest().param_count;
+        let stacked = vec![0.5f32; 3 * d];
+        let err = e.aggregate(&stacked, &[0.5, f32::NAN, 0.5], 1.0, 0.9).unwrap_err();
+        assert!(err.to_string().contains("worker 1"), "{err}");
+        assert!(e.aggregate(&stacked, &[0.5, f32::INFINITY, 0.5], 1.0, 0.9).is_err());
+        assert!(e.aggregate(&stacked, &[0.5, 0.5, 0.5], f32::NAN, 0.9).is_err());
+        assert!(e.aggregate(&stacked, &[0.5, 0.5, 0.5], 1.0, f32::NAN).is_err());
+        assert!(e.aggregate(&stacked, &[0.5, 0.5, 0.5], 1.0, 0.9).is_ok());
+    }
+
+    #[test]
     fn shape_checks_reject_bad_inputs() {
         let e = tiny();
         let (params, x, y) = rand_batch(&e, 13);
@@ -524,7 +992,9 @@ mod tests {
     }
 
     #[test]
-    fn rejects_conv_layout() {
+    fn rejects_inconsistent_conv_layout() {
+        // Dense fan-in 126 matches no pool count of a 4×4×4 conv output
+        // (64 with none, 16 with one) — the parser must say so.
         let m = Manifest::parse(
             r#"{
               "name": "convish", "param_count": 294, "batch": 2,
@@ -539,6 +1009,44 @@ mod tests {
             }"#,
         )
         .unwrap();
-        assert!(NativeEngine::new(m).is_err());
+        let err = NativeEngine::new(m).unwrap_err();
+        assert!(err.to_string().contains("max-pool count"), "{err}");
+    }
+
+    #[test]
+    fn rejects_non_3x3_kernels_and_conv_after_dense() {
+        let m = Manifest::parse(
+            r#"{
+              "name": "fivebyfive", "param_count": 134, "batch": 2,
+              "input_dim": 16, "input_shape": [4, 4, 1], "num_classes": 2,
+              "worker_counts": [2],
+              "param_layout": [
+                {"name": "conv0_w", "shape": [5, 5, 1, 4]},
+                {"name": "conv0_b", "shape": [4]},
+                {"name": "dense1_w", "shape": [14, 2]},
+                {"name": "dense1_b", "shape": [2]}
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert!(NativeEngine::new(m).unwrap_err().to_string().contains("3×3"));
+
+        let m = Manifest::parse(
+            r#"{
+              "name": "backwards", "param_count": 340, "batch": 2,
+              "input_dim": 16, "input_shape": [4, 4, 1], "num_classes": 2,
+              "worker_counts": [2],
+              "param_layout": [
+                {"name": "dense0_w", "shape": [16, 18]},
+                {"name": "dense0_b", "shape": [18]},
+                {"name": "conv1_w", "shape": [3, 3, 1, 3]},
+                {"name": "conv1_b", "shape": [3]},
+                {"name": "dense2_w", "shape": [1, 2]},
+                {"name": "dense2_b", "shape": [2]}
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert!(NativeEngine::new(m).unwrap_err().to_string().contains("precede"));
     }
 }

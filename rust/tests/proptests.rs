@@ -141,7 +141,9 @@ fn prop_host_aggregate_contracts_spread() {
 }
 
 #[test]
-fn prop_record_window_counts_bounded_by_m() {
+fn prop_record_window_counts_exactly_m() {
+    // Σ_{k<τ} is_recorded(k) == m (the clamped value) for every (τ, m, c)
+    // — the estimation windows must sample exactly the paper's m batches.
     let mut rng = Rng::new(0x3EC);
     for case in 0..CASES {
         let tau = 1 + rng.below(2000);
@@ -149,14 +151,16 @@ fn prop_record_window_counts_bounded_by_m() {
         let c = 1 + rng.below(16);
         let w = RecordWindow::new(tau, m, c);
         let count = w.count_per_period();
-        assert!(count >= 1, "case {case}: τ={tau} m={m} c={c} recorded nothing");
-        assert!(
-            count <= w.m + w.c, // per-block ceil can overshoot by < 1 per block
-            "case {case}: τ={tau} m={m} c={c}: recorded {count} > m+c"
+        assert_eq!(
+            count, w.m,
+            "case {case}: τ={tau} m={m} c={c} (clamped τ={} m={} c={}) recorded {count}",
+            w.tau, w.m, w.c
         );
-        // Recorded positions must be within the period.
-        for k in 0..w.tau {
-            let _ = w.is_recorded(k);
+        assert_eq!(count, w.recorded_count(), "case {case}");
+        // Periodicity: iteration k and k+τ agree.
+        for _ in 0..8 {
+            let k = rng.below(w.tau);
+            assert_eq!(w.is_recorded(k), w.is_recorded(k + w.tau), "case {case} k={k}");
         }
     }
 }
