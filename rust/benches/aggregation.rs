@@ -1,18 +1,28 @@
 //! Micro-bench: the weighted-aggregation boundary (the paper's hot
 //! communication step) — the backend kernel (native panel kernel, or the
 //! PJRT Pallas artifact when built with `--features pjrt` and artifacts
-//! exist) vs the host fallback — plus the weight evaluation itself.
-//! Informs the DESIGN.md §Perf choice of when each path pays off.
+//! exist) vs the host fallback — plus the weight evaluation itself and
+//! the kernel-subsystem row-combine it is built on. Informs the
+//! DESIGN.md §Perf choice of when each path pays off; stats land in the
+//! `BENCH_native.json` perf trajectory.
 
 use wasgd::algorithms::host_aggregate;
-use wasgd::bench::{black_box, Bencher};
+use wasgd::bench::{self, black_box, Bencher};
 use wasgd::config::BackendKind;
+use wasgd::kernels::Gemm;
 use wasgd::linalg;
 use wasgd::rng::Rng;
 use wasgd::runtime::{backend_for_variant, Backend as _};
+use wasgd::util::Args;
 
-fn main() {
-    let mut b = Bencher::new();
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env()?;
+    args.accept("bench");
+    let quick = args.bool_flag("quick") || Bencher::env_quick();
+    // Resolve 0 = all cores up front so entry tags record the real count.
+    let threads = Gemm::new(args.num_flag("threads", 2usize)?).threads();
+    args.finish()?;
+    let mut b = Bencher::with_quick(quick);
     let mut rng = Rng::new(1);
 
     // Host weight evaluation.
@@ -41,11 +51,39 @@ fn main() {
         }
     }
 
+    // The row-combine the aggregation is built on, single vs threaded.
+    {
+        let d = 235_146usize;
+        let p = 4usize;
+        let rows_flat: Vec<Vec<f32>> = (0..p)
+            .map(|_| {
+                let mut v = vec![0.0f32; d];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let refs: Vec<&[f32]> = rows_flat.iter().map(|r| r.as_slice()).collect();
+        let wts = [0.3f32, 0.2, 0.4, 0.1];
+        let mut agg = vec![0.0f32; d];
+        let single = Gemm::single();
+        b.bench_with_threads(&format!("combine_rows mnist_mlp p={p} t=1"), 1, || {
+            single.combine_rows(&mut agg, &refs, &wts);
+            black_box(agg[0]);
+        });
+        if threads > 1 {
+            let g = Gemm::new(threads);
+            b.bench_with_threads(&format!("combine_rows mnist_mlp p={p} t={threads}"), threads, || {
+                g.combine_rows(&mut agg, &refs, &wts);
+                black_box(agg[0]);
+            });
+        }
+    }
+
     // Backend kernel path: native always works; with `--features pjrt`
     // and artifacts on disk, Auto picks the Pallas artifact instead.
     let root = std::path::Path::new("artifacts");
     for variant in ["tiny_mlp", "mnist_mlp"] {
-        match backend_for_variant(root, variant, BackendKind::Auto) {
+        match backend_for_variant(root, variant, BackendKind::Auto, threads) {
             Ok(engine) => {
                 let d = engine.manifest().param_count;
                 for p in [2usize, 4, 8] {
@@ -58,13 +96,17 @@ fn main() {
                     // Warm the executable cache.
                     let _ = engine.aggregate(&stacked, &h, 1.0, 0.9).unwrap();
                     let name = engine.name();
-                    b.bench(&format!("{name}_aggregate {variant} p={p} (D={d})"), || {
-                        black_box(
-                            engine
-                                .aggregate(black_box(&stacked), black_box(&h), 1.0, 0.9)
-                                .unwrap(),
-                        );
-                    });
+                    b.bench_with_threads(
+                        &format!("{name}_aggregate {variant} p={p} (D={d})"),
+                        threads,
+                        || {
+                            black_box(
+                                engine
+                                    .aggregate(black_box(&stacked), black_box(&h), 1.0, 0.9)
+                                    .unwrap(),
+                            );
+                        },
+                    );
                 }
             }
             Err(e) => eprintln!("skipping {variant}: {e}"),
@@ -72,4 +114,8 @@ fn main() {
     }
 
     b.summary("aggregation boundary");
+    let path = bench::bench_json_path();
+    bench::append_bench_json(&path, "aggregation", quick, b.results())?;
+    println!("perf trajectory → {}", path.display());
+    Ok(())
 }

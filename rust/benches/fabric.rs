@@ -2,14 +2,20 @@
 //! and the deterministic PRNG — the coordinator's non-PJRT hot loop.
 //! These must stay negligible next to a PJRT step (~ms): the simulation
 //! layer may not become the bottleneck (DESIGN.md §Perf L3 target).
+//! Appends its stats to the `BENCH_native.json` perf trajectory.
 
-use wasgd::bench::{black_box, Bencher};
+use wasgd::bench::{self, black_box, Bencher};
 use wasgd::cluster::{ComputeModel, FabricConfig, SimCluster};
 use wasgd::data::order::{delta_blocked_order, OrderState, RecordWindow};
 use wasgd::rng::Rng;
+use wasgd::util::Args;
 
-fn main() {
-    let mut b = Bencher::new();
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env()?;
+    args.accept("bench");
+    let quick = args.bool_flag("quick") || Bencher::env_quick();
+    args.finish()?;
+    let mut b = Bencher::with_quick(quick);
 
     // PRNG primitives.
     let mut rng = Rng::new(1);
@@ -58,4 +64,8 @@ fn main() {
     });
 
     b.summary("fabric & substrates");
+    let path = bench::bench_json_path();
+    bench::append_bench_json(&path, "fabric", quick, b.results())?;
+    println!("perf trajectory → {}", path.display());
+    Ok(())
 }

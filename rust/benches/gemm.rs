@@ -1,0 +1,127 @@
+//! Micro-bench: the blocked GEMM kernel subsystem vs its naive
+//! reference — the anchor entry of the `BENCH_native.json` perf
+//! trajectory. The acceptance bar for the kernel work is measured here:
+//! blocked at `threads=2` must clear ≥2× the naive reference median on
+//! a 256×256×256 GEMM — recorded precisely in the JSON, and asserted
+//! *loosely* (≥1.3×) in `--quick` mode so CI's bench-smoke job catches
+//! outright regressions without flaking on noisy shared runners.
+//!
+//! Covers the forward product (`matmul_bias`), both backward products
+//! (`matmul_tn_acc`, `matmul_nt`) and an im2col-shaped panel (the conv
+//! hot path: many rows, tiny K); the aggregation row-combine boundary
+//! lives in `benches/aggregation.rs`.
+
+use wasgd::bench::{self, black_box, Bencher};
+use wasgd::kernels::{reference, Gemm};
+use wasgd::rng::Rng;
+use wasgd::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env()?;
+    args.accept("bench"); // cargo appends --bench to harness=false bins
+    let quick = args.bool_flag("quick") || Bencher::env_quick();
+    let max_threads = args.num_flag("max-threads", 4usize)?;
+    args.finish()?;
+    let mut b = Bencher::with_quick(quick);
+    let mut rng = Rng::new(7);
+
+    // The acceptance shape: 256³.
+    let (m, k, n) = (256usize, 256usize, 256usize);
+    let mut a = vec![0.0f32; m * k];
+    let mut w = vec![0.0f32; k * n];
+    let mut bias = vec![0.0f32; n];
+    rng.fill_normal(&mut a, 0.0, 1.0);
+    rng.fill_normal(&mut w, 0.0, 1.0);
+    rng.fill_normal(&mut bias, 0.0, 1.0);
+    let mut z = vec![0.0f32; m * n];
+
+    let naive_s = b
+        .bench("gemm naive 256x256x256", || {
+            reference::matmul_bias(&a, &w, &bias, m, k, n, &mut z);
+            black_box(z[0]);
+        })
+        .median_s;
+
+    let mut blocked_t2_s = f64::NAN;
+    for t in [1usize, 2, 4] {
+        if t > max_threads.max(1) {
+            continue;
+        }
+        let g = Gemm::new(t);
+        let s = b
+            .bench_with_threads(&format!("gemm blocked 256x256x256 t={t}"), t, || {
+                g.matmul_bias(&a, &w, &bias, m, k, n, &mut z);
+                black_box(z[0]);
+            })
+            .median_s;
+        if t == 2 {
+            blocked_t2_s = s;
+        }
+    }
+
+    // Backward products at the same shape (threads = 2).
+    {
+        let g = Gemm::new(2.min(max_threads.max(1)));
+        let t = g.threads();
+        let mut gw = vec![0.0f32; k * n];
+        b.bench_with_threads(&format!("gemm tn_acc 256x256x256 t={t}"), t, || {
+            g.matmul_tn_acc(&a, &z, m, k, n, &mut gw);
+            black_box(gw[0]);
+        });
+        let mut da = vec![0.0f32; m * k];
+        b.bench_with_threads(&format!("gemm nt 256x256x256 t={t}"), t, || {
+            g.matmul_nt(&z, &w, m, n, k, &mut da);
+            black_box(da[0]);
+        });
+    }
+
+    // im2col-shaped panel: rows = B·H·W of a 32×32 conv layer, K = 9·cin.
+    {
+        let (rows, kk, cc) = (8192usize, 27usize, 32usize);
+        let mut patches = vec![0.0f32; rows * kk];
+        let mut cw = vec![0.0f32; kk * cc];
+        let cb = vec![0.1f32; cc];
+        rng.fill_normal(&mut patches, 0.0, 1.0);
+        rng.fill_normal(&mut cw, 0.0, 1.0);
+        let mut cz = vec![0.0f32; rows * cc];
+        b.bench("gemm naive im2col 8192x27x32", || {
+            reference::matmul_bias(&patches, &cw, &cb, rows, kk, cc, &mut cz);
+            black_box(cz[0]);
+        });
+        for t in [1usize, 2] {
+            if t > max_threads.max(1) {
+                continue;
+            }
+            let g = Gemm::new(t);
+            b.bench_with_threads(&format!("gemm blocked im2col 8192x27x32 t={t}"), t, || {
+                g.matmul_bias(&patches, &cw, &cb, rows, kk, cc, &mut cz);
+                black_box(cz[0]);
+            });
+        }
+    }
+
+    // (The aggregation row-combine boundary is benched by
+    // `benches/aggregation.rs`, which owns that suite.)
+
+    let speedup = naive_s / blocked_t2_s;
+    println!("\nblocked t=2 speedup over naive on 256³: {speedup:.2}× (acceptance bar: ≥2×)");
+    if quick && max_threads >= 2 {
+        // Loose smoke gate — quick mode measures from a handful of
+        // iterations on shared CI cores, so only an outright regression
+        // (blocked barely beating naive) should fail the job. The ≥2×
+        // acceptance bar is read off the precise medians recorded in
+        // BENCH_native.json by a full `cargo bench --bench gemm`.
+        assert!(
+            speedup >= 1.3,
+            "blocked t=2 must clearly beat the naive reference on 256³ (≥1.3× smoke gate, \
+             ≥2× acceptance bar), got {speedup:.2}× (naive {naive_s:.5}s, blocked \
+             {blocked_t2_s:.5}s)"
+        );
+    }
+
+    b.summary("gemm kernels");
+    let path = bench::bench_json_path();
+    bench::append_bench_json(&path, "gemm", quick, b.results())?;
+    println!("perf trajectory → {}", path.display());
+    Ok(())
+}

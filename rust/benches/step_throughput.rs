@@ -4,23 +4,31 @@
 //! §Perf L3: the coordinator overhead around `train_step` must stay in
 //! the noise. Runs on whichever backend Auto resolves to (native without
 //! artifacts; PJRT with `--features pjrt` + artifacts). `cifar_cnn10`
-//! exercises the native conv path (im2col GEMMs) — no longer skipped on
-//! hermetic builds.
+//! exercises the native conv path (im2col GEMMs through the blocked
+//! kernel subsystem — `--threads N` sets the intra-op budget). Appends
+//! its stats to the `BENCH_native.json` perf trajectory.
 
-use wasgd::bench::{black_box, Bencher};
+use wasgd::bench::{self, black_box, Bencher};
 use wasgd::config::{AlgoKind, BackendKind, ExperimentConfig};
 use wasgd::coordinator::run_experiment_full;
 use wasgd::data::synth::DatasetKind;
 use wasgd::rng::Rng;
 use wasgd::runtime::{backend_for_variant, Backend as _};
+use wasgd::util::Args;
 
-fn main() {
-    let mut b = Bencher::new();
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env()?;
+    args.accept("bench");
+    let quick = args.bool_flag("quick") || Bencher::env_quick();
+    // Resolve 0 = all cores up front so entry tags record the real count.
+    let threads = wasgd::kernels::Gemm::new(args.num_flag("threads", 2usize)?).threads();
+    args.finish()?;
+    let mut b = Bencher::with_quick(quick);
     let root = std::path::Path::new("artifacts");
     let mut rng = Rng::new(1);
 
     for variant in ["tiny_mlp", "mnist_mlp", "cifar_cnn10"] {
-        let engine = match backend_for_variant(root, variant, BackendKind::Auto) {
+        let engine = match backend_for_variant(root, variant, BackendKind::Auto, threads) {
             Ok(e) => e,
             Err(e) => {
                 eprintln!("skipping {variant}: {e}");
@@ -34,14 +42,18 @@ fn main() {
         let y: Vec<i32> = (0..m.batch).map(|_| rng.below(m.num_classes) as i32).collect();
         // Warm-up/compile.
         let _ = engine.train_step(&params, &x, &y, 0.01).unwrap();
-        b.bench(&format!("train_step {variant} (D={})", m.param_count), || {
-            let (next, out) = engine
-                .train_step(black_box(&params), black_box(&x), black_box(&y), 0.01)
-                .unwrap();
-            params = next;
-            black_box(out.loss);
-        });
-        b.bench(&format!("eval_batch {variant}"), || {
+        b.bench_with_threads(
+            &format!("train_step {variant} (D={})", m.param_count),
+            threads,
+            || {
+                let (next, out) = engine
+                    .train_step(black_box(&params), black_box(&x), black_box(&y), 0.01)
+                    .unwrap();
+                params = next;
+                black_box(out.loss);
+            },
+        );
+        b.bench_with_threads(&format!("eval_batch {variant}"), threads, || {
             black_box(engine.eval_batch(black_box(&params), &x, &y).unwrap());
         });
     }
@@ -65,4 +77,8 @@ fn main() {
     }
 
     b.summary("step throughput");
+    let path = bench::bench_json_path();
+    bench::append_bench_json(&path, "step_throughput", quick, b.results())?;
+    println!("perf trajectory → {}", path.display());
+    Ok(())
 }

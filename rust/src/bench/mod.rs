@@ -1,22 +1,52 @@
 //! Micro-benchmark harness — substrate replacing `criterion` in the
 //! offline build. Provides warm-up, calibrated iteration counts, robust
-//! statistics (median + MAD), and a criterion-like report format so
-//! `cargo bench` output stays familiar.
+//! statistics (median + MAD), a criterion-like report format so
+//! `cargo bench` output stays familiar, and the repo's *persisted perf
+//! trajectory*: every bench binary appends its stats to
+//! `BENCH_native.json` at the repo root via [`append_bench_json`], one
+//! run record per (suite, git rev), so successive PRs accumulate a
+//! machine-readable speed history.
+//!
+//! Quick mode (`--quick` on the bench binaries, or the
+//! `WASGD_BENCH_QUICK` env var) shrinks warm-up/measure budgets so a
+//! whole suite finishes in a couple of seconds — what CI's bench-smoke
+//! job runs before uploading the JSON as an artifact.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::util::json::Json;
 
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchStats {
     pub name: String,
+    /// Raw wall-seconds of each measured sample. Every sample runs
+    /// `iters_per_sample` units of work, so these are *per-sample*
+    /// times — the per-iteration statistics below divide by
+    /// `iters_per_sample` exactly once.
     pub samples: Vec<f64>,
+    /// Median seconds per *iteration* (one unit of work).
     pub median_s: f64,
+    /// Median absolute deviation, per iteration.
     pub mad_s: f64,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
     pub iters_per_sample: u64,
+    /// Intra-op thread budget the benched code ran with (1 when the
+    /// knob does not apply).
+    pub threads: usize,
 }
 
 impl BenchStats {
+    /// Units of work per second. `samples` hold per-*sample* times
+    /// covering `iters_per_sample` iterations each, so the sample median
+    /// must be divided by `iters_per_sample` before inverting (done once
+    /// when `median_s` is computed) — inverting the raw sample median
+    /// would report per-sample throughput, under-counting ops/s by a
+    /// factor of `iters_per_sample`.
     pub fn throughput_per_s(&self) -> f64 {
         if self.median_s > 0.0 {
             1.0 / self.median_s
@@ -56,6 +86,7 @@ pub struct Bencher {
     pub measure_time: Duration,
     pub warmup_time: Duration,
     pub sample_count: usize,
+    quick: bool,
     results: Vec<BenchStats>,
 }
 
@@ -66,19 +97,46 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Honour the conventional quick-mode env var; bench binaries OR it
+    /// with their `--quick` flag via [`Bencher::with_quick`].
     pub fn new() -> Self {
-        // Honour the conventional quick-mode env var.
-        let quick = std::env::var("WASGD_BENCH_QUICK").is_ok();
+        Self::with_quick(Self::env_quick())
+    }
+
+    /// Is the `WASGD_BENCH_QUICK` env var set?
+    pub fn env_quick() -> bool {
+        std::env::var_os("WASGD_BENCH_QUICK").is_some()
+    }
+
+    /// Explicit quick-mode selection (`--quick` CLI flag). Quick budgets
+    /// keep a whole suite under ~2 s — the CI smoke configuration.
+    pub fn with_quick(quick: bool) -> Self {
         Self {
-            measure_time: Duration::from_millis(if quick { 200 } else { 1500 }),
-            warmup_time: Duration::from_millis(if quick { 50 } else { 300 }),
-            sample_count: if quick { 5 } else { 15 },
+            measure_time: Duration::from_millis(if quick { 60 } else { 1500 }),
+            warmup_time: Duration::from_millis(if quick { 15 } else { 300 }),
+            sample_count: if quick { 3 } else { 15 },
+            quick,
             results: Vec::new(),
         }
     }
 
+    pub fn is_quick(&self) -> bool {
+        self.quick
+    }
+
     /// Benchmark `f`, which performs ONE unit of work per call.
-    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchStats {
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchStats {
+        self.bench_with_threads(name, 1, f)
+    }
+
+    /// Benchmark `f` and tag the stats with the intra-op thread budget
+    /// it ran under (recorded into the `BENCH_native.json` entries).
+    pub fn bench_with_threads<F: FnMut()>(
+        &mut self,
+        name: &str,
+        threads: usize,
+        mut f: F,
+    ) -> &BenchStats {
         // Warm-up + calibration: how many iters fit in one sample slot?
         let warm_start = Instant::now();
         let mut warm_iters = 0u64;
@@ -90,29 +148,33 @@ impl Bencher {
         let slot = self.measure_time.as_secs_f64() / self.sample_count as f64;
         let iters = ((slot / per_iter.max(1e-12)) as u64).clamp(1, 1_000_000);
 
+        // Samples are raw per-sample wall times; the per-iteration
+        // statistics divide by `iters` exactly once, below.
         let mut samples = Vec::with_capacity(self.sample_count);
         for _ in 0..self.sample_count {
             let t0 = Instant::now();
             for _ in 0..iters {
                 f();
             }
-            samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+            samples.push(t0.elapsed().as_secs_f64());
         }
         let mut sorted = samples.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let median = sorted[sorted.len() / 2];
-        let mut devs: Vec<f64> = sorted.iter().map(|&v| (v - median).abs()).collect();
+        let median_sample = sorted[sorted.len() / 2];
+        let mut devs: Vec<f64> = sorted.iter().map(|&v| (v - median_sample).abs()).collect();
         devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mad = devs[devs.len() / 2];
-        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let mad_sample = devs[devs.len() / 2];
+        let mean_sample = samples.iter().sum::<f64>() / samples.len() as f64;
 
+        let scale = 1.0 / iters as f64;
         let stats = BenchStats {
             name: name.to_string(),
             samples,
-            median_s: median,
-            mad_s: mad,
-            mean_s: mean,
+            median_s: median_sample * scale,
+            mad_s: mad_sample * scale,
+            mean_s: mean_sample * scale,
             iters_per_sample: iters,
+            threads,
         };
         println!("{}", stats.report());
         self.results.push(stats);
@@ -138,24 +200,154 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Short git revision of the working tree, or `"unknown"` outside a git
+/// checkout — tags every `BENCH_native.json` run record so the perf
+/// trajectory is attributable PR by PR.
+pub fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// `BENCH_native.json` at the repo root: the nearest ancestor of the
+/// current directory containing `.git` (bench binaries run from the
+/// crate dir, one level down), falling back to the current directory.
+pub fn bench_json_path() -> PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        if dir.join(".git").exists() {
+            return dir.join("BENCH_native.json");
+        }
+        if !dir.pop() {
+            return PathBuf::from("BENCH_native.json");
+        }
+    }
+}
+
+/// Append one suite's stats to the perf-trajectory file.
+///
+/// Schema (`schema: 1`): `{ schema, runs: [ { suite, git_rev, quick,
+/// entries: [ { name, median_s, mad_s, iters, threads,
+/// throughput_per_s } ] } ] }`. Re-running the same suite at the same
+/// revision *and the same quick flag* replaces its record (benches are
+/// idempotent per configuration) — a `--quick` smoke never clobbers a
+/// precise full-run record at the same rev, or vice versa. Records from
+/// other suites, revisions and modes are preserved, which is what turns
+/// the file into a speed *history* across PRs; when no git revision can
+/// be resolved (`"unknown"`), records only accumulate, never replace,
+/// so a git-less environment cannot silently erase history spanning
+/// unidentifiable revisions. An unreadable or
+/// unparseable existing file is replaced rather than an error — the
+/// trajectory must never block a bench run.
+pub fn append_bench_json(
+    path: &Path,
+    suite: &str,
+    quick: bool,
+    stats: &[BenchStats],
+) -> Result<()> {
+    use std::collections::BTreeMap;
+    let rev = git_rev();
+
+    let mut runs: Vec<Json> = Vec::new();
+    if let Ok(existing) = std::fs::read_to_string(path) {
+        if let Ok(doc) = Json::parse(&existing) {
+            if let Some(old) = doc.get("runs").and_then(|r| r.as_arr()) {
+                for run in old {
+                    // Replacement needs a real revision: with git
+                    // unresolvable every run would tag "unknown" and
+                    // silently erase the history it is meant to extend,
+                    // so "unknown" records always accumulate.
+                    let same = rev != "unknown"
+                        && run.get("suite").and_then(|s| s.as_str()) == Some(suite)
+                        && run.get("git_rev").and_then(|s| s.as_str()) == Some(rev.as_str())
+                        && run.get("quick") == Some(&Json::Bool(quick));
+                    if !same {
+                        runs.push(run.clone());
+                    }
+                }
+            }
+        }
+    }
+
+    let entries: Vec<Json> = stats
+        .iter()
+        .map(|s| {
+            let mut e = BTreeMap::new();
+            e.insert("name".to_string(), Json::Str(s.name.clone()));
+            e.insert("median_s".to_string(), Json::Num(s.median_s));
+            e.insert("mad_s".to_string(), Json::Num(s.mad_s));
+            e.insert("iters".to_string(), Json::Num(s.iters_per_sample as f64));
+            e.insert("threads".to_string(), Json::Num(s.threads as f64));
+            e.insert("throughput_per_s".to_string(), Json::Num(s.throughput_per_s()));
+            Json::Obj(e)
+        })
+        .collect();
+    let mut run = BTreeMap::new();
+    run.insert("suite".to_string(), Json::Str(suite.to_string()));
+    run.insert("git_rev".to_string(), Json::Str(rev));
+    run.insert("quick".to_string(), Json::Bool(quick));
+    run.insert("entries".to_string(), Json::Arr(entries));
+    runs.push(Json::Obj(run));
+
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), Json::Num(1.0));
+    doc.insert("runs".to_string(), Json::Arr(runs));
+    std::fs::write(path, Json::Obj(doc).serialize())?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn bench_measures_something() {
-        std::env::set_var("WASGD_BENCH_QUICK", "1");
-        let mut b = Bencher::new();
+    fn tiny_bencher() -> Bencher {
+        let mut b = Bencher::with_quick(true);
         b.measure_time = Duration::from_millis(30);
         b.warmup_time = Duration::from_millis(5);
         b.sample_count = 3;
+        b
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = tiny_bencher();
+        assert!(b.is_quick());
         let mut acc = 0u64;
         let st = b.bench("noop-ish", || {
             acc = black_box(acc.wrapping_add(1));
         });
         assert!(st.median_s > 0.0);
         assert!(st.median_s < 1e-3);
+        assert_eq!(st.threads, 1);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn per_iteration_stats_divide_raw_samples_once() {
+        // The throughput-accounting contract: `samples` are raw
+        // per-sample times, `median_s` is the sample median over
+        // `iters_per_sample`, and ops/s inverts the per-iteration value
+        // (inverting the raw sample median would undercount by ×iters).
+        let mut b = tiny_bencher();
+        let mut acc = 0u64;
+        let st = b.bench("accounting", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        let mut sorted = st.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let raw_median = sorted[sorted.len() / 2];
+        let per_iter = raw_median / st.iters_per_sample as f64;
+        assert!((st.median_s - per_iter).abs() <= 1e-12 * per_iter.max(1.0));
+        assert!((st.throughput_per_s() - 1.0 / per_iter).abs() <= 1e-6 * (1.0 / per_iter));
+        // This workload is far sub-microsecond: many iters per sample,
+        // so the two interpretations differ by orders of magnitude.
+        assert!(st.iters_per_sample > 10);
     }
 
     #[test]
@@ -164,5 +356,65 @@ mod tests {
         assert!(fmt_time(2e-3).ends_with("ms"));
         assert!(fmt_time(2e-6).ends_with("µs"));
         assert!(fmt_time(2e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn quick_bench_emits_well_formed_trajectory_json() {
+        // The bench-smoke contract: a quick run writes BENCH_native.json
+        // with the documented schema, same-rev reruns replace their
+        // suite's record, and other suites accumulate.
+        let mut b = tiny_bencher();
+        let mut acc = 0u64;
+        b.bench_with_threads("smoke kernel t=2", 2, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+
+        let dir = std::env::temp_dir().join(format!("wasgd_bench_json_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_native.json");
+        let _ = std::fs::remove_file(&path);
+
+        append_bench_json(&path, "smoke", true, b.results()).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.req_usize("schema").unwrap(), 1);
+        let runs = doc.req_arr("runs").unwrap();
+        assert_eq!(runs.len(), 1);
+        let run = &runs[0];
+        assert_eq!(run.req_str("suite").unwrap(), "smoke");
+        assert!(!run.req_str("git_rev").unwrap().is_empty());
+        assert_eq!(run.get("quick"), Some(&Json::Bool(true)));
+        let entries = run.req_arr("entries").unwrap();
+        assert_eq!(entries.len(), 1);
+        let e = &entries[0];
+        assert_eq!(e.req_str("name").unwrap(), "smoke kernel t=2");
+        assert_eq!(e.req_usize("threads").unwrap(), 2);
+        assert!(e.get("median_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert!(e.get("mad_s").and_then(|v| v.as_f64()).is_some());
+        assert!(e.req_usize("iters").unwrap() >= 1);
+        assert!(e.get("throughput_per_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+
+        // Replacement semantics need a resolvable git rev ("unknown"
+        // records always accumulate so a git-less env can't erase
+        // history); the repo's own test run always has one.
+        if git_rev() != "unknown" {
+            // Same suite + same rev + same mode → replaced, not duplicated.
+            append_bench_json(&path, "smoke", true, b.results()).unwrap();
+            let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+            assert_eq!(doc.req_arr("runs").unwrap().len(), 1);
+
+            // A different suite accumulates alongside.
+            append_bench_json(&path, "smoke2", false, b.results()).unwrap();
+            let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+            assert_eq!(doc.req_arr("runs").unwrap().len(), 2);
+
+            // A full (non-quick) run of the same suite at the same rev
+            // does NOT clobber the quick record — mode is part of the
+            // identity.
+            append_bench_json(&path, "smoke", false, b.results()).unwrap();
+            let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+            assert_eq!(doc.req_arr("runs").unwrap().len(), 3);
+        }
+
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

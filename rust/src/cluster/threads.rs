@@ -12,11 +12,12 @@
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::config::ExperimentConfig;
 use crate::data::synth::SynthConfig;
 use crate::data::Dataset;
+use crate::kernels::Gemm;
 use crate::linalg;
 use crate::rng::Rng;
 use crate::runtime::{load_backend, Backend as _};
@@ -101,7 +102,25 @@ pub fn run_wasgd_plus_threaded(
     total_steps: usize,
 ) -> Result<ThreadedOutcome> {
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
-    let dataset: Arc<Dataset> = Arc::new(SynthConfig::preset(cfg.dataset).build(cfg.seed));
+    // Probe the backend once on this thread so the synthetic dataset can
+    // match the variant's input geometry (e.g. `tiny_cnn`'s 8×8×1 = 64
+    // against the tiny preset's 16 raw features) — the probe is dropped
+    // before any worker spawns.
+    let mut synth = SynthConfig::preset(cfg.dataset);
+    {
+        let probe = load_backend(cfg)?;
+        let m = probe.manifest();
+        ensure!(
+            synth.classes <= m.num_classes,
+            "dataset {} has {} classes but variant {} emits {} logits",
+            cfg.dataset.name(),
+            synth.classes,
+            m.name,
+            m.num_classes
+        );
+        synth.dim = m.input_dim;
+    }
+    let dataset: Arc<Dataset> = Arc::new(synth.build(cfg.seed));
     let gather: Arc<AllGather<(f32, Vec<f32>)>> = Arc::new(AllGather::new(cfg.p));
     let started = std::time::Instant::now();
 
@@ -113,6 +132,10 @@ pub fn run_wasgd_plus_threaded(
         handles.push(thread::spawn(move || -> Result<(f32, Vec<f32>)> {
             // Backend is built *inside* the thread: PjRtClient is !Send.
             let engine = load_backend(&cfg)?;
+            // Intra-op threads for the local β-negotiation row-combine —
+            // bit-identical at any count, so `--threads` stays pure
+            // throughput here too.
+            let gemm = Gemm::new(cfg.threads);
             let b = engine.manifest().batch;
             let mut params = engine.manifest().init_params(cfg.seed ^ 0x9a9a);
             let mut rng = Rng::new(cfg.seed).child(100 + i as u64);
@@ -150,7 +173,7 @@ pub fn run_wasgd_plus_threaded(
                     {
                         let rows: Vec<&[f32]> =
                             cohort.iter().map(|(_, p)| p.as_slice()).collect();
-                        linalg::weighted_sum(&mut agg, &rows, &theta);
+                        gemm.combine_rows(&mut agg, &rows, &theta);
                     }
                     linalg::lerp_into(&mut params, cfg.beta, &agg);
                     energy = 0.0;

@@ -134,6 +134,12 @@ pub struct ExperimentConfig {
     pub c: usize,
     /// Number of order parts n (Algorithm 1).
     pub n_parts: usize,
+    /// Intra-op GEMM threads per backend instance (`--threads`; 0 = all
+    /// available cores). Plumbed through backend construction into
+    /// [`crate::kernels::Gemm`], whose row-panel partitioning makes the
+    /// kernel outputs bit-identical at every value — the knob trades
+    /// wall-clock only, never numerics.
+    pub threads: usize,
     /// Learning rate η.
     pub lr: f32,
     /// Epoch budget (fractional allowed).
@@ -176,6 +182,7 @@ impl Default for ExperimentConfig {
             m: 10,
             c: 2,
             n_parts: 4,
+            threads: 1,
             lr: 0.05,
             epochs: 2.0,
             eval_every: 50,
@@ -356,5 +363,8 @@ mod tests {
         }
         assert_eq!(BackendKind::parse("tpu"), None);
         assert_eq!(ExperimentConfig::default().backend, BackendKind::Auto);
+        // Intra-op threading defaults to 1: opt-in throughput, and the
+        // bit-determinism guarantee makes any other value safe.
+        assert_eq!(ExperimentConfig::default().threads, 1);
     }
 }

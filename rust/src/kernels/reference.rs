@@ -1,0 +1,152 @@
+//! Naive (unblocked, single-threaded) kernels — the *reference
+//! semantics* of the GEMM subsystem.
+//!
+//! These are the original `runtime::native` triple loops, kept verbatim
+//! as the ground truth the blocked/threaded [`Gemm`](super::Gemm) paths
+//! are property-tested against (`tests/gemm_props.rs` asserts ≤1e-5
+//! agreement across random shapes, and the blocked kernels preserve the
+//! reference's per-element accumulation order — ascending k — so the
+//! agreement is in practice bit-exact). They are also what the
+//! `benches/gemm.rs` trajectory measures speedups *against*, so do not
+//! optimise them: their value is being obviously correct and stable
+//! across PRs.
+
+/// z[r,c] = Σⱼ a[r,j]·w[j,c] + b[c] — unit-stride inner loops so the
+/// autovectoriser gets contiguous rows of `w`.
+pub fn matmul_bias(a: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize, z: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(b.len(), n);
+    debug_assert_eq!(z.len(), m * n);
+    for r in 0..m {
+        let zrow = &mut z[r * n..(r + 1) * n];
+        zrow.copy_from_slice(b);
+        let arow = &a[r * k..(r + 1) * k];
+        for (j, &aj) in arow.iter().enumerate() {
+            if aj == 0.0 {
+                continue; // ReLU/padding sparsity: skip dead activations
+            }
+            let wrow = &w[j * n..(j + 1) * n];
+            for (zc, &wc) in zrow.iter_mut().zip(wrow.iter()) {
+                *zc += aj * wc;
+            }
+        }
+    }
+}
+
+/// gw[j,c] += Σᵣ a[r,j]·dz[r,c] — the Aᵀ·dZ weight-gradient product,
+/// accumulating into `gw` (the flat gradient vector is zeroed once by
+/// the caller and each layer deposits its block exactly once).
+pub fn matmul_tn_acc(a: &[f32], dz: &[f32], rows: usize, din: usize, dout: usize, gw: &mut [f32]) {
+    debug_assert_eq!(a.len(), rows * din);
+    debug_assert_eq!(dz.len(), rows * dout);
+    debug_assert_eq!(gw.len(), din * dout);
+    for r in 0..rows {
+        let arow = &a[r * din..(r + 1) * din];
+        let dzrow = &dz[r * dout..(r + 1) * dout];
+        for (j, &aj) in arow.iter().enumerate() {
+            if aj == 0.0 {
+                continue;
+            }
+            let grow = &mut gw[j * dout..(j + 1) * dout];
+            for (g, &d) in grow.iter_mut().zip(dzrow.iter()) {
+                *g += aj * d;
+            }
+        }
+    }
+}
+
+/// da[r,j] = Σ꜀ dz[r,c]·w[j,c] — the dZ·Wᵀ input-gradient product
+/// (overwrites `da`). Both operands are read along contiguous rows.
+pub fn matmul_nt(dz: &[f32], w: &[f32], rows: usize, dout: usize, din: usize, da: &mut [f32]) {
+    debug_assert_eq!(dz.len(), rows * dout);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(da.len(), rows * din);
+    for r in 0..rows {
+        let dzrow = &dz[r * dout..(r + 1) * dout];
+        let darow = &mut da[r * din..(r + 1) * din];
+        for (j, dv) in darow.iter_mut().enumerate() {
+            let wrow = &w[j * dout..(j + 1) * dout];
+            let mut acc = 0.0f32;
+            for (&d, &wc) in dzrow.iter().zip(wrow.iter()) {
+                acc += d * wc;
+            }
+            *dv = acc;
+        }
+    }
+}
+
+/// out[c] = Σᵢ wts[i]·rows[i][c] — the aggregation row-combine
+/// ((1×p)·(p×D) GEMM), overwriting `out`. Accumulation runs over `i`
+/// ascending per column, the order the blocked path must reproduce.
+pub fn combine_rows(out: &mut [f32], rows: &[&[f32]], wts: &[f32]) {
+    debug_assert_eq!(rows.len(), wts.len());
+    out.fill(0.0);
+    for (row, &wi) in rows.iter().zip(wts.iter()) {
+        debug_assert_eq!(row.len(), out.len());
+        for (o, &x) in out.iter_mut().zip(row.iter()) {
+            *o += wi * x;
+        }
+    }
+}
+
+/// gb[c] += Σᵣ dz[r,c] — bias-gradient column sum.
+pub fn col_sum_acc(dz: &[f32], rows: usize, dout: usize, gb: &mut [f32]) {
+    debug_assert_eq!(dz.len(), rows * dout);
+    debug_assert_eq!(gb.len(), dout);
+    for r in 0..rows {
+        let dzrow = &dz[r * dout..(r + 1) * dout];
+        for (g, &d) in gb.iter_mut().zip(dzrow.iter()) {
+            *g += d;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_bias_known_values() {
+        // [1 2; 3 4] · [1 0; 0 1] + [10, 20]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let w = [1.0, 0.0, 0.0, 1.0];
+        let b = [10.0, 20.0];
+        let mut z = [0.0f32; 4];
+        matmul_bias(&a, &w, &b, 2, 2, 2, &mut z);
+        assert_eq!(z, [11.0, 22.0, 13.0, 24.0]);
+    }
+
+    #[test]
+    fn tn_acc_accumulates() {
+        // aᵀ·dz for a = [1;2] (2 rows, 1 col), dz = [3; 5] → gw = [13].
+        let a = [1.0, 2.0];
+        let dz = [3.0, 5.0];
+        let mut gw = [100.0f32];
+        matmul_tn_acc(&a, &dz, 2, 1, 1, &mut gw);
+        assert_eq!(gw, [113.0]);
+    }
+
+    #[test]
+    fn nt_overwrites() {
+        // dz·wᵀ for dz = [1 2] (1×2), w = [[3 4],[5 6]] (din=2 × dout=2).
+        let dz = [1.0, 2.0];
+        let w = [3.0, 4.0, 5.0, 6.0];
+        let mut da = [9.0f32, 9.0];
+        matmul_nt(&dz, &w, 1, 2, 2, &mut da);
+        assert_eq!(da, [11.0, 17.0]);
+    }
+
+    #[test]
+    fn combine_and_col_sum() {
+        let r0 = [2.0f32, 0.0];
+        let r1 = [4.0f32, 8.0];
+        let mut out = [1.0f32, 1.0];
+        combine_rows(&mut out, &[&r0, &r1], &[0.5, 0.25]);
+        assert_eq!(out, [2.0, 2.0]);
+        let dz = [1.0f32, 2.0, 3.0, 4.0];
+        let mut gb = [1.0f32, 1.0];
+        col_sum_acc(&dz, 2, 2, &mut gb);
+        assert_eq!(gb, [5.0, 7.0]);
+    }
+}

@@ -57,6 +57,20 @@
 //! | `pjrt`   | any variant with lowered artifacts         | `--features pjrt` +    |
 //! |          |                                            | `python -m compile.aot`|
 //!
+//! # Module map
+//!
+//! | module        | role                                                        |
+//! |---------------|-------------------------------------------------------------|
+//! | [`kernels`]   | blocked, multi-threaded f32 GEMM (packed panels, MR×NR      |
+//! |               | micro-tiles) + the naive `reference` twin; bit-deterministic|
+//! |               | across thread counts (`--threads`)                          |
+//! | [`linalg`]    | host vector kernels (axpy, Boltzmann weights, norms)        |
+//! | [`runtime`]   | `Backend` seam: native engine / PJRT artifacts              |
+//! | [`algorithms`]| the paper's seven parallel-SGD schemes                      |
+//! | [`coordinator`]| deterministic simulated trainer (the figures)              |
+//! | [`cluster`]   | simulated fabric + real-thread launcher mode                |
+//! | [`bench`]     | micro-bench harness + the `BENCH_native.json` perf trajectory|
+//!
 //! Quick taste (see `examples/quickstart.rs` — no artifacts needed):
 //!
 //! ```no_run
@@ -79,6 +93,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod harness;
+pub mod kernels;
 pub mod linalg;
 pub mod metrics;
 pub mod rng;

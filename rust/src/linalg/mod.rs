@@ -25,13 +25,15 @@ pub fn lerp_into(y: &mut [f32], t: f32, x: &[f32]) {
     }
 }
 
-/// out ← Σᵢ wᵢ·rows[i]  (weighted combination of worker parameter rows)
+/// out ← Σᵢ wᵢ·rows[i]  (weighted combination of worker parameter rows).
+///
+/// Routed through the blocked kernel subsystem's row-combine on one
+/// thread — same per-column accumulation order (i ascending) as the old
+/// axpy loop, so results are bit-identical; callers that hold a
+/// [`crate::kernels::Gemm`] can use its `combine_rows` directly for the
+/// threaded version.
 pub fn weighted_sum(out: &mut [f32], rows: &[&[f32]], w: &[f32]) {
-    debug_assert_eq!(rows.len(), w.len());
-    out.fill(0.0);
-    for (row, &wi) in rows.iter().zip(w.iter()) {
-        axpy(out, wi, row);
-    }
+    crate::kernels::Gemm::single().combine_rows(out, rows, w);
 }
 
 /// The paper's Eq. (10) on the host: xᵢ ← (1-β)xᵢ + β·agg, for every row.

@@ -100,20 +100,25 @@ pub trait Backend {
     }
 }
 
-/// Build the backend an experiment config asks for.
+/// Build the backend an experiment config asks for (including its
+/// intra-op `threads` budget).
 pub fn load_backend(cfg: &ExperimentConfig) -> Result<Box<dyn Backend>> {
-    backend_for_variant(&cfg.artifacts_root, &cfg.variant, cfg.backend)
+    backend_for_variant(&cfg.artifacts_root, &cfg.variant, cfg.backend, cfg.threads)
 }
 
 /// Build a backend for one model variant directly (benches, calibration).
+/// `threads` is the intra-op GEMM budget of the native engine (0 = all
+/// cores; kernel outputs are bit-identical at every value); the PJRT
+/// engine manages its own device parallelism and ignores it.
 pub fn backend_for_variant(
     artifacts_root: &Path,
     variant: &str,
     kind: BackendKind,
+    threads: usize,
 ) -> Result<Box<dyn Backend>> {
     use anyhow::Context as _;
     match kind {
-        BackendKind::Native => native_backend(artifacts_root, variant)
+        BackendKind::Native => native_backend(artifacts_root, variant, threads)
             .with_context(|| format!("--backend native failed for variant {variant:?}")),
         BackendKind::Pjrt => pjrt_backend(artifacts_root, variant)
             .with_context(|| format!("--backend pjrt failed for variant {variant:?}")),
@@ -123,7 +128,7 @@ pub fn backend_for_variant(
                     format!("--backend auto selected pjrt (artifacts found) for variant {variant:?}")
                 })
             } else {
-                native_backend(artifacts_root, variant).with_context(|| {
+                native_backend(artifacts_root, variant, threads).with_context(|| {
                     format!(
                         "--backend auto fell back to native (pjrt {}) for variant {variant:?}",
                         if pjrt_available() { "artifacts missing" } else { "not compiled in" }
@@ -139,7 +144,11 @@ pub fn pjrt_available() -> bool {
     cfg!(feature = "pjrt")
 }
 
-fn native_backend(artifacts_root: &Path, variant: &str) -> Result<Box<dyn Backend>> {
+fn native_backend(
+    artifacts_root: &Path,
+    variant: &str,
+    threads: usize,
+) -> Result<Box<dyn Backend>> {
     let dir = artifacts_root.join(variant);
     // An on-disk manifest (if artifacts were generated) is authoritative;
     // otherwise the built-in MLP presets make the backend fully hermetic.
@@ -156,7 +165,7 @@ fn native_backend(artifacts_root: &Path, variant: &str) -> Result<Box<dyn Backen
             )
         })?
     };
-    Ok(Box::new(NativeEngine::new(manifest)?))
+    Ok(Box::new(NativeEngine::with_threads(manifest, threads)?))
 }
 
 #[cfg(feature = "pjrt")]
@@ -189,7 +198,7 @@ mod tests {
     #[test]
     fn explicit_native_works_for_all_preset_variants() {
         for v in Manifest::NATIVE_VARIANTS {
-            let b = backend_for_variant(Path::new("artifacts"), v, BackendKind::Native).unwrap();
+            let b = backend_for_variant(Path::new("artifacts"), v, BackendKind::Native, 2).unwrap();
             assert_eq!(b.manifest().name, v);
             assert!(b.has_aggregate(4));
         }
@@ -200,7 +209,7 @@ mod tests {
         // The paper's CIFAR presets must work out of the box on a clean
         // checkout: `--backend auto` with no artifacts anywhere.
         for v in ["cifar_cnn10", "cifar_cnn100"] {
-            let b = backend_for_variant(Path::new("artifacts"), v, BackendKind::Auto).unwrap();
+            let b = backend_for_variant(Path::new("artifacts"), v, BackendKind::Auto, 1).unwrap();
             assert_eq!(b.name(), "native");
             assert_eq!(b.manifest().name, v);
         }
@@ -208,7 +217,7 @@ mod tests {
 
     #[test]
     fn unknown_variant_error_names_variant_backend_and_remedy() {
-        let err = backend_for_variant(Path::new("artifacts"), "resnet152", BackendKind::Auto)
+        let err = backend_for_variant(Path::new("artifacts"), "resnet152", BackendKind::Auto, 1)
             .unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("resnet152"), "{msg}");
@@ -220,7 +229,7 @@ mod tests {
     #[cfg(not(feature = "pjrt"))]
     #[test]
     fn pjrt_kind_errors_without_feature() {
-        let r = backend_for_variant(Path::new("artifacts"), "tiny_mlp", BackendKind::Pjrt);
+        let r = backend_for_variant(Path::new("artifacts"), "tiny_mlp", BackendKind::Pjrt, 1);
         assert!(r.is_err());
     }
 }

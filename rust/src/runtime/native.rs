@@ -10,9 +10,10 @@
 //!
 //! * `train_step` — the model is a small layer IR (`Op`) parsed from the
 //!   manifest's flat layout: `Dense` (`a ← relu(a·W + b)`), `Conv2d`
-//!   (3×3 SAME + ReLU over NHWC, lowered to im2col + the same
-//!   `matmul_bias` kernel the dense path uses), `MaxPool2x2` (stride-2
-//!   VALID, first-max argmax like `jnp.argmax`) and `Flatten`; fused
+//!   (3×3 SAME + ReLU over NHWC, lowered to im2col + the same blocked
+//!   [`crate::kernels::Gemm`] the dense path uses), `MaxPool2x2`
+//!   (stride-2 VALID, first-max argmax like `jnp.argmax`) and `Flatten`;
+//!   fused
 //!   softmax cross-entropy with per-example losses (the free Eq. 26
 //!   byproduct), exact reverse-mode gradients (col2im scatter for conv,
 //!   argmax routing for pool), plain SGD update `θ ← θ − η·∇`;
@@ -32,15 +33,11 @@ use std::cell::Cell;
 
 use anyhow::{ensure, Result};
 
+use crate::kernels::Gemm;
 use crate::linalg;
 
 use super::backend::{Backend, EvalOut, StepOut};
 use super::manifest::Manifest;
-
-/// Column-panel width of the aggregation loop — mirrors the Pallas
-/// kernel's VMEM tiling (`DEFAULT_BD` in `aggregate.py`); here it keeps
-/// the θ·X panel resident in L1/L2.
-const AGG_PANEL: usize = 8192;
 
 /// One op of the executable layer IR, parsed from the manifest's flat
 /// parameter layout (2-D weights → `Dense`, 4-D `[3,3,cin,cout]`
@@ -79,6 +76,10 @@ struct LayerPair {
 pub struct NativeEngine {
     manifest: Manifest,
     ops: Vec<Op>,
+    /// Blocked GEMM instance every matmul routes through (forward,
+    /// backward and aggregation). Bit-deterministic across thread
+    /// counts, so `threads` is pure throughput.
+    gemm: Gemm,
     exec_count: Cell<u64>,
 }
 
@@ -91,6 +92,13 @@ impl NativeEngine {
     /// assigned to the leading convs — the registry variants pool after
     /// every conv, for which the assignment is exact.
     pub fn new(manifest: Manifest) -> Result<Self> {
+        Self::with_threads(manifest, 1)
+    }
+
+    /// Build with an intra-op GEMM thread budget (0 = all cores). The
+    /// thread count never changes output bits — see [`crate::kernels`] —
+    /// only step throughput.
+    pub fn with_threads(manifest: Manifest, threads: usize) -> Result<Self> {
         manifest.check()?;
         let entries = &manifest.param_layout;
         ensure!(
@@ -228,7 +236,7 @@ impl NativeEngine {
             "head emits {flat_dim} logits ≠ num_classes {}",
             manifest.num_classes
         );
-        Ok(Self { manifest, ops, exec_count: Cell::new(0) })
+        Ok(Self { manifest, ops, gemm: Gemm::new(threads), exec_count: Cell::new(0) })
     }
 
     /// Build for a built-in variant preset (`tiny_mlp`, `cifar_cnn10`, …).
@@ -292,7 +300,7 @@ impl NativeEngine {
             let (out, idx, patches) = match *op {
                 Op::Dense { din, dout, w_off, b_off, relu } => {
                     let mut z = vec![0.0f32; batch * dout];
-                    matmul_bias(
+                    self.gemm.matmul_bias(
                         a_prev,
                         &params[w_off..w_off + din * dout],
                         &params[b_off..b_off + dout],
@@ -310,7 +318,7 @@ impl NativeEngine {
                     let rows = batch * h * w;
                     let patches = im2col(a_prev, batch, h, w, cin);
                     let mut z = vec![0.0f32; rows * cout];
-                    matmul_bias(
+                    self.gemm.matmul_bias(
                         &patches,
                         &params[w_off..w_off + 9 * cin * cout],
                         &params[b_off..b_off + cout],
@@ -364,34 +372,6 @@ impl NativeEngine {
             }
         }
         per_ex
-    }
-}
-
-/// z[n,k] = Σⱼ a[n,j]·w[j,k] + b[k] — unit-stride inner loops so the
-/// autovectoriser gets contiguous rows of `w`. Shared by the dense path
-/// (rows = batch) and the im2col conv path (rows = batch·H·W).
-fn matmul_bias(
-    a: &[f32],
-    w: &[f32],
-    b: &[f32],
-    rows: usize,
-    din: usize,
-    dout: usize,
-    z: &mut [f32],
-) {
-    for n in 0..rows {
-        let zrow = &mut z[n * dout..(n + 1) * dout];
-        zrow.copy_from_slice(b);
-        let arow = &a[n * din..(n + 1) * din];
-        for (j, &aj) in arow.iter().enumerate() {
-            if aj == 0.0 {
-                continue; // ReLU/padding sparsity: skip dead activations
-            }
-            let wrow = &w[j * dout..(j + 1) * dout];
-            for (zk, &wk) in zrow.iter_mut().zip(wrow.iter()) {
-                *zk += aj * wk;
-            }
-        }
     }
 }
 
@@ -502,50 +482,6 @@ fn maxpool_fwd(x: &[f32], batch: usize, h: usize, w: usize, c: usize) -> (Vec<f3
     (out, idx)
 }
 
-/// dW[j,k] += Σₙ a[n,j]·dz[n,k], db[k] += Σₙ dz[n,k], and optionally
-/// da[n,j] = Σₖ dz[n,k]·W[j,k] — the shared affine adjoint (dense rows
-/// or im2col patch rows).
-#[allow(clippy::too_many_arguments)]
-fn affine_backward(
-    a: &[f32],
-    w: &[f32],
-    dz: &[f32],
-    rows: usize,
-    din: usize,
-    dout: usize,
-    gw: &mut [f32],
-    gb: &mut [f32],
-    mut da: Option<&mut [f32]>,
-) {
-    for n in 0..rows {
-        let arow = &a[n * din..(n + 1) * din];
-        let dzrow = &dz[n * dout..(n + 1) * dout];
-        for (j, &aj) in arow.iter().enumerate() {
-            if aj == 0.0 {
-                continue;
-            }
-            let grow = &mut gw[j * dout..(j + 1) * dout];
-            for (g, &d) in grow.iter_mut().zip(dzrow.iter()) {
-                *g += aj * d;
-            }
-        }
-        for (g, &d) in gb.iter_mut().zip(dzrow.iter()) {
-            *g += d;
-        }
-        if let Some(da) = da.as_deref_mut() {
-            let darow = &mut da[n * din..(n + 1) * din];
-            for (j, dv) in darow.iter_mut().enumerate() {
-                let wrow = &w[j * dout..(j + 1) * dout];
-                let mut acc = 0.0f32;
-                for (&d, &wk) in dzrow.iter().zip(wrow.iter()) {
-                    acc += d * wk;
-                }
-                *dv = acc;
-            }
-        }
-    }
-}
-
 impl Backend for NativeEngine {
     fn name(&self) -> &'static str {
         "native"
@@ -595,49 +531,40 @@ impl Backend for NativeEngine {
             let need_da = oi > 0;
             let da = match *op {
                 Op::Dense { din, dout, w_off, b_off, .. } => {
-                    let mut da = if need_da { Some(vec![0.0f32; batch * din]) } else { None };
+                    let wmat = &params[w_off..w_off + din * dout];
                     {
                         let (gw, gb) = split_grad(&mut grad, w_off, din * dout, b_off, dout);
-                        affine_backward(
-                            a_prev,
-                            &params[w_off..w_off + din * dout],
-                            &dz,
-                            batch,
-                            din,
-                            dout,
-                            gw,
-                            gb,
-                            da.as_deref_mut(),
-                        );
+                        self.gemm.matmul_tn_acc(a_prev, &dz, batch, din, dout, gw);
+                        self.gemm.col_sum_acc(&dz, batch, dout, gb);
                     }
-                    da
+                    if need_da {
+                        let mut da = vec![0.0f32; batch * din];
+                        self.gemm.matmul_nt(&dz, wmat, batch, dout, din, &mut da);
+                        Some(da)
+                    } else {
+                        None
+                    }
                 }
                 Op::Conv2d { h, w, cin, cout, w_off, b_off } => {
                     let rows = batch * h * w;
                     let din = 9 * cin;
                     // Patch matrix saved by the forward pass — no re-extraction.
                     let patches = &patch_tape[oi];
-                    let mut dpatches =
-                        if need_da { Some(vec![0.0f32; rows * din]) } else { None };
+                    let wmat = &params[w_off..w_off + din * cout];
                     {
                         let (gw, gb) = split_grad(&mut grad, w_off, din * cout, b_off, cout);
-                        affine_backward(
-                            patches,
-                            &params[w_off..w_off + din * cout],
-                            &dz,
-                            rows,
-                            din,
-                            cout,
-                            gw,
-                            gb,
-                            dpatches.as_deref_mut(),
-                        );
+                        self.gemm.matmul_tn_acc(patches, &dz, rows, din, cout, gw);
+                        self.gemm.col_sum_acc(&dz, rows, cout, gb);
                     }
-                    dpatches.map(|dp| {
+                    if need_da {
+                        let mut dpatches = vec![0.0f32; rows * din];
+                        self.gemm.matmul_nt(&dz, wmat, rows, cout, din, &mut dpatches);
                         let mut da = vec![0.0f32; batch * h * w * cin];
-                        col2im(&dp, batch, h, w, cin, &mut da);
-                        da
-                    })
+                        col2im(&dpatches, batch, h, w, cin, &mut da);
+                        Some(da)
+                    } else {
+                        None
+                    }
                 }
                 Op::MaxPool2x2 { h, w, c } => {
                     if need_da {
@@ -702,30 +629,17 @@ impl Backend for NativeEngine {
         ensure!(a_tilde.is_finite(), "non-finite ã = {a_tilde}");
         ensure!(beta.is_finite(), "non-finite β = {beta}");
         let d = stacked.len() / p;
+        ensure!(d > 0, "empty parameter rows");
         let theta = linalg::boltzmann_weights(h, a_tilde);
-        let keep = 1.0 - beta;
 
+        // θ·X row-combine then the β-mix, both through the kernel
+        // subsystem (columns panelled like the Pallas kernel's grid over
+        // D, threads splitting the panels — bit-stable at any count).
+        let rows: Vec<&[f32]> = stacked.chunks(d).collect();
+        let mut agg = vec![0.0f32; d];
+        self.gemm.combine_rows(&mut agg, &rows, &theta);
         let mut out = vec![0.0f32; p * d];
-        let mut agg = vec![0.0f32; AGG_PANEL.min(d)];
-        // Column panels, mirroring the Pallas kernel's grid over D.
-        let mut col = 0;
-        while col < d {
-            let w = AGG_PANEL.min(d - col);
-            let agg = &mut agg[..w];
-            agg.fill(0.0);
-            for (i, &th) in theta.iter().enumerate() {
-                let row = &stacked[i * d + col..i * d + col + w];
-                linalg::axpy(agg, th, row);
-            }
-            for i in 0..p {
-                let src = &stacked[i * d + col..i * d + col + w];
-                let dst = &mut out[i * d + col..i * d + col + w];
-                for ((o, &x), &a) in dst.iter_mut().zip(src.iter()).zip(agg.iter()) {
-                    *o = keep * x + beta * a;
-                }
-            }
-            col += w;
-        }
+        self.gemm.blend_rows(&mut out, stacked, &agg, beta);
         self.bump();
         Ok(out)
     }
@@ -908,6 +822,27 @@ mod tests {
         let lhs: f64 = patches.iter().zip(p.iter()).map(|(&a, &b)| (a * b) as f64).sum();
         let rhs: f64 = x.iter().zip(back.iter()).map(|(&a, &b)| (a * b) as f64).sum();
         assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn intra_op_threads_do_not_change_step_bits() {
+        // The engine-level face of the kernel guarantee: a threaded
+        // engine takes the *identical* SGD step, bit for bit — dense and
+        // conv paths, forward and backward.
+        for variant in ["tiny_mlp", "tiny_cnn"] {
+            let m = Manifest::native_variant(variant).unwrap();
+            let e1 = NativeEngine::with_threads(m.clone(), 1).unwrap();
+            let e4 = NativeEngine::with_threads(m, 4).unwrap();
+            let (params, x, y) = rand_batch(&e1, 21);
+            let (p1, o1) = e1.train_step(&params, &x, &y, 0.1).unwrap();
+            let (p4, o4) = e4.train_step(&params, &x, &y, 0.1).unwrap();
+            assert_eq!(o1.loss.to_bits(), o4.loss.to_bits(), "{variant}: loss bits");
+            let same = p1.iter().zip(p4.iter()).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "{variant}: threads changed the parameter bits");
+            let agg1 = e1.aggregate(&params[..64.min(params.len())], &[0.4, 0.6], 1.0, 0.9);
+            let agg4 = e4.aggregate(&params[..64.min(params.len())], &[0.4, 0.6], 1.0, 0.9);
+            assert_eq!(agg1.unwrap(), agg4.unwrap(), "{variant}: aggregate");
+        }
     }
 
     #[test]

@@ -96,6 +96,14 @@ impl Args {
         }
     }
 
+    /// Mark `key` as recognised without reading it. For flags injected
+    /// by wrappers — e.g. the bare `--bench` cargo appends when running
+    /// `harness = false` bench binaries — that would otherwise trip the
+    /// unknown-flag check in [`Args::finish`].
+    pub fn accept(&self, key: &str) {
+        self.mark(key);
+    }
+
     /// Boolean presence flag.
     pub fn bool_flag(&self, key: &str) -> bool {
         self.mark(key);
@@ -153,6 +161,18 @@ mod tests {
         let a = args(&["--typo", "1"]);
         let _ = a.num_flag("p", 1usize);
         assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn accept_quiets_wrapper_flags() {
+        // cargo appends `--bench` to harness = false bench binaries.
+        let a = args(&["--bench", "--quick"]);
+        assert!(a.bool_flag("quick"));
+        assert!(a.finish().is_err(), "--bench unread must still error");
+        let a = args(&["--bench", "--quick"]);
+        a.accept("bench");
+        assert!(a.bool_flag("quick"));
+        assert!(a.finish().is_ok());
     }
 
     #[test]

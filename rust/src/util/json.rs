@@ -76,6 +76,74 @@ impl Json {
         }
     }
 
+    /// Serialise to pretty-printed JSON (2-space indent, newline
+    /// terminated). Inverse of [`Json::parse`] for every value this
+    /// crate produces: non-finite numbers become `null` (JSON has no
+    /// lexeme for them), integral numbers print without a fraction, and
+    /// strings escape exactly the set the parser understands. Used by
+    /// the bench harness to persist `BENCH_native.json`.
+    pub fn serialize(&self) -> String {
+        let mut out = String::new();
+        self.write_value(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write_value(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                if !v.is_finite() {
+                    out.push_str("null");
+                } else if v.fract() == 0.0 && v.abs() < 9.007_199_254_740_992e15 {
+                    out.push_str(&(*v as i64).to_string());
+                } else {
+                    out.push_str(&format!("{v:?}"));
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(out, indent + 1);
+                    item.write_value(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                if m.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (key, val)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(out, indent + 1);
+                    write_escaped(out, key);
+                    out.push_str(": ");
+                    val.write_value(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push('}');
+            }
+        }
+    }
+
     /// `obj.key` as usize or a descriptive error.
     pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
         self.get(key)
@@ -94,6 +162,29 @@ impl Json {
             .and_then(|v| v.as_arr())
             .ok_or_else(|| anyhow::anyhow!("manifest field {key:?} missing or not an array"))
     }
+}
+
+fn push_indent(out: &mut String, levels: usize) {
+    for _ in 0..levels {
+        out.push_str("  ");
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            _ => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -280,6 +371,19 @@ mod tests {
         assert!(Json::parse("tru").is_err());
         assert!(Json::parse("{} extra").is_err());
         assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn serialize_roundtrips() {
+        let src = r#"{"a":[1,2.5,-3e-7],"b":{"c":"x\"y\n","d":true,"e":null},"f":[],"g":{}}"#;
+        let v = Json::parse(src).unwrap();
+        let text = v.serialize();
+        assert!(text.ends_with('\n'));
+        let back = Json::parse(text.trim_end()).unwrap();
+        assert_eq!(back, v);
+        // Integral floats print without a fraction; non-finite → null.
+        assert_eq!(Json::Num(42.0).serialize(), "42\n");
+        assert_eq!(Json::Num(f64::NAN).serialize(), "null\n");
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! the native backend — no Python, no JAX, no HLO artifacts. The PJRT
 //! twin lives at the bottom behind `--features pjrt` + `WASGD_ARTIFACTS`.
 
+use wasgd::cluster::threads::run_wasgd_plus_threaded;
 use wasgd::config::{AlgoKind, BackendKind, ExperimentConfig};
 use wasgd::coordinator::{run_experiment_full, RunOutput, Trainer};
 use wasgd::data::synth::{DatasetKind, SynthConfig};
@@ -283,6 +284,80 @@ fn cifar100_preset_loads_and_steps_natively() {
 }
 
 #[test]
+fn threaded_wasgd_plus_is_bit_deterministic_across_runs_and_threads() {
+    // End-to-end determinism of the *real-thread* launcher on the conv
+    // variant: `run_wasgd_plus_threaded` on tiny_cnn at p=4 must produce
+    // bit-identical final parameters (a) across two repeats and (b)
+    // across `--threads 1` vs `--threads 4` — intra-op parallelism can
+    // never silently change the science. (tiny_cnn's GEMMs sit below the
+    // kernel's parallel-work threshold, so this leg pins the *dispatch*
+    // stability; the mnist_cnn test below drives the genuinely threaded
+    // path end to end.)
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+
+    let mut cfg = ExperimentConfig::paper_preset(DatasetKind::Tiny);
+    cfg.backend = BackendKind::Native;
+    cfg.variant = "tiny_cnn".to_string();
+    cfg.algo = AlgoKind::WasgdPlus;
+    cfg.p = 4;
+    cfg.tau = 8;
+    cfg.m = 2;
+    cfg.c = 1;
+    cfg.lr = 0.05;
+    cfg.seed = 17;
+    cfg.threads = 1;
+    let steps = 32; // 4 aggregation boundaries per worker
+
+    let a = run_wasgd_plus_threaded(&cfg, steps).unwrap();
+    let b = run_wasgd_plus_threaded(&cfg, steps).unwrap();
+    assert!(!a.params.is_empty());
+    assert!(a.final_energies.iter().all(|e| e.is_finite()));
+    assert_eq!(bits(&a.params), bits(&b.params), "repeat runs must be bit-identical");
+
+    cfg.threads = 4;
+    let c = run_wasgd_plus_threaded(&cfg, steps).unwrap();
+    assert_eq!(
+        bits(&a.params),
+        bits(&c.params),
+        "--threads 1 vs --threads 4 must produce identical parameter bits"
+    );
+    assert_eq!(a.final_energies, c.final_energies, "loss energies must match too");
+}
+
+#[test]
+fn threaded_wasgd_plus_mnist_cnn_engages_parallel_gemms_bit_identically() {
+    // The same guarantee where the threaded path genuinely runs: the
+    // mnist_cnn conv GEMMs (25088×9×16 and 6272×144×32 per step, forward
+    // and backward) sit far above the kernel's parallel-work threshold,
+    // so at threads=4 every one of those products really is computed by
+    // scoped row-panel threads — and the final parameters must still be
+    // bit-identical to the single-threaded run.
+    let mut cfg = ExperimentConfig::paper_preset(DatasetKind::MnistLike);
+    cfg.backend = BackendKind::Native;
+    cfg.variant = "mnist_cnn".to_string();
+    cfg.algo = AlgoKind::WasgdPlus;
+    cfg.p = 4;
+    cfg.tau = 4;
+    cfg.m = 2;
+    cfg.c = 1;
+    cfg.seed = 23;
+    cfg.threads = 1;
+    let steps = 8; // 2 aggregation boundaries per worker, conv-heavy
+
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    let single = run_wasgd_plus_threaded(&cfg, steps).unwrap();
+    cfg.threads = 4;
+    let threaded = run_wasgd_plus_threaded(&cfg, steps).unwrap();
+    assert!(!single.params.is_empty());
+    assert_eq!(
+        bits(&single.params),
+        bits(&threaded.params),
+        "threaded mnist_cnn GEMMs changed the parameter bits"
+    );
+    assert_eq!(single.final_energies, threaded.final_energies);
+}
+
+#[test]
 fn target_loss_stops_early() {
     let mut cfg = base_cfg();
     cfg.algo = AlgoKind::WasgdPlus;
@@ -332,10 +407,11 @@ mod pjrt {
         use wasgd::linalg;
         use wasgd::runtime::{backend_for_variant, Backend as _};
         let Some(cfg) = pjrt_cfg() else { return };
-        let pjrt = backend_for_variant(&cfg.artifacts_root, &cfg.variant, BackendKind::Pjrt)
+        let pjrt = backend_for_variant(&cfg.artifacts_root, &cfg.variant, BackendKind::Pjrt, 1)
             .expect("artifacts under WASGD_ARTIFACTS");
         let native =
-            backend_for_variant(&cfg.artifacts_root, &cfg.variant, BackendKind::Native).unwrap();
+            backend_for_variant(&cfg.artifacts_root, &cfg.variant, BackendKind::Native, 1)
+                .unwrap();
         let d = pjrt.manifest().param_count;
         assert_eq!(d, native.manifest().param_count, "manifests must agree");
         let p = 4;
