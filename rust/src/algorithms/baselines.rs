@@ -28,6 +28,7 @@ pub struct Spsgd {
 }
 
 impl Spsgd {
+    /// A fresh SPSGD policy.
     pub fn new() -> Self {
         Self { theta: Vec::new() }
     }
@@ -84,10 +85,12 @@ pub struct Easgd {
 }
 
 impl Easgd {
+    /// A fresh EASGD policy with the paper's α default for `cfg`.
     pub fn new(cfg: &crate::config::ExperimentConfig) -> Self {
         Self { center: Vec::new(), alpha: cfg.easgd_alpha() }
     }
 
+    /// The current center variable x̃ (empty before the first boundary).
     pub fn center(&self) -> &[f32] {
         &self.center
     }

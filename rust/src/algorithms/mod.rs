@@ -41,7 +41,10 @@ pub struct CommContext<'a> {
     pub engine: &'a dyn Backend,
     /// Virtual cluster: policies charge their communication here.
     pub cluster: &'a mut SimCluster,
+    /// The experiment being run.
     pub cfg: &'a ExperimentConfig,
+    /// Policy-private randomness (MWU leader sampling), replicated
+    /// across fabric workers so decentralized boundaries agree.
     pub rng: &'a mut Rng,
     /// Size of one parameter message on the wire.
     pub msg_bytes: usize,
@@ -55,6 +58,7 @@ pub struct CommContext<'a> {
 
 /// The per-scheme behaviour plugged into the shared training loop.
 pub trait CommPolicy {
+    /// The scheme's CLI/log name.
     fn name(&self) -> &'static str;
 
     /// Apply the scheme's exchange at a τ-boundary. Must also charge the

@@ -23,6 +23,7 @@ use super::{CommContext, CommPolicy};
 /// Multiplicative-weights decay rate ε in w ← w·exp(−ε·normalised loss).
 const MWU_ETA: f64 = 0.5;
 
+/// The MWU policy state (shared by OMWU and MMWU).
 pub struct Mwu {
     /// Running multiplicative weights (unnormalised, in log space).
     log_w: Vec<f64>,
@@ -32,6 +33,7 @@ pub struct Mwu {
 }
 
 impl Mwu {
+    /// A fresh policy for `p` workers (`use_full_loss` selects OMWU).
     pub fn new(p: usize, use_full_loss: bool) -> Self {
         Self { log_w: vec![0.0; p], theta: vec![1.0 / p as f32; p], use_full_loss }
     }

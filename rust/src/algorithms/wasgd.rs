@@ -14,6 +14,7 @@ pub struct Wasgd {
 }
 
 impl Wasgd {
+    /// A fresh WASGD policy.
     pub fn new() -> Self {
         Self { theta: Vec::new() }
     }
@@ -66,10 +67,12 @@ pub struct WasgdPlus {
     /// Number of boundaries served by the backend kernel vs the host
     /// fallback (telemetry for the perf pass).
     pub engine_boundaries: u64,
+    /// Boundaries served by the host fallback.
     pub host_boundaries: u64,
 }
 
 impl WasgdPlus {
+    /// A fresh policy (async = Algorithm 4 flavour).
     pub fn new(is_async: bool) -> Self {
         Self { theta: Vec::new(), is_async, engine_boundaries: 0, host_boundaries: 0 }
     }

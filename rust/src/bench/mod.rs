@@ -22,6 +22,7 @@ use crate::util::json::Json;
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchStats {
+    /// Benchmark name (unique within a suite).
     pub name: String,
     /// Raw wall-seconds of each measured sample. Every sample runs
     /// `iters_per_sample` units of work, so these are *per-sample*
@@ -34,6 +35,7 @@ pub struct BenchStats {
     pub mad_s: f64,
     /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Loop iterations folded into each raw sample.
     pub iters_per_sample: u64,
     /// Intra-op thread budget the benched code ran with (1 when the
     /// knob does not apply).
@@ -55,6 +57,7 @@ impl BenchStats {
         }
     }
 
+    /// One human-readable summary line.
     pub fn report(&self) -> String {
         format!(
             "{:<44} time: [{:>10}]  ±{:>9}  ({} samples × {} iters, {:.1}/s)",
@@ -84,7 +87,9 @@ fn fmt_time(s: f64) -> String {
 pub struct Bencher {
     /// Target time per measurement phase.
     pub measure_time: Duration,
+    /// Warm-up duration before sampling starts.
     pub warmup_time: Duration,
+    /// Number of samples collected per benchmark.
     pub sample_count: usize,
     quick: bool,
     results: Vec<BenchStats>,
@@ -120,6 +125,7 @@ impl Bencher {
         }
     }
 
+    /// Is this bencher in quick (smoke) mode?
     pub fn is_quick(&self) -> bool {
         self.quick
     }
@@ -181,6 +187,7 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
+    /// All stats collected so far, in bench order.
     pub fn results(&self) -> &[BenchStats] {
         &self.results
     }

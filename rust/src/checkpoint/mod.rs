@@ -18,9 +18,13 @@ use crate::util::Json;
 /// Everything needed to resume (or inspect) a run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
+    /// Run label (algorithm + geometry).
     pub label: String,
+    /// Local iterations completed per worker.
     pub iteration: u64,
+    /// Epochs completed (fractional).
     pub epoch: f64,
+    /// Simulated cluster seconds at snapshot time.
     pub sim_time_s: f64,
     /// Flat parameter vector per worker.
     pub workers: Vec<Vec<f32>>,

@@ -1,0 +1,583 @@
+//! The worker-fabric seam: one decentralized training loop, pluggable
+//! collective substrates.
+//!
+//! The simulated [`Trainer`](crate::coordinator::Trainer) holds all p
+//! workers in one process and lets a
+//! [`CommPolicy`](crate::algorithms::CommPolicy) rewrite their parameters
+//! at every τ-boundary. This module re-expresses that loop from *one
+//! worker's point of view* so it can run on a real fabric: the worker
+//! owns its engine and its sample stream, contributes its `(h, θ)` panel
+//! to a blocking all-gather, and then applies **the same `CommPolicy`
+//! code** to the gathered cohort, keeping only its own row. Because every
+//! synchronous estimation-driven policy is a deterministic function of
+//! (cohort parameters in rank order, energies, and the shared `root
+//! child(8)` comm RNG stream), each worker replicates the exact update
+//! the centralized trainer would have produced — the paper's
+//! no-center-variable property made literal: there is no master, every
+//! peer computes the aggregate locally (cf. gossip training, Blot et al.
+//! 2016).
+//!
+//! Substrates implementing [`Collective`]:
+//!
+//! * [`LocalCollective`] — in-process threads over a [`PanelExchange`]
+//!   barrier (the `--fabric sim` concurrency twin; what
+//!   [`run_wasgd_plus_threaded`](crate::cluster::threads::run_wasgd_plus_threaded)
+//!   uses);
+//! * [`RemoteCluster`](crate::cluster::tcp::RemoteCluster) — a TCP
+//!   connection to a rendezvous relay (`--fabric tcp`, `wasgd serve` /
+//!   `wasgd worker`), one OS process per worker.
+//!
+//! With the lossless f32 wire encoding the two substrates produce
+//! **bit-identical** final parameters to the simulated trainer — pinned
+//! end to end by `tests/fabric_e2e.rs`.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{ensure, Result};
+
+use crate::algorithms::{make_policy, CommContext};
+use crate::cluster::SimCluster;
+use crate::config::{AlgoKind, ExperimentConfig};
+use crate::coordinator::worker::Worker;
+use crate::data::order::judge;
+use crate::data::synth::SynthConfig;
+use crate::data::{Dataset, RecordWindow};
+use crate::rng::Rng;
+use crate::runtime::{Backend, Manifest};
+
+use super::wire::{Cohort, Panel, WireEncoding};
+
+/// One worker's contribution to a collective round: its windowed loss
+/// energy h and its flat parameter vector θ.
+pub type WorkerPanel = (f32, Vec<f32>);
+
+/// The all-gather/barrier surface every fabric substrate provides — the
+/// seam between the decentralized loop and the transport underneath it.
+pub trait Collective {
+    /// Cohort size p.
+    fn p(&self) -> usize;
+
+    /// This participant's rank in `[0, p)`.
+    fn rank(&self) -> usize;
+
+    /// Blocking all-gather: contribute this worker's `(h, θ)` panel and
+    /// return the whole cohort's panels in rank order once every
+    /// participant of the round has arrived.
+    fn all_gather(&mut self, h: f32, params: &[f32]) -> Result<Vec<WorkerPanel>>;
+
+    /// Bytes this participant has pushed toward its peers so far (wire
+    /// bytes for TCP; the wire-equivalent for in-process substrates).
+    fn bytes_sent(&self) -> u64;
+
+    /// Bytes received from peers so far (same convention).
+    fn bytes_received(&self) -> u64;
+}
+
+/// A reusable p-way all-gather barrier carrying one `T` per participant,
+/// with explicit *poisoning* so one failed participant releases — rather
+/// than deadlocks — the rest of the cohort.
+pub struct PanelExchange<T> {
+    inner: Mutex<ExchangeState<T>>,
+    cv: Condvar,
+    p: usize,
+}
+
+struct ExchangeState<T> {
+    slots: Vec<Option<T>>,
+    published: Arc<Vec<T>>,
+    generation: u64,
+    poisoned: Option<String>,
+}
+
+impl<T: Clone> PanelExchange<T> {
+    /// A fresh exchange for `p` participants.
+    pub fn new(p: usize) -> Self {
+        Self {
+            inner: Mutex::new(ExchangeState {
+                slots: (0..p).map(|_| None).collect(),
+                published: Arc::new(Vec::new()),
+                generation: 0,
+                poisoned: None,
+            }),
+            cv: Condvar::new(),
+            p,
+        }
+    }
+
+    /// Cohort size p.
+    pub fn participants(&self) -> usize {
+        self.p
+    }
+
+    /// Deposit participant `rank`'s contribution; blocks until the round
+    /// completes, then returns everyone's (index = rank). Errors if the
+    /// exchange was poisoned (by a failed peer) or on double-deposit.
+    pub fn exchange(&self, rank: usize, v: T) -> Result<Arc<Vec<T>>> {
+        let mut st = self.inner.lock().unwrap();
+        if let Some(why) = &st.poisoned {
+            anyhow::bail!("collective aborted: {why}");
+        }
+        ensure!(st.slots[rank].is_none(), "rank {rank} deposited twice in one round");
+        st.slots[rank] = Some(v);
+        if st.slots.iter().all(|s| s.is_some()) {
+            let vals: Vec<T> = st.slots.iter_mut().map(|s| s.take().unwrap()).collect();
+            st.published = Arc::new(vals);
+            st.generation += 1;
+            self.cv.notify_all();
+            return Ok(st.published.clone());
+        }
+        let gen = st.generation;
+        while st.generation == gen && st.poisoned.is_none() {
+            st = self.cv.wait(st).unwrap();
+        }
+        // A round that published before (or concurrently with) a poison
+        // still completed: deliver it. Only a round that can never
+        // publish reports the poison.
+        if st.generation != gen {
+            return Ok(st.published.clone());
+        }
+        let why = st.poisoned.as_deref().unwrap_or("poisoned");
+        anyhow::bail!("collective aborted: {why}");
+    }
+
+    /// Mark the exchange failed: current and future `exchange` calls
+    /// return an error carrying `why` instead of blocking forever.
+    pub fn poison(&self, why: &str) {
+        let mut st = self.inner.lock().unwrap();
+        if st.poisoned.is_none() {
+            st.poisoned = Some(why.to_string());
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// The in-process [`Collective`]: worker threads of one process meeting
+/// at a shared [`PanelExchange`] — the concurrency substrate of
+/// `--fabric sim` (the channel stands in for the NIC). Byte counters
+/// report the *wire-equivalent* f32 frame sizes so the cost model sees
+/// the same traffic either way.
+pub struct LocalCollective {
+    exchange: Arc<PanelExchange<WorkerPanel>>,
+    rank: usize,
+    bytes_sent: u64,
+    bytes_received: u64,
+}
+
+impl LocalCollective {
+    /// Attach rank `rank` to a shared exchange.
+    pub fn new(exchange: Arc<PanelExchange<WorkerPanel>>, rank: usize) -> Self {
+        Self { exchange, rank, bytes_sent: 0, bytes_received: 0 }
+    }
+}
+
+impl Collective for LocalCollective {
+    fn p(&self) -> usize {
+        self.exchange.participants()
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn all_gather(&mut self, h: f32, params: &[f32]) -> Result<Vec<WorkerPanel>> {
+        let d = params.len();
+        let p = self.p();
+        let cohort = self.exchange.exchange(self.rank, (h, params.to_vec()))?;
+        self.bytes_sent += Panel::wire_len(WireEncoding::F32, d) as u64;
+        self.bytes_received += Cohort::wire_len(WireEncoding::F32, d, p) as u64;
+        Ok(cohort.as_ref().clone())
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.bytes_sent
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.bytes_received
+    }
+}
+
+/// Can this scheme run decentralized on a worker fabric? True for the
+/// synchronous estimation-driven policies, whose boundary update is a
+/// deterministic function of the gathered cohort (plus the replicated
+/// comm RNG stream). Sequential has no cohort, OMWU needs centrally
+/// computed full-dataset losses, and the async variant needs the
+/// cluster's timing quorum — those stay on `--fabric sim`.
+pub fn algo_supports_fabric(algo: AlgoKind) -> bool {
+    matches!(
+        algo,
+        AlgoKind::Spsgd | AlgoKind::Easgd | AlgoKind::Mmwu | AlgoKind::Wasgd | AlgoKind::WasgdPlus
+    )
+}
+
+/// Build the dataset a fabric worker (and the equivalence tests' sim
+/// trainer) uses: the config's synthetic preset with its feature count
+/// adapted to the model variant's input geometry (e.g. `tiny_cnn`'s
+/// 8×8×1 = 64 against the tiny preset's 16 raw features). Pure function
+/// of `(cfg.dataset, cfg.seed, manifest)`, so every process materialises
+/// the identical split.
+pub fn fabric_dataset(cfg: &ExperimentConfig, manifest: &Manifest) -> Result<Dataset> {
+    let mut synth = SynthConfig::preset(cfg.dataset);
+    ensure!(
+        synth.classes <= manifest.num_classes,
+        "dataset {} has {} classes but variant {} emits {} logits",
+        cfg.dataset.name(),
+        synth.classes,
+        manifest.name,
+        manifest.num_classes
+    );
+    synth.dim = manifest.input_dim;
+    Ok(synth.build(cfg.seed))
+}
+
+/// The local step budget the simulated trainer would run for this config
+/// — `ceil(epochs · steps_per_epoch)`, at least 1. Every fabric worker
+/// computes this independently and identically.
+pub fn planned_steps(cfg: &ExperimentConfig, n_train: usize, batch: usize) -> usize {
+    let spe = (n_train / batch).max(1);
+    ((cfg.epochs * spe as f64).ceil() as usize).max(1)
+}
+
+/// Everything one fabric worker reports when its step budget is done.
+#[derive(Clone, Debug)]
+pub struct FabricWorkerOutcome {
+    /// This worker's rank.
+    pub rank: usize,
+    /// Final flat parameter vector θ.
+    pub params: Vec<f32>,
+    /// Mean recorded batch loss of the last *completed* communication
+    /// period; if the step budget never reached a τ-boundary, the raw
+    /// window energy at exit (always finite unless training diverged).
+    pub mean_energy: f32,
+    /// Local SGD steps taken.
+    pub steps: usize,
+    /// Communication boundaries (collective rounds) participated in.
+    pub boundaries: u64,
+    /// Bytes pushed to peers (wire or wire-equivalent).
+    pub bytes_sent: u64,
+    /// Bytes received from peers.
+    pub bytes_received: u64,
+}
+
+/// Run one decentralized worker to completion over any [`Collective`].
+///
+/// This is the [`Trainer`](crate::coordinator::Trainer) loop from worker
+/// `rank`'s point of view, operation for operation: the same parameter
+/// init (`seed ^ 0x9a9a`), the same per-worker batch stream
+/// ([`Worker`] seeded `root.child(100 + rank)`, §3.4 order search
+/// included), the same [`RecordWindow`] estimation, and the same
+/// [`CommPolicy`](crate::algorithms::CommPolicy) boundary code applied
+/// to the gathered cohort — so on a lossless fabric the final θ matches
+/// the simulated trainer bit for bit (pinned by `tests/fabric_e2e.rs`).
+///
+/// `initial_params` overrides the seeded init when resuming from a
+/// checkpointed rendezvous (resumed runs are deterministic but no longer
+/// comparable to a fresh sim run). The policy charges its communication
+/// to a local [`SimCluster`] mirror, which keeps the cost model's
+/// telemetry available even on a real fabric.
+pub fn run_fabric_worker(
+    cfg: &ExperimentConfig,
+    engine: &dyn Backend,
+    dataset: &Dataset,
+    fabric: &mut dyn Collective,
+    total_steps: usize,
+    initial_params: Option<Vec<f32>>,
+) -> Result<FabricWorkerOutcome> {
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    ensure!(
+        algo_supports_fabric(cfg.algo),
+        "the worker fabric replicates synchronous estimation-driven schemes \
+         (spsgd, easgd, mmwu, wasgd, wasgd+); {} needs the simulated trainer (--fabric sim)",
+        cfg.algo.name()
+    );
+    let p = fabric.p();
+    let rank = fabric.rank();
+    ensure!(p == cfg.p, "fabric has {p} participants but the config says p={}", cfg.p);
+    ensure!(rank < p, "rank {rank} out of range for p={p}");
+
+    let mut policy = make_policy(cfg);
+    let manifest = engine.manifest();
+    ensure!(
+        dataset.dim == manifest.input_dim,
+        "dataset dim {} ≠ model input dim {} (dataset {} vs variant {})",
+        dataset.dim,
+        manifest.input_dim,
+        dataset.name,
+        manifest.name
+    );
+    let batch = manifest.batch;
+    let n = dataset.n_train();
+    ensure!(n >= batch, "dataset smaller than one batch");
+
+    let root = Rng::new(cfg.seed);
+    let mut comm_rng = root.child(8);
+    let mut params = manifest.init_params(cfg.seed ^ 0x9a9a);
+    if let Some(init) = initial_params {
+        ensure!(
+            init.len() == params.len(),
+            "resume parameters have {} elements, model {} wants {}",
+            init.len(),
+            manifest.name,
+            params.len()
+        );
+        params = init;
+    }
+    let shard = if policy.shards_data() {
+        let base = n / p;
+        let lo = rank * base;
+        let hi = if rank == p - 1 { n } else { lo + base };
+        Some((lo, hi))
+    } else {
+        None
+    };
+    let mut worker = Worker::new(
+        rank,
+        params,
+        root.child(100 + rank as u64),
+        n,
+        batch,
+        shard,
+        policy.uses_order_search() && cfg.force_delta_order.is_none(),
+        cfg.n_parts,
+        cfg.force_delta_order,
+        dataset.train_y.clone(),
+    );
+    let window = RecordWindow::new(cfg.tau, cfg.m, cfg.c);
+    // Dormant cost-model mirror: policies charge communication here so
+    // the modelled comm/wait telemetry exists on real fabrics too. It
+    // never feeds back into the numerics.
+    let mut cluster = SimCluster::new(p, cfg.fabric_cost, cfg.compute, cfg.seed);
+    let msg_bytes = manifest.message_bytes();
+
+    let (mut x_buf, mut y_buf) = (Vec::new(), Vec::new());
+    let mut boundaries = 0u64;
+    let mut mean_energy = f32::NAN;
+
+    for step in 1..=total_steps {
+        let k_in_period = (step - 1) % cfg.tau;
+        let recorded = window.is_recorded(k_in_period);
+        let idx = worker.next_batch();
+        dataset.gather_train(&idx, &mut x_buf, &mut y_buf);
+        let (new_params, out) = engine.train_step(worker.params(), &x_buf, &y_buf, cfg.lr)?;
+        worker.set_params(new_params);
+        if recorded {
+            worker.add_energy(out.loss);
+        }
+
+        if step % cfg.tau == 0 {
+            let h = worker.energy();
+            let cohort = fabric.all_gather(h, worker.params())?;
+            ensure!(cohort.len() == p, "cohort has {} panels, expected {p}", cohort.len());
+            ensure!(
+                cohort[rank].0.to_bits() == h.to_bits(),
+                "fabric corrupted rank {rank}'s own panel"
+            );
+            let energies: Vec<f32> = cohort.iter().map(|(e, _)| *e).collect();
+            let d = worker.params().len();
+            let mut rows = Vec::with_capacity(p);
+            for (j, (_, row)) in cohort.into_iter().enumerate() {
+                ensure!(
+                    row.len() == d,
+                    "cohort row {j} carries {} params, expected {d}",
+                    row.len()
+                );
+                rows.push(row);
+            }
+            {
+                let mut ctx = CommContext {
+                    params: &mut rows,
+                    energies: &energies,
+                    engine,
+                    cluster: &mut cluster,
+                    cfg,
+                    rng: &mut comm_rng,
+                    msg_bytes,
+                    full_losses: None,
+                    iteration: step as u64,
+                };
+                policy.at_boundary(&mut ctx)?;
+            }
+            worker.set_params(rows.swap_remove(rank));
+            if policy.uses_order_search() {
+                worker.record_judge_score(judge(&energies, rank));
+            }
+            mean_energy = h / window.recorded_count().max(1) as f32;
+            worker.reset_energy();
+            boundaries += 1;
+        }
+    }
+    if boundaries == 0 {
+        // Shorter-than-τ budgets never cross a boundary; report the raw
+        // window energy instead of a NaN that downstream consumers
+        // (serve summary, checkpoints, aggregate's finiteness checks)
+        // would choke on.
+        mean_energy = worker.energy();
+    }
+
+    Ok(FabricWorkerOutcome {
+        rank,
+        params: worker.params().to_vec(),
+        mean_energy,
+        steps: total_steps,
+        boundaries,
+        bytes_sent: fabric.bytes_sent(),
+        bytes_received: fabric.bytes_received(),
+    })
+}
+
+/// Run a whole decentralized cohort on the in-process substrate: p OS
+/// threads, each owning its own backend, meeting at a [`PanelExchange`].
+/// Returns the per-worker outcomes in rank order. A failed worker
+/// poisons the exchange so the rest of the cohort errors out instead of
+/// deadlocking.
+pub fn run_decentralized_threaded(
+    cfg: &ExperimentConfig,
+    total_steps: usize,
+) -> Result<Vec<FabricWorkerOutcome>> {
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    // Probe once on this thread so the dataset matches the variant's
+    // input geometry; dropped before any worker spawns (backends are
+    // per-thread: the PJRT client is not Send).
+    let dataset = {
+        let probe = crate::runtime::load_backend(cfg)?;
+        Arc::new(fabric_dataset(cfg, probe.manifest())?)
+    };
+    let exchange: Arc<PanelExchange<WorkerPanel>> = Arc::new(PanelExchange::new(cfg.p));
+
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(cfg.p);
+        for rank in 0..cfg.p {
+            let exchange = Arc::clone(&exchange);
+            let dataset = Arc::clone(&dataset);
+            handles.push(s.spawn(move || {
+                let run = || -> Result<FabricWorkerOutcome> {
+                    let engine = crate::runtime::load_backend(cfg)?;
+                    let mut fabric = LocalCollective::new(Arc::clone(&exchange), rank);
+                    run_fabric_worker(
+                        cfg,
+                        engine.as_ref(),
+                        &dataset,
+                        &mut fabric,
+                        total_steps,
+                        None,
+                    )
+                };
+                let result = run();
+                if let Err(e) = &result {
+                    exchange.poison(&format!("worker {rank} failed: {e}"));
+                }
+                result
+            }));
+        }
+        handles
+            .into_iter()
+            .enumerate()
+            .map(|(rank, h)| h.join().map_err(|_| anyhow::anyhow!("worker {rank} panicked"))?)
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn panel_exchange_roundtrip_and_generations() {
+        let p = 3;
+        let ex: Arc<PanelExchange<usize>> = Arc::new(PanelExchange::new(p));
+        let mut handles = Vec::new();
+        for rank in 0..p {
+            let ex = Arc::clone(&ex);
+            handles.push(thread::spawn(move || {
+                let mut sums = Vec::new();
+                for round in 0..20 {
+                    let vals = ex.exchange(rank, rank * 100 + round).unwrap();
+                    sums.push(vals.iter().sum::<usize>());
+                }
+                sums
+            }));
+        }
+        let results: Vec<Vec<usize>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for r in &results[1..] {
+            assert_eq!(r, &results[0]);
+        }
+        for (round, &s) in results[0].iter().enumerate() {
+            // Σ rank·100 + round over ranks 0..3.
+            assert_eq!(s, 300 + 3 * round);
+        }
+    }
+
+    #[test]
+    fn poison_releases_waiters_with_an_error() {
+        let ex: Arc<PanelExchange<u32>> = Arc::new(PanelExchange::new(2));
+        let a = Arc::clone(&ex);
+        let waiter = thread::spawn(move || a.exchange(0, 1));
+        // Give the waiter time to block, then poison instead of joining.
+        thread::sleep(std::time::Duration::from_millis(20));
+        ex.poison("peer died");
+        let err = waiter.join().unwrap().unwrap_err();
+        assert!(format!("{err}").contains("peer died"));
+        // Subsequent exchanges fail fast too.
+        assert!(ex.exchange(1, 2).is_err());
+    }
+
+    #[test]
+    fn fabric_support_matrix() {
+        assert!(algo_supports_fabric(AlgoKind::WasgdPlus));
+        assert!(algo_supports_fabric(AlgoKind::Wasgd));
+        assert!(algo_supports_fabric(AlgoKind::Mmwu));
+        assert!(algo_supports_fabric(AlgoKind::Spsgd));
+        assert!(algo_supports_fabric(AlgoKind::Easgd));
+        assert!(!algo_supports_fabric(AlgoKind::Sequential));
+        assert!(!algo_supports_fabric(AlgoKind::Omwu));
+        assert!(!algo_supports_fabric(AlgoKind::WasgdPlusAsync));
+    }
+
+    #[test]
+    fn planned_steps_matches_trainer_budget() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.epochs = 2.0;
+        assert_eq!(planned_steps(&cfg, 512, 8), 128);
+        cfg.epochs = 0.1;
+        assert_eq!(planned_steps(&cfg, 512, 8), 7); // ceil(6.4)
+        cfg.epochs = 0.0;
+        assert_eq!(planned_steps(&cfg, 512, 8), 1);
+        // Tiny datasets: steps-per-epoch floors at 1.
+        cfg.epochs = 3.0;
+        assert_eq!(planned_steps(&cfg, 4, 8), 3);
+    }
+
+    #[test]
+    fn fabric_dataset_adapts_dim_to_variant() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.variant = "tiny_cnn".to_string();
+        let manifest = Manifest::native_variant("tiny_cnn").unwrap();
+        let ds = fabric_dataset(&cfg, &manifest).unwrap();
+        assert_eq!(ds.dim, 64); // 8×8×1, not the tiny preset's 16
+        assert_eq!(ds.n_train(), 512);
+        // Rebuilding yields the identical split (pure function of seed).
+        let ds2 = fabric_dataset(&cfg, &manifest).unwrap();
+        assert_eq!(ds.train_x, ds2.train_x);
+        assert_eq!(ds.train_y, ds2.train_y);
+    }
+
+    #[test]
+    fn decentralized_threaded_runs_and_reports_bytes() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.backend = crate::config::BackendKind::Native;
+        cfg.p = 2;
+        cfg.tau = 8;
+        cfg.m = 2;
+        cfg.c = 1;
+        let outs = run_decentralized_threaded(&cfg, 16).unwrap();
+        assert_eq!(outs.len(), 2);
+        for (rank, o) in outs.iter().enumerate() {
+            assert_eq!(o.rank, rank);
+            assert_eq!(o.steps, 16);
+            assert_eq!(o.boundaries, 2);
+            assert!(o.mean_energy.is_finite());
+            assert!(o.bytes_sent > 0 && o.bytes_received > o.bytes_sent);
+        }
+    }
+}

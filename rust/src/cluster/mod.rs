@@ -20,8 +20,17 @@
 //! Real wall-clock is *also* measured by the harness (the numerics run
 //! for real); the simulated clock is what the figures plot, so the
 //! curves are independent of this machine's core count.
+//!
+//! Next to the simulation live the *real* fabric substrates (selected by
+//! `--fabric sim|tcp`): [`fabric`] extracts the all-gather surface and
+//! the decentralized worker loop, [`wire`] is the length-prefixed binary
+//! protocol, [`tcp`] is the multi-process rendezvous/relay substrate,
+//! and [`threads`] is the in-process concurrency twin.
 
+pub mod fabric;
+pub mod tcp;
 pub mod threads;
+pub mod wire;
 
 use crate::rng::Rng;
 
@@ -100,8 +109,11 @@ impl ComputeModel {
 /// The virtual cluster: one clock per worker plus the cost models.
 #[derive(Clone, Debug)]
 pub struct SimCluster {
+    /// One virtual clock (seconds) per worker.
     pub clocks: Vec<f64>,
+    /// Interconnect cost model charged by the collectives.
     pub fabric: FabricConfig,
+    /// Per-step compute-time model (jitter + straggler mixture).
     pub compute: ComputeModel,
     rng: Rng,
     /// Accumulated seconds spent inside collectives (telemetry).
@@ -111,6 +123,7 @@ pub struct SimCluster {
 }
 
 impl SimCluster {
+    /// A fresh cluster of `p` workers with all clocks at zero.
     pub fn new(p: usize, fabric: FabricConfig, compute: ComputeModel, seed: u64) -> Self {
         Self {
             clocks: vec![0.0; p],
@@ -122,6 +135,7 @@ impl SimCluster {
         }
     }
 
+    /// Number of workers in the cluster.
     pub fn p(&self) -> usize {
         self.clocks.len()
     }

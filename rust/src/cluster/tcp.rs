@@ -1,0 +1,576 @@
+//! TCP worker fabric: the rendezvous relay and the remote worker's
+//! [`Collective`] — decentralized WASGD on the wire.
+//!
+//! Topology: `wasgd serve` binds a listener and accepts exactly p
+//! connections; each `wasgd worker` process connects, handshakes
+//! ([`hello_frame`] → [`Welcome`] carrying its rank and the session's
+//! [`ExperimentConfig`] as JSON), builds its own engine and dataset
+//! (pure functions of the config), and runs
+//! [`run_fabric_worker`] with a [`RemoteCluster`] as the collective. At
+//! every τ-boundary a worker sends its `(h, θ)` [`Panel`]; the
+//! rendezvous node barriers the round on a [`PanelExchange`] and relays
+//! the full [`Cohort`] back to every peer, which then applies the
+//! Boltzmann β-negotiation (Eq. 10+13) *locally* — the rendezvous never
+//! aggregates and holds no center variable; it is a dumb relay, exactly
+//! the role a switch or a gossip overlay would play.
+//!
+//! Failure semantics: a worker that dies poisons the exchange; every
+//! other relay handler then pushes an [`MsgKind::Error`] frame to its
+//! worker so the whole cohort errors out instead of deadlocking.
+//!
+//! Resumable rendezvous: `serve` can start the cohort from a saved
+//! [`Checkpoint`] (each rank receives its `worker_{i}.f32` parameters in
+//! the Welcome), and the final panels can be written back as a
+//! checkpoint by the CLI — so a multi-process run survives restarts of
+//! the whole fabric.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::config::ExperimentConfig;
+use crate::metrics::CommCounters;
+use crate::runtime::load_backend;
+
+use super::fabric::{
+    algo_supports_fabric, fabric_dataset, planned_steps, run_fabric_worker, Collective,
+    FabricWorkerOutcome, PanelExchange, WorkerPanel,
+};
+use super::wire::{
+    self, cohort_frame_from_raw, error_text, hello_frame, Cohort, Frame, MsgKind, Panel, RawPanel,
+    Welcome, WireEncoding,
+};
+
+/// A remote worker's connection to the rendezvous node — the TCP
+/// implementation of the fabric's all-gather/barrier surface.
+pub struct RemoteCluster {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    rank: usize,
+    p: usize,
+    encoding: WireEncoding,
+    round: u64,
+    bytes_sent: u64,
+    bytes_received: u64,
+}
+
+impl RemoteCluster {
+    /// Connect to a rendezvous node and complete the handshake. Returns
+    /// the cluster plus the [`Welcome`] (session config JSON and
+    /// optional resume parameters). The Welcome frame's encoding byte
+    /// announces the session's panel encoding.
+    pub fn connect(addr: &str) -> Result<(Self, Welcome)> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to rendezvous at {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let read_half = stream.try_clone().context("cloning the rendezvous stream")?;
+        let mut writer = BufWriter::new(stream);
+        let mut reader = BufReader::new(read_half);
+
+        let hello = hello_frame();
+        hello.write_to(&mut writer)?;
+        let bytes_sent = hello.encoded_len() as u64;
+
+        let frame = Frame::read_from(&mut reader).context("waiting for the rendezvous welcome")?;
+        let bytes_received = frame.encoded_len() as u64;
+        if frame.kind == MsgKind::Error {
+            bail!("rendezvous refused the connection: {}", error_text(&frame));
+        }
+        let welcome = Welcome::parse(&frame)?;
+        ensure!(welcome.p > 0, "rendezvous announced an empty cohort");
+        ensure!(
+            welcome.rank < welcome.p,
+            "rendezvous assigned rank {} in a cohort of {}",
+            welcome.rank,
+            welcome.p
+        );
+        Ok((
+            Self {
+                reader,
+                writer,
+                rank: welcome.rank as usize,
+                p: welcome.p as usize,
+                encoding: frame.encoding,
+                round: 0,
+                bytes_sent,
+                bytes_received,
+            },
+            welcome,
+        ))
+    }
+
+    /// The session's panel encoding (dictated by the rendezvous node).
+    pub fn encoding(&self) -> WireEncoding {
+        self.encoding
+    }
+
+    /// Send the final `(mean energy, θ)` panel after the step budget.
+    /// `steps` is the total local step count this worker ran (carried in
+    /// the panel's round field so checkpoints record real progress).
+    pub fn send_final(&mut self, steps: u64, mean_energy: f32, params: &[f32]) -> Result<()> {
+        let frame = Panel::frame(MsgKind::Final, steps, mean_energy, params, self.encoding);
+        frame.write_to(&mut self.writer)?;
+        self.bytes_sent += frame.encoded_len() as u64;
+        Ok(())
+    }
+}
+
+impl Collective for RemoteCluster {
+    fn p(&self) -> usize {
+        self.p
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn all_gather(&mut self, h: f32, params: &[f32]) -> Result<Vec<WorkerPanel>> {
+        self.round += 1;
+        let frame = Panel::frame(MsgKind::Panel, self.round, h, params, self.encoding);
+        frame.write_to(&mut self.writer)?;
+        self.bytes_sent += frame.encoded_len() as u64;
+
+        let reply = Frame::read_from(&mut self.reader)
+            .with_context(|| format!("waiting for cohort of round {}", self.round))?;
+        self.bytes_received += reply.encoded_len() as u64;
+        if reply.kind == MsgKind::Error {
+            bail!("rendezvous aborted the session: {}", error_text(&reply));
+        }
+        let cohort = Cohort::parse(&reply)?;
+        ensure!(
+            cohort.round == self.round,
+            "cohort carries round {}, expected {}",
+            cohort.round,
+            self.round
+        );
+        ensure!(
+            cohort.panels.len() == self.p,
+            "cohort has {} panels, expected {}",
+            cohort.panels.len(),
+            self.p
+        );
+        Ok(cohort.panels)
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.bytes_sent
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.bytes_received
+    }
+}
+
+/// What a rendezvous session runs: the experiment, the panel encoding,
+/// and optionally a checkpoint to resume the cohort from.
+pub struct ServeOptions {
+    /// The session config, shipped verbatim to every worker.
+    pub cfg: ExperimentConfig,
+    /// Panel encoding on the wire (f32 = lossless, qi8 = 4× smaller).
+    pub encoding: WireEncoding,
+    /// Resume each rank from `workers[rank]` of this checkpoint.
+    pub resume: Option<Checkpoint>,
+}
+
+/// What a completed rendezvous session produced.
+#[derive(Clone, Debug)]
+pub struct ServeOutcome {
+    /// Final `(mean energy, θ)` per rank, in rank order.
+    pub finals: Vec<WorkerPanel>,
+    /// Collective rounds relayed (τ-boundaries crossed).
+    pub rounds: u64,
+    /// Local SGD steps each worker ran (as reported in its Final panel;
+    /// the max across ranks — they agree in a well-formed session).
+    pub steps: u64,
+    /// Per-peer relay traffic, feeding the cluster cost model.
+    pub comm: CommCounters,
+}
+
+struct RelayStats {
+    sent: u64,
+    received: u64,
+    rounds: u64,
+}
+
+/// A silent non-protocol connection may stall the handshake read at most
+/// this long before being dropped.
+const HANDSHAKE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
+/// Give up on the session after this many failed handshakes.
+const MAX_BAD_HANDSHAKES: usize = 64;
+
+type HandshakeOk = (BufReader<TcpStream>, BufWriter<TcpStream>, u64, u64);
+
+/// Validate one connection's hello and answer with its Welcome. The
+/// read timeout applies only during the handshake (relay reads must
+/// block indefinitely: τ compute periods are legitimately long).
+fn handshake(
+    stream: &TcpStream,
+    rank: usize,
+    p: usize,
+    cfg_json: &str,
+    opts: &ServeOptions,
+) -> Result<HandshakeOk> {
+    stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT)).ok();
+    let read_half = stream.try_clone().context("cloning a worker stream")?;
+    let mut reader = BufReader::new(read_half);
+    let hello = Frame::read_from(&mut reader).context("reading the hello")?;
+    ensure!(hello.kind == MsgKind::Hello, "opened with {:?}, expected a hello", hello.kind);
+    stream.set_read_timeout(None).ok();
+    let mut writer = BufWriter::new(stream.try_clone().context("cloning a worker stream")?);
+    let welcome = Welcome {
+        rank: rank as u32,
+        p: p as u32,
+        config_json: cfg_json.to_string(),
+        resume: opts.resume.as_ref().map(|ck| ck.workers[rank].clone()),
+    };
+    let frame = welcome.frame(opts.encoding);
+    frame.write_to(&mut writer).context("writing the welcome")?;
+    Ok((reader, writer, hello.encoded_len() as u64, frame.encoded_len() as u64))
+}
+
+/// Run one rendezvous session to completion: accept `cfg.p` workers
+/// (rank = accept order), handshake each, then relay `(h, θ)` panels
+/// round by round until every worker has delivered its final panel.
+///
+/// The rendezvous is numerics-free: it never touches θ beyond framing,
+/// so the aggregation stays fully decentralized (each worker applies
+/// Eq. 10+13 itself — no center variable anywhere).
+pub fn serve(listener: TcpListener, opts: &ServeOptions) -> Result<ServeOutcome> {
+    let cfg = &opts.cfg;
+    cfg.validate().map_err(|e| anyhow!(e))?;
+    ensure!(
+        algo_supports_fabric(cfg.algo),
+        "the tcp fabric supports the synchronous decentralized schemes; {} needs --fabric sim",
+        cfg.algo.name()
+    );
+    let p = cfg.p;
+    if let Some(ck) = &opts.resume {
+        ensure!(
+            ck.workers.len() == p,
+            "resume checkpoint has {} workers, session wants p={p}",
+            ck.workers.len()
+        );
+    }
+    let cfg_json = cfg.to_wire_json();
+    let mut comm = CommCounters::new(p);
+
+    // Handshake phase: rank = accept order *of completed handshakes*. A
+    // stray connection (port scan, health probe) is dropped — after a
+    // bounded read timeout if it stays silent — and the rank re-offered,
+    // instead of wedging the serial accept loop or aborting the session.
+    let mut bad_handshakes = 0usize;
+    let mut conns = Vec::with_capacity(p);
+    while conns.len() < p {
+        let rank = conns.len();
+        let (stream, peer) = listener.accept().context("accepting a worker connection")?;
+        stream.set_nodelay(true).ok();
+        match handshake(&stream, rank, p, &cfg_json, opts) {
+            Ok((reader, writer, hello_len, welcome_len)) => {
+                comm.add(rank, welcome_len, hello_len);
+                conns.push((reader, writer));
+            }
+            Err(e) => {
+                bad_handshakes += 1;
+                eprintln!("rendezvous: dropping connection from {peer}: {e:#}");
+                ensure!(
+                    bad_handshakes < MAX_BAD_HANDSHAKES,
+                    "{bad_handshakes} failed handshakes — is something else probing this port?"
+                );
+            }
+        }
+    }
+
+    // Relay phase: one handler thread per connection, barriered on a
+    // poisonable exchange. Panels stay in their *encoded* form end to
+    // end — the relay validates framing and memcpys bytes, it never
+    // decodes θ (and so can never re-quantise a qi8 panel).
+    let exchange: PanelExchange<(f32, Vec<u8>)> = PanelExchange::new(p);
+    let finals: Mutex<Vec<Option<(u64, WorkerPanel)>>> = Mutex::new(vec![None; p]);
+    let enc = opts.encoding;
+    let results: Vec<Result<RelayStats>> = std::thread::scope(|s| {
+        let exchange = &exchange;
+        let finals = &finals;
+        let handles: Vec<_> = conns
+            .into_iter()
+            .enumerate()
+            .map(|(rank, (mut reader, mut writer))| {
+                s.spawn(move || {
+                    let mut stats = RelayStats { sent: 0, received: 0, rounds: 0 };
+                    let result = relay_loop(
+                        rank,
+                        &mut reader,
+                        &mut writer,
+                        exchange,
+                        finals,
+                        enc,
+                        &mut stats,
+                    );
+                    if let Err(e) = &result {
+                        exchange.poison(&format!("relay for rank {rank} failed: {e}"));
+                        let _ = wire::error_frame(&format!("{e}")).write_to(&mut writer);
+                    }
+                    result.map(|()| stats)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("relay thread panicked"))))
+            .collect()
+    });
+
+    let mut rounds = 0u64;
+    for (rank, result) in results.into_iter().enumerate() {
+        let stats = result.with_context(|| format!("worker rank {rank}"))?;
+        comm.add(rank, stats.sent, stats.received);
+        rounds = rounds.max(stats.rounds);
+    }
+    let finals = finals.into_inner().unwrap();
+    let mut out = Vec::with_capacity(p);
+    let mut steps = 0u64;
+    for (rank, f) in finals.into_iter().enumerate() {
+        let (s, panel) =
+            f.ok_or_else(|| anyhow!("rank {rank} never delivered its final panel"))?;
+        steps = steps.max(s);
+        out.push(panel);
+    }
+    Ok(ServeOutcome { finals: out, rounds, steps, comm })
+}
+
+fn relay_loop(
+    rank: usize,
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut BufWriter<TcpStream>,
+    exchange: &PanelExchange<(f32, Vec<u8>)>,
+    finals: &Mutex<Vec<Option<(u64, WorkerPanel)>>>,
+    enc: WireEncoding,
+    stats: &mut RelayStats,
+) -> Result<()> {
+    loop {
+        let frame = Frame::read_from(reader)?;
+        stats.received += frame.encoded_len() as u64;
+        match frame.kind {
+            MsgKind::Panel => {
+                ensure!(
+                    frame.encoding == enc,
+                    "rank {rank} sent a {:?} panel in a {enc:?} session",
+                    frame.encoding
+                );
+                let panel = RawPanel::parse(&frame)?;
+                ensure!(
+                    panel.round == stats.rounds + 1,
+                    "rank {rank} jumped to round {} (expected {})",
+                    panel.round,
+                    stats.rounds + 1
+                );
+                let cohort = exchange.exchange(rank, (panel.h, panel.body))?;
+                let reply = cohort_frame_from_raw(panel.round, &cohort[..], enc);
+                reply.write_to(writer)?;
+                stats.sent += reply.encoded_len() as u64;
+                stats.rounds += 1;
+            }
+            MsgKind::Final => {
+                let panel = Panel::parse(&frame)?;
+                // A Final's round field is the worker's total step count.
+                finals.lock().unwrap()[rank] = Some((panel.round, (panel.h, panel.theta)));
+                // A departed participant can never deposit again. In the
+                // homogeneous case every rank finishes after the same
+                // round, all of whose deposits preceded this Final, so
+                // the poison is unobservable; with mismatched step
+                // budgets (e.g. different --artifacts resolving a
+                // different batch size) it converts what would be a
+                // permanent barrier deadlock into a clean session error.
+                exchange.poison(&format!(
+                    "rank {rank} finished after round {}; no further collectives can complete",
+                    stats.rounds
+                ));
+                return Ok(());
+            }
+            MsgKind::Error => bail!("worker rank {rank} reported: {}", error_text(&frame)),
+            other => bail!("unexpected {other:?} frame from rank {rank} mid-session"),
+        }
+    }
+}
+
+/// Run one remote worker end to end: connect, adopt the session config
+/// from the Welcome (CLI `--threads` / `--artifacts` override the local
+/// knobs), build engine + dataset locally, train through the fabric, and
+/// deliver the final panel.
+pub fn run_remote_worker(
+    addr: &str,
+    artifacts_root: Option<PathBuf>,
+    threads_override: Option<usize>,
+) -> Result<FabricWorkerOutcome> {
+    let (mut fabric, welcome) = RemoteCluster::connect(addr)?;
+    let mut cfg = ExperimentConfig::from_wire_json(&welcome.config_json)
+        .context("parsing the session config from the welcome")?;
+    if let Some(threads) = threads_override {
+        cfg.threads = threads;
+    }
+    if let Some(root) = artifacts_root {
+        cfg.artifacts_root = root;
+    }
+    let engine = load_backend(&cfg)?;
+    let dataset = fabric_dataset(&cfg, engine.manifest())?;
+    let total_steps = planned_steps(&cfg, dataset.n_train(), engine.manifest().batch);
+    let mut out = run_fabric_worker(
+        &cfg,
+        engine.as_ref(),
+        &dataset,
+        &mut fabric,
+        total_steps,
+        welcome.resume,
+    )?;
+    fabric.send_final(out.steps as u64, out.mean_energy, &out.params)?;
+    out.bytes_sent = fabric.bytes_sent();
+    out.bytes_received = fabric.bytes_received();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendKind, FabricKind};
+    use std::thread;
+
+    fn tcp_cfg(p: usize) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.backend = BackendKind::Native;
+        cfg.fabric = FabricKind::Tcp;
+        cfg.p = p;
+        cfg.tau = 8;
+        cfg.m = 2;
+        cfg.c = 1;
+        cfg.epochs = 0.25; // 512/8 per epoch → 16 steps, 2 boundaries
+        cfg
+    }
+
+    /// Spin up a loopback session with in-process worker threads (the
+    /// process-level twin lives in tests/fabric_e2e.rs).
+    fn loopback_session(cfg: &ExperimentConfig, opts_enc: WireEncoding) -> ServeOutcome {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let opts = ServeOptions { cfg: cfg.clone(), encoding: opts_enc, resume: None };
+        let server = thread::spawn(move || serve(listener, &opts));
+        let mut workers = Vec::new();
+        for _ in 0..cfg.p {
+            let addr = addr.clone();
+            workers.push(thread::spawn(move || run_remote_worker(&addr, None, None)));
+        }
+        for w in workers {
+            w.join().unwrap().unwrap();
+        }
+        server.join().unwrap().unwrap()
+    }
+
+    #[test]
+    fn loopback_session_completes_and_counts_bytes() {
+        let cfg = tcp_cfg(2);
+        let out = loopback_session(&cfg, WireEncoding::F32);
+        assert_eq!(out.finals.len(), 2);
+        assert_eq!(out.rounds, 2);
+        assert_eq!(out.steps, 16, "finals must report the true local step count");
+        for (h, theta) in &out.finals {
+            assert!(h.is_finite());
+            assert!(theta.iter().all(|v| v.is_finite()));
+            assert!(!theta.is_empty());
+        }
+        // The relay receives one panel and sends p panels per round.
+        assert!(out.comm.total_sent() > out.comm.total_received());
+        for peer in &out.comm.peers {
+            assert!(peer.sent > 0 && peer.received > 0);
+        }
+    }
+
+    #[test]
+    fn qi8_session_completes_with_much_less_traffic() {
+        let cfg = tcp_cfg(2);
+        let f32_out = loopback_session(&cfg, WireEncoding::F32);
+        let qi8_out = loopback_session(&cfg, WireEncoding::Qi8);
+        assert_eq!(qi8_out.rounds, f32_out.rounds);
+        for (h, theta) in &qi8_out.finals {
+            assert!(h.is_finite());
+            assert!(theta.iter().all(|v| v.is_finite()));
+        }
+        // Quantised panels are ~4× smaller; allow generous headroom.
+        assert!(
+            qi8_out.comm.total_sent() * 2 < f32_out.comm.total_sent(),
+            "qi8 {} B vs f32 {} B",
+            qi8_out.comm.total_sent(),
+            f32_out.comm.total_sent()
+        );
+    }
+
+    #[test]
+    fn resumed_session_starts_from_checkpoint_params() {
+        let cfg = tcp_cfg(2);
+        let first = loopback_session(&cfg, WireEncoding::F32);
+
+        // Resume from the first session's finals; the cohort must pick
+        // up those parameters (and therefore end somewhere new).
+        let ck = Checkpoint {
+            label: "resume-test".into(),
+            iteration: 16,
+            epoch: 0.25,
+            sim_time_s: 0.0,
+            workers: first.finals.iter().map(|(_, t)| t.clone()).collect(),
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let opts = ServeOptions { cfg: cfg.clone(), encoding: WireEncoding::F32, resume: Some(ck) };
+        let server = thread::spawn(move || serve(listener, &opts));
+        let mut workers = Vec::new();
+        for _ in 0..cfg.p {
+            let addr = addr.clone();
+            workers.push(thread::spawn(move || run_remote_worker(&addr, None, None)));
+        }
+        for w in workers {
+            w.join().unwrap().unwrap();
+        }
+        let resumed = server.join().unwrap().unwrap();
+        assert_eq!(resumed.finals.len(), 2);
+        for ((_, fresh), (_, cont)) in first.finals.iter().zip(resumed.finals.iter()) {
+            assert_eq!(fresh.len(), cont.len());
+            assert_ne!(fresh, cont, "a resumed cohort must keep moving");
+        }
+    }
+
+    #[test]
+    fn serve_rejects_mismatched_resume_geometry() {
+        let cfg = tcp_cfg(2);
+        let ck = Checkpoint {
+            label: "bad".into(),
+            iteration: 0,
+            epoch: 0.0,
+            sim_time_s: 0.0,
+            workers: vec![vec![0.0; 4]], // 1 worker, session wants 2
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let opts = ServeOptions { cfg, encoding: WireEncoding::F32, resume: Some(ck) };
+        assert!(serve(listener, &opts).is_err());
+    }
+
+    #[test]
+    fn dead_worker_poisons_the_whole_cohort() {
+        let mut cfg = tcp_cfg(2);
+        cfg.epochs = 4.0; // long enough that the survivor is mid-session
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let opts = ServeOptions { cfg, encoding: WireEncoding::F32, resume: None };
+        let server = thread::spawn(move || serve(listener, &opts));
+
+        // One real worker…
+        let real_addr = addr.clone();
+        let real = thread::spawn(move || run_remote_worker(&real_addr, None, None));
+        // …and one that handshakes, then hangs up before its first panel.
+        let (fabric, _welcome) = RemoteCluster::connect(&addr).unwrap();
+        drop(fabric);
+
+        assert!(server.join().unwrap().is_err(), "serve must report the dead worker");
+        assert!(real.join().unwrap().is_err(), "the survivor must be released with an error");
+    }
+}

@@ -6,80 +6,27 @@
 //! decentralized protocol composes with genuinely concurrent workers:
 //! backends are single-threaded (the PJRT client is `Rc`-based, not
 //! `Send`), so every thread constructs its own — exactly the process
-//! topology a multi-host deployment would have, with the [`AllGather`]
-//! channel standing in for the NIC.
+//! topology a multi-host deployment would have, with the in-process
+//! [`PanelExchange`](crate::cluster::fabric::PanelExchange) standing in
+//! for the NIC.
+//!
+//! Since the fabric refactor the loop itself lives in
+//! [`fabric::run_fabric_worker`](crate::cluster::fabric::run_fabric_worker)
+//! — the same code that drives `wasgd worker` processes over TCP — so a
+//! threaded run, a TCP run, and the simulated trainer produce
+//! **bit-identical** final parameters (pinned by `tests/fabric_e2e.rs`;
+//! the exchange itself is stress-tested in `tests/allgather_props.rs`).
 
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread;
-
-use anyhow::{ensure, Result};
+use anyhow::Result;
 
 use crate::config::ExperimentConfig;
-use crate::data::synth::SynthConfig;
-use crate::data::Dataset;
-use crate::kernels::Gemm;
-use crate::linalg;
-use crate::rng::Rng;
-use crate::runtime::{load_backend, Backend as _};
 
-/// A reusable p-way all-gather barrier carrying one `T` per participant.
-///
-/// `exchange(i, v)` blocks until all p participants of the current
-/// generation have deposited, then returns the full vector to everyone.
-pub struct AllGather<T> {
-    inner: Mutex<AgState<T>>,
-    cv: Condvar,
-    p: usize,
-}
-
-struct AgState<T> {
-    slots: Vec<Option<T>>,
-    published: Arc<Vec<T>>,
-    generation: u64,
-}
-
-impl<T: Clone> AllGather<T> {
-    pub fn new(p: usize) -> Self {
-        Self {
-            inner: Mutex::new(AgState {
-                slots: (0..p).map(|_| None).collect(),
-                published: Arc::new(Vec::new()),
-                generation: 0,
-            }),
-            cv: Condvar::new(),
-            p,
-        }
-    }
-
-    /// Deposit worker `i`'s contribution; returns everyone's once the
-    /// round completes. Panics on double-deposit within one round.
-    pub fn exchange(&self, i: usize, v: T) -> Arc<Vec<T>> {
-        let mut st = self.inner.lock().unwrap();
-        assert!(st.slots[i].is_none(), "worker {i} deposited twice in one round");
-        st.slots[i] = Some(v);
-        if st.slots.iter().all(|s| s.is_some()) {
-            let vals: Vec<T> = st.slots.iter_mut().map(|s| s.take().unwrap()).collect();
-            st.published = Arc::new(vals);
-            st.generation += 1;
-            self.cv.notify_all();
-            return st.published.clone();
-        }
-        let gen = st.generation;
-        while st.generation == gen {
-            st = self.cv.wait(st).unwrap();
-        }
-        st.published.clone()
-    }
-
-    pub fn participants(&self) -> usize {
-        self.p
-    }
-}
+use super::fabric::run_decentralized_threaded;
 
 /// Outcome of a threaded run.
 #[derive(Debug)]
 pub struct ThreadedOutcome {
-    /// Final mean train loss per worker (estimated over its last period).
+    /// Final mean recorded batch loss per worker (over its last period).
     pub final_energies: Vec<f32>,
     /// Worker 0's final parameters.
     pub params: Vec<f32>,
@@ -87,117 +34,36 @@ pub struct ThreadedOutcome {
     pub wall_time_s: f64,
     /// Total local steps per worker.
     pub steps: usize,
+    /// Wire-equivalent bytes the cohort exchanged (all workers, both
+    /// directions) — what the same run would push through a real NIC.
+    pub comm_bytes: u64,
 }
 
-/// Run WASGD+ (Eq. 10+13) with `cfg.p` real threads for
-/// `total_steps` local iterations each.
+/// Run WASGD+ (Eq. 10+13) with `cfg.p` real threads for `total_steps`
+/// local iterations each.
 ///
-/// Each thread: own backend (selected by `cfg.backend` — PJRT artifacts
-/// or the native engine), own shuffle stream, local SGD; at every
-/// τ-boundary, a real blocking all-gather of `(h, params)` followed by
-/// the Boltzmann β-negotiation applied locally (every worker computes
-/// the same aggregate — decentralized, no parameter server).
+/// Each thread: own backend (selected by `cfg.backend`), the simulated
+/// trainer's exact per-worker sample stream (§3.4 order search
+/// included), local SGD; at every τ-boundary a real blocking all-gather
+/// of `(h, params)` followed by the Boltzmann β-negotiation applied
+/// locally through the shared `CommPolicy` code — every worker computes
+/// the same aggregate (decentralized, no parameter server), and the
+/// final parameters match the simulated trainer bit for bit.
 pub fn run_wasgd_plus_threaded(
     cfg: &ExperimentConfig,
     total_steps: usize,
 ) -> Result<ThreadedOutcome> {
-    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
-    // Probe the backend once on this thread so the synthetic dataset can
-    // match the variant's input geometry (e.g. `tiny_cnn`'s 8×8×1 = 64
-    // against the tiny preset's 16 raw features) — the probe is dropped
-    // before any worker spawns.
-    let mut synth = SynthConfig::preset(cfg.dataset);
-    {
-        let probe = load_backend(cfg)?;
-        let m = probe.manifest();
-        ensure!(
-            synth.classes <= m.num_classes,
-            "dataset {} has {} classes but variant {} emits {} logits",
-            cfg.dataset.name(),
-            synth.classes,
-            m.name,
-            m.num_classes
-        );
-        synth.dim = m.input_dim;
-    }
-    let dataset: Arc<Dataset> = Arc::new(synth.build(cfg.seed));
-    let gather: Arc<AllGather<(f32, Vec<f32>)>> = Arc::new(AllGather::new(cfg.p));
     let started = std::time::Instant::now();
-
-    let mut handles = Vec::new();
-    for i in 0..cfg.p {
-        let cfg = cfg.clone();
-        let dataset = Arc::clone(&dataset);
-        let gather = Arc::clone(&gather);
-        handles.push(thread::spawn(move || -> Result<(f32, Vec<f32>)> {
-            // Backend is built *inside* the thread: PjRtClient is !Send.
-            let engine = load_backend(&cfg)?;
-            // Intra-op threads for the local β-negotiation row-combine —
-            // bit-identical at any count, so `--threads` stays pure
-            // throughput here too.
-            let gemm = Gemm::new(cfg.threads);
-            let b = engine.manifest().batch;
-            let mut params = engine.manifest().init_params(cfg.seed ^ 0x9a9a);
-            let mut rng = Rng::new(cfg.seed).child(100 + i as u64);
-            let n = dataset.n_train();
-            let mut order = rng.permutation(n);
-            let mut pos = 0usize;
-            let (mut x_buf, mut y_buf) = (Vec::new(), Vec::new());
-            let mut energy = 0.0f32;
-            let mut recorded = 0u32;
-            let mut last_energy = 1.0f32;
-
-            for step in 1..=total_steps {
-                if (pos + 1) * b > order.len() {
-                    order = rng.permutation(n);
-                    pos = 0;
-                }
-                let idx = &order[pos * b..(pos + 1) * b];
-                pos += 1;
-                dataset.gather_train(idx, &mut x_buf, &mut y_buf);
-                let (next, out) = engine.train_step(&params, &x_buf, &y_buf, cfg.lr)?;
-                params = next;
-                // Tail-window estimation (c=1 flavour of Eq. 26).
-                if step % cfg.tau > cfg.tau.saturating_sub(cfg.m) || step % cfg.tau == 0 {
-                    energy += out.loss;
-                    recorded += 1;
-                }
-                if step % cfg.tau == 0 {
-                    let h = if recorded == 0 { 1.0 } else { energy.max(1e-12) };
-                    last_energy = h / recorded.max(1) as f32;
-                    // REAL all-gather: blocks until the whole cohort is here.
-                    let cohort = gather.exchange(i, (h, params.clone()));
-                    let hs: Vec<f32> = cohort.iter().map(|(h, _)| *h).collect();
-                    let theta = linalg::boltzmann_weights(&hs, cfg.a_tilde);
-                    let mut agg = vec![0.0f32; params.len()];
-                    {
-                        let rows: Vec<&[f32]> =
-                            cohort.iter().map(|(_, p)| p.as_slice()).collect();
-                        gemm.combine_rows(&mut agg, &rows, &theta);
-                    }
-                    linalg::lerp_into(&mut params, cfg.beta, &agg);
-                    energy = 0.0;
-                    recorded = 0;
-                }
-            }
-            Ok((last_energy, params))
-        }));
-    }
-
-    let mut final_energies = Vec::with_capacity(cfg.p);
-    let mut params0 = Vec::new();
-    for (i, h) in handles.into_iter().enumerate() {
-        let (e, p) = h.join().map_err(|_| anyhow::anyhow!("worker {i} panicked"))??;
-        final_energies.push(e);
-        if i == 0 {
-            params0 = p;
-        }
-    }
+    let mut outs = run_decentralized_threaded(cfg, total_steps)?;
+    let final_energies = outs.iter().map(|o| o.mean_energy).collect();
+    let comm_bytes = outs.iter().map(|o| o.bytes_sent + o.bytes_received).sum();
+    let params = std::mem::take(&mut outs[0].params);
     Ok(ThreadedOutcome {
         final_energies,
-        params: params0,
+        params,
         wall_time_s: started.elapsed().as_secs_f64(),
         steps: total_steps,
+        comm_bytes,
     })
 }
 
@@ -219,44 +85,7 @@ mod tests {
         assert_eq!(out.final_energies.len(), 2);
         assert!(out.final_energies.iter().all(|&e| e.is_finite() && e < 1.0));
         assert!(!out.params.is_empty());
-    }
-
-    #[test]
-    fn allgather_roundtrip_two_threads() {
-        let ag: Arc<AllGather<u32>> = Arc::new(AllGather::new(2));
-        let a = Arc::clone(&ag);
-        let t = thread::spawn(move || a.exchange(1, 11).to_vec());
-        let got0 = ag.exchange(0, 7).to_vec();
-        let got1 = t.join().unwrap();
-        assert_eq!(got0, vec![7, 11]);
-        assert_eq!(got1, vec![7, 11]);
-    }
-
-    #[test]
-    fn allgather_many_rounds() {
-        let p = 4;
-        let ag: Arc<AllGather<usize>> = Arc::new(AllGather::new(p));
-        let mut handles = Vec::new();
-        for i in 0..p {
-            let ag = Arc::clone(&ag);
-            handles.push(thread::spawn(move || {
-                let mut sums = Vec::new();
-                for round in 0..50 {
-                    let vals = ag.exchange(i, i * 1000 + round);
-                    sums.push(vals.iter().sum::<usize>());
-                }
-                sums
-            }));
-        }
-        let results: Vec<Vec<usize>> =
-            handles.into_iter().map(|h| h.join().unwrap()).collect();
-        // Every worker saw the identical per-round sums.
-        for r in &results[1..] {
-            assert_eq!(r, &results[0]);
-        }
-        // Round r sum = Σᵢ (i·1000 + r) = 6000 + 4r.
-        for (round, &s) in results[0].iter().enumerate() {
-            assert_eq!(s, 6000 + 4 * round);
-        }
+        assert!(out.comm_bytes > 0);
+        assert_eq!(out.steps, 96);
     }
 }

@@ -1,0 +1,730 @@
+//! Length-prefixed binary wire protocol for the TCP worker fabric.
+//!
+//! Every message is one *frame*:
+//!
+//! ```text
+//! ┌────────────┬─────────────┬──────────┬──────────────┬─────────────┬─────────┐
+//! │ magic (4B) │ version u16 │ kind u8  │ encoding u8  │ len u32 LE  │ payload │
+//! │  "WSGD"    │  LE, = 1    │ MsgKind  │ WireEncoding │  ≤ 1 GiB    │ len B   │
+//! └────────────┴─────────────┴──────────┴──────────────┴─────────────┴─────────┘
+//! ```
+//!
+//! Parameter vectors inside a payload carry their own `u32` byte length
+//! and are encoded per the frame's [`WireEncoding`]:
+//!
+//! * **f32** — raw little-endian bits, 4 bytes per element. Decoding is
+//!   *bit-exact* (including NaN payloads), which is what lets a TCP run
+//!   reproduce the simulated trainer's parameters bit for bit.
+//! * **qi8** — symmetric linear quantisation: one f32 scale
+//!   (`max |x| / 127`) followed by one i8 per element (`x ≈ scale·q`).
+//!   4× smaller on the wire; lossy (≤ scale/2 per element), so it trades
+//!   bit-reproducibility for bandwidth — the paper's large-τ regime in
+//!   byte form.
+//!
+//! Loss energies `h` and all counters are always raw (never quantised):
+//! they are tiny and they steer the Boltzmann weights, where a half-step
+//! of quantisation error would be disproportionate.
+//!
+//! Robustness: [`Frame::read_from`] rejects bad magic, unknown versions /
+//! kinds / encodings, and oversized lengths *before* allocating, and any
+//! truncated stream surfaces as an error from `read_exact` — all pinned
+//! by `tests/wire_props.rs`.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Frame magic: the ASCII bytes `WSGD`.
+pub const MAGIC: [u8; 4] = *b"WSGD";
+/// Protocol version spoken by this build (bumped on incompatible change).
+pub const VERSION: u16 = 1;
+/// Bytes of the fixed frame header (magic + version + kind + encoding + len).
+pub const HEADER_LEN: usize = 12;
+/// Upper bound on a frame payload — rejects hostile/corrupt lengths
+/// before any allocation happens.
+pub const MAX_FRAME_LEN: u32 = 1 << 30;
+
+/// What a frame carries — the message vocabulary of the fabric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MsgKind {
+    /// Worker → rendezvous: opening handshake (empty payload; the header
+    /// itself carries the protocol version being spoken).
+    Hello,
+    /// Rendezvous → worker: rank assignment, cohort size, the session's
+    /// experiment config as JSON, and optional resume parameters.
+    Welcome,
+    /// Worker → rendezvous: one round's `(h, θ)` contribution.
+    Panel,
+    /// Rendezvous → worker: the full cohort's panels for one round, in
+    /// rank order.
+    Cohort,
+    /// Worker → rendezvous: the final `(mean energy, θ)` after the local
+    /// step budget is exhausted. Its `round` field carries the worker's
+    /// *total local step count* (not a collective round number).
+    Final,
+    /// Either direction: fatal session error; payload is a UTF-8 message.
+    Error,
+}
+
+impl MsgKind {
+    fn as_u8(self) -> u8 {
+        match self {
+            MsgKind::Hello => 1,
+            MsgKind::Welcome => 2,
+            MsgKind::Panel => 3,
+            MsgKind::Cohort => 4,
+            MsgKind::Final => 5,
+            MsgKind::Error => 6,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            1 => MsgKind::Hello,
+            2 => MsgKind::Welcome,
+            3 => MsgKind::Panel,
+            4 => MsgKind::Cohort,
+            5 => MsgKind::Final,
+            6 => MsgKind::Error,
+            _ => return None,
+        })
+    }
+}
+
+/// How parameter vectors are encoded inside payloads.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WireEncoding {
+    /// Raw little-endian f32 bits — lossless and bit-exact.
+    #[default]
+    F32,
+    /// Symmetric linear i8 quantisation with a per-vector f32 scale —
+    /// ~4× smaller, lossy (≤ scale/2 per element).
+    Qi8,
+}
+
+impl WireEncoding {
+    /// Every encoding, in wire-id order.
+    pub const ALL: [WireEncoding; 2] = [WireEncoding::F32, WireEncoding::Qi8];
+
+    /// CLI name (`--encoding f32|qi8`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireEncoding::F32 => "f32",
+            WireEncoding::Qi8 => "qi8",
+        }
+    }
+
+    /// Parse a CLI name; `None` for anything unknown.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "f32" => WireEncoding::F32,
+            "qi8" => WireEncoding::Qi8,
+            _ => return None,
+        })
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            WireEncoding::F32 => 0,
+            WireEncoding::Qi8 => 1,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            0 => WireEncoding::F32,
+            1 => WireEncoding::Qi8,
+            _ => return None,
+        })
+    }
+
+    /// Encoded byte length of an `n`-element vector body (excluding the
+    /// `u32` length prefix messages put in front of it).
+    pub fn encoded_vec_len(&self, n: usize) -> usize {
+        match self {
+            WireEncoding::F32 => 4 * n,
+            WireEncoding::Qi8 => 4 + n,
+        }
+    }
+}
+
+/// One wire frame: a typed header plus an opaque payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    /// Message kind from the header.
+    pub kind: MsgKind,
+    /// Vector encoding used inside the payload.
+    pub encoding: WireEncoding,
+    /// The message body (layout per [`MsgKind`]).
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// Total bytes this frame occupies on the wire (header + payload).
+    pub fn encoded_len(&self) -> usize {
+        HEADER_LEN + self.payload.len()
+    }
+
+    /// Serialise header + payload and flush.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        ensure!(
+            self.payload.len() <= MAX_FRAME_LEN as usize,
+            "frame payload of {} bytes exceeds the {} byte cap",
+            self.payload.len(),
+            MAX_FRAME_LEN
+        );
+        let mut head = [0u8; HEADER_LEN];
+        head[0..4].copy_from_slice(&MAGIC);
+        head[4..6].copy_from_slice(&VERSION.to_le_bytes());
+        head[6] = self.kind.as_u8();
+        head[7] = self.encoding.as_u8();
+        head[8..12].copy_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        w.write_all(&head).context("writing frame header")?;
+        w.write_all(&self.payload).context("writing frame payload")?;
+        w.flush().context("flushing frame")?;
+        Ok(())
+    }
+
+    /// Read and validate one frame. Truncated streams error out of
+    /// `read_exact`; bad magic / version / kind / encoding / length are
+    /// rejected before the payload is allocated.
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Frame> {
+        let mut head = [0u8; HEADER_LEN];
+        r.read_exact(&mut head).context("reading frame header (truncated stream?)")?;
+        ensure!(head[0..4] == MAGIC, "bad frame magic — peer is not speaking the wasgd protocol");
+        let version = u16::from_le_bytes([head[4], head[5]]);
+        ensure!(
+            version == VERSION,
+            "peer speaks wire protocol v{version}, this build speaks v{VERSION}"
+        );
+        let kind = MsgKind::from_u8(head[6])
+            .ok_or_else(|| anyhow::anyhow!("unknown message kind {}", head[6]))?;
+        let encoding = WireEncoding::from_u8(head[7])
+            .ok_or_else(|| anyhow::anyhow!("unknown payload encoding {}", head[7]))?;
+        let len = u32::from_le_bytes([head[8], head[9], head[10], head[11]]);
+        ensure!(len <= MAX_FRAME_LEN, "frame of {len} bytes exceeds the {MAX_FRAME_LEN} byte cap");
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload).context("reading frame payload (truncated stream?)")?;
+        Ok(Frame { kind, encoding, payload })
+    }
+}
+
+/// Append the encoded body of `v` to `out` (no length prefix).
+fn encode_vec(enc: WireEncoding, v: &[f32], out: &mut Vec<u8>) {
+    match enc {
+        WireEncoding::F32 => {
+            out.reserve(4 * v.len());
+            for &x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        WireEncoding::Qi8 => {
+            let max_abs = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let scale = if max_abs.is_finite() && max_abs > 0.0 { max_abs / 127.0 } else { 0.0 };
+            out.reserve(4 + v.len());
+            out.extend_from_slice(&scale.to_le_bytes());
+            for &x in v {
+                let q = if scale > 0.0 {
+                    (x / scale).round().clamp(-127.0, 127.0) as i8
+                } else {
+                    0
+                };
+                out.push(q as u8);
+            }
+        }
+    }
+}
+
+/// Decode a vector body produced by [`encode_vec`] (element count is
+/// implied by the byte length).
+fn decode_vec(enc: WireEncoding, bytes: &[u8]) -> Result<Vec<f32>> {
+    match enc {
+        WireEncoding::F32 => {
+            ensure!(bytes.len() % 4 == 0, "f32 vector body of {} bytes is ragged", bytes.len());
+            Ok(bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        }
+        WireEncoding::Qi8 => {
+            ensure!(bytes.len() >= 4, "qi8 vector body shorter than its scale");
+            let scale = f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+            ensure!(scale.is_finite() && scale >= 0.0, "qi8 scale {scale} is invalid");
+            Ok(bytes[4..].iter().map(|&b| scale * (b as i8) as f32).collect())
+        }
+    }
+}
+
+/// Little-endian payload cursor with truncation checks.
+struct Cur<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.b.len() >= n, "truncated payload: wanted {n} bytes, have {}", self.b.len());
+        let (head, tail) = self.b.split_at(n);
+        self.b = tail;
+        Ok(head)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn finish(&self) -> Result<()> {
+        ensure!(self.b.is_empty(), "{} trailing bytes in payload", self.b.len());
+        Ok(())
+    }
+}
+
+fn put_vec(enc: WireEncoding, v: &[f32], out: &mut Vec<u8>) {
+    out.extend_from_slice(&(enc.encoded_vec_len(v.len()) as u32).to_le_bytes());
+    encode_vec(enc, v, out);
+}
+
+fn get_vec(enc: WireEncoding, cur: &mut Cur<'_>) -> Result<Vec<f32>> {
+    let len = cur.u32()? as usize;
+    decode_vec(enc, cur.take(len)?)
+}
+
+/// One worker's `(h, θ)` contribution for one collective round. The same
+/// payload layout serves [`MsgKind::Panel`] and [`MsgKind::Final`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Panel {
+    /// 1-based collective round (boundary index) this panel belongs to.
+    pub round: u64,
+    /// Windowed loss energy h (always raw f32 bits, never quantised).
+    pub h: f32,
+    /// Flat parameter vector θ (encoded per the frame's encoding).
+    pub theta: Vec<f32>,
+}
+
+impl Panel {
+    /// Build the wire frame for a panel (`kind` is [`MsgKind::Panel`] or
+    /// [`MsgKind::Final`]).
+    pub fn frame(kind: MsgKind, round: u64, h: f32, theta: &[f32], enc: WireEncoding) -> Frame {
+        let mut payload = Vec::with_capacity(16 + enc.encoded_vec_len(theta.len()));
+        payload.extend_from_slice(&round.to_le_bytes());
+        payload.extend_from_slice(&h.to_le_bytes());
+        put_vec(enc, theta, &mut payload);
+        Frame { kind, encoding: enc, payload }
+    }
+
+    /// Parse a [`MsgKind::Panel`] / [`MsgKind::Final`] frame.
+    pub fn parse(frame: &Frame) -> Result<Panel> {
+        ensure!(
+            matches!(frame.kind, MsgKind::Panel | MsgKind::Final),
+            "expected a panel/final frame, got {:?}",
+            frame.kind
+        );
+        let mut cur = Cur::new(&frame.payload);
+        let round = cur.u64()?;
+        let h = cur.f32()?;
+        let theta = get_vec(frame.encoding, &mut cur)?;
+        cur.finish()?;
+        Ok(Panel { round, h, theta })
+    }
+
+    /// Exact on-wire size of a panel frame carrying `d` parameters.
+    pub fn wire_len(enc: WireEncoding, d: usize) -> usize {
+        HEADER_LEN + 8 + 4 + 4 + enc.encoded_vec_len(d)
+    }
+}
+
+/// A panel whose θ body is kept *encoded* — the relay-side view. The
+/// rendezvous node never decodes parameters (and therefore can never
+/// re-quantise them): it validates the framing, barriers, and memcpys
+/// the original bytes back out.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RawPanel {
+    /// 1-based collective round this panel belongs to.
+    pub round: u64,
+    /// Windowed loss energy h (raw f32 bits).
+    pub h: f32,
+    /// The θ vector exactly as encoded by the sender.
+    pub body: Vec<u8>,
+}
+
+impl RawPanel {
+    /// Parse a [`MsgKind::Panel`] / [`MsgKind::Final`] frame without
+    /// decoding the θ body.
+    pub fn parse(frame: &Frame) -> Result<RawPanel> {
+        ensure!(
+            matches!(frame.kind, MsgKind::Panel | MsgKind::Final),
+            "expected a panel/final frame, got {:?}",
+            frame.kind
+        );
+        let mut cur = Cur::new(&frame.payload);
+        let round = cur.u64()?;
+        let h = cur.f32()?;
+        let len = cur.u32()? as usize;
+        let body = cur.take(len)?.to_vec();
+        cur.finish()?;
+        Ok(RawPanel { round, h, body })
+    }
+
+    /// Decode the θ body with the frame's encoding (worker-side use of a
+    /// relayed raw panel, e.g. the stored finals).
+    pub fn decode(&self, enc: WireEncoding) -> Result<Vec<f32>> {
+        decode_vec(enc, &self.body)
+    }
+}
+
+/// Assemble a cohort frame from already-encoded panel bodies — the
+/// relay's path: byte-for-byte identical to [`Cohort::frame`] over the
+/// decoded panels, with no decode/re-encode in between.
+pub fn cohort_frame_from_raw(round: u64, panels: &[(f32, Vec<u8>)], enc: WireEncoding) -> Frame {
+    let body: usize = panels.iter().map(|(_, b)| 8 + b.len()).sum();
+    let mut payload = Vec::with_capacity(12 + body);
+    payload.extend_from_slice(&round.to_le_bytes());
+    payload.extend_from_slice(&(panels.len() as u32).to_le_bytes());
+    for (h, bytes) in panels {
+        payload.extend_from_slice(&h.to_le_bytes());
+        payload.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+        payload.extend_from_slice(bytes);
+    }
+    Frame { kind: MsgKind::Cohort, encoding: enc, payload }
+}
+
+/// The full cohort's panels for one round, relayed back in rank order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cohort {
+    /// The round these panels belong to.
+    pub round: u64,
+    /// `(h, θ)` per rank, index = rank.
+    pub panels: Vec<(f32, Vec<f32>)>,
+}
+
+impl Cohort {
+    /// Build the wire frame for a relayed cohort.
+    pub fn frame(round: u64, panels: &[(f32, Vec<f32>)], enc: WireEncoding) -> Frame {
+        let body: usize = panels.iter().map(|(_, t)| 8 + enc.encoded_vec_len(t.len())).sum();
+        let mut payload = Vec::with_capacity(12 + body);
+        payload.extend_from_slice(&round.to_le_bytes());
+        payload.extend_from_slice(&(panels.len() as u32).to_le_bytes());
+        for (h, theta) in panels {
+            payload.extend_from_slice(&h.to_le_bytes());
+            put_vec(enc, theta, &mut payload);
+        }
+        Frame { kind: MsgKind::Cohort, encoding: enc, payload }
+    }
+
+    /// Parse a [`MsgKind::Cohort`] frame.
+    pub fn parse(frame: &Frame) -> Result<Cohort> {
+        ensure!(frame.kind == MsgKind::Cohort, "expected a cohort frame, got {:?}", frame.kind);
+        let mut cur = Cur::new(&frame.payload);
+        let round = cur.u64()?;
+        let p = cur.u32()? as usize;
+        ensure!(p <= 1 << 20, "implausible cohort size {p}");
+        // Each panel occupies ≥ 8 payload bytes (h + length prefix), so
+        // a lying header cannot reserve more than the payload justifies.
+        let mut panels = Vec::with_capacity(p.min(frame.payload.len() / 8));
+        for _ in 0..p {
+            let h = cur.f32()?;
+            let theta = get_vec(frame.encoding, &mut cur)?;
+            panels.push((h, theta));
+        }
+        cur.finish()?;
+        Ok(Cohort { round, panels })
+    }
+
+    /// Exact on-wire size of a cohort frame of `p` same-length rows.
+    pub fn wire_len(enc: WireEncoding, d: usize, p: usize) -> usize {
+        HEADER_LEN + 8 + 4 + p * (8 + enc.encoded_vec_len(d))
+    }
+}
+
+/// The rendezvous node's handshake reply: identity + session config.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Welcome {
+    /// This connection's rank in `[0, p)` (accept order).
+    pub rank: u32,
+    /// Cohort size p.
+    pub p: u32,
+    /// The session [`ExperimentConfig`](crate::config::ExperimentConfig)
+    /// as wire JSON (see `ExperimentConfig::to_wire_json`).
+    pub config_json: String,
+    /// Starting parameters when resuming from a checkpointed rendezvous.
+    /// Always encoded f32 regardless of the session's panel encoding: a
+    /// restart transfer happens once, so it never trades precision for
+    /// bandwidth (a full-precision checkpoint resumes exactly).
+    pub resume: Option<Vec<f32>>,
+}
+
+impl Welcome {
+    /// Build the wire frame (the frame's encoding byte announces the
+    /// session's panel encoding to the worker).
+    pub fn frame(&self, enc: WireEncoding) -> Frame {
+        let mut payload = Vec::with_capacity(13 + self.config_json.len());
+        payload.extend_from_slice(&self.rank.to_le_bytes());
+        payload.extend_from_slice(&self.p.to_le_bytes());
+        payload.extend_from_slice(&(self.config_json.len() as u32).to_le_bytes());
+        payload.extend_from_slice(self.config_json.as_bytes());
+        match &self.resume {
+            None => payload.push(0),
+            Some(v) => {
+                payload.push(1);
+                put_vec(WireEncoding::F32, v, &mut payload);
+            }
+        }
+        Frame { kind: MsgKind::Welcome, encoding: enc, payload }
+    }
+
+    /// Parse a [`MsgKind::Welcome`] frame.
+    pub fn parse(frame: &Frame) -> Result<Welcome> {
+        ensure!(frame.kind == MsgKind::Welcome, "expected a welcome frame, got {:?}", frame.kind);
+        let mut cur = Cur::new(&frame.payload);
+        let rank = cur.u32()?;
+        let p = cur.u32()?;
+        let json_len = cur.u32()? as usize;
+        let config_json = std::str::from_utf8(cur.take(json_len)?)
+            .context("welcome config is not UTF-8")?
+            .to_string();
+        let resume = match cur.u8()? {
+            0 => None,
+            1 => Some(get_vec(WireEncoding::F32, &mut cur)?),
+            other => bail!("bad resume marker {other}"),
+        };
+        cur.finish()?;
+        Ok(Welcome { rank, p, config_json, resume })
+    }
+}
+
+/// The opening handshake frame a worker sends (empty payload; the header
+/// carries the version).
+pub fn hello_frame() -> Frame {
+    Frame { kind: MsgKind::Hello, encoding: WireEncoding::F32, payload: Vec::new() }
+}
+
+/// A fatal-error frame carrying a UTF-8 message.
+pub fn error_frame(msg: &str) -> Frame {
+    Frame { kind: MsgKind::Error, encoding: WireEncoding::F32, payload: msg.as_bytes().to_vec() }
+}
+
+/// The message of an [`MsgKind::Error`] frame (lossy UTF-8).
+pub fn error_text(frame: &Frame) -> String {
+    String::from_utf8_lossy(&frame.payload).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let mut bytes = Vec::new();
+        frame.write_to(&mut bytes).unwrap();
+        assert_eq!(bytes.len(), frame.encoded_len());
+        Frame::read_from(&mut Cursor::new(&bytes)).unwrap()
+    }
+
+    #[test]
+    fn panel_f32_roundtrip_is_bit_exact_including_specials() {
+        let theta = vec![1.5f32, -0.0, f32::NAN, f32::INFINITY, f32::MIN_POSITIVE, -3.25e-30];
+        let f = Panel::frame(MsgKind::Panel, 7, f32::NAN, &theta, WireEncoding::F32);
+        assert_eq!(f.encoded_len(), Panel::wire_len(WireEncoding::F32, theta.len()));
+        let p = Panel::parse(&roundtrip(&f)).unwrap();
+        assert_eq!(p.round, 7);
+        assert_eq!(p.h.to_bits(), f32::NAN.to_bits());
+        assert_eq!(p.theta.len(), theta.len());
+        for (a, b) in p.theta.iter().zip(theta.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn qi8_quantisation_bounded_and_smaller() {
+        let theta: Vec<f32> = (0..257).map(|i| (i as f32 - 128.0) * 0.37).collect();
+        let max_abs = theta.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let scale = max_abs / 127.0;
+        let f = Panel::frame(MsgKind::Panel, 1, 0.5, &theta, WireEncoding::Qi8);
+        assert_eq!(f.encoded_len(), Panel::wire_len(WireEncoding::Qi8, theta.len()));
+        assert!(f.encoded_len() < Panel::wire_len(WireEncoding::F32, theta.len()) / 3);
+        let p = Panel::parse(&roundtrip(&f)).unwrap();
+        for (a, b) in p.theta.iter().zip(theta.iter()) {
+            assert!((a - b).abs() <= scale * 0.5 + max_abs * 1e-5, "{a} vs {b}");
+        }
+        // h is never quantised.
+        assert_eq!(p.h.to_bits(), 0.5f32.to_bits());
+    }
+
+    #[test]
+    fn qi8_degenerate_vectors() {
+        for theta in [vec![], vec![0.0f32; 9], vec![f32::NAN, f32::INFINITY]] {
+            let f = Panel::frame(MsgKind::Panel, 2, 1.0, &theta, WireEncoding::Qi8);
+            let p = Panel::parse(&roundtrip(&f)).unwrap();
+            assert_eq!(p.theta.len(), theta.len());
+            assert!(p.theta.iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn cohort_roundtrip_preserves_rank_order() {
+        let panels = vec![
+            (0.25f32, vec![1.0f32, 2.0]),
+            (0.5, vec![-1.0, -2.0]),
+            (1.5, vec![9.0, 8.0]),
+        ];
+        let f = Cohort::frame(3, &panels, WireEncoding::F32);
+        assert_eq!(f.encoded_len(), Cohort::wire_len(WireEncoding::F32, 2, 3));
+        let c = Cohort::parse(&roundtrip(&f)).unwrap();
+        assert_eq!(c.round, 3);
+        assert_eq!(c.panels, panels);
+    }
+
+    #[test]
+    fn raw_relay_preserves_sender_bytes_verbatim() {
+        // The relay pipeline (RawPanel::parse → cohort_frame_from_raw)
+        // must hand every worker exactly the bytes each sender encoded:
+        // a cohort recipient decodes the identical values the panel
+        // sender would decode, under BOTH encodings — i.e. the relay
+        // never re-quantises. For f32 the assembled frame is also
+        // byte-identical to the decode/re-encode path.
+        for enc in WireEncoding::ALL {
+            let thetas =
+                [vec![1.5f32, -2.25, 0.0], vec![9.0, -0.125, 3.5], vec![0.75, 0.5, -1.0]];
+            let mut raws = Vec::new();
+            let mut decoded = Vec::new();
+            for (i, t) in thetas.iter().enumerate() {
+                let pf = Panel::frame(MsgKind::Panel, 4, i as f32, t, enc);
+                let raw = RawPanel::parse(&pf).unwrap();
+                assert_eq!(raw.round, 4);
+                decoded.push((raw.h, raw.decode(enc).unwrap()));
+                raws.push((raw.h, raw.body));
+            }
+            let via_raw = cohort_frame_from_raw(4, &raws, enc);
+            let cohort = Cohort::parse(&roundtrip(&via_raw)).unwrap();
+            assert_eq!(cohort.round, 4);
+            for ((ch, ct), (dh, dt)) in cohort.panels.iter().zip(decoded.iter()) {
+                assert_eq!(ch.to_bits(), dh.to_bits());
+                assert_eq!(ct.len(), dt.len());
+                for (a, b) in ct.iter().zip(dt.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{enc:?} relay altered θ");
+                }
+            }
+            if enc == WireEncoding::F32 {
+                assert_eq!(via_raw, Cohort::frame(4, &decoded, enc));
+            }
+        }
+    }
+
+    #[test]
+    fn welcome_roundtrip_with_and_without_resume() {
+        // Resume params must survive bit-exactly under BOTH session
+        // encodings — the one-time restart transfer is never quantised.
+        for enc in WireEncoding::ALL {
+            for resume in [None, Some(vec![0.5f32, -1.537_218_4, 2.25e-17])] {
+                let w = Welcome {
+                    rank: 2,
+                    p: 4,
+                    config_json: "{\"p\": 4}\n".to_string(),
+                    resume: resume.clone(),
+                };
+                let frame = roundtrip(&w.frame(enc));
+                assert_eq!(frame.encoding, enc, "session encoding rides the header");
+                let back = Welcome::parse(&frame).unwrap();
+                assert_eq!(back, w, "{enc:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn hello_and_error_frames() {
+        let h = roundtrip(&hello_frame());
+        assert_eq!(h.kind, MsgKind::Hello);
+        assert!(h.payload.is_empty());
+        let e = roundtrip(&error_frame("cohort failed: worker 2 died"));
+        assert_eq!(e.kind, MsgKind::Error);
+        assert_eq!(error_text(&e), "cohort failed: worker 2 died");
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_kind_encoding_and_oversize() {
+        let mut bytes = Vec::new();
+        Panel::frame(MsgKind::Panel, 1, 0.0, &[1.0], WireEncoding::F32)
+            .write_to(&mut bytes)
+            .unwrap();
+
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Frame::read_from(&mut Cursor::new(&bad)).is_err(), "bad magic");
+
+        let mut bad = bytes.clone();
+        bad[4] = 99;
+        assert!(Frame::read_from(&mut Cursor::new(&bad)).is_err(), "bad version");
+
+        let mut bad = bytes.clone();
+        bad[6] = 0;
+        assert!(Frame::read_from(&mut Cursor::new(&bad)).is_err(), "bad kind");
+
+        let mut bad = bytes.clone();
+        bad[7] = 9;
+        assert!(Frame::read_from(&mut Cursor::new(&bad)).is_err(), "bad encoding");
+
+        // Oversized length is rejected before any allocation.
+        let mut bad = bytes.clone();
+        bad[8..12].copy_from_slice(&(MAX_FRAME_LEN + 1).to_le_bytes());
+        assert!(Frame::read_from(&mut Cursor::new(&bad)).is_err(), "oversize");
+    }
+
+    #[test]
+    fn every_truncation_of_a_frame_is_rejected() {
+        let mut bytes = Vec::new();
+        Cohort::frame(1, &[(0.5, vec![1.0, 2.0, 3.0])], WireEncoding::F32)
+            .write_to(&mut bytes)
+            .unwrap();
+        for k in 0..bytes.len() {
+            assert!(
+                Frame::read_from(&mut Cursor::new(&bytes[..k])).is_err(),
+                "prefix of {k} bytes must not parse"
+            );
+        }
+        // The full frame still parses.
+        assert!(Frame::read_from(&mut Cursor::new(&bytes)).is_ok());
+    }
+
+    #[test]
+    fn payload_level_truncation_is_rejected() {
+        // A syntactically valid frame whose payload lies about its inner
+        // vector length must fail in the typed parser, not panic.
+        let good = Panel::frame(MsgKind::Panel, 1, 0.0, &[1.0, 2.0], WireEncoding::F32);
+        let mut evil = good.clone();
+        // Inflate the inner vector length prefix past the payload end.
+        let off = 12; // round(8) + h(4)
+        evil.payload[off..off + 4].copy_from_slice(&1024u32.to_le_bytes());
+        assert!(Panel::parse(&evil).is_err());
+        // Trailing garbage is rejected too.
+        let mut trailing = good.clone();
+        trailing.payload.push(0xAB);
+        assert!(Panel::parse(&trailing).is_err());
+    }
+
+    #[test]
+    fn encoding_names_roundtrip() {
+        for e in WireEncoding::ALL {
+            assert_eq!(WireEncoding::parse(e.name()), Some(e));
+        }
+        assert_eq!(WireEncoding::parse("i4"), None);
+        assert_eq!(WireEncoding::default(), WireEncoding::F32);
+    }
+}

@@ -7,10 +7,12 @@
 //! paper's §5.2 settings; the CLI (`wasgd run …`) and every bench binary
 //! construct these.
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use crate::cluster::{ComputeModel, FabricConfig};
 use crate::data::synth::DatasetKind;
+use crate::util::json::Json;
 
 /// Which execution backend drives the numerics (see `crate::runtime`).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
@@ -26,8 +28,10 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
+    /// Every backend kind, in CLI listing order.
     pub const ALL: [BackendKind; 3] = [BackendKind::Auto, BackendKind::Native, BackendKind::Pjrt];
 
+    /// CLI name (`--backend auto|native|pjrt`).
     pub fn name(&self) -> &'static str {
         match self {
             BackendKind::Auto => "auto",
@@ -36,11 +40,50 @@ impl BackendKind {
         }
     }
 
+    /// Parse a CLI name; `None` for anything unknown.
     pub fn parse(s: &str) -> Option<Self> {
         Some(match s {
             "auto" => BackendKind::Auto,
             "native" => BackendKind::Native,
             "pjrt" => BackendKind::Pjrt,
+            _ => return None,
+        })
+    }
+}
+
+/// Which worker-fabric substrate carries the cohort's collectives.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum FabricKind {
+    /// In-process deterministic simulation: virtual clocks, the explicit
+    /// cluster cost model, every scheme — what the figures use.
+    #[default]
+    Sim,
+    /// Real multi-process workers over loopback/LAN TCP (`wasgd serve` /
+    /// `wasgd worker`): each OS process owns its own engine, panels are
+    /// peer-relayed through a rendezvous node, and the Eq. 10+13 update
+    /// is applied locally by every worker (no center variable). With the
+    /// lossless f32 wire encoding the final parameters match `sim` bit
+    /// for bit.
+    Tcp,
+}
+
+impl FabricKind {
+    /// Every fabric kind, in CLI listing order.
+    pub const ALL: [FabricKind; 2] = [FabricKind::Sim, FabricKind::Tcp];
+
+    /// CLI name (`--fabric sim|tcp`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FabricKind::Sim => "sim",
+            FabricKind::Tcp => "tcp",
+        }
+    }
+
+    /// Parse a CLI name; `None` for anything unknown.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "sim" => FabricKind::Sim,
+            "tcp" => FabricKind::Tcp,
             _ => return None,
         })
     }
@@ -68,6 +111,7 @@ pub enum AlgoKind {
 }
 
 impl AlgoKind {
+    /// Every scheme, in the paper's benchmark-table order.
     pub const ALL: [AlgoKind; 8] = [
         AlgoKind::Sequential,
         AlgoKind::Spsgd,
@@ -79,6 +123,7 @@ impl AlgoKind {
         AlgoKind::WasgdPlusAsync,
     ];
 
+    /// CLI name (`--algo …`).
     pub fn name(&self) -> &'static str {
         match self {
             AlgoKind::Sequential => "sgd",
@@ -92,6 +137,7 @@ impl AlgoKind {
         }
     }
 
+    /// Parse a CLI name; `None` for anything unknown.
     pub fn parse(s: &str) -> Option<Self> {
         Some(match s {
             "sgd" | "sequential" => AlgoKind::Sequential,
@@ -111,12 +157,18 @@ impl AlgoKind {
 /// [`ExperimentConfig::paper_preset`] reproduces §5.2 per dataset.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
+    /// Which dataset (synthetic analogue) the run trains on.
     pub dataset: DatasetKind,
     /// Artifact directory name under `artifacts_root` (model variant).
     pub variant: String,
+    /// Root directory holding per-variant artifact directories.
     pub artifacts_root: PathBuf,
     /// Execution backend (PJRT artifacts vs the pure-Rust native engine).
     pub backend: BackendKind,
+    /// Worker-fabric substrate: the deterministic simulation or real TCP
+    /// processes (`--fabric sim|tcp`).
+    pub fabric: FabricKind,
+    /// Which parallel-SGD scheme runs.
     pub algo: AlgoKind,
     /// Number of primary workers p.
     pub p: usize,
@@ -152,7 +204,9 @@ pub struct ExperimentConfig {
     pub easgd_alpha: Option<f32>,
     /// Base seed for everything stochastic.
     pub seed: u64,
-    pub fabric: FabricConfig,
+    /// Interconnect cost model for the simulated cluster (and for
+    /// estimating what measured TCP traffic would cost on that link).
+    pub fabric_cost: FabricConfig,
     /// Compute model; `step_time_s = 0` means "calibrate from the real
     /// engine at startup".
     pub compute: ComputeModel,
@@ -173,6 +227,7 @@ impl Default for ExperimentConfig {
             variant: "tiny_mlp".to_string(),
             artifacts_root: PathBuf::from("artifacts"),
             backend: BackendKind::Auto,
+            fabric: FabricKind::Sim,
             algo: AlgoKind::WasgdPlus,
             p: 4,
             backups: 0,
@@ -189,7 +244,7 @@ impl Default for ExperimentConfig {
             eval_batches: 4,
             easgd_alpha: None,
             seed: 42,
-            fabric: FabricConfig::default(),
+            fabric_cost: FabricConfig::default(),
             compute: ComputeModel { step_time_s: 0.0, ..ComputeModel::default() },
             target_loss: None,
             track_estimation_error: false,
@@ -297,7 +352,123 @@ impl ExperimentConfig {
         if self.algo == AlgoKind::WasgdPlusAsync && self.backups == 0 {
             return Err("async WASGD+ needs backups ≥ 1".into());
         }
+        if self.fabric == FabricKind::Tcp {
+            match self.algo {
+                AlgoKind::Spsgd
+                | AlgoKind::Easgd
+                | AlgoKind::Mmwu
+                | AlgoKind::Wasgd
+                | AlgoKind::WasgdPlus => {}
+                other => {
+                    return Err(format!(
+                        "--fabric tcp supports the synchronous decentralized schemes \
+                         (spsgd, easgd, mmwu, wasgd, wasgd+); {} needs --fabric sim",
+                        other.name()
+                    ))
+                }
+            }
+            if self.target_loss.is_some() {
+                return Err(
+                    "--fabric tcp runs a fixed step budget; --target-loss needs --fabric sim"
+                        .into(),
+                );
+            }
+        }
         Ok(())
+    }
+
+    /// Serialise the numerics-determining subset of this config as the
+    /// wire JSON the rendezvous node ships in its Welcome. Lossless for
+    /// every field: f32 hyper-parameters survive the f64 JSON round trip
+    /// bit-exactly (f32 → f64 is exact; the serializer prints shortest
+    /// round-trip decimals), and the u64 seed rides as a string because
+    /// JSON numbers only cover 2⁵³.
+    pub fn to_wire_json(&self) -> String {
+        let mut m = BTreeMap::new();
+        let num = Json::Num;
+        m.insert("dataset".to_string(), Json::Str(self.dataset.name().to_string()));
+        m.insert("variant".to_string(), Json::Str(self.variant.clone()));
+        m.insert("algo".to_string(), Json::Str(self.algo.name().to_string()));
+        m.insert("backend".to_string(), Json::Str(self.backend.name().to_string()));
+        m.insert("p".to_string(), num(self.p as f64));
+        m.insert("tau".to_string(), num(self.tau as f64));
+        m.insert("beta".to_string(), num(self.beta as f64));
+        m.insert("a_tilde".to_string(), num(self.a_tilde as f64));
+        m.insert("m".to_string(), num(self.m as f64));
+        m.insert("c".to_string(), num(self.c as f64));
+        m.insert("n_parts".to_string(), num(self.n_parts as f64));
+        m.insert("threads".to_string(), num(self.threads as f64));
+        m.insert("lr".to_string(), num(self.lr as f64));
+        m.insert("epochs".to_string(), num(self.epochs));
+        m.insert("seed".to_string(), Json::Str(self.seed.to_string()));
+        m.insert(
+            "easgd_alpha".to_string(),
+            match self.easgd_alpha {
+                Some(a) => num(a as f64),
+                None => Json::Null,
+            },
+        );
+        m.insert(
+            "force_delta_order".to_string(),
+            match self.force_delta_order {
+                Some(d) => num(d as f64),
+                None => Json::Null,
+            },
+        );
+        Json::Obj(m).serialize()
+    }
+
+    /// Rebuild a config from [`ExperimentConfig::to_wire_json`] output.
+    /// Untransported fields (eval cadence, cost models, checkpointing)
+    /// take their defaults — none of them influence the fabric loop's
+    /// numerics. The result always has `fabric = tcp` and is validated.
+    pub fn from_wire_json(s: &str) -> anyhow::Result<Self> {
+        let j = Json::parse(s).map_err(|e| anyhow::anyhow!("wire config: {e}"))?;
+        let req_f64 = |key: &str| -> anyhow::Result<f64> {
+            j.get(key)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("wire config field {key:?} missing or not a number"))
+        };
+        let dataset_s = j.req_str("dataset")?;
+        let dataset = DatasetKind::parse(dataset_s)
+            .ok_or_else(|| anyhow::anyhow!("wire config names unknown dataset {dataset_s:?}"))?;
+        let mut cfg = Self { dataset, ..Self::default() };
+        cfg.fabric = FabricKind::Tcp;
+        cfg.variant = j.req_str("variant")?.to_string();
+        let algo_s = j.req_str("algo")?;
+        cfg.algo = AlgoKind::parse(algo_s)
+            .ok_or_else(|| anyhow::anyhow!("wire config names unknown algorithm {algo_s:?}"))?;
+        let backend_s = j.req_str("backend")?;
+        cfg.backend = BackendKind::parse(backend_s)
+            .ok_or_else(|| anyhow::anyhow!("wire config names unknown backend {backend_s:?}"))?;
+        cfg.p = j.req_usize("p")?;
+        cfg.tau = j.req_usize("tau")?;
+        cfg.m = j.req_usize("m")?;
+        cfg.c = j.req_usize("c")?;
+        cfg.n_parts = j.req_usize("n_parts")?;
+        cfg.threads = j.req_usize("threads")?;
+        cfg.beta = req_f64("beta")? as f32;
+        cfg.a_tilde = req_f64("a_tilde")? as f32;
+        cfg.lr = req_f64("lr")? as f32;
+        cfg.epochs = req_f64("epochs")?;
+        let seed_s = j.req_str("seed")?;
+        cfg.seed = seed_s
+            .parse::<u64>()
+            .map_err(|e| anyhow::anyhow!("wire config seed {seed_s:?}: {e}"))?;
+        cfg.easgd_alpha = match j.get("easgd_alpha") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("wire config easgd_alpha must be a number or null")
+            })? as f32),
+        };
+        cfg.force_delta_order = match j.get("force_delta_order") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_usize().ok_or_else(|| {
+                anyhow::anyhow!("wire config force_delta_order must be an integer or null")
+            })?),
+        };
+        cfg.validate().map_err(|e| anyhow::anyhow!("wire config invalid: {e}"))?;
+        Ok(cfg)
     }
 }
 
@@ -354,6 +525,91 @@ mod tests {
             assert_eq!(AlgoKind::parse(a.name()), Some(a));
         }
         assert_eq!(AlgoKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn fabric_parse_roundtrip_and_default() {
+        for f in FabricKind::ALL {
+            assert_eq!(FabricKind::parse(f.name()), Some(f));
+        }
+        assert_eq!(FabricKind::parse("grpc"), None);
+        assert_eq!(ExperimentConfig::default().fabric, FabricKind::Sim);
+    }
+
+    #[test]
+    fn tcp_fabric_validation_rules() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.fabric = FabricKind::Tcp;
+        assert!(cfg.validate().is_ok(), "wasgd+ over tcp is the headline path");
+        for algo in [AlgoKind::Spsgd, AlgoKind::Easgd, AlgoKind::Mmwu, AlgoKind::Wasgd] {
+            cfg.algo = algo;
+            assert!(cfg.validate().is_ok(), "{} should be tcp-capable", algo.name());
+        }
+        for algo in [AlgoKind::Sequential, AlgoKind::Omwu] {
+            cfg.algo = algo;
+            assert!(cfg.validate().is_err(), "{} must be rejected on tcp", algo.name());
+        }
+        cfg.algo = AlgoKind::WasgdPlus;
+        cfg.target_loss = Some(0.5);
+        assert!(cfg.validate().is_err(), "early stop is sim-only");
+    }
+
+    #[test]
+    fn wire_json_roundtrip_is_lossless() {
+        let mut cfg = ExperimentConfig::paper_preset(DatasetKind::Cifar100Like);
+        cfg.fabric = FabricKind::Tcp;
+        cfg.p = 7;
+        cfg.tau = 123;
+        cfg.beta = 0.8;
+        cfg.a_tilde = 10.0;
+        cfg.lr = 0.005;
+        cfg.epochs = 1.75;
+        cfg.seed = u64::MAX - 3; // beyond 2^53: must survive as a string
+        cfg.threads = 3;
+        cfg.force_delta_order = Some(16);
+        cfg.easgd_alpha = Some(0.125);
+        let json = cfg.to_wire_json();
+        let back = ExperimentConfig::from_wire_json(&json).unwrap();
+        assert_eq!(back.dataset, cfg.dataset);
+        assert_eq!(back.variant, cfg.variant);
+        assert_eq!(back.algo, cfg.algo);
+        assert_eq!(back.backend, cfg.backend);
+        assert_eq!(back.fabric, FabricKind::Tcp);
+        assert_eq!(back.p, cfg.p);
+        assert_eq!(back.tau, cfg.tau);
+        assert_eq!(back.beta.to_bits(), cfg.beta.to_bits());
+        assert_eq!(back.a_tilde.to_bits(), cfg.a_tilde.to_bits());
+        assert_eq!(back.lr.to_bits(), cfg.lr.to_bits());
+        assert_eq!(back.epochs.to_bits(), cfg.epochs.to_bits());
+        assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.m, cfg.m);
+        assert_eq!(back.c, cfg.c);
+        assert_eq!(back.n_parts, cfg.n_parts);
+        assert_eq!(back.threads, cfg.threads);
+        assert_eq!(back.force_delta_order, cfg.force_delta_order);
+        assert_eq!(
+            back.easgd_alpha.unwrap().to_bits(),
+            cfg.easgd_alpha.unwrap().to_bits(),
+            "a custom EASGD α must reach the workers bit-exactly"
+        );
+
+        // Awkward f32 bit patterns survive too.
+        cfg.beta = 0.700000048f32;
+        cfg.a_tilde = f32::MIN_POSITIVE;
+        cfg.force_delta_order = None;
+        let back = ExperimentConfig::from_wire_json(&cfg.to_wire_json()).unwrap();
+        assert_eq!(back.beta.to_bits(), cfg.beta.to_bits());
+        assert_eq!(back.a_tilde.to_bits(), cfg.a_tilde.to_bits());
+        assert_eq!(back.force_delta_order, None);
+    }
+
+    #[test]
+    fn wire_json_rejects_garbage() {
+        assert!(ExperimentConfig::from_wire_json("not json").is_err());
+        assert!(ExperimentConfig::from_wire_json("{}").is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.algo = AlgoKind::Omwu; // not fabric-capable → validate fails
+        assert!(ExperimentConfig::from_wire_json(&cfg.to_wire_json()).is_err());
     }
 
     #[test]

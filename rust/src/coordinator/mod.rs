@@ -24,7 +24,6 @@ use crate::algorithms::{make_policy, CommContext, CommPolicy};
 use crate::cluster::SimCluster;
 use crate::config::{AlgoKind, ExperimentConfig};
 use crate::data::order::judge;
-use crate::data::synth::SynthConfig;
 use crate::data::{Dataset, RecordWindow};
 use crate::linalg;
 use crate::metrics::{Record, RunLog, Stopwatch};
@@ -40,6 +39,7 @@ const EVAL_STEP_FRACTION: f64 = 0.4;
 /// Everything a run produces beyond the record stream.
 #[derive(Debug)]
 pub struct RunOutput {
+    /// The labelled record stream (one entry per evaluation point).
     pub log: RunLog,
     /// Eq. (27) weight-estimation error per boundary: (iteration, error).
     pub estimation_errors: Vec<(u64, f32)>,
@@ -47,8 +47,9 @@ pub struct RunOutput {
     pub comm_time_s: f64,
     /// Simulated seconds workers were blocked at barriers.
     pub wait_time_s: f64,
-    /// Order-search telemetry (WASGD+): parts kept / redrawn.
+    /// Order-search telemetry (WASGD+): parts that kept their seed.
     pub orders_kept: u64,
+    /// Order-search telemetry (WASGD+): parts that redrew their seed.
     pub orders_redrawn: u64,
     /// Backend kernel executions performed (PJRT programs or native calls).
     pub exec_count: u64,
@@ -79,10 +80,15 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunLog> {
 /// Run one experiment with full telemetry (loads the backend selected by
 /// `cfg.backend` and builds the dataset itself; sweeps should use
 /// [`crate::harness::SharedEnv`] to amortise backend construction and
-/// step-time calibration).
+/// step-time calibration). The dataset comes from
+/// [`fabric_dataset`](crate::cluster::fabric::fabric_dataset) — the
+/// preset adapted to the variant's input geometry — which is exactly
+/// what the worker fabrics build, so `--fabric sim` and `--fabric tcp`
+/// train on the identical split for every variant (including the
+/// dim-adapted ones like `tiny_cnn`).
 pub fn run_experiment_full(cfg: &ExperimentConfig) -> Result<RunOutput> {
     let engine = load_backend(cfg)?;
-    let dataset = SynthConfig::preset(cfg.dataset).build(cfg.seed);
+    let dataset = crate::cluster::fabric::fabric_dataset(cfg, engine.manifest())?;
     let mut tr = Trainer::new(cfg.clone(), engine.as_ref(), &dataset)?;
     tr.run()
 }
@@ -90,8 +96,11 @@ pub fn run_experiment_full(cfg: &ExperimentConfig) -> Result<RunOutput> {
 /// The shared training loop. Borrows the backend and the dataset so
 /// sweeps can reuse both across dozens of runs.
 pub struct Trainer<'a> {
+    /// The experiment being run.
     pub cfg: ExperimentConfig,
+    /// The execution backend every worker steps through.
     pub engine: &'a dyn Backend,
+    /// The training/evaluation data.
     pub dataset: &'a Dataset,
     cluster: SimCluster,
     policy: Box<dyn CommPolicy>,
@@ -105,6 +114,8 @@ pub struct Trainer<'a> {
 }
 
 impl<'a> Trainer<'a> {
+    /// Validate the config against the engine/dataset geometry and set
+    /// up the cluster, policy, and per-worker state.
     pub fn new(
         cfg: ExperimentConfig,
         engine: &'a dyn Backend,
@@ -129,7 +140,7 @@ impl<'a> Trainer<'a> {
         if compute.step_time_s <= 0.0 {
             compute.step_time_s = engine.calibrate_step_time(3)?;
         }
-        let cluster = SimCluster::new(p_total, cfg.fabric, compute, cfg.seed);
+        let cluster = SimCluster::new(p_total, cfg.fabric_cost, compute, cfg.seed);
 
         let policy = make_policy(&cfg);
         let root = Rng::new(cfg.seed);

@@ -10,7 +10,9 @@
 use crate::data::order::{delta_blocked_order, OrderState};
 use crate::rng::Rng;
 
+/// Per-worker training state (see the module docs).
 pub struct Worker {
+    /// Worker index i in the cohort.
     pub id: usize,
     params: Vec<f32>,
     rng: Rng,
@@ -27,6 +29,7 @@ pub struct Worker {
     /// Current epoch order and cursor.
     epoch_order: Vec<u32>,
     pos: usize,
+    /// Completed epochs (order regenerations).
     pub epoch: u64,
     /// Windowed loss-energy accumulator h (Eq. 26).
     energy: f32,
@@ -36,6 +39,7 @@ pub struct Worker {
 }
 
 impl Worker {
+    /// Construct a worker and build its first epoch order.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: usize,
@@ -75,10 +79,12 @@ impl Worker {
         w
     }
 
+    /// Current flat parameter vector.
     pub fn params(&self) -> &[f32] {
         &self.params
     }
 
+    /// Replace the parameter vector (same length).
     pub fn set_params(&mut self, p: Vec<f32>) {
         debug_assert_eq!(p.len(), self.params.len());
         self.params = p;
@@ -93,11 +99,13 @@ impl Worker {
         }
     }
 
+    /// Record one batch loss into the energy window.
     pub fn add_energy(&mut self, batch_loss: f32) {
         self.energy += batch_loss;
         self.recorded += 1;
     }
 
+    /// Clear the energy window (after a boundary).
     pub fn reset_energy(&mut self) {
         self.energy = 0.0;
         self.recorded = 0;
@@ -117,10 +125,12 @@ impl Worker {
         }
     }
 
+    /// Order parts that kept their seed so far (telemetry).
     pub fn orders_kept(&self) -> u64 {
         self.order_state.as_ref().map(|s| s.kept).unwrap_or(0)
     }
 
+    /// Order parts that redrew their seed so far (telemetry).
     pub fn orders_redrawn(&self) -> u64 {
         self.order_state.as_ref().map(|s| s.redrawn).unwrap_or(0)
     }

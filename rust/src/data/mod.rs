@@ -17,20 +17,29 @@ pub use synth::{DatasetKind, SynthConfig};
 /// row-major `x` with `dim` features per example.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// Dataset name (preset kind).
     pub name: String,
+    /// Feature count per example.
     pub dim: usize,
+    /// Number of classes.
     pub classes: usize,
+    /// Training features, row-major `[n_train × dim]`.
     pub train_x: Vec<f32>,
+    /// Training labels.
     pub train_y: Vec<i32>,
+    /// Test features, row-major `[n_test × dim]`.
     pub test_x: Vec<f32>,
+    /// Test labels.
     pub test_y: Vec<i32>,
 }
 
 impl Dataset {
+    /// Number of training examples.
     pub fn n_train(&self) -> usize {
         self.train_y.len()
     }
 
+    /// Number of test examples.
     pub fn n_test(&self) -> usize {
         self.test_y.len()
     }

@@ -24,6 +24,7 @@ use crate::rng::Rng;
 /// length τ) get their per-batch loss recorded into the estimation window.
 #[derive(Clone, Copy, Debug)]
 pub struct RecordWindow {
+    /// Communication period length τ.
     pub tau: usize,
     /// Total recorded iterations per period (the paper's m).
     pub m: usize,
@@ -92,7 +93,9 @@ impl RecordWindow {
 /// accept/reject rule of `OrderGen`.
 #[derive(Clone, Debug)]
 pub struct OrderState {
+    /// Training samples covered by the order.
     pub n_samples: usize,
+    /// Number of order parts n (Algorithm 1).
     pub n_parts: usize,
     seeds: Vec<u64>,
     scores: Vec<f32>,
@@ -108,6 +111,7 @@ pub struct OrderState {
 pub const JUDGE_THRESHOLD: f32 = -1.0;
 
 impl OrderState {
+    /// Fresh state: every part starts "bad" so epoch 0 shuffles fresh.
     pub fn new(n_samples: usize, n_parts: usize, seed: u64) -> Self {
         let n_parts = n_parts.clamp(1, n_samples.max(1));
         let mut fresh = Rng::new(seed ^ 0x0bde_05ee_d5);

@@ -38,6 +38,7 @@ pub enum DatasetKind {
 }
 
 impl DatasetKind {
+    /// Parse a CLI name; `None` for anything unknown.
     pub fn parse(s: &str) -> Option<Self> {
         Some(match s {
             "tiny" => Self::Tiny,
@@ -49,6 +50,7 @@ impl DatasetKind {
         })
     }
 
+    /// CLI name (`--dataset …`).
     pub fn name(&self) -> &'static str {
         match self {
             Self::Tiny => "tiny",
@@ -74,10 +76,15 @@ impl DatasetKind {
 /// Generator parameters; start from a [`SynthConfig::preset`] and tweak.
 #[derive(Clone, Debug)]
 pub struct SynthConfig {
+    /// Which preset family this config derives from.
     pub kind: DatasetKind,
+    /// Feature count per example.
     pub dim: usize,
+    /// Number of classes.
     pub classes: usize,
+    /// Training split size.
     pub n_train: usize,
+    /// Test split size.
     pub n_test: usize,
     /// Class-centre separation (difficulty knob; larger = easier).
     pub sep: f32,
@@ -90,6 +97,7 @@ pub struct SynthConfig {
 }
 
 impl SynthConfig {
+    /// The calibrated preset for one dataset kind.
     pub fn preset(kind: DatasetKind) -> Self {
         match kind {
             DatasetKind::Tiny => Self {

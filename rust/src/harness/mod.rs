@@ -8,7 +8,6 @@ use anyhow::Result;
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::{RunOutput, Trainer};
-use crate::data::synth::SynthConfig;
 use crate::data::Dataset;
 use crate::metrics::{Record, RunLog};
 use crate::runtime::{load_backend, Backend};
@@ -22,17 +21,22 @@ pub const RESULTS_DIR: &str = "results";
 /// the *same* simulated step cost so sim-time comparisons across
 /// configurations are exact.
 pub struct SharedEnv {
+    /// The shared execution backend.
     pub engine: Box<dyn Backend>,
+    /// The shared dataset (built once from the base seed).
     pub dataset: Dataset,
+    /// Calibrated (or configured) seconds per local SGD step.
     pub step_time_s: f64,
 }
 
 impl SharedEnv {
     /// Build from a base config (dataset seed = base.seed; backend from
-    /// `base.backend` — PJRT artifacts or the hermetic native engine).
+    /// `base.backend` — PJRT artifacts or the hermetic native engine;
+    /// dataset dim adapted to the variant's input geometry, matching
+    /// `run_experiment_full` and the worker fabrics).
     pub fn new(base: &ExperimentConfig) -> Result<Self> {
         let engine = load_backend(base)?;
-        let dataset = SynthConfig::preset(base.dataset).build(base.seed);
+        let dataset = crate::cluster::fabric::fabric_dataset(base, engine.manifest())?;
         let step_time_s = if base.compute.step_time_s > 0.0 {
             base.compute.step_time_s
         } else {

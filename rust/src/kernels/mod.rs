@@ -172,6 +172,23 @@ impl Gemm {
     /// Forward affine: `z[r,c] = Σⱼ a[r,j]·w[j,c] + bias[c]` with `a`
     /// row-major `m×k`, `w` row-major `k×n`. Serves the dense layers
     /// (rows = batch) and the im2col conv path (rows = batch·H·W).
+    ///
+    /// ```
+    /// use wasgd::kernels::Gemm;
+    ///
+    /// // 2×2 activations through an identity weight matrix plus bias.
+    /// let a = [1.0f32, 2.0, 3.0, 4.0];
+    /// let w = [1.0f32, 0.0, 0.0, 1.0];
+    /// let bias = [0.5f32, -0.5];
+    /// let mut z = [0.0f32; 4];
+    /// Gemm::single().matmul_bias(&a, &w, &bias, 2, 2, 2, &mut z);
+    /// assert_eq!(z, [1.5, 1.5, 3.5, 3.5]);
+    ///
+    /// // Any thread count computes the identical bits.
+    /// let mut z4 = [0.0f32; 4];
+    /// Gemm::new(4).matmul_bias(&a, &w, &bias, 2, 2, 2, &mut z4);
+    /// assert_eq!(z, z4);
+    /// ```
     #[allow(clippy::too_many_arguments)]
     pub fn matmul_bias(
         &self,

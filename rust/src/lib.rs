@@ -30,7 +30,7 @@
 //!   self-contained). Initialisation and data synthesis run through the
 //!   in-crate deterministic PRNG, so runs are bit-reproducible across
 //!   hosts.
-//! * [`runtime::Engine`] (cargo feature **`pjrt`**) — the PJRT executor
+//! * `runtime::Engine` (cargo feature **`pjrt`**) — the PJRT executor
 //!   for the Pallas-backed AOT artifacts lowered by `python/compile/`.
 //!   Enable by uncommenting the `xla` dependency in `rust/Cargo.toml`
 //!   (kept out of the default graph so hermetic builds never resolve
@@ -57,6 +57,29 @@
 //! | `pjrt`   | any variant with lowered artifacts         | `--features pjrt` +    |
 //! |          |                                            | `python -m compile.aot`|
 //!
+//! # Worker fabrics
+//!
+//! Orthogonal to the backend seam, [`config::FabricKind`] selects the
+//! *collective substrate* (`wasgd run --fabric sim|tcp`):
+//!
+//! | fabric | substrate                                                   |
+//! |--------|-------------------------------------------------------------|
+//! | `sim`  | deterministic in-process simulation: virtual clocks + the   |
+//! |        | explicit cluster cost model; every scheme; the figures'     |
+//! |        | substrate ([`coordinator::Trainer`])                        |
+//! | `tcp`  | real OS processes (`wasgd serve` / `wasgd worker`): a       |
+//! |        | length-prefixed binary protocol ([`cluster::wire`], f32 or  |
+//! |        | quantised-i8 panels) relays `(θ, h)` through a rendezvous   |
+//! |        | node; every worker applies Eq. 10+13 locally — no center    |
+//! |        | variable ([`cluster::tcp`])                                 |
+//!
+//! Both substrates drive the *same* decentralized worker loop
+//! ([`cluster::fabric::run_fabric_worker`]) and the same
+//! [`algorithms::CommPolicy`] boundary code as the simulated trainer, so
+//! with lossless f32 panels a 4-process `--fabric tcp` run reproduces
+//! `--fabric sim`'s final parameters **bit for bit**
+//! (`tests/fabric_e2e.rs`).
+//!
 //! # Module map
 //!
 //! | module        | role                                                        |
@@ -68,7 +91,10 @@
 //! | [`runtime`]   | `Backend` seam: native engine / PJRT artifacts              |
 //! | [`algorithms`]| the paper's seven parallel-SGD schemes                      |
 //! | [`coordinator`]| deterministic simulated trainer (the figures)              |
-//! | [`cluster`]   | simulated fabric + real-thread launcher mode                |
+//! | [`cluster`]   | fabrics: simulated cost model, in-process threads, and the  |
+//! |               | TCP wire protocol + rendezvous (`wire` / `fabric` / `tcp`)  |
+//! | [`checkpoint`]| durable run snapshots (also the tcp fabric's resume format) |
+//! | [`metrics`]   | run records, CSV sinks, per-peer comm byte counters         |
 //! | [`bench`]     | micro-bench harness + the `BENCH_native.json` perf trajectory|
 //!
 //! Quick taste (see `examples/quickstart.rs` — no artifacts needed):
@@ -84,6 +110,8 @@
 //! let log = run_experiment(&cfg).unwrap();
 //! println!("final loss {:.4}", log.final_train_loss());
 //! ```
+
+#![warn(missing_docs)]
 
 pub mod algorithms;
 pub mod bench;

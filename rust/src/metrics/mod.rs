@@ -12,6 +12,8 @@ use std::io::Write as _;
 use std::path::Path;
 use std::time::Instant;
 
+use crate::cluster::FabricConfig;
+
 /// One evaluation point of one run.
 #[derive(Clone, Debug)]
 pub struct Record {
@@ -23,35 +25,45 @@ pub struct Record {
     pub sim_time_s: f64,
     /// Real wall seconds on this host.
     pub wall_time_s: f64,
+    /// Mean train loss over the evaluation sample.
     pub train_loss: f64,
+    /// Train error rate (1 − accuracy) over the sample.
     pub train_error: f64,
+    /// Mean test loss over the evaluation sample.
     pub test_loss: f64,
+    /// Test error rate over the sample.
     pub test_error: f64,
 }
 
 /// A labelled run: algorithm + parameters + its record stream.
 #[derive(Clone, Debug, Default)]
 pub struct RunLog {
+    /// Human-readable run label ("wasgd+ p=4 tau=50").
     pub label: String,
+    /// The record stream, in evaluation order.
     pub records: Vec<Record>,
     /// Free-form key=value annotations (p, τ, β, ã, dataset, …).
     pub tags: Vec<(String, String)>,
 }
 
 impl RunLog {
+    /// A fresh empty log with the given label.
     pub fn new(label: impl Into<String>) -> Self {
         Self { label: label.into(), records: Vec::new(), tags: Vec::new() }
     }
 
+    /// Attach a `key=value` annotation (builder style).
     pub fn tag(mut self, k: &str, v: impl ToString) -> Self {
         self.tags.push((k.to_string(), v.to_string()));
         self
     }
 
+    /// Append one evaluation record.
     pub fn push(&mut self, r: Record) {
         self.records.push(r);
     }
 
+    /// The most recent record, if any.
     pub fn last(&self) -> Option<&Record> {
         self.records.last()
     }
@@ -121,6 +133,7 @@ impl RunLog {
     }
 }
 
+/// Header row matching [`RunLog::to_csv_rows`].
 pub const CSV_HEADER: &str =
     "label,iteration,epoch,sim_time_s,wall_time_s,train_loss,train_error,test_loss,test_error";
 
@@ -138,6 +151,67 @@ pub fn write_csv(path: impl AsRef<Path>, runs: &[RunLog]) -> std::io::Result<()>
     Ok(())
 }
 
+/// One peer's traffic totals, as seen from the rendezvous node.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PeerComm {
+    /// Bytes pushed to this peer (welcome + relayed cohorts).
+    pub sent: u64,
+    /// Bytes received from this peer (hello + panels + final).
+    pub received: u64,
+}
+
+/// Per-peer communication byte counters for the real (TCP) worker
+/// fabric. The measured traffic feeds the *same* cost model the
+/// simulated cluster uses ([`FabricConfig`]), so "what would this run
+/// have cost on the modelled interconnect?" is answerable for both
+/// substrates.
+#[derive(Clone, Debug, Default)]
+pub struct CommCounters {
+    /// One entry per peer, indexed by rank.
+    pub peers: Vec<PeerComm>,
+}
+
+impl CommCounters {
+    /// Zeroed counters for `p` peers.
+    pub fn new(p: usize) -> Self {
+        Self { peers: vec![PeerComm::default(); p] }
+    }
+
+    /// Accumulate traffic for one peer.
+    pub fn add(&mut self, rank: usize, sent: u64, received: u64) {
+        let peer = &mut self.peers[rank];
+        peer.sent += sent;
+        peer.received += received;
+    }
+
+    /// Total bytes pushed to all peers.
+    pub fn total_sent(&self) -> u64 {
+        self.peers.iter().map(|p| p.sent).sum()
+    }
+
+    /// Total bytes received from all peers.
+    pub fn total_received(&self) -> u64 {
+        self.peers.iter().map(|p| p.received).sum()
+    }
+
+    /// Estimated seconds the measured per-round contribution would cost
+    /// as `rounds` ring all-gathers on the modelled link — the bridge
+    /// from real wire bytes back into the simulated cost model.
+    ///
+    /// Assumes the rendezvous counter convention: each peer's received
+    /// bytes cover its `rounds` panels *plus one final panel* (the
+    /// 12-byte hello is noise), so the per-round panel size is the
+    /// total divided by `rounds + 1` contributions per peer.
+    pub fn estimated_allgather_s(&self, link: &FabricConfig, rounds: u64) -> f64 {
+        let p = self.peers.len();
+        if p == 0 || rounds == 0 {
+            return 0.0;
+        }
+        let contributed = self.total_received() as f64 / ((rounds + 1) as f64 * p as f64);
+        rounds as f64 * link.allgather_time(p, contributed.ceil() as usize)
+    }
+}
+
 /// Wall-clock stopwatch.
 #[derive(Debug)]
 pub struct Stopwatch {
@@ -151,10 +225,12 @@ impl Default for Stopwatch {
 }
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn new() -> Self {
         Self { start: Instant::now() }
     }
 
+    /// Seconds elapsed since construction.
     pub fn elapsed_s(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
@@ -217,6 +293,27 @@ mod tests {
         assert_eq!(rows.lines().count(), 2);
         assert!(rows.starts_with("alg,"));
         assert_eq!(CSV_HEADER.split(',').count(), rows.lines().next().unwrap().split(',').count());
+    }
+
+    #[test]
+    fn comm_counters_accumulate_and_price_traffic() {
+        let mut c = CommCounters::new(2);
+        assert_eq!(c.total_sent(), 0);
+        c.add(0, 100, 40);
+        c.add(1, 300, 60);
+        c.add(0, 0, 20);
+        assert_eq!(c.peers[0], PeerComm { sent: 100, received: 60 });
+        assert_eq!(c.total_sent(), 400);
+        assert_eq!(c.total_received(), 120);
+
+        // 2 rounds + 1 final contribution each, 2 peers → 120 B over
+        // 6 contributions = 20 B per panel.
+        let link = FabricConfig::default();
+        let est = c.estimated_allgather_s(&link, 2);
+        let want = 2.0 * link.allgather_time(2, 20);
+        assert!((est - want).abs() < 1e-12, "{est} vs {want}");
+        assert_eq!(c.estimated_allgather_s(&link, 0), 0.0);
+        assert_eq!(CommCounters::new(0).estimated_allgather_s(&link, 5), 0.0);
     }
 
     #[test]

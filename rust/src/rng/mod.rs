@@ -21,10 +21,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Seed the expander.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next 64 uniformly mixed bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -59,6 +61,7 @@ impl Rng {
         Self { s, spare_normal: None }
     }
 
+    /// Next 64 random bits (xoshiro256** output function).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[1]

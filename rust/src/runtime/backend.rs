@@ -12,9 +12,9 @@
 //!   forward/backward for the MLP *and* CNN variants (dense, 3×3 SAME
 //!   conv via im2col, 2×2 max-pool). Hermetic: no Python, no JAX, no HLO
 //!   artifacts; this is what CI and a clean checkout run.
-//! * [`Engine`](super::engine::Engine) (feature `pjrt`) — the PJRT
-//!   executor for the Pallas-backed AOT artifacts; the TPU-deployment
-//!   path, available when artifacts exist on disk.
+//! * `Engine` (`runtime::engine`, feature `pjrt`) — the PJRT executor
+//!   for the Pallas-backed AOT artifacts; the TPU-deployment path,
+//!   available when artifacts exist on disk.
 //!
 //! Selection happens through [`BackendKind`](crate::config::BackendKind)
 //! on the experiment config: `Auto` prefers PJRT when the build has the
@@ -43,7 +43,9 @@ pub struct StepOut {
 /// Outputs of one evaluation batch.
 #[derive(Clone, Copy, Debug)]
 pub struct EvalOut {
+    /// Summed loss over the batch.
     pub sum_loss: f32,
+    /// Number of correctly classified examples.
     pub correct: f32,
 }
 

@@ -24,8 +24,10 @@ use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
 use super::backend::{Backend, EvalOut, StepOut};
 use super::manifest::Manifest;
 
+/// PJRT artifact executor (the Pallas/TPU deployment path).
 pub struct Engine {
     client: PjRtClient,
+    /// The variant's flat ABI and baked shapes.
     pub manifest: Manifest,
     dir: PathBuf,
     train: PjRtLoadedExecutable,

@@ -14,11 +14,14 @@ use crate::util::json::Json;
 /// One entry of the flat-parameter layout.
 #[derive(Clone, Debug)]
 pub struct ParamEntry {
+    /// Parameter tensor name ("dense0_w", "conv1_b", …).
     pub name: String,
+    /// Tensor shape (row-major).
     pub shape: Vec<usize>,
 }
 
 impl ParamEntry {
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -32,6 +35,7 @@ impl ParamEntry {
         }
     }
 
+    /// Is this a bias tensor (zero-initialised)?
     pub fn is_bias(&self) -> bool {
         self.name.ends_with("_b")
     }
@@ -40,17 +44,26 @@ impl ParamEntry {
 /// `manifest.json` as written by `compile.aot.lower_variant`.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Model variant name.
     pub name: String,
+    /// Total flat parameter count D.
     pub param_count: usize,
+    /// Baked batch size B.
     pub batch: usize,
+    /// Flat input feature count.
     pub input_dim: usize,
+    /// Input shape (e.g. `[32, 32, 3]` for NHWC images).
     pub input_shape: Vec<usize>,
+    /// Number of output logits.
     pub num_classes: usize,
+    /// Cohort sizes the artifact set was lowered for.
     pub worker_counts: Vec<usize>,
+    /// The flat-parameter ABI, in layout order.
     pub param_layout: Vec<ParamEntry>,
 }
 
 impl Manifest {
+    /// Load and validate `manifest.json` from an artifact directory.
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("manifest.json");
         let body = fs::read_to_string(&path)

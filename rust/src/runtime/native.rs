@@ -2,7 +2,7 @@
 //! *and* CNN variants plus the paper's Boltzmann aggregation kernel — no
 //! Python, no JAX, no HLO artifacts.
 //!
-//! This is the hermetic twin of the PJRT [`Engine`](super::engine::Engine):
+//! This is the hermetic twin of the PJRT `Engine` (feature `pjrt`):
 //! it implements the same flat-parameter ABI ([`Manifest`]) and the same
 //! three entry points (`train_step`, `eval_step`, `aggregate`) with the
 //! same semantics as `python/compile/model.py` and

@@ -7,6 +7,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
+/// Parsed command line: `--flag value` pairs plus positionals.
 #[derive(Debug, Default)]
 pub struct Args {
     flags: BTreeMap<String, String>,
@@ -43,10 +44,12 @@ impl Args {
         Ok(Self { flags, positional, seen: Default::default() })
     }
 
+    /// Parse from `std::env::args()` (program name skipped).
     pub fn parse_env() -> Result<Self> {
         Self::parse_from(std::env::args().skip(1))
     }
 
+    /// The positional (non-flag) arguments, in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }

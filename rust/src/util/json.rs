@@ -8,19 +8,29 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (JSON does not distinguish int from float).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
+/// A parse failure with its byte position.
 #[derive(Debug)]
 pub struct ParseError {
+    /// Byte offset of the failure.
     pub pos: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 
@@ -33,6 +43,7 @@ impl fmt::Display for ParseError {
 impl std::error::Error for ParseError {}
 
 impl Json {
+    /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(s: &str) -> Result<Json, ParseError> {
         let mut p = Parser { b: s.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -44,6 +55,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object field lookup (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -51,6 +63,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -58,10 +71,12 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer, if exactly representable.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().filter(|v| *v >= 0.0 && v.fract() == 0.0).map(|v| v as usize)
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -69,6 +84,7 @@ impl Json {
         }
     }
 
+    /// The element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -151,12 +167,14 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("manifest field {key:?} missing or not a usize"))
     }
 
+    /// `obj.key` as a string or a descriptive error.
     pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
         self.get(key)
             .and_then(|v| v.as_str())
             .ok_or_else(|| anyhow::anyhow!("manifest field {key:?} missing or not a string"))
     }
 
+    /// `obj.key` as an array or a descriptive error.
     pub fn req_arr(&self, key: &str) -> anyhow::Result<&[Json]> {
         self.get(key)
             .and_then(|v| v.as_arr())

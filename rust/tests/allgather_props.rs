@@ -1,14 +1,18 @@
-//! Stress properties for `cluster::threads::AllGather` — the in-process
-//! collective the threaded execution mode uses as its NIC stand-in.
+//! Stress properties for `cluster::fabric::PanelExchange` — the
+//! in-process collective the worker fabrics barrier on (the threaded
+//! substrate directly, and the TCP rendezvous relay on the serve side).
 //!
-//! Extends the two fixed-shape unit tests with a proptest sweep over the
+//! Extends the fixed-shape unit tests with a proptest sweep over the
 //! cohort size `p ∈ 2..8` and *controlled* per-round deposit orderings: a
 //! shared turn counter forces workers to enter `exchange` in a random
 //! permutation each round, exploring schedules (including a round-`r`
 //! waiter still asleep while a fast worker already deposits for round
 //! `r+1`) that free-running threads rarely hit. Invariants: no lost
-//! generation (every worker observes every round exactly once) and all
-//! workers observe identical published vectors, in slot order.
+//! generation (every worker observes every round exactly once), all
+//! workers observe identical published vectors in slot order, and a
+//! poison injected *after* the last publication never corrupts a
+//! completed round (the rendezvous poisons on worker departure, so this
+//! is the normal termination schedule).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -17,20 +21,23 @@ use std::thread;
 use proptest::prelude::*;
 use proptest::test_runner::TestCaseError;
 
-use wasgd::cluster::threads::AllGather;
+use wasgd::cluster::fabric::PanelExchange;
 
 /// Run `p` workers for `orders.len()` rounds, forcing round `r`'s deposits
 /// to happen in the order `orders[r]`; verify every worker saw every
-/// round's full, identical vector.
+/// round's full, identical vector. The last depositor of the final round
+/// immediately poisons the exchange — as the TCP relay does when a
+/// worker delivers its final panel — which must not disturb any
+/// already-published round.
 fn run_case(p: usize, orders: Vec<Vec<usize>>) -> Result<(), TestCaseError> {
     let rounds = orders.len();
-    let ag: Arc<AllGather<(usize, usize)>> = Arc::new(AllGather::new(p));
+    let ex: Arc<PanelExchange<(usize, usize)>> = Arc::new(PanelExchange::new(p));
     let turn = Arc::new(AtomicUsize::new(0));
     let orders = Arc::new(orders);
 
     let mut handles = Vec::new();
     for i in 0..p {
-        let ag = Arc::clone(&ag);
+        let ex = Arc::clone(&ex);
         let turn = Arc::clone(&turn);
         let orders = Arc::clone(&orders);
         handles.push(thread::spawn(move || {
@@ -42,7 +49,12 @@ fn run_case(p: usize, orders: Vec<Vec<usize>>) -> Result<(), TestCaseError> {
                     thread::yield_now();
                 }
                 turn.fetch_add(1, Ordering::SeqCst);
-                seen.push(ag.exchange(i, (i, r)).to_vec());
+                let vals = ex.exchange(i, (i, r)).expect("round poisoned early");
+                if r + 1 == rounds && pos + 1 == p {
+                    // Final round's last depositor "departs" at once.
+                    ex.poison(&format!("worker {i} departed"));
+                }
+                seen.push(vals.to_vec());
             }
             seen
         }));
@@ -73,7 +85,7 @@ proptest! {
     #![proptest_config(ProptestConfig::with_cases(16))]
 
     #[test]
-    fn allgather_survives_random_deposit_orderings(
+    fn panel_exchange_survives_random_deposit_orderings(
         (p, orders) in (2usize..8).prop_flat_map(|p| {
             let idx: Vec<usize> = (0..p).collect();
             (Just(p), prop::collection::vec(Just(idx).prop_shuffle(), 3..10))
@@ -81,4 +93,11 @@ proptest! {
     ) {
         run_case(p, orders)?;
     }
+}
+
+#[test]
+fn deposits_after_a_departure_poison_error_out() {
+    let ex: Arc<PanelExchange<u8>> = Arc::new(PanelExchange::new(2));
+    ex.poison("worker 1 departed");
+    assert!(ex.exchange(0, 7).is_err());
 }

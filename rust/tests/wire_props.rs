@@ -1,0 +1,185 @@
+//! Property suites over the TCP fabric's wire protocol
+//! (`cluster::wire`): framing round trips exactly (f32 panels are
+//! bit-lossless, qi8 panels are bounded-error and smaller), ragged
+//! cohort rows survive, and every malformed input — truncated frames,
+//! corrupted headers, lying inner lengths — is rejected with an error,
+//! never a panic or a bogus parse.
+
+use std::io::Cursor;
+
+use proptest::prelude::*;
+
+use wasgd::cluster::wire::{Cohort, Frame, MsgKind, Panel, Welcome, WireEncoding};
+
+fn frame_bytes(frame: &Frame) -> Vec<u8> {
+    let mut bytes = Vec::new();
+    frame.write_to(&mut bytes).unwrap();
+    bytes
+}
+
+fn reread(frame: &Frame) -> Frame {
+    let bytes = frame_bytes(frame);
+    assert_eq!(bytes.len(), frame.encoded_len());
+    Frame::read_from(&mut Cursor::new(&bytes)).unwrap()
+}
+
+fn finite_f32() -> impl Strategy<Value = f32> {
+    prop_oneof![
+        -1e30f32..1e30f32,
+        -1.0f32..1.0f32,
+        Just(0.0f32),
+        Just(-0.0f32),
+        Just(f32::MIN_POSITIVE),
+    ]
+}
+
+fn theta_vec(max_len: usize) -> impl Strategy<Value = Vec<f32>> {
+    prop::collection::vec(finite_f32(), 0..max_len)
+}
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(64))]
+
+    /// f32 panels round-trip bit-exactly for arbitrary rounds, h values
+    /// and (ragged) vector lengths.
+    #[test]
+    fn panel_f32_roundtrip_bit_exact(
+        round in any::<u64>(),
+        h in finite_f32(),
+        theta in theta_vec(300),
+    ) {
+        let frame = Panel::frame(MsgKind::Panel, round, h, &theta, WireEncoding::F32);
+        prop_assert_eq!(frame.encoded_len(), Panel::wire_len(WireEncoding::F32, theta.len()));
+        let back = Panel::parse(&reread(&frame)).unwrap();
+        prop_assert_eq!(back.round, round);
+        prop_assert_eq!(back.h.to_bits(), h.to_bits());
+        prop_assert_eq!(back.theta.len(), theta.len());
+        for (a, b) in back.theta.iter().zip(theta.iter()) {
+            prop_assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    /// qi8 panels round-trip within the quantisation bound (scale/2 per
+    /// element plus fp slack), stay the documented size, and never touch
+    /// the raw h field.
+    #[test]
+    fn panel_qi8_roundtrip_bounded(
+        round in any::<u64>(),
+        h in finite_f32(),
+        theta in theta_vec(300),
+    ) {
+        let frame = Panel::frame(MsgKind::Panel, round, h, &theta, WireEncoding::Qi8);
+        prop_assert_eq!(frame.encoded_len(), Panel::wire_len(WireEncoding::Qi8, theta.len()));
+        let back = Panel::parse(&reread(&frame)).unwrap();
+        prop_assert_eq!(back.h.to_bits(), h.to_bits());
+        prop_assert_eq!(back.theta.len(), theta.len());
+        let max_abs = theta.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 0.0 };
+        for (a, b) in back.theta.iter().zip(theta.iter()) {
+            prop_assert!(
+                (a - b).abs() <= scale * 0.5 + max_abs * 1e-5,
+                "decoded {} vs {} (scale {})", a, b, scale
+            );
+        }
+        // The quantised payload undercuts f32 once the vector dominates
+        // the fixed overhead.
+        if theta.len() >= 8 {
+            prop_assert!(frame.encoded_len() < Panel::wire_len(WireEncoding::F32, theta.len()));
+        }
+    }
+
+    /// Cohorts preserve rank order and per-row raggedness under both
+    /// encodings (rows carry their own length prefix).
+    #[test]
+    fn cohort_roundtrip_ragged_rows(
+        round in any::<u64>(),
+        panels in prop::collection::vec((finite_f32(), theta_vec(40)), 0..6),
+        qi8 in any::<bool>(),
+    ) {
+        let enc = if qi8 { WireEncoding::Qi8 } else { WireEncoding::F32 };
+        let frame = Cohort::frame(round, &panels, enc);
+        let back = Cohort::parse(&reread(&frame)).unwrap();
+        prop_assert_eq!(back.round, round);
+        prop_assert_eq!(back.panels.len(), panels.len());
+        for ((bh, bt), (h, t)) in back.panels.iter().zip(panels.iter()) {
+            prop_assert_eq!(bh.to_bits(), h.to_bits());
+            prop_assert_eq!(bt.len(), t.len());
+            if enc == WireEncoding::F32 {
+                for (a, b) in bt.iter().zip(t.iter()) {
+                    prop_assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+    }
+
+    /// Welcomes round-trip their rank/p/config/resume payloads.
+    #[test]
+    fn welcome_roundtrip(
+        rank in 0u32..64,
+        extra in 0u32..64,
+        json in "[ -~]{0,120}",
+        resume in prop::option::of(theta_vec(60)),
+    ) {
+        let w = Welcome { rank, p: rank + 1 + extra, config_json: json, resume };
+        let back = Welcome::parse(&reread(&w.frame(WireEncoding::F32))).unwrap();
+        prop_assert_eq!(back, w);
+    }
+
+    /// Every strict prefix of a valid frame is rejected — the
+    /// length-prefixed header never lets a truncated stream parse.
+    #[test]
+    fn truncated_frames_rejected(
+        h in finite_f32(),
+        theta in theta_vec(24),
+        qi8 in any::<bool>(),
+    ) {
+        let enc = if qi8 { WireEncoding::Qi8 } else { WireEncoding::F32 };
+        let bytes = frame_bytes(&Panel::frame(MsgKind::Panel, 1, h, &theta, enc));
+        for k in 0..bytes.len() {
+            prop_assert!(
+                Frame::read_from(&mut Cursor::new(&bytes[..k])).is_err(),
+                "prefix of {} bytes parsed", k
+            );
+        }
+        prop_assert!(Frame::read_from(&mut Cursor::new(&bytes)).is_ok());
+    }
+
+    /// Corrupting any single header byte either still yields a valid
+    /// header (flipping payload-length bits can alias) or is rejected —
+    /// it must never panic. Magic corruption is always rejected.
+    #[test]
+    fn corrupted_magic_always_rejected(
+        theta in theta_vec(24),
+        pos in 0usize..4,
+        xor in 1u8..=255,
+    ) {
+        let frame = Panel::frame(MsgKind::Panel, 1, 0.5, &theta, WireEncoding::F32);
+        let mut bytes = frame_bytes(&frame);
+        bytes[pos] ^= xor;
+        prop_assert!(Frame::read_from(&mut Cursor::new(&bytes)).is_err());
+    }
+
+    /// A payload whose inner vector length lies past the payload end is
+    /// rejected by the typed parsers (no panic, no over-read).
+    #[test]
+    fn lying_inner_length_rejected(theta in theta_vec(24), lie in 25u32..10_000) {
+        let mut frame = Panel::frame(MsgKind::Panel, 1, 0.0, &theta, WireEncoding::F32);
+        // Overwrite the inner length prefix at round(8) + h(4).
+        frame.payload[12..16].copy_from_slice(&(lie * 4).to_le_bytes());
+        prop_assert!(Panel::parse(&frame).is_err());
+    }
+}
+
+#[test]
+fn specials_survive_f32_framing_bit_exactly() {
+    // NaN payloads, infinities and signed zeros are parameter-vector
+    // edge cases the lossless encoding must carry untouched.
+    let theta = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, f32::MIN_POSITIVE];
+    let frame = Panel::frame(MsgKind::Final, 9, f32::NAN, &theta, WireEncoding::F32);
+    let back = Panel::parse(&reread(&frame)).unwrap();
+    assert_eq!(back.round, 9);
+    assert_eq!(back.h.to_bits(), f32::NAN.to_bits());
+    for (a, b) in back.theta.iter().zip(theta.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
