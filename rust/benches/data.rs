@@ -1,0 +1,99 @@
+//! Micro-bench: the data pipeline — batch gather throughput, IDX and
+//! CIFAR parse throughput (in-memory, format-conformant buffers), and
+//! the streaming batch-planner overhead. §Perf: the planner + gather
+//! work sits on every local SGD step of every worker, so it must stay
+//! in the noise next to `train_step`; the parsers bound how fast a
+//! `--data-dir` run can come up. Appends its stats to the
+//! `BENCH_native.json` perf trajectory (suite `data`).
+
+use wasgd::bench::{self, black_box, Bencher};
+use wasgd::data::synth::{DatasetKind, SynthConfig};
+use wasgd::data::{cifar, idx, BatchPlanner};
+use wasgd::rng::Rng;
+use wasgd::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env()?;
+    args.accept("bench"); // cargo appends --bench to harness=false bins
+    let quick = args.bool_flag("quick") || Bencher::env_quick();
+    args.finish()?;
+    let mut b = Bencher::with_quick(quick);
+    let mut rng = Rng::new(13);
+
+    // Gather throughput: one 32-example batch from an MNIST-shaped
+    // split — the per-step hot path of every worker.
+    {
+        let ds = SynthConfig::preset(DatasetKind::MnistLike).with_sizes(8192, 512).build(1);
+        let batch = 32usize;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        let mut idx_buf: Vec<u32> = Vec::with_capacity(batch);
+        b.bench("gather_train mnist 32x784", || {
+            idx_buf.clear();
+            for _ in 0..batch {
+                idx_buf.push(rng.below(ds.n_train()) as u32);
+            }
+            ds.gather_train(&idx_buf, &mut x, &mut y);
+            black_box(x[0]);
+        });
+        b.bench("gather_test mnist 32x784", || {
+            idx_buf.clear();
+            for _ in 0..batch {
+                idx_buf.push(rng.below(ds.n_test()) as u32);
+            }
+            ds.gather_test(&idx_buf, &mut x, &mut y);
+            black_box(x[0]);
+        });
+    }
+
+    // IDX parse throughput: 2048 MNIST-geometry images (~1.6 MB).
+    {
+        let (n, rows, cols) = (2048usize, 28usize, 28usize);
+        let pixels: Vec<u8> = (0..n * rows * cols).map(|i| (i % 256) as u8).collect();
+        let bytes = idx::encode_images(n, rows, cols, &pixels);
+        b.bench("idx parse 2048x28x28", || {
+            black_box(idx::parse_images(black_box(&bytes)).unwrap().pixels.len());
+        });
+    }
+
+    // CIFAR parse throughput: 256 records (~768 KB) of each flavour.
+    {
+        let n = 256usize;
+        let file = cifar::CifarFile {
+            labels: (0..n).map(|k| (k % 10) as u8).collect(),
+            coarse: Vec::new(),
+            pixels_chw: (0..n * cifar::PIXELS_PER_RECORD).map(|i| (i % 256) as u8).collect(),
+        };
+        let bytes = cifar::encode(&file, cifar::CifarFormat::C10);
+        b.bench("cifar10 parse 256 records", || {
+            black_box(cifar::parse(black_box(&bytes), cifar::CifarFormat::C10).unwrap().n());
+        });
+    }
+
+    // Planner overhead: one next_batch_into over an order-searched
+    // 8192-sample split — the exact per-step planner cost, epoch
+    // regenerations amortised in.
+    {
+        let n = 8192usize;
+        let labels: Vec<i32> = (0..n).map(|i| (i % 10) as i32).collect();
+        let mut planner =
+            BatchPlanner::new(0, Rng::new(5), n, 32, None, true, 4, None, labels.clone());
+        let mut out: Vec<u32> = Vec::with_capacity(32);
+        b.bench("planner next_batch order-search 8192/b32", || {
+            planner.next_batch_into(&mut out);
+            black_box(out[0]);
+        });
+        let mut delta =
+            BatchPlanner::new(0, Rng::new(5), n, 32, None, false, 4, Some(50), labels);
+        b.bench("planner next_batch delta-blocked 8192/b32", || {
+            delta.next_batch_into(&mut out);
+            black_box(out[0]);
+        });
+    }
+
+    b.summary("data pipeline");
+    let path = bench::bench_json_path();
+    bench::append_bench_json(&path, "data", quick, b.results())?;
+    println!("perf trajectory → {}", path.display());
+    Ok(())
+}

@@ -40,10 +40,10 @@ use crate::cluster::SimCluster;
 use crate::config::{AlgoKind, ExperimentConfig};
 use crate::coordinator::worker::Worker;
 use crate::data::order::judge;
-use crate::data::synth::SynthConfig;
+use crate::data::source::{shard_range, BatchPlanner, DataPipeline};
 use crate::data::{Dataset, RecordWindow};
 use crate::rng::Rng;
-use crate::runtime::{Backend, Manifest};
+use crate::runtime::Backend;
 
 use super::wire::{Cohort, Panel, WireEncoding};
 
@@ -210,26 +210,6 @@ pub fn algo_supports_fabric(algo: AlgoKind) -> bool {
     )
 }
 
-/// Build the dataset a fabric worker (and the equivalence tests' sim
-/// trainer) uses: the config's synthetic preset with its feature count
-/// adapted to the model variant's input geometry (e.g. `tiny_cnn`'s
-/// 8×8×1 = 64 against the tiny preset's 16 raw features). Pure function
-/// of `(cfg.dataset, cfg.seed, manifest)`, so every process materialises
-/// the identical split.
-pub fn fabric_dataset(cfg: &ExperimentConfig, manifest: &Manifest) -> Result<Dataset> {
-    let mut synth = SynthConfig::preset(cfg.dataset);
-    ensure!(
-        synth.classes <= manifest.num_classes,
-        "dataset {} has {} classes but variant {} emits {} logits",
-        cfg.dataset.name(),
-        synth.classes,
-        manifest.name,
-        manifest.num_classes
-    );
-    synth.dim = manifest.input_dim;
-    Ok(synth.build(cfg.seed))
-}
-
 /// The local step budget the simulated trainer would run for this config
 /// — `ceil(epochs · steps_per_epoch)`, at least 1. Every fabric worker
 /// computes this independently and identically.
@@ -322,17 +302,20 @@ pub fn run_fabric_worker(
         );
         params = init;
     }
-    let shard = if policy.shards_data() {
-        let base = n / p;
-        let lo = rank * base;
-        let hi = if rank == p - 1 { n } else { lo + base };
-        Some((lo, hi))
-    } else {
-        None
-    };
-    let mut worker = Worker::new(
+    // The same rank-stable shard rule and batch planner the simulated
+    // trainer builds — operation for operation, so the sample streams
+    // agree bit for bit.
+    let shard = policy.shards_data().then(|| shard_range(n, rank, p));
+    if let Some((lo, hi)) = shard {
+        ensure!(
+            hi - lo >= batch,
+            "worker {rank}'s data shard holds {} examples — fewer than one batch of {batch}; \
+             reduce p or train on a larger split",
+            hi - lo
+        );
+    }
+    let planner = BatchPlanner::new(
         rank,
-        params,
         root.child(100 + rank as u64),
         n,
         batch,
@@ -342,6 +325,7 @@ pub fn run_fabric_worker(
         cfg.force_delta_order,
         dataset.train_y.clone(),
     );
+    let mut worker = Worker::new(rank, params, planner);
     let window = RecordWindow::new(cfg.tau, cfg.m, cfg.c);
     // Dormant cost-model mirror: policies charge communication here so
     // the modelled comm/wait telemetry exists on real fabrics too. It
@@ -349,15 +333,15 @@ pub fn run_fabric_worker(
     let mut cluster = SimCluster::new(p, cfg.fabric_cost, cfg.compute, cfg.seed);
     let msg_bytes = manifest.message_bytes();
 
-    let (mut x_buf, mut y_buf) = (Vec::new(), Vec::new());
+    let (mut idx_buf, mut x_buf, mut y_buf) = (Vec::new(), Vec::new(), Vec::new());
     let mut boundaries = 0u64;
     let mut mean_energy = f32::NAN;
 
     for step in 1..=total_steps {
         let k_in_period = (step - 1) % cfg.tau;
         let recorded = window.is_recorded(k_in_period);
-        let idx = worker.next_batch();
-        dataset.gather_train(&idx, &mut x_buf, &mut y_buf);
+        worker.next_batch_into(&mut idx_buf);
+        dataset.gather_train(&idx_buf, &mut x_buf, &mut y_buf);
         let (new_params, out) = engine.train_step(worker.params(), &x_buf, &y_buf, cfg.lr)?;
         worker.set_params(new_params);
         if recorded {
@@ -435,12 +419,12 @@ pub fn run_decentralized_threaded(
     total_steps: usize,
 ) -> Result<Vec<FabricWorkerOutcome>> {
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
-    // Probe once on this thread so the dataset matches the variant's
-    // input geometry; dropped before any worker spawns (backends are
-    // per-thread: the PJRT client is not Send).
+    // Probe once on this thread so the pipeline can validate against
+    // the variant's input geometry; dropped before any worker spawns
+    // (backends are per-thread: the PJRT client is not Send).
     let dataset = {
         let probe = crate::runtime::load_backend(cfg)?;
-        Arc::new(fabric_dataset(cfg, probe.manifest())?)
+        Arc::new(DataPipeline::from_config(cfg)?.load(probe.manifest())?)
     };
     let exchange: Arc<PanelExchange<WorkerPanel>> = Arc::new(PanelExchange::new(cfg.p));
 
@@ -546,20 +530,6 @@ mod tests {
         // Tiny datasets: steps-per-epoch floors at 1.
         cfg.epochs = 3.0;
         assert_eq!(planned_steps(&cfg, 4, 8), 3);
-    }
-
-    #[test]
-    fn fabric_dataset_adapts_dim_to_variant() {
-        let mut cfg = ExperimentConfig::default();
-        cfg.variant = "tiny_cnn".to_string();
-        let manifest = Manifest::native_variant("tiny_cnn").unwrap();
-        let ds = fabric_dataset(&cfg, &manifest).unwrap();
-        assert_eq!(ds.dim, 64); // 8×8×1, not the tiny preset's 16
-        assert_eq!(ds.n_train(), 512);
-        // Rebuilding yields the identical split (pure function of seed).
-        let ds2 = fabric_dataset(&cfg, &manifest).unwrap();
-        assert_eq!(ds.train_x, ds2.train_x);
-        assert_eq!(ds.train_y, ds2.train_y);
     }
 
     #[test]

@@ -33,12 +33,13 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::checkpoint::Checkpoint;
 use crate::config::ExperimentConfig;
+use crate::data::source::DataPipeline;
 use crate::metrics::CommCounters;
 use crate::runtime::load_backend;
 
 use super::fabric::{
-    algo_supports_fabric, fabric_dataset, planned_steps, run_fabric_worker, Collective,
-    FabricWorkerOutcome, PanelExchange, WorkerPanel,
+    algo_supports_fabric, planned_steps, run_fabric_worker, Collective, FabricWorkerOutcome,
+    PanelExchange, WorkerPanel,
 };
 use super::wire::{
     self, cohort_frame_from_raw, error_text, hello_frame, Cohort, Frame, MsgKind, Panel, RawPanel,
@@ -255,7 +256,21 @@ pub fn serve(listener: TcpListener, opts: &ServeOptions) -> Result<ServeOutcome>
             ck.workers.len()
         );
     }
-    let cfg_json = cfg.to_wire_json();
+    // Ship a *concrete* data source in the wire config: the rendezvous
+    // resolves `auto` against its own filesystem once, so a worker
+    // whose host is missing the promised files errors out pointedly
+    // instead of silently training on the synthetic analogue (which
+    // would de-synchronise the cohort's data).
+    let wire_cfg = {
+        let pipeline = DataPipeline::from_config(cfg)?;
+        if let Some(note) = pipeline.note() {
+            eprintln!("rendezvous: {note}");
+        }
+        let mut c = cfg.clone();
+        c.source = pipeline.source_kind();
+        c
+    };
+    let cfg_json = wire_cfg.to_wire_json();
     let mut comm = CommCounters::new(p);
 
     // Handshake phase: rank = accept order *of completed handshakes*. A
@@ -397,13 +412,19 @@ fn relay_loop(
 }
 
 /// Run one remote worker end to end: connect, adopt the session config
-/// from the Welcome (CLI `--threads` / `--artifacts` override the local
-/// knobs), build engine + dataset locally, train through the fabric, and
-/// deliver the final panel.
+/// from the Welcome (CLI `--threads` / `--artifacts` / `--data-dir`
+/// override the local knobs), build engine + data pipeline locally,
+/// train through the fabric, and deliver the final panel.
+///
+/// The wire config carries a concrete data source (the rendezvous
+/// resolves `auto` before serving), so a worker that cannot locate the
+/// promised real files fails with a pointed error instead of silently
+/// falling back to synth and de-synchronising the cohort.
 pub fn run_remote_worker(
     addr: &str,
     artifacts_root: Option<PathBuf>,
     threads_override: Option<usize>,
+    data_dir_override: Option<PathBuf>,
 ) -> Result<FabricWorkerOutcome> {
     let (mut fabric, welcome) = RemoteCluster::connect(addr)?;
     let mut cfg = ExperimentConfig::from_wire_json(&welcome.config_json)
@@ -414,8 +435,11 @@ pub fn run_remote_worker(
     if let Some(root) = artifacts_root {
         cfg.artifacts_root = root;
     }
+    if let Some(dir) = data_dir_override {
+        cfg.data_dir = Some(dir);
+    }
     let engine = load_backend(&cfg)?;
-    let dataset = fabric_dataset(&cfg, engine.manifest())?;
+    let dataset = DataPipeline::from_config(&cfg)?.load(engine.manifest())?;
     let total_steps = planned_steps(&cfg, dataset.n_train(), engine.manifest().batch);
     let mut out = run_fabric_worker(
         &cfg,
@@ -459,7 +483,7 @@ mod tests {
         let mut workers = Vec::new();
         for _ in 0..cfg.p {
             let addr = addr.clone();
-            workers.push(thread::spawn(move || run_remote_worker(&addr, None, None)));
+            workers.push(thread::spawn(move || run_remote_worker(&addr, None, None, None)));
         }
         for w in workers {
             w.join().unwrap().unwrap();
@@ -526,7 +550,7 @@ mod tests {
         let mut workers = Vec::new();
         for _ in 0..cfg.p {
             let addr = addr.clone();
-            workers.push(thread::spawn(move || run_remote_worker(&addr, None, None)));
+            workers.push(thread::spawn(move || run_remote_worker(&addr, None, None, None)));
         }
         for w in workers {
             w.join().unwrap().unwrap();
@@ -565,7 +589,7 @@ mod tests {
 
         // One real worker…
         let real_addr = addr.clone();
-        let real = thread::spawn(move || run_remote_worker(&real_addr, None, None));
+        let real = thread::spawn(move || run_remote_worker(&real_addr, None, None, None));
         // …and one that handshakes, then hangs up before its first panel.
         let (fabric, _welcome) = RemoteCluster::connect(&addr).unwrap();
         drop(fabric);

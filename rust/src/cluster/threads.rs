@@ -12,10 +12,13 @@
 //!
 //! Since the fabric refactor the loop itself lives in
 //! [`fabric::run_fabric_worker`](crate::cluster::fabric::run_fabric_worker)
-//! — the same code that drives `wasgd worker` processes over TCP — so a
-//! threaded run, a TCP run, and the simulated trainer produce
-//! **bit-identical** final parameters (pinned by `tests/fabric_e2e.rs`;
-//! the exchange itself is stress-tested in `tests/allgather_props.rs`).
+//! — the same code that drives `wasgd worker` processes over TCP — and
+//! every thread trains on the split materialised by the shared
+//! [`DataPipeline`](crate::data::DataPipeline) (synthetic or real
+//! files), so a threaded run, a TCP run, and the simulated trainer
+//! produce **bit-identical** final parameters for every data source
+//! (pinned by `tests/fabric_e2e.rs`; the exchange itself is
+//! stress-tested in `tests/allgather_props.rs`).
 
 use anyhow::Result;
 

@@ -11,6 +11,7 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use crate::cluster::{ComputeModel, FabricConfig};
+use crate::data::source::{DataSpec, SourceKind};
 use crate::data::synth::DatasetKind;
 use crate::util::json::Json;
 
@@ -157,8 +158,15 @@ impl AlgoKind {
 /// [`ExperimentConfig::paper_preset`] reproduces §5.2 per dataset.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
-    /// Which dataset (synthetic analogue) the run trains on.
+    /// Which dataset family the run trains on.
     pub dataset: DatasetKind,
+    /// Which data provider materialises it (`--source`, default auto:
+    /// real files when `data_dir` holds them, synth otherwise). See
+    /// [`crate::data::DataPipeline`].
+    pub source: SourceKind,
+    /// Directory holding real MNIST/Fashion-MNIST/CIFAR files
+    /// (`--data-dir`); `None` trains on the synthetic analogue.
+    pub data_dir: Option<PathBuf>,
     /// Artifact directory name under `artifacts_root` (model variant).
     pub variant: String,
     /// Root directory holding per-variant artifact directories.
@@ -224,6 +232,8 @@ impl Default for ExperimentConfig {
     fn default() -> Self {
         Self {
             dataset: DatasetKind::Tiny,
+            source: SourceKind::Auto,
+            data_dir: None,
             variant: "tiny_mlp".to_string(),
             artifacts_root: PathBuf::from("artifacts"),
             backend: BackendKind::Auto,
@@ -313,6 +323,14 @@ impl ExperimentConfig {
         })
     }
 
+    /// The data-pipeline description this config implies — what
+    /// [`crate::data::DataPipeline::from_config`] resolves and what the
+    /// tcp fabric's wire JSON transports (with `source` concretised by
+    /// the rendezvous, so every worker loads the same data).
+    pub fn data_spec(&self) -> DataSpec {
+        DataSpec { kind: self.dataset, source: self.source, data_dir: self.data_dir.clone() }
+    }
+
     /// Effective temperature T = 1/ã (∞ when ã=0).
     pub fn temperature(&self) -> f32 {
         if self.a_tilde == 0.0 {
@@ -352,6 +370,11 @@ impl ExperimentConfig {
         if self.algo == AlgoKind::WasgdPlusAsync && self.backups == 0 {
             return Err("async WASGD+ needs backups ≥ 1".into());
         }
+        // Data-source consistency lives in one place: the spec's own
+        // static rules (no filesystem access here).
+        if let Err(e) = self.data_spec().check() {
+            return Err(e.to_string());
+        }
         if self.fabric == FabricKind::Tcp {
             match self.algo {
                 AlgoKind::Spsgd
@@ -387,6 +410,14 @@ impl ExperimentConfig {
         let mut m = BTreeMap::new();
         let num = Json::Num;
         m.insert("dataset".to_string(), Json::Str(self.dataset.name().to_string()));
+        m.insert("source".to_string(), Json::Str(self.source.name().to_string()));
+        m.insert(
+            "data_dir".to_string(),
+            match &self.data_dir {
+                Some(dir) => Json::Str(dir.display().to_string()),
+                None => Json::Null,
+            },
+        );
         m.insert("variant".to_string(), Json::Str(self.variant.clone()));
         m.insert("algo".to_string(), Json::Str(self.algo.name().to_string()));
         m.insert("backend".to_string(), Json::Str(self.backend.name().to_string()));
@@ -434,6 +465,25 @@ impl ExperimentConfig {
             .ok_or_else(|| anyhow::anyhow!("wire config names unknown dataset {dataset_s:?}"))?;
         let mut cfg = Self { dataset, ..Self::default() };
         cfg.fabric = FabricKind::Tcp;
+        // Absent data-source keys default to the pre-DataSpec behaviour
+        // (auto with no data dir ⇒ synth), so a newer worker still
+        // joins an older rendezvous cleanly.
+        cfg.source = match j.get("source") {
+            None | Some(Json::Null) => SourceKind::Auto,
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("wire config source must be a string"))?;
+                SourceKind::parse(s)
+                    .ok_or_else(|| anyhow::anyhow!("wire config names unknown data source {s:?}"))?
+            }
+        };
+        cfg.data_dir = match j.get("data_dir") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(PathBuf::from(v.as_str().ok_or_else(|| {
+                anyhow::anyhow!("wire config data_dir must be a string or null")
+            })?)),
+        };
         cfg.variant = j.req_str("variant")?.to_string();
         let algo_s = j.req_str("algo")?;
         cfg.algo = AlgoKind::parse(algo_s)
@@ -568,9 +618,13 @@ mod tests {
         cfg.threads = 3;
         cfg.force_delta_order = Some(16);
         cfg.easgd_alpha = Some(0.125);
+        cfg.source = SourceKind::Cifar;
+        cfg.data_dir = Some(PathBuf::from("/srv/data/cifar"));
         let json = cfg.to_wire_json();
         let back = ExperimentConfig::from_wire_json(&json).unwrap();
         assert_eq!(back.dataset, cfg.dataset);
+        assert_eq!(back.source, cfg.source, "the resolved DataSpec source must ride the wire");
+        assert_eq!(back.data_dir, cfg.data_dir, "workers must load from the same data dir");
         assert_eq!(back.variant, cfg.variant);
         assert_eq!(back.algo, cfg.algo);
         assert_eq!(back.backend, cfg.backend);
@@ -597,10 +651,49 @@ mod tests {
         cfg.beta = 0.700000048f32;
         cfg.a_tilde = f32::MIN_POSITIVE;
         cfg.force_delta_order = None;
+        cfg.source = SourceKind::Auto;
+        cfg.data_dir = None;
         let back = ExperimentConfig::from_wire_json(&cfg.to_wire_json()).unwrap();
         assert_eq!(back.beta.to_bits(), cfg.beta.to_bits());
         assert_eq!(back.a_tilde.to_bits(), cfg.a_tilde.to_bits());
         assert_eq!(back.force_delta_order, None);
+        assert_eq!(back.source, SourceKind::Auto);
+        assert_eq!(back.data_dir, None);
+    }
+
+    #[test]
+    fn data_source_validation_rules() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.source = SourceKind::Idx;
+        assert!(cfg.validate().is_err(), "forced idx needs --data-dir");
+        cfg.data_dir = Some(PathBuf::from("data"));
+        assert!(cfg.validate().is_ok(), "tiny ships as idx in hermetic tests");
+        cfg.dataset = DatasetKind::Cifar10Like;
+        assert!(cfg.validate().is_err(), "cifar10 is not idx");
+        cfg.source = SourceKind::Cifar;
+        assert!(cfg.validate().is_ok());
+        cfg.dataset = DatasetKind::MnistLike;
+        assert!(cfg.validate().is_err(), "mnist is not cifar");
+        cfg.source = SourceKind::Auto;
+        assert!(cfg.validate().is_ok(), "auto composes with any family");
+    }
+
+    #[test]
+    fn wire_json_without_data_spec_keys_defaults_to_synth_behaviour() {
+        // A pre-DataSpec rendezvous ships a config without the
+        // source/data_dir keys; a newer worker must adopt the old
+        // semantics (auto + no dir ⇒ synth) instead of failing.
+        let mut cfg = ExperimentConfig::default();
+        cfg.fabric = FabricKind::Tcp;
+        let mut doc = match Json::parse(&cfg.to_wire_json()).unwrap() {
+            Json::Obj(m) => m,
+            _ => unreachable!("wire config is an object"),
+        };
+        doc.remove("source");
+        doc.remove("data_dir");
+        let back = ExperimentConfig::from_wire_json(&Json::Obj(doc).serialize()).unwrap();
+        assert_eq!(back.source, SourceKind::Auto);
+        assert_eq!(back.data_dir, None);
     }
 
     #[test]

@@ -24,6 +24,7 @@ use crate::algorithms::{make_policy, CommContext, CommPolicy};
 use crate::cluster::SimCluster;
 use crate::config::{AlgoKind, ExperimentConfig};
 use crate::data::order::judge;
+use crate::data::source::{shard_range, BatchPlanner, DataPipeline};
 use crate::data::{Dataset, RecordWindow};
 use crate::linalg;
 use crate::metrics::{Record, RunLog, Stopwatch};
@@ -80,15 +81,16 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunLog> {
 /// Run one experiment with full telemetry (loads the backend selected by
 /// `cfg.backend` and builds the dataset itself; sweeps should use
 /// [`crate::harness::SharedEnv`] to amortise backend construction and
-/// step-time calibration). The dataset comes from
-/// [`fabric_dataset`](crate::cluster::fabric::fabric_dataset) — the
-/// preset adapted to the variant's input geometry — which is exactly
+/// step-time calibration). The dataset comes from the
+/// [`DataPipeline`] — the source resolved from `cfg.data_spec()`,
+/// validated against the variant's input geometry — which is exactly
 /// what the worker fabrics build, so `--fabric sim` and `--fabric tcp`
-/// train on the identical split for every variant (including the
-/// dim-adapted ones like `tiny_cnn`).
+/// train on the identical split for every source (synthetic or real
+/// files) and every variant (including the dim-adapted synth ones like
+/// `tiny_cnn`).
 pub fn run_experiment_full(cfg: &ExperimentConfig) -> Result<RunOutput> {
     let engine = load_backend(cfg)?;
-    let dataset = crate::cluster::fabric::fabric_dataset(cfg, engine.manifest())?;
+    let dataset = DataPipeline::from_config(cfg)?.load(engine.manifest())?;
     let mut tr = Trainer::new(cfg.clone(), engine.as_ref(), &dataset)?;
     tr.run()
 }
@@ -108,7 +110,8 @@ pub struct Trainer<'a> {
     window: RecordWindow,
     eval_rng: Rng,
     comm_rng: Rng,
-    /// Reusable batch gather buffers (hot loop, allocation-free).
+    /// Reusable batch index/gather buffers (hot loop, allocation-free).
+    idx_buf: Vec<u32>,
     x_buf: Vec<f32>,
     y_buf: Vec<i32>,
 }
@@ -150,18 +153,20 @@ impl<'a> Trainer<'a> {
 
         let mut workers = Vec::with_capacity(p_total);
         for i in 0..p_total {
-            let shard = if policy.shards_data() {
-                let base = n / p_primary;
-                let lo = (i % p_primary) * base;
-                let hi = if i % p_primary == p_primary - 1 { n } else { lo + base };
-                Some((lo, hi))
-            } else {
-                None
-            };
+            // The one rank-stable sharding rule every execution layer
+            // shares (backups mirror their primary's shard).
+            let shard = policy.shards_data().then(|| shard_range(n, i % p_primary, p_primary));
+            if let Some((lo, hi)) = shard {
+                anyhow::ensure!(
+                    hi - lo >= batch,
+                    "worker {i}'s data shard holds {} examples — fewer than one batch of \
+                     {batch}; reduce p or train on a larger split",
+                    hi - lo
+                );
+            }
             let params = engine.manifest().init_params(cfg.seed ^ 0x9a9a);
-            workers.push(Worker::new(
+            let planner = BatchPlanner::new(
                 i,
-                params,
                 root.child(100 + i as u64),
                 n,
                 batch,
@@ -170,7 +175,8 @@ impl<'a> Trainer<'a> {
                 cfg.n_parts,
                 cfg.force_delta_order,
                 dataset.train_y.clone(),
-            ));
+            );
+            workers.push(Worker::new(i, params, planner));
         }
 
         Ok(Self {
@@ -183,6 +189,7 @@ impl<'a> Trainer<'a> {
             cluster,
             policy,
             workers,
+            idx_buf: Vec::new(),
             x_buf: Vec::new(),
             y_buf: Vec::new(),
         })
@@ -248,14 +255,18 @@ impl<'a> Trainer<'a> {
         })
     }
 
-    /// One local SGD step of worker `wi`.
+    /// One local SGD step of worker `wi` — allocation-free: the planner
+    /// refills the reusable index buffer, the gather refills the x/y
+    /// buffers.
     fn local_step(&mut self, wi: usize, recorded: bool) -> Result<()> {
-        let w = &mut self.workers[wi];
-        let idx = w.next_batch();
-        self.dataset.gather_train(&idx, &mut self.x_buf, &mut self.y_buf);
-        let (new_params, out) =
-            self.engine
-                .train_step(w.params(), &self.x_buf, &self.y_buf, self.cfg.lr)?;
+        self.workers[wi].next_batch_into(&mut self.idx_buf);
+        self.dataset.gather_train(&self.idx_buf, &mut self.x_buf, &mut self.y_buf);
+        let (new_params, out) = self.engine.train_step(
+            self.workers[wi].params(),
+            &self.x_buf,
+            &self.y_buf,
+            self.cfg.lr,
+        )?;
         let w = &mut self.workers[wi];
         w.set_params(new_params);
         if recorded {

@@ -1,82 +1,33 @@
-//! Per-worker state: parameters, batch stream, energy window, order seeds.
+//! Per-worker state: parameters, the energy window, and the streaming
+//! [`BatchPlanner`] that walks the training set.
 //!
-//! A worker walks the training set in an *order* — either a fresh uniform
-//! shuffle per epoch (baselines), a δ-label-blocked order (the Fig. 3
-//! study), a shard-restricted shuffle (SPSGD), or the §3.4 seeded
-//! per-part orders whose seeds survive epochs when the worker's `Judge`
-//! score was good ([`OrderState`]). Each `next_batch` yields the next
-//! `batch` indices of the current order.
+//! The order machinery — fresh uniform shuffles (baselines),
+//! δ-label-blocked orders (the Fig. 3 study), shard-restricted shuffles
+//! (SPSGD), and the §3.4 seeded per-part orders whose seeds survive
+//! epochs when the worker's `Judge` score was good — lives in
+//! [`crate::data::source::BatchPlanner`] since the data-pipeline
+//! refactor, so the same planner drives the simulated trainer, the
+//! threaded fabric, and remote tcp workers over synthetic and real data
+//! alike. The worker keeps what is genuinely per-worker: the flat
+//! parameter vector and the Eq. 26 loss-energy window.
 
-use crate::data::order::{delta_blocked_order, OrderState};
-use crate::rng::Rng;
+use crate::data::source::BatchPlanner;
 
 /// Per-worker training state (see the module docs).
 pub struct Worker {
     /// Worker index i in the cohort.
     pub id: usize,
     params: Vec<f32>,
-    rng: Rng,
-    n_samples: usize,
-    batch: usize,
-    /// SPSGD shard bounds [lo, hi) in sample-index space.
-    shard: Option<(usize, usize)>,
-    /// Some(state) when the §3.4 order search is active.
-    order_state: Option<OrderState>,
-    /// Fig. 3: force δ-blocked orders instead of uniform shuffles.
-    force_delta: Option<usize>,
-    /// Training labels (needed to build δ-blocked orders).
-    labels: Vec<i32>,
-    /// Current epoch order and cursor.
-    epoch_order: Vec<u32>,
-    pos: usize,
-    /// Completed epochs (order regenerations).
-    pub epoch: u64,
+    planner: BatchPlanner,
     /// Windowed loss-energy accumulator h (Eq. 26).
     energy: f32,
     recorded: u32,
-    /// Judge score pending for the part currently being walked.
-    pending_score: Option<f32>,
 }
 
 impl Worker {
-    /// Construct a worker and build its first epoch order.
-    #[allow(clippy::too_many_arguments)]
-    pub fn new(
-        id: usize,
-        params: Vec<f32>,
-        rng: Rng,
-        n_samples: usize,
-        batch: usize,
-        shard: Option<(usize, usize)>,
-        order_search: bool,
-        n_parts: usize,
-        force_delta: Option<usize>,
-        labels: Vec<i32>,
-    ) -> Self {
-        let order_state = if order_search && shard.is_none() {
-            Some(OrderState::new(n_samples, n_parts, rng.clone().next_u64() ^ id as u64))
-        } else {
-            None
-        };
-        let mut w = Self {
-            id,
-            params,
-            rng,
-            n_samples,
-            batch,
-            shard,
-            order_state,
-            force_delta,
-            labels,
-            epoch_order: Vec::new(),
-            pos: 0,
-            epoch: 0,
-            energy: 0.0,
-            recorded: 0,
-            pending_score: None,
-        };
-        w.new_epoch();
-        w
+    /// Construct a worker around its sample-stream planner.
+    pub fn new(id: usize, params: Vec<f32>, planner: BatchPlanner) -> Self {
+        Self { id, params, planner, energy: 0.0, recorded: 0 }
     }
 
     /// Current flat parameter vector.
@@ -112,81 +63,56 @@ impl Worker {
     }
 
     /// Record the cohort z-score from `Judge` (Algorithm 2, Function 3);
-    /// it is committed to the order part the worker is currently inside,
-    /// so the part's seed survives iff its *latest* score was good —
-    /// exactly Algorithm 1's `Scores[l] = score`.
+    /// the planner commits it to the order part the worker is currently
+    /// inside, so the part's seed survives iff its *latest* score was
+    /// good — exactly Algorithm 1's `Scores[l] = score`.
     pub fn record_judge_score(&mut self, score: f32) {
-        self.pending_score = Some(score);
-        if let Some(st) = self.order_state.as_mut() {
-            let part_len = (self.n_samples / st.n_parts).max(1);
-            let sample_pos = self.pos * self.batch;
-            let part = (sample_pos / part_len).min(st.n_parts - 1);
-            st.record_score(part, score);
-        }
+        self.planner.record_score(score);
     }
 
     /// Order parts that kept their seed so far (telemetry).
     pub fn orders_kept(&self) -> u64 {
-        self.order_state.as_ref().map(|s| s.kept).unwrap_or(0)
+        self.planner.orders_kept()
     }
 
     /// Order parts that redrew their seed so far (telemetry).
     pub fn orders_redrawn(&self) -> u64 {
-        self.order_state.as_ref().map(|s| s.redrawn).unwrap_or(0)
+        self.planner.orders_redrawn()
     }
 
-    /// Build the next epoch's order.
-    fn new_epoch(&mut self) {
-        self.epoch_order.clear();
-        self.pos = 0;
-        if let Some(delta) = self.force_delta {
-            self.epoch_order = delta_blocked_order(&self.labels, delta, &mut self.rng);
-        } else if let Some(st) = self.order_state.as_mut() {
-            // §3.4: per-part seeded permutations (keep-or-redraw applied
-            // inside order_for_part based on recorded scores).
-            for part in 0..st.n_parts {
-                self.epoch_order.extend(st.order_for_part(part));
-            }
-        } else if let Some((lo, hi)) = self.shard {
-            let mut idx: Vec<u32> = (lo as u32..hi as u32).collect();
-            self.rng.shuffle(&mut idx);
-            self.epoch_order = idx;
-        } else {
-            self.epoch_order = self.rng.permutation(self.n_samples);
-        }
+    /// Completed epochs (order regenerations).
+    pub fn epoch(&self) -> u64 {
+        self.planner.epoch()
     }
 
-    /// The next `batch` sample indices (wraps to a new epoch as needed).
-    pub fn next_batch(&mut self) -> Vec<u32> {
-        let b = self.batch;
-        if (self.pos + 1) * b > self.epoch_order.len() {
-            self.epoch += 1;
-            self.new_epoch();
-        }
-        let lo = self.pos * b;
-        self.pos += 1;
-        self.epoch_order[lo..lo + b].to_vec()
+    /// Refill `out` with the next `batch` sample indices (wrapping to a
+    /// new epoch as needed) — allocation-free on the hot loop.
+    pub fn next_batch_into(&mut self, out: &mut Vec<u32>) {
+        self.planner.next_batch_into(out);
+    }
+
+    /// The worker's sample-stream planner (test hook).
+    pub fn planner_mut(&mut self) -> &mut BatchPlanner {
+        &mut self.planner
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::Rng;
 
     fn mk_worker(order_search: bool, shard: Option<(usize, usize)>) -> Worker {
         let labels: Vec<i32> = (0..120).map(|i| (i % 4) as i32).collect();
-        Worker::new(
-            0,
-            vec![0.0; 8],
-            Rng::new(5),
-            120,
-            10,
-            shard,
-            order_search,
-            4,
-            None,
-            labels,
-        )
+        let planner =
+            BatchPlanner::new(0, Rng::new(5), 120, 10, shard, order_search, 4, None, labels);
+        Worker::new(0, vec![0.0; 8], planner)
+    }
+
+    fn next(w: &mut Worker) -> Vec<u32> {
+        let mut idx = Vec::new();
+        w.next_batch_into(&mut idx);
+        idx
     }
 
     #[test]
@@ -194,52 +120,37 @@ mod tests {
         let mut w = mk_worker(false, None);
         let mut seen = Vec::new();
         for _ in 0..12 {
-            seen.extend(w.next_batch());
+            seen.extend(next(&mut w));
         }
         seen.sort_unstable();
         assert_eq!(seen, (0..120u32).collect::<Vec<_>>());
-        assert_eq!(w.epoch, 0);
-        w.next_batch();
-        assert_eq!(w.epoch, 1);
+        assert_eq!(w.epoch(), 0);
+        next(&mut w);
+        assert_eq!(w.epoch(), 1);
     }
 
     #[test]
     fn shard_restricts_indices() {
         let mut w = mk_worker(false, Some((30, 60)));
         for _ in 0..6 {
-            for i in w.next_batch() {
+            for i in next(&mut w) {
                 assert!((30..60).contains(&(i as usize)));
             }
         }
     }
 
     #[test]
-    fn order_search_covers_epoch_too() {
+    fn judge_scores_reach_the_planner() {
         let mut w = mk_worker(true, None);
-        let mut seen = Vec::new();
-        for _ in 0..12 {
-            seen.extend(w.next_batch());
-        }
-        seen.sort_unstable();
-        assert_eq!(seen, (0..120u32).collect::<Vec<_>>());
-    }
-
-    #[test]
-    fn good_score_preserves_epoch_order_part() {
-        let mut w = mk_worker(true, None);
-        let first: Vec<u32> = (0..12).flat_map(|_| w.next_batch()).collect();
-        // Mark every part good right before it would regenerate.
+        let first: Vec<u32> = (0..12).flat_map(|_| next(&mut w)).collect();
+        // A good score at the end of the epoch keeps every visited seed.
+        w.record_judge_score(-2.0);
         for part in 0..4 {
-            w.order_state.as_mut().unwrap().record_score(part, -2.0);
+            w.planner_mut().order_state_mut().unwrap().record_score(part, -2.0);
         }
-        let second: Vec<u32> = (0..12).flat_map(|_| w.next_batch()).collect();
+        let second: Vec<u32> = (0..12).flat_map(|_| next(&mut w)).collect();
         assert_eq!(first, second, "good scores must keep all seeds");
-
-        for part in 0..4 {
-            w.order_state.as_mut().unwrap().record_score(part, 2.0);
-        }
-        let third: Vec<u32> = (0..12).flat_map(|_| w.next_batch()).collect();
-        assert_ne!(second, third, "bad scores must reshuffle");
+        assert!(w.orders_kept() > 0);
     }
 
     #[test]
@@ -251,25 +162,5 @@ mod tests {
         assert!((w.energy() - 0.75).abs() < 1e-6);
         w.reset_energy();
         assert_eq!(w.energy(), 1.0);
-    }
-
-    #[test]
-    fn delta_forced_orders_have_blocks() {
-        let labels: Vec<i32> = (0..120).map(|i| (i % 4) as i32).collect();
-        let mut w = Worker::new(
-            0,
-            vec![0.0; 4],
-            Rng::new(9),
-            120,
-            10,
-            None,
-            false,
-            4,
-            Some(30),
-            labels.clone(),
-        );
-        let idx = w.next_batch();
-        let first_label = labels[idx[0] as usize];
-        assert!(idx.iter().all(|&i| labels[i as usize] == first_label));
     }
 }

@@ -1,0 +1,366 @@
+//! CIFAR-10/100 binary-record format: parser, encoder, and the
+//! [`DataSource`] provider that materialises a [`Dataset`] from the
+//! python-version `.bin` files.
+//!
+//! One record is `label bytes + 3072 pixel bytes`: CIFAR-10 carries one
+//! label byte, CIFAR-100 two (coarse then fine — training uses the fine
+//! label). The 3072 pixels are three 1024-byte CHW planes (R, then G,
+//! then B), each a row-major 32×32 image. Our models consume NHWC, so
+//! [`record_to_hwc`] interleaves the planes while applying the
+//! per-channel normalisation.
+//!
+//! Hygiene mirrors `data/idx.rs`: the byte length must be a whole,
+//! non-zero number of records and every (fine) label must be in range —
+//! both checked *before* the pixel buffers are allocated. Round trips
+//! and rejection paths are property-tested in `tests/data_props.rs`;
+//! the committed golden fixtures are pinned byte-for-byte by
+//! `tests/data_fixtures.rs`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use super::source::{DataSource, Normalization};
+use super::synth::DatasetKind;
+use super::Dataset;
+
+/// Image side length (CIFAR images are 32×32).
+pub const HW: usize = 32;
+/// Pixel bytes per record: three 32×32 CHW planes.
+pub const PIXELS_PER_RECORD: usize = 3 * HW * HW;
+
+/// Which CIFAR binary flavour a file uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CifarFormat {
+    /// CIFAR-10: 1 label byte per record, 10 classes.
+    C10,
+    /// CIFAR-100: 2 label bytes (coarse, fine) per record, 100 fine classes.
+    C100,
+}
+
+impl CifarFormat {
+    /// Label bytes preceding the pixels in each record.
+    pub fn label_bytes(self) -> usize {
+        match self {
+            CifarFormat::C10 => 1,
+            CifarFormat::C100 => 2,
+        }
+    }
+
+    /// Fine-label class count.
+    pub fn classes(self) -> usize {
+        match self {
+            CifarFormat::C10 => 10,
+            CifarFormat::C100 => 100,
+        }
+    }
+
+    /// Total bytes per record.
+    pub fn record_len(self) -> usize {
+        self.label_bytes() + PIXELS_PER_RECORD
+    }
+
+    /// Human-readable flavour name.
+    pub fn name(self) -> &'static str {
+        match self {
+            CifarFormat::C10 => "cifar-10",
+            CifarFormat::C100 => "cifar-100",
+        }
+    }
+}
+
+/// A parsed CIFAR binary file: labels plus raw CHW pixel planes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CifarFile {
+    /// Fine labels, one per record.
+    pub labels: Vec<u8>,
+    /// Coarse labels (CIFAR-100 only; empty for CIFAR-10).
+    pub coarse: Vec<u8>,
+    /// Raw CHW pixels, `n · 3072` bytes.
+    pub pixels_chw: Vec<u8>,
+}
+
+impl CifarFile {
+    /// Record count.
+    pub fn n(&self) -> usize {
+        self.labels.len()
+    }
+}
+
+/// Parse a CIFAR binary file. Rejects empty files, byte lengths that
+/// are not a whole number of records, and out-of-range fine labels —
+/// all before the pixel buffer is allocated.
+pub fn parse(bytes: &[u8], format: CifarFormat) -> Result<CifarFile> {
+    let rec = format.record_len();
+    ensure!(!bytes.is_empty(), "{}: empty file", format.name());
+    ensure!(
+        bytes.len() % rec == 0,
+        "{}: {} bytes is not a whole number of {rec}-byte records",
+        format.name(),
+        bytes.len()
+    );
+    let n = bytes.len() / rec;
+    let lb = format.label_bytes();
+    // Validate every record's fine label before allocating pixels.
+    for k in 0..n {
+        let fine = bytes[k * rec + lb - 1];
+        ensure!(
+            (fine as usize) < format.classes(),
+            "{}: record {k} has fine label {fine} ≥ {} classes",
+            format.name(),
+            format.classes()
+        );
+    }
+    let mut labels = Vec::with_capacity(n);
+    let mut coarse = Vec::with_capacity(if lb == 2 { n } else { 0 });
+    let mut pixels_chw = Vec::with_capacity(n * PIXELS_PER_RECORD);
+    for k in 0..n {
+        let r = &bytes[k * rec..(k + 1) * rec];
+        if lb == 2 {
+            coarse.push(r[0]);
+        }
+        labels.push(r[lb - 1]);
+        pixels_chw.extend_from_slice(&r[lb..]);
+    }
+    Ok(CifarFile { labels, coarse, pixels_chw })
+}
+
+/// Encode a CIFAR binary file — the exact inverse of [`parse`]
+/// (round-trip property-tested), used by the fixture generators and the
+/// hermetic test suites. For [`CifarFormat::C10`], `file.coarse` must be
+/// empty; for [`CifarFormat::C100`] it must carry one byte per record.
+pub fn encode(file: &CifarFile, format: CifarFormat) -> Vec<u8> {
+    let n = file.n();
+    assert_eq!(file.pixels_chw.len(), n * PIXELS_PER_RECORD, "pixel buffer ≠ n·3072");
+    match format {
+        CifarFormat::C10 => {
+            assert!(file.coarse.is_empty(), "cifar-10 records have no coarse label")
+        }
+        CifarFormat::C100 => {
+            assert_eq!(file.coarse.len(), n, "cifar-100 needs one coarse label per record")
+        }
+    }
+    let mut out = Vec::with_capacity(n * format.record_len());
+    for k in 0..n {
+        if format == CifarFormat::C100 {
+            out.push(file.coarse[k]);
+        }
+        out.push(file.labels[k]);
+        out.extend_from_slice(&file.pixels_chw[k * PIXELS_PER_RECORD..(k + 1) * PIXELS_PER_RECORD]);
+    }
+    out
+}
+
+/// Interleave one record's CHW planes into normalised NHWC floats:
+/// `out[(row·32+col)·3 + ch] = norm(ch, plane_ch[row·32+col])`.
+pub fn record_to_hwc(chw: &[u8], norm: &Normalization, out: &mut [f32]) {
+    assert_eq!(chw.len(), PIXELS_PER_RECORD, "record pixel slice ≠ 3072");
+    assert_eq!(out.len(), PIXELS_PER_RECORD, "output slice ≠ 3072");
+    for ch in 0..3 {
+        let plane = &chw[ch * HW * HW..(ch + 1) * HW * HW];
+        for (pos, &b) in plane.iter().enumerate() {
+            out[pos * 3 + ch] = norm.apply(ch, b);
+        }
+    }
+}
+
+/// The CIFAR [`DataSource`]: the python-version train/test `.bin` files
+/// of one flavour, normalised per channel and interleaved to NHWC.
+pub struct CifarSource {
+    kind: DatasetKind,
+    format: CifarFormat,
+    norm: Normalization,
+    train_files: Vec<PathBuf>,
+    test_file: PathBuf,
+}
+
+impl CifarSource {
+    /// Probe `dir` (then `dir/<kind-name>/`) for the flavour's canonical
+    /// file names: `data_batch_1.bin … data_batch_5.bin` + `test_batch.bin`
+    /// for CIFAR-10, `train.bin` + `test.bin` for CIFAR-100. CIFAR-10
+    /// accepts a **contiguous prefix** `data_batch_1..k` (so trimmed
+    /// test sets work), but a gapped layout — a higher-numbered batch
+    /// present with an earlier one missing — is ambiguous (half a
+    /// download? different hosts holding different subsets would
+    /// silently de-synchronise a tcp cohort) and is treated as no
+    /// match. `None` when the kind is not a CIFAR family or no
+    /// complete file set is found.
+    pub fn locate(dir: &Path, kind: DatasetKind) -> Option<Self> {
+        let format = match kind {
+            DatasetKind::Cifar10Like => CifarFormat::C10,
+            DatasetKind::Cifar100Like => CifarFormat::C100,
+            _ => return None,
+        };
+        for base in [dir.to_path_buf(), dir.join(kind.name())] {
+            let (train_files, test_file) = match format {
+                CifarFormat::C10 => {
+                    let batch = |i: usize| base.join(format!("data_batch_{i}.bin"));
+                    let present: Vec<bool> = (1..=5).map(|i| batch(i).is_file()).collect();
+                    let k = present.iter().take_while(|&&p| p).count();
+                    let gapped = present[k..].iter().any(|&p| p);
+                    let train: Vec<PathBuf> =
+                        if gapped { Vec::new() } else { (1..=k).map(batch).collect() };
+                    (train, base.join("test_batch.bin"))
+                }
+                CifarFormat::C100 => {
+                    let t = base.join("train.bin");
+                    (if t.is_file() { vec![t] } else { Vec::new() }, base.join("test.bin"))
+                }
+            };
+            if !train_files.is_empty() && test_file.is_file() {
+                return Some(Self {
+                    kind,
+                    format,
+                    norm: Normalization::for_kind(kind),
+                    train_files,
+                    test_file,
+                });
+            }
+        }
+        None
+    }
+
+    /// Parse and concatenate one or more record files into normalised
+    /// NHWC rows.
+    fn load_files(&self, paths: &[PathBuf]) -> Result<(Vec<f32>, Vec<i32>)> {
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for path in paths {
+            let bytes =
+                std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+            let file = parse(&bytes, self.format)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let base = x.len();
+            x.resize(base + file.n() * PIXELS_PER_RECORD, 0.0);
+            for k in 0..file.n() {
+                record_to_hwc(
+                    &file.pixels_chw[k * PIXELS_PER_RECORD..(k + 1) * PIXELS_PER_RECORD],
+                    &self.norm,
+                    &mut x[base + k * PIXELS_PER_RECORD..base + (k + 1) * PIXELS_PER_RECORD],
+                );
+            }
+            y.extend(file.labels.iter().map(|&l| l as i32));
+        }
+        Ok((x, y))
+    }
+}
+
+impl DataSource for CifarSource {
+    fn provenance(&self) -> &'static str {
+        "cifar"
+    }
+
+    fn materialise(&self) -> Result<Dataset> {
+        let (train_x, train_y) = self.load_files(&self.train_files)?;
+        let (test_x, test_y) = self.load_files(std::slice::from_ref(&self.test_file))?;
+        Ok(Dataset {
+            name: self.kind.name().to_string(),
+            dim: PIXELS_PER_RECORD,
+            classes: self.format.classes(),
+            train_x,
+            train_y,
+            test_x,
+            test_y,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_file(n: usize, format: CifarFormat, salt: usize) -> CifarFile {
+        CifarFile {
+            labels: (0..n).map(|k| ((k * 3 + salt) % format.classes()) as u8).collect(),
+            coarse: match format {
+                CifarFormat::C10 => Vec::new(),
+                CifarFormat::C100 => (0..n).map(|k| ((k + salt) % 20) as u8).collect(),
+            },
+            pixels_chw: (0..n * PIXELS_PER_RECORD)
+                .map(|i| ((i * 7 + salt) % 256) as u8)
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_both_formats() {
+        for format in [CifarFormat::C10, CifarFormat::C100] {
+            let file = demo_file(3, format, 5);
+            let bytes = encode(&file, format);
+            assert_eq!(bytes.len(), 3 * format.record_len());
+            assert_eq!(parse(&bytes, format).unwrap(), file);
+        }
+    }
+
+    #[test]
+    fn ragged_and_empty_rejected() {
+        let file = demo_file(2, CifarFormat::C10, 1);
+        let bytes = encode(&file, CifarFormat::C10);
+        assert!(parse(&[], CifarFormat::C10).is_err(), "empty");
+        assert!(parse(&bytes[..bytes.len() - 1], CifarFormat::C10).is_err(), "truncated");
+        let mut fat = bytes.clone();
+        fat.push(0);
+        assert!(parse(&fat, CifarFormat::C10).is_err(), "oversized");
+        // A C10 file is not a whole number of C100 records.
+        assert!(parse(&bytes, CifarFormat::C100).is_err());
+    }
+
+    #[test]
+    fn out_of_range_label_rejected() {
+        let mut file = demo_file(2, CifarFormat::C10, 0);
+        file.labels[1] = 10;
+        let bytes = encode(&file, CifarFormat::C10);
+        let err = parse(&bytes, CifarFormat::C10).unwrap_err();
+        assert!(format!("{err}").contains("record 1"), "{err}");
+    }
+
+    #[test]
+    fn hwc_interleaves_planes_with_per_channel_norm() {
+        let norm = Normalization::for_kind(DatasetKind::Cifar10Like);
+        let chw: Vec<u8> = (0..PIXELS_PER_RECORD).map(|i| (i % 256) as u8).collect();
+        let mut out = vec![0.0f32; PIXELS_PER_RECORD];
+        record_to_hwc(&chw, &norm, &mut out);
+        // Spatial position 5: R from plane 0, G from plane 1, B from plane 2.
+        for ch in 0..3 {
+            let want = norm.apply(ch, chw[ch * 1024 + 5]);
+            assert_eq!(out[5 * 3 + ch].to_bits(), want.to_bits(), "channel {ch}");
+        }
+    }
+
+    #[test]
+    fn locate_and_materialise_from_dir() {
+        let dir = std::env::temp_dir().join(format!("wasgd_cifar_unit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(CifarSource::locate(&dir, DatasetKind::Cifar10Like).is_none());
+        assert!(CifarSource::locate(&dir, DatasetKind::Tiny).is_none(), "non-CIFAR kind");
+        let train = demo_file(4, CifarFormat::C10, 2);
+        let test = demo_file(2, CifarFormat::C10, 9);
+        std::fs::write(dir.join("data_batch_1.bin"), encode(&train, CifarFormat::C10)).unwrap();
+        std::fs::write(dir.join("test_batch.bin"), encode(&test, CifarFormat::C10)).unwrap();
+
+        let src = CifarSource::locate(&dir, DatasetKind::Cifar10Like).expect("files present");
+        assert_eq!(src.provenance(), "cifar");
+        let ds = src.materialise().unwrap();
+        assert_eq!(ds.dim, 3072);
+        assert_eq!(ds.classes, 10);
+        assert_eq!(ds.n_train(), 4);
+        assert_eq!(ds.n_test(), 2);
+        assert_eq!(ds.train_y[1], train.labels[1] as i32);
+        // NHWC interleave of record 0, spatial 0, channel 1 (G plane).
+        let norm = Normalization::for_kind(DatasetKind::Cifar10Like);
+        let want = norm.apply(1, train.pixels_chw[1024]);
+        assert_eq!(ds.train_x[1].to_bits(), want.to_bits());
+
+        // A gapped batch layout (batch 3 present, batch 2 missing) is
+        // ambiguous and must not match…
+        std::fs::write(dir.join("data_batch_3.bin"), encode(&train, CifarFormat::C10)).unwrap();
+        assert!(CifarSource::locate(&dir, DatasetKind::Cifar10Like).is_none(), "gapped layout");
+        // …but the contiguous prefix 1..=3 concatenates in index order.
+        std::fs::write(dir.join("data_batch_2.bin"), encode(&test, CifarFormat::C10)).unwrap();
+        let src = CifarSource::locate(&dir, DatasetKind::Cifar10Like).unwrap();
+        let ds = src.materialise().unwrap();
+        assert_eq!(ds.n_train(), 4 + 2 + 4);
+        assert_eq!(ds.train_y[4], test.labels[0] as i32, "batch 2 follows batch 1");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

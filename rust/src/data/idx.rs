@@ -1,0 +1,325 @@
+//! IDX (MNIST / Fashion-MNIST) binary format: parser, encoder, and the
+//! [`DataSource`] provider that materialises a [`Dataset`] from the four
+//! classic ubyte files.
+//!
+//! Format (LeCun's specification): a big-endian header
+//! `[0x00, 0x00, dtype, ndim]` followed by `ndim` u32 dimension sizes,
+//! then the payload in row-major order. This module supports
+//! `dtype = 0x08` (unsigned byte) — the only dtype the MNIST-family
+//! files use — with `ndim = 3` for image tensors `[n, rows, cols]` and
+//! `ndim = 1` for label vectors `[n]`.
+//!
+//! Hygiene mirrors `cluster/wire.rs`: the declared element count is
+//! computed with checked arithmetic and validated against the actual
+//! byte length *before* any payload allocation, so truncated, oversized,
+//! or dimension-lying files are rejected with a pointed error — never a
+//! panic or an attempted huge allocation (property-tested in
+//! `tests/data_props.rs`; the committed golden fixture is pinned
+//! byte-for-byte by `tests/data_fixtures.rs`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::source::{DataSource, Normalization};
+use super::synth::DatasetKind;
+use super::Dataset;
+
+/// IDX dtype code for unsigned bytes (the MNIST-family payload type).
+pub const DTYPE_U8: u8 = 0x08;
+
+/// Classic file names of an IDX dataset directory, in
+/// (train images, train labels, test images, test labels) order —
+/// what MNIST and Fashion-MNIST ship as (after gunzip).
+pub const FILE_NAMES: [&str; 4] = [
+    "train-images-idx3-ubyte",
+    "train-labels-idx1-ubyte",
+    "t10k-images-idx3-ubyte",
+    "t10k-labels-idx1-ubyte",
+];
+
+/// A parsed IDX image tensor `[n, rows, cols]` of raw u8 pixels.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IdxImages {
+    /// Image count.
+    pub n: usize,
+    /// Pixel rows per image.
+    pub rows: usize,
+    /// Pixel columns per image.
+    pub cols: usize,
+    /// Row-major pixels, `n · rows · cols` bytes.
+    pub pixels: Vec<u8>,
+}
+
+/// Parse an IDX image file (`ndim = 3`, dtype u8). The byte length must
+/// match the declared dimensions exactly — truncated *and* oversized
+/// payloads are both rejected, before any allocation.
+pub fn parse_images(bytes: &[u8]) -> Result<IdxImages> {
+    let (dims, payload) = parse_header(bytes, 3, "images")?;
+    Ok(IdxImages { n: dims[0], rows: dims[1], cols: dims[2], pixels: payload.to_vec() })
+}
+
+/// Parse an IDX label file (`ndim = 1`, dtype u8) into raw label bytes.
+pub fn parse_labels(bytes: &[u8]) -> Result<Vec<u8>> {
+    let (_dims, payload) = parse_header(bytes, 1, "labels")?;
+    Ok(payload.to_vec())
+}
+
+/// Validate magic + dims and return (dims, payload slice). The payload
+/// is only a borrow here: nothing is allocated until the caller has a
+/// fully validated view.
+fn parse_header<'a>(
+    bytes: &'a [u8],
+    want_ndim: usize,
+    what: &str,
+) -> Result<(Vec<usize>, &'a [u8])> {
+    ensure!(bytes.len() >= 4, "idx {what}: {} bytes is too short for the magic", bytes.len());
+    ensure!(
+        bytes[0] == 0 && bytes[1] == 0,
+        "idx {what}: bad magic 0x{:02x}{:02x} (expected 0x0000)",
+        bytes[0],
+        bytes[1]
+    );
+    let dtype = bytes[2];
+    ensure!(
+        dtype == DTYPE_U8,
+        "idx {what}: dtype 0x{dtype:02x} unsupported (only 0x08 = unsigned byte)"
+    );
+    let ndim = bytes[3] as usize;
+    ensure!(ndim == want_ndim, "idx {what}: rank {ndim}, expected {want_ndim}");
+    let header = 4 + 4 * ndim;
+    ensure!(
+        bytes.len() >= header,
+        "idx {what}: {} bytes is too short for a rank-{ndim} dimension header",
+        bytes.len()
+    );
+    let mut dims = Vec::with_capacity(ndim);
+    for i in 0..ndim {
+        let off = 4 + 4 * i;
+        dims.push(u32::from_be_bytes(bytes[off..off + 4].try_into().unwrap()) as usize);
+    }
+    let total = dims
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| anyhow!("idx {what}: dimension product {dims:?} overflows"))?;
+    let payload = &bytes[header..];
+    ensure!(
+        payload.len() == total,
+        "idx {what}: payload is {} bytes but dims {dims:?} declare {total}",
+        payload.len()
+    );
+    Ok((dims, payload))
+}
+
+/// Encode an IDX image tensor — the exact inverse of [`parse_images`]
+/// (round-trip property-tested), used by the fixture generators and the
+/// hermetic test suites.
+pub fn encode_images(n: usize, rows: usize, cols: usize, pixels: &[u8]) -> Vec<u8> {
+    assert_eq!(pixels.len(), n * rows * cols, "pixel buffer ≠ n·rows·cols");
+    let mut out = Vec::with_capacity(16 + pixels.len());
+    out.extend_from_slice(&[0, 0, DTYPE_U8, 3]);
+    out.extend_from_slice(&(n as u32).to_be_bytes());
+    out.extend_from_slice(&(rows as u32).to_be_bytes());
+    out.extend_from_slice(&(cols as u32).to_be_bytes());
+    out.extend_from_slice(pixels);
+    out
+}
+
+/// Encode an IDX label vector — the exact inverse of [`parse_labels`].
+pub fn encode_labels(labels: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + labels.len());
+    out.extend_from_slice(&[0, 0, DTYPE_U8, 1]);
+    out.extend_from_slice(&(labels.len() as u32).to_be_bytes());
+    out.extend_from_slice(labels);
+    out
+}
+
+/// The IDX [`DataSource`]: four ubyte files (train/test × images/labels)
+/// normalised with the dataset family's mean/std. Image geometry is
+/// whatever the files declare — 28×28 for real (Fashion-)MNIST, but any
+/// `rows × cols` parses, which is what lets hermetic tests run tiny
+/// 8×8 IDX datasets through the full tcp fabric.
+pub struct IdxSource {
+    kind: DatasetKind,
+    classes: usize,
+    norm: Normalization,
+    train_images: PathBuf,
+    train_labels: PathBuf,
+    test_images: PathBuf,
+    test_labels: PathBuf,
+}
+
+impl IdxSource {
+    /// Probe `dir` (then `dir/<kind-name>/`) for the four classic IDX
+    /// file names; `None` when any of them is missing.
+    pub fn locate(dir: &Path, kind: DatasetKind) -> Option<Self> {
+        for base in [dir.to_path_buf(), dir.join(kind.name())] {
+            let paths: Vec<PathBuf> = FILE_NAMES.iter().map(|f| base.join(f)).collect();
+            if paths.iter().all(|p| p.is_file()) {
+                return Some(Self {
+                    kind,
+                    classes: crate::data::synth::SynthConfig::preset(kind).classes,
+                    norm: Normalization::for_kind(kind),
+                    train_images: paths[0].clone(),
+                    train_labels: paths[1].clone(),
+                    test_images: paths[2].clone(),
+                    test_labels: paths[3].clone(),
+                })
+            }
+        }
+        None
+    }
+
+    /// Load one (images, labels) file pair into normalised rows.
+    fn load_split(&self, images: &Path, labels: &Path) -> Result<(Vec<f32>, Vec<i32>, usize)> {
+        let img_bytes = std::fs::read(images)
+            .with_context(|| format!("reading {}", images.display()))?;
+        let img = parse_images(&img_bytes)
+            .with_context(|| format!("parsing {}", images.display()))?;
+        let lab_bytes = std::fs::read(labels)
+            .with_context(|| format!("reading {}", labels.display()))?;
+        let lab = parse_labels(&lab_bytes)
+            .with_context(|| format!("parsing {}", labels.display()))?;
+        ensure!(
+            lab.len() == img.n,
+            "{}: {} labels for {} images in {}",
+            labels.display(),
+            lab.len(),
+            img.n,
+            images.display()
+        );
+        for (i, &l) in lab.iter().enumerate() {
+            ensure!(
+                (l as usize) < self.classes,
+                "{}: label {l} at index {i} out of range for {} {} classes",
+                labels.display(),
+                self.kind.name(),
+                self.classes
+            );
+        }
+        let dim = img.rows * img.cols;
+        let x = img.pixels.iter().map(|&b| self.norm.apply(0, b)).collect();
+        let y = lab.iter().map(|&l| l as i32).collect();
+        Ok((x, y, dim))
+    }
+}
+
+impl DataSource for IdxSource {
+    fn provenance(&self) -> &'static str {
+        "idx"
+    }
+
+    fn materialise(&self) -> Result<Dataset> {
+        let (train_x, train_y, dim) = self.load_split(&self.train_images, &self.train_labels)?;
+        let (test_x, test_y, test_dim) = self.load_split(&self.test_images, &self.test_labels)?;
+        ensure!(
+            dim == test_dim,
+            "idx train images are {dim}-dimensional but test images are {test_dim}-dimensional"
+        );
+        Ok(Dataset {
+            name: self.kind.name().to_string(),
+            dim,
+            classes: self.classes,
+            train_x,
+            train_y,
+            test_x,
+            test_y,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_pixels(n: usize, rows: usize, cols: usize) -> Vec<u8> {
+        (0..n * rows * cols).map(|i| ((i * 31 + 7) % 251) as u8).collect()
+    }
+
+    #[test]
+    fn images_roundtrip() {
+        let px = demo_pixels(3, 4, 5);
+        let bytes = encode_images(3, 4, 5, &px);
+        assert_eq!(bytes.len(), 16 + px.len());
+        let back = parse_images(&bytes).unwrap();
+        assert_eq!(back.n, 3);
+        assert_eq!(back.rows, 4);
+        assert_eq!(back.cols, 5);
+        assert_eq!(back.pixels, px);
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        let bytes = encode_labels(&[0, 1, 2, 9]);
+        assert_eq!(parse_labels(&bytes).unwrap(), vec![0, 1, 2, 9]);
+        assert!(parse_labels(&encode_labels(&[])).unwrap().is_empty());
+    }
+
+    #[test]
+    fn truncated_and_oversized_rejected() {
+        let good = encode_images(2, 3, 3, &demo_pixels(2, 3, 3));
+        assert!(parse_images(&good[..good.len() - 1]).is_err(), "truncated payload");
+        assert!(parse_images(&good[..10]).is_err(), "truncated header");
+        let mut fat = good.clone();
+        fat.push(0);
+        assert!(parse_images(&fat).is_err(), "oversized payload");
+    }
+
+    #[test]
+    fn bad_magic_dtype_and_rank_rejected() {
+        let good = encode_images(1, 2, 2, &demo_pixels(1, 2, 2));
+        let mut bad = good.clone();
+        bad[0] = 0xFF;
+        assert!(parse_images(&bad).is_err(), "bad magic");
+        let mut bad = good.clone();
+        bad[2] = 0x0D; // float dtype
+        assert!(parse_images(&bad).is_err(), "unsupported dtype");
+        // An images file parsed as labels (rank mismatch) must fail too.
+        assert!(parse_labels(&good).is_err());
+        assert!(parse_images(&encode_labels(&[1, 2])).is_err());
+    }
+
+    #[test]
+    fn lying_dims_rejected_before_allocation() {
+        // Header declares ~2⁶⁴ pixels over a 4-byte body: the checked
+        // product must reject it without ever allocating.
+        let mut bytes = vec![0, 0, DTYPE_U8, 3];
+        for _ in 0..3 {
+            bytes.extend_from_slice(&u32::MAX.to_be_bytes());
+        }
+        bytes.extend_from_slice(&[1, 2, 3, 4]);
+        let err = parse_images(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("overflow"), "{err}");
+    }
+
+    #[test]
+    fn locate_and_materialise_from_dir() {
+        let dir = std::env::temp_dir().join(format!("wasgd_idx_unit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(IdxSource::locate(&dir, DatasetKind::Tiny).is_none());
+        let train_px = demo_pixels(6, 4, 4);
+        let test_px = demo_pixels(2, 4, 4);
+        std::fs::write(dir.join(FILE_NAMES[0]), encode_images(6, 4, 4, &train_px)).unwrap();
+        std::fs::write(dir.join(FILE_NAMES[1]), encode_labels(&[0, 1, 0, 1, 1, 0])).unwrap();
+        std::fs::write(dir.join(FILE_NAMES[2]), encode_images(2, 4, 4, &test_px)).unwrap();
+        std::fs::write(dir.join(FILE_NAMES[3]), encode_labels(&[1, 0])).unwrap();
+
+        let src = IdxSource::locate(&dir, DatasetKind::Tiny).expect("all four files present");
+        assert_eq!(src.provenance(), "idx");
+        let ds = src.materialise().unwrap();
+        assert_eq!(ds.dim, 16);
+        assert_eq!(ds.classes, 2);
+        assert_eq!(ds.n_train(), 6);
+        assert_eq!(ds.n_test(), 2);
+        assert_eq!(ds.train_y, vec![0, 1, 0, 1, 1, 0]);
+        // Normalisation: (b/255 − mean)/std with the Tiny constants.
+        let norm = Normalization::for_kind(DatasetKind::Tiny);
+        assert_eq!(ds.train_x[5].to_bits(), norm.apply(0, train_px[5]).to_bits());
+
+        // A label outside the family's class count is rejected.
+        std::fs::write(dir.join(FILE_NAMES[1]), encode_labels(&[0, 1, 0, 9, 1, 0])).unwrap();
+        let src = IdxSource::locate(&dir, DatasetKind::Tiny).unwrap();
+        assert!(src.materialise().is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,16 +1,35 @@
-//! Data substrate: datasets, synthetic generators, and sample-order state.
+//! Data substrate: the pluggable source pipeline, real-file parsers,
+//! synthetic generators, and sample-order state.
 //!
 //! The paper evaluates on MNIST / Fashion-MNIST / CIFAR-10 / CIFAR-100.
-//! This environment has no network access, so per DESIGN.md §3 we build
-//! deterministic synthetic analogues whose *relative difficulty* matches
-//! (mnist < fashion < cifar10 < cifar100). Everything the algorithms
-//! under study exercise — loss landscapes, label structure for the
-//! order-effect experiment, batch streams — is preserved.
+//! Ingestion is a [`source::DataSource`] seam with three providers
+//! behind one [`source::DataPipeline`]:
+//!
+//! * [`synth`] — deterministic synthetic analogues whose *relative
+//!   difficulty* matches the paper's corpora (mnist < fashion <
+//!   cifar10 < cifar100; DESIGN.md §3) — the hermetic default, since
+//!   this environment has no network access;
+//! * [`idx`] — the MNIST-family IDX ubyte parser, picking up real
+//!   downloaded files via `wasgd run --data-dir <path>`;
+//! * [`cifar`] — the CIFAR-10/100 binary-record parser (same flag).
+//!
+//! The pipeline owns per-dataset normalisation, geometry validation
+//! against the model manifest, rank-stable worker sharding
+//! ([`source::shard_range`]) and the streaming [`source::BatchPlanner`]
+//! that composes with [`order::OrderState`] /
+//! [`order::delta_blocked_order`] — so the §3.4 designed sample order
+//! runs identically over synthetic and real data, on every fabric.
 
+pub mod cifar;
+pub mod idx;
 pub mod order;
+pub mod source;
 pub mod synth;
 
 pub use order::{delta_blocked_order, OrderState, RecordWindow};
+pub use source::{
+    shard_range, BatchPlanner, DataPipeline, DataSource, DataSpec, Normalization, SourceKind,
+};
 pub use synth::{DatasetKind, SynthConfig};
 
 /// A fully materialised classification dataset (train + test split),
@@ -64,10 +83,14 @@ impl Dataset {
         }
     }
 
-    /// Gather a batch of test examples.
+    /// Gather a batch of test examples (same reserve-once discipline as
+    /// [`Dataset::gather_train`] — the eval path must not reallocate
+    /// incrementally either).
     pub fn gather_test(&self, idx: &[u32], x_out: &mut Vec<f32>, y_out: &mut Vec<i32>) {
         x_out.clear();
         y_out.clear();
+        x_out.reserve(idx.len() * self.dim);
+        y_out.reserve(idx.len());
         for &i in idx {
             let i = i as usize;
             x_out.extend_from_slice(&self.test_x[i * self.dim..(i + 1) * self.dim]);

@@ -1,0 +1,727 @@
+//! The pluggable data pipeline: sources, normalisation, sharding, and
+//! the streaming batch planner.
+//!
+//! Three layers, bottom to top:
+//!
+//! * [`DataSource`] — the provider seam. Three implementations
+//!   materialise a [`Dataset`]: the deterministic synthetic generator
+//!   ([`SynthSource`] over [`SynthConfig`]), the IDX parser for
+//!   MNIST/Fashion-MNIST ([`crate::data::idx::IdxSource`]), and the
+//!   CIFAR-10/100 binary-record parser
+//!   ([`crate::data::cifar::CifarSource`]).
+//! * [`DataPipeline`] — resolves a [`DataSpec`] (dataset family ×
+//!   source × `--data-dir`) to a concrete provider, owns the
+//!   per-dataset normalisation constants ([`Normalization`]), and
+//!   validates the materialised split against the model manifest's
+//!   input geometry (replacing the old ad-hoc `fabric_dataset`
+//!   dim-adaption). Resolution is a pure function of the spec and the
+//!   filesystem, so every process of a fabric cohort materialises the
+//!   identical split — the sim ≡ threads ≡ tcp bit-exactness contract
+//!   (`tests/fabric_e2e.rs`) holds for every source.
+//! * [`BatchPlanner`] — the streaming sample-index planner every worker
+//!   walks: fresh uniform shuffles (baselines), rank-stable shard
+//!   shuffles (SPSGD, via [`shard_range`]), δ-label-blocked orders (the
+//!   Fig. 3 study, [`delta_blocked_order`]), or the §3.4 seeded
+//!   per-part orders ([`OrderState`]) — identical machinery over synth
+//!   and real data. `next_batch_into` refills a caller buffer, keeping
+//!   the hot loop allocation-free.
+
+use std::path::PathBuf;
+
+use anyhow::{ensure, Result};
+
+use crate::config::ExperimentConfig;
+use crate::rng::Rng;
+use crate::runtime::Manifest;
+
+use super::cifar::CifarSource;
+use super::idx::{self, IdxSource};
+use super::order::{delta_blocked_order, OrderState};
+use super::synth::{DatasetKind, SynthConfig};
+use super::Dataset;
+
+/// Which concrete provider materialises the dataset (`--source …`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum SourceKind {
+    /// Resolve automatically: real files when `--data-dir` holds them,
+    /// the synthetic analogue otherwise (with a pointed message).
+    #[default]
+    Auto,
+    /// Force the deterministic synthetic generator.
+    Synth,
+    /// Force the IDX loader (MNIST-family ubyte files).
+    Idx,
+    /// Force the CIFAR binary-record loader.
+    Cifar,
+}
+
+impl SourceKind {
+    /// Every source kind, in CLI listing order.
+    pub const ALL: [SourceKind; 4] =
+        [SourceKind::Auto, SourceKind::Synth, SourceKind::Idx, SourceKind::Cifar];
+
+    /// CLI name (`--source auto|synth|idx|cifar`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SourceKind::Auto => "auto",
+            SourceKind::Synth => "synth",
+            SourceKind::Idx => "idx",
+            SourceKind::Cifar => "cifar",
+        }
+    }
+
+    /// Parse a CLI name; `None` for anything unknown.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "auto" => SourceKind::Auto,
+            "synth" => SourceKind::Synth,
+            "idx" => SourceKind::Idx,
+            "cifar" => SourceKind::Cifar,
+            _ => return None,
+        })
+    }
+}
+
+/// The config-level description of where training data comes from:
+/// dataset family, provider selection, and the directory real files
+/// live in. Rides the tcp fabric's wire JSON (with `source` already
+/// resolved to a concrete provider by the rendezvous), so every worker
+/// process loads the same data the simulated trainer would.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DataSpec {
+    /// Dataset family (`--dataset`).
+    pub kind: DatasetKind,
+    /// Provider selection (`--source`, default auto).
+    pub source: SourceKind,
+    /// Directory holding real MNIST/Fashion-MNIST/CIFAR files
+    /// (`--data-dir`); probed directly and under `<dir>/<kind-name>/`.
+    pub data_dir: Option<PathBuf>,
+}
+
+impl DataSpec {
+    /// The real-file format this family ships as: IDX for the
+    /// MNIST-shaped kinds (including `tiny`, which hermetic tests feed
+    /// with small IDX fixtures), CIFAR records for the CIFAR kinds.
+    pub fn real_format(&self) -> SourceKind {
+        match self.kind {
+            DatasetKind::Cifar10Like | DatasetKind::Cifar100Like => SourceKind::Cifar,
+            _ => SourceKind::Idx,
+        }
+    }
+
+    /// Static consistency rules — no filesystem access, so this is
+    /// cheap enough for `ExperimentConfig::validate` to delegate to
+    /// (the one home of these rules): a forced real source must match
+    /// the family's shipping format and needs a data dir.
+    pub fn check(&self) -> Result<()> {
+        if matches!(self.source, SourceKind::Idx | SourceKind::Cifar) {
+            let real = self.real_format();
+            ensure!(
+                self.source == real,
+                "dataset {} ships as {} files, not {} — use --source {} (or auto)",
+                self.kind.name(),
+                real.name(),
+                self.source.name(),
+                real.name()
+            );
+            ensure!(
+                self.data_dir.is_some(),
+                "--source {} needs --data-dir pointing at the downloaded files",
+                self.source.name()
+            );
+        }
+        Ok(())
+    }
+
+    /// Resolve `Auto` to a concrete provider: probe the data dir for
+    /// the family's file set and fall back to synth when it is absent.
+    /// Returns the concrete source plus an optional human-readable note
+    /// (what was found, or why the fallback fired) for the CLI to
+    /// surface. Forced `idx`/`cifar` selections are validated against
+    /// the family's real format ([`DataSpec::check`]).
+    pub fn resolve(&self) -> Result<(SourceKind, Option<String>)> {
+        self.check()?;
+        let real = self.real_format();
+        match self.source {
+            SourceKind::Synth => Ok((SourceKind::Synth, None)),
+            SourceKind::Idx | SourceKind::Cifar => Ok((self.source, None)),
+            SourceKind::Auto => {
+                let Some(dir) = &self.data_dir else {
+                    return Ok((SourceKind::Synth, None));
+                };
+                let found = match real {
+                    SourceKind::Idx => IdxSource::locate(dir, self.kind).is_some(),
+                    _ => CifarSource::locate(dir, self.kind).is_some(),
+                };
+                if found {
+                    Ok((
+                        real,
+                        Some(format!(
+                            "data: using real {} {} files from {}",
+                            self.kind.name(),
+                            real.name(),
+                            dir.display()
+                        )),
+                    ))
+                } else {
+                    Ok((
+                        SourceKind::Synth,
+                        Some(format!(
+                            "data: no {} {} files under {} (expected {}); \
+                             falling back to the synthetic analogue",
+                            self.kind.name(),
+                            real.name(),
+                            dir.display(),
+                            expected_files(self.kind)
+                        )),
+                    ))
+                }
+            }
+        }
+    }
+}
+
+/// The canonical file names a real dataset directory must hold for one
+/// family (the pointed-message and error-text helper).
+pub fn expected_files(kind: DatasetKind) -> String {
+    match kind {
+        DatasetKind::Cifar10Like => {
+            "data_batch_1.bin[…data_batch_5.bin] + test_batch.bin".to_string()
+        }
+        DatasetKind::Cifar100Like => "train.bin + test.bin".to_string(),
+        _ => idx::FILE_NAMES.join(" + "),
+    }
+}
+
+/// Per-dataset input normalisation: pixels map `u8 → (b/255 − mean)/std`
+/// per channel. The constants are the standard published per-channel
+/// statistics of each corpus (see `docs/DATA.md`); the synthetic
+/// generator emits already-standardised features and bypasses this.
+#[derive(Clone, Debug)]
+pub struct Normalization {
+    /// Per-channel mean of the `[0, 1]`-scaled pixels.
+    pub mean: Vec<f32>,
+    /// Per-channel standard deviation of the `[0, 1]`-scaled pixels.
+    pub std: Vec<f32>,
+}
+
+impl Normalization {
+    /// The constants for one dataset family (1 channel for the
+    /// MNIST-shaped kinds, 3 for CIFAR).
+    pub fn for_kind(kind: DatasetKind) -> Self {
+        let (mean, std): (&[f32], &[f32]) = match kind {
+            // No published statistics for the synthetic tiny family:
+            // plain centring to [−1, 1].
+            DatasetKind::Tiny => (&[0.5], &[0.5]),
+            DatasetKind::MnistLike => (&[0.1307], &[0.3081]),
+            DatasetKind::FashionLike => (&[0.2860], &[0.3530]),
+            DatasetKind::Cifar10Like => {
+                (&[0.4914, 0.4822, 0.4465], &[0.2470, 0.2435, 0.2616])
+            }
+            DatasetKind::Cifar100Like => {
+                (&[0.5071, 0.4865, 0.4409], &[0.2673, 0.2564, 0.2762])
+            }
+        };
+        Self { mean: mean.to_vec(), std: std.to_vec() }
+    }
+
+    /// Normalise one raw pixel byte of channel `ch`.
+    #[inline]
+    pub fn apply(&self, ch: usize, byte: u8) -> f32 {
+        (byte as f32 / 255.0 - self.mean[ch]) / self.std[ch]
+    }
+}
+
+/// A provider that can materialise a full train+test [`Dataset`] — the
+/// pluggable seam under the [`DataPipeline`].
+pub trait DataSource {
+    /// Short provenance tag ("synth", "idx", "cifar") for logs/errors.
+    fn provenance(&self) -> &'static str;
+
+    /// Materialise the dataset (both splits, features normalised).
+    fn materialise(&self) -> Result<Dataset>;
+}
+
+/// The synthetic-analogue [`DataSource`]: wraps [`SynthConfig::build`],
+/// a pure function of the seed.
+pub struct SynthSource {
+    /// Generator parameters (dim already adapted to the model variant).
+    pub cfg: SynthConfig,
+    /// Generation seed.
+    pub seed: u64,
+}
+
+impl DataSource for SynthSource {
+    fn provenance(&self) -> &'static str {
+        "synth"
+    }
+
+    fn materialise(&self) -> Result<Dataset> {
+        Ok(self.cfg.build(self.seed))
+    }
+}
+
+/// The resolved data pipeline: a concrete provider selection plus the
+/// normalisation/validation that makes its output safe to train on.
+/// Pure function of `(DataSpec, seed, filesystem)`, so the simulated
+/// trainer, every fabric worker thread, and every `wasgd worker` OS
+/// process materialise the identical split.
+pub struct DataPipeline {
+    spec: DataSpec,
+    note: Option<String>,
+    seed: u64,
+}
+
+impl DataPipeline {
+    /// Build and resolve a pipeline from an explicit spec + seed.
+    pub fn new(spec: DataSpec, seed: u64) -> Result<Self> {
+        let (source, note) = spec.resolve()?;
+        Ok(Self { spec: DataSpec { source, ..spec }, note, seed })
+    }
+
+    /// Build from an experiment config (`cfg.data_spec()`, `cfg.seed`).
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Self> {
+        Self::new(cfg.data_spec(), cfg.seed)
+    }
+
+    /// The concrete provider this pipeline resolved to (never `Auto`).
+    pub fn source_kind(&self) -> SourceKind {
+        self.spec.source
+    }
+
+    /// Human-readable resolution note (real files found / fallback
+    /// fired), for the CLI to surface.
+    pub fn note(&self) -> Option<&str> {
+        self.note.as_deref()
+    }
+
+    /// Instantiate the resolved provider. The synth generator adapts
+    /// its feature count to the variant's input geometry (e.g.
+    /// `tiny_cnn`'s 8×8×1 = 64 against the tiny preset's 16 raw
+    /// features); real sources carry the geometry their files declare
+    /// and are validated against the manifest in [`DataPipeline::load`].
+    pub fn provider(&self, manifest: &Manifest) -> Result<Box<dyn DataSource>> {
+        let kind = self.spec.kind;
+        match self.spec.source {
+            SourceKind::Synth => {
+                let mut synth = SynthConfig::preset(kind);
+                synth.dim = manifest.input_dim;
+                Ok(Box::new(SynthSource { cfg: synth, seed: self.seed }))
+            }
+            SourceKind::Idx => {
+                let dir = self.spec.data_dir.as_deref().expect("resolve() requires data_dir");
+                let src = IdxSource::locate(dir, kind).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no {} idx files under {} (expected {})",
+                        kind.name(),
+                        dir.display(),
+                        expected_files(kind)
+                    )
+                })?;
+                Ok(Box::new(src))
+            }
+            SourceKind::Cifar => {
+                let dir = self.spec.data_dir.as_deref().expect("resolve() requires data_dir");
+                let src = CifarSource::locate(dir, kind).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no {} cifar files under {} (expected {})",
+                        kind.name(),
+                        dir.display(),
+                        expected_files(kind)
+                    )
+                })?;
+                Ok(Box::new(src))
+            }
+            SourceKind::Auto => unreachable!("DataPipeline::new resolves Auto"),
+        }
+    }
+
+    /// Materialise the dataset and validate it against the model
+    /// variant's geometry: feature count must equal the manifest's
+    /// input dim (real files cannot be dim-adapted — a mismatch names
+    /// both sides), the label space must fit the model head, and both
+    /// splits must be non-empty.
+    pub fn load(&self, manifest: &Manifest) -> Result<Dataset> {
+        let provider = self.provider(manifest)?;
+        let provenance = provider.provenance();
+        let ds = provider.materialise()?;
+        ensure!(
+            ds.dim == manifest.input_dim,
+            "{provenance} dataset {} is {}-dimensional but variant {} wants {} input \
+             features — pick a matching --variant or drop --data-dir",
+            ds.name,
+            ds.dim,
+            manifest.name,
+            manifest.input_dim
+        );
+        ensure!(
+            ds.classes <= manifest.num_classes,
+            "{provenance} dataset {} has {} classes but variant {} emits {} logits",
+            ds.name,
+            ds.classes,
+            manifest.name,
+            manifest.num_classes
+        );
+        ensure!(
+            ds.n_train() >= 1 && ds.n_test() >= 1,
+            "{provenance} dataset {} has an empty split ({} train / {} test examples)",
+            ds.name,
+            ds.n_train(),
+            ds.n_test()
+        );
+        Ok(ds)
+    }
+}
+
+/// Rank-stable shard of `[0, n)` for worker `rank` of `p`: `p` equal
+/// `⌊n/p⌋`-sized ranges with the remainder absorbed by the last rank.
+/// The shards partition the train split exactly and depend on nothing
+/// but `(n, rank, p)` — property-tested in `tests/data_props.rs`. This
+/// is the one sharding rule every execution layer (simulated trainer,
+/// threaded fabric, tcp workers) uses.
+pub fn shard_range(n: usize, rank: usize, p: usize) -> (usize, usize) {
+    debug_assert!(p >= 1 && rank < p);
+    let base = n / p;
+    let lo = rank * base;
+    let hi = if rank + 1 == p { n } else { lo + base };
+    (lo, hi)
+}
+
+/// The streaming batch planner: one worker's walk over the training
+/// set, `batch` indices at a time, regenerating its order each epoch
+/// from whichever policy applies (see the module docs). Extracted from
+/// the old `Worker` internals so the same machinery drives synth and
+/// real data on every fabric.
+pub struct BatchPlanner {
+    n_samples: usize,
+    batch: usize,
+    /// SPSGD shard bounds `[lo, hi)` in sample-index space.
+    shard: Option<(usize, usize)>,
+    /// `Some` when the §3.4 order search is active.
+    order_state: Option<OrderState>,
+    /// Fig. 3: force δ-blocked orders instead of uniform shuffles.
+    force_delta: Option<usize>,
+    /// Training labels (needed to build δ-blocked orders).
+    labels: Vec<i32>,
+    rng: Rng,
+    /// Current epoch order and cursor.
+    epoch_order: Vec<u32>,
+    pos: usize,
+    epoch: u64,
+}
+
+impl BatchPlanner {
+    /// Construct a planner and build its first epoch order. `id` is the
+    /// worker rank (it salts the order-search seed exactly like the
+    /// pre-refactor `Worker` did, preserving every pinned trajectory).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: usize,
+        rng: Rng,
+        n_samples: usize,
+        batch: usize,
+        shard: Option<(usize, usize)>,
+        order_search: bool,
+        n_parts: usize,
+        force_delta: Option<usize>,
+        labels: Vec<i32>,
+    ) -> Self {
+        let order_state = if order_search && shard.is_none() {
+            Some(OrderState::new(n_samples, n_parts, rng.clone().next_u64() ^ id as u64))
+        } else {
+            None
+        };
+        let mut planner = Self {
+            n_samples,
+            batch,
+            shard,
+            order_state,
+            force_delta,
+            labels,
+            rng,
+            epoch_order: Vec::new(),
+            pos: 0,
+            epoch: 0,
+        };
+        planner.new_epoch();
+        planner
+    }
+
+    /// Build the next epoch's order.
+    fn new_epoch(&mut self) {
+        self.epoch_order.clear();
+        self.pos = 0;
+        if let Some(delta) = self.force_delta {
+            self.epoch_order = delta_blocked_order(&self.labels, delta, &mut self.rng);
+        } else if let Some(st) = self.order_state.as_mut() {
+            // §3.4: per-part seeded permutations (keep-or-redraw applied
+            // inside order_for_part based on recorded scores).
+            for part in 0..st.n_parts {
+                self.epoch_order.extend(st.order_for_part(part));
+            }
+        } else if let Some((lo, hi)) = self.shard {
+            let mut idx: Vec<u32> = (lo as u32..hi as u32).collect();
+            self.rng.shuffle(&mut idx);
+            self.epoch_order = idx;
+        } else {
+            self.epoch_order = self.rng.permutation(self.n_samples);
+        }
+    }
+
+    /// Refill `out` with the next `batch` sample indices (wrapping to a
+    /// new epoch as needed) — the allocation-free hot-loop entry point.
+    pub fn next_batch_into(&mut self, out: &mut Vec<u32>) {
+        let b = self.batch;
+        if (self.pos + 1) * b > self.epoch_order.len() {
+            self.epoch += 1;
+            self.new_epoch();
+        }
+        let lo = self.pos * b;
+        self.pos += 1;
+        out.clear();
+        out.extend_from_slice(&self.epoch_order[lo..lo + b]);
+    }
+
+    /// Allocating convenience wrapper around
+    /// [`BatchPlanner::next_batch_into`] (tests, examples).
+    pub fn next_batch(&mut self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.batch);
+        self.next_batch_into(&mut out);
+        out
+    }
+
+    /// Record the cohort z-score from `Judge` (Algorithm 2, Function 3)
+    /// against the order part the planner is currently inside, so the
+    /// part's seed survives iff its *latest* score was good — exactly
+    /// Algorithm 1's `Scores[l] = score`.
+    pub fn record_score(&mut self, score: f32) {
+        if let Some(st) = self.order_state.as_mut() {
+            let part_len = (self.n_samples / st.n_parts).max(1);
+            let sample_pos = self.pos * self.batch;
+            let part = (sample_pos / part_len).min(st.n_parts - 1);
+            st.record_score(part, score);
+        }
+    }
+
+    /// Completed epochs (order regenerations).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Order parts that kept their seed so far (telemetry).
+    pub fn orders_kept(&self) -> u64 {
+        self.order_state.as_ref().map(|s| s.kept).unwrap_or(0)
+    }
+
+    /// Order parts that redrew their seed so far (telemetry).
+    pub fn orders_redrawn(&self) -> u64 {
+        self.order_state.as_ref().map(|s| s.redrawn).unwrap_or(0)
+    }
+
+    /// The live order-search state, when active (test hook).
+    pub fn order_state_mut(&mut self) -> Option<&mut OrderState> {
+        self.order_state.as_mut()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn planner(order_search: bool, shard: Option<(usize, usize)>) -> BatchPlanner {
+        let labels: Vec<i32> = (0..120).map(|i| (i % 4) as i32).collect();
+        BatchPlanner::new(0, Rng::new(5), 120, 10, shard, order_search, 4, None, labels)
+    }
+
+    #[test]
+    fn batches_cover_epoch_without_repeats() {
+        let mut pl = planner(false, None);
+        let mut seen = Vec::new();
+        for _ in 0..12 {
+            seen.extend(pl.next_batch());
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..120u32).collect::<Vec<_>>());
+        assert_eq!(pl.epoch(), 0);
+        pl.next_batch();
+        assert_eq!(pl.epoch(), 1);
+    }
+
+    #[test]
+    fn shard_restricts_indices() {
+        let mut pl = planner(false, Some((30, 60)));
+        for _ in 0..6 {
+            for i in pl.next_batch() {
+                assert!((30..60).contains(&(i as usize)));
+            }
+        }
+    }
+
+    #[test]
+    fn order_search_covers_epoch_too() {
+        let mut pl = planner(true, None);
+        let mut seen = Vec::new();
+        for _ in 0..12 {
+            seen.extend(pl.next_batch());
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..120u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn good_score_preserves_epoch_order_part() {
+        let mut pl = planner(true, None);
+        let first: Vec<u32> = (0..12).flat_map(|_| pl.next_batch()).collect();
+        for part in 0..4 {
+            pl.order_state_mut().unwrap().record_score(part, -2.0);
+        }
+        let second: Vec<u32> = (0..12).flat_map(|_| pl.next_batch()).collect();
+        assert_eq!(first, second, "good scores must keep all seeds");
+
+        for part in 0..4 {
+            pl.order_state_mut().unwrap().record_score(part, 2.0);
+        }
+        let third: Vec<u32> = (0..12).flat_map(|_| pl.next_batch()).collect();
+        assert_ne!(second, third, "bad scores must reshuffle");
+    }
+
+    #[test]
+    fn delta_forced_orders_have_blocks() {
+        let labels: Vec<i32> = (0..120).map(|i| (i % 4) as i32).collect();
+        let mut pl =
+            BatchPlanner::new(0, Rng::new(9), 120, 10, None, false, 4, Some(30), labels.clone());
+        let idx = pl.next_batch();
+        let first_label = labels[idx[0] as usize];
+        assert!(idx.iter().all(|&i| labels[i as usize] == first_label));
+    }
+
+    #[test]
+    fn next_batch_into_is_stream_stable() {
+        // The buffered entry point yields the same stream as a fresh
+        // planner's allocating one.
+        let mut a = planner(true, None);
+        let mut b = planner(true, None);
+        let mut buf = Vec::new();
+        for _ in 0..30 {
+            b.next_batch_into(&mut buf);
+            assert_eq!(a.next_batch(), buf);
+        }
+    }
+
+    #[test]
+    fn shard_range_partitions_and_absorbs_remainder() {
+        assert_eq!(shard_range(103, 0, 4), (0, 25));
+        assert_eq!(shard_range(103, 3, 4), (75, 103));
+        assert_eq!(shard_range(8, 0, 1), (0, 8));
+        // p > n: leading shards are empty, the last takes everything.
+        assert_eq!(shard_range(2, 0, 4), (0, 0));
+        assert_eq!(shard_range(2, 3, 4), (0, 2));
+    }
+
+    #[test]
+    fn spec_resolution_auto_and_forced() {
+        let spec =
+            DataSpec { kind: DatasetKind::MnistLike, source: SourceKind::Auto, data_dir: None };
+        assert_eq!(spec.resolve().unwrap(), (SourceKind::Synth, None));
+
+        let missing = std::env::temp_dir().join("wasgd_definitely_missing_data_dir");
+        let spec = DataSpec {
+            kind: DatasetKind::MnistLike,
+            source: SourceKind::Auto,
+            data_dir: Some(missing),
+        };
+        let (src, note) = spec.resolve().unwrap();
+        assert_eq!(src, SourceKind::Synth);
+        assert!(note.unwrap().contains("falling back"), "fallback must be pointed");
+
+        // Forced sources must match the family's real format.
+        let spec = DataSpec {
+            kind: DatasetKind::Cifar10Like,
+            source: SourceKind::Idx,
+            data_dir: Some(PathBuf::from(".")),
+        };
+        assert!(spec.resolve().is_err());
+        let spec = DataSpec {
+            kind: DatasetKind::MnistLike,
+            source: SourceKind::Cifar,
+            data_dir: Some(PathBuf::from(".")),
+        };
+        assert!(spec.resolve().is_err());
+        let spec =
+            DataSpec { kind: DatasetKind::MnistLike, source: SourceKind::Idx, data_dir: None };
+        assert!(spec.resolve().is_err(), "forced real source needs --data-dir");
+    }
+
+    #[test]
+    fn pipeline_adapts_synth_dim_to_variant() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.variant = "tiny_cnn".to_string();
+        let manifest = Manifest::native_variant("tiny_cnn").unwrap();
+        let pipeline = DataPipeline::from_config(&cfg).unwrap();
+        assert_eq!(pipeline.source_kind(), SourceKind::Synth);
+        let ds = pipeline.load(&manifest).unwrap();
+        assert_eq!(ds.dim, 64); // 8×8×1, not the tiny preset's 16
+        assert_eq!(ds.n_train(), 512);
+        // Rebuilding yields the identical split (pure function of seed).
+        let ds2 = DataPipeline::from_config(&cfg).unwrap().load(&manifest).unwrap();
+        assert_eq!(ds.train_x, ds2.train_x);
+        assert_eq!(ds.train_y, ds2.train_y);
+    }
+
+    #[test]
+    fn pipeline_rejects_geometry_mismatch() {
+        // Real IDX files cannot be dim-adapted: 4×4 images against the
+        // 8×8×1 tiny_cnn manifest must fail with both sides named.
+        let dir = std::env::temp_dir().join(format!("wasgd_geom_unit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let px: Vec<u8> = (0..4 * 16).map(|i| i as u8).collect();
+        std::fs::write(dir.join(idx::FILE_NAMES[0]), idx::encode_images(4, 4, 4, &px)).unwrap();
+        std::fs::write(dir.join(idx::FILE_NAMES[1]), idx::encode_labels(&[0, 1, 0, 1])).unwrap();
+        std::fs::write(dir.join(idx::FILE_NAMES[2]), idx::encode_images(4, 4, 4, &px)).unwrap();
+        std::fs::write(dir.join(idx::FILE_NAMES[3]), idx::encode_labels(&[1, 0, 1, 0])).unwrap();
+
+        let mut cfg = ExperimentConfig::default();
+        cfg.variant = "tiny_cnn".to_string();
+        cfg.data_dir = Some(dir.clone());
+        let manifest = Manifest::native_variant("tiny_cnn").unwrap();
+        let pipeline = DataPipeline::from_config(&cfg).unwrap();
+        assert_eq!(pipeline.source_kind(), SourceKind::Idx, "auto must pick the files up");
+        let err = pipeline.load(&manifest).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("16") && msg.contains("64"), "{msg}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn normalization_constants_shapes() {
+        for kind in [
+            DatasetKind::Tiny,
+            DatasetKind::MnistLike,
+            DatasetKind::FashionLike,
+            DatasetKind::Cifar10Like,
+            DatasetKind::Cifar100Like,
+        ] {
+            let n = Normalization::for_kind(kind);
+            let channels = match kind {
+                DatasetKind::Cifar10Like | DatasetKind::Cifar100Like => 3,
+                _ => 1,
+            };
+            assert_eq!(n.mean.len(), channels, "{}", kind.name());
+            assert_eq!(n.std.len(), channels);
+            assert!(n.std.iter().all(|&s| s > 0.0));
+            // Mid-grey maps near zero, extremes stay bounded.
+            assert!(n.apply(0, 128).abs() < 2.5);
+            assert!(n.apply(0, 0) < n.apply(0, 255));
+        }
+    }
+
+    #[test]
+    fn source_kind_parse_roundtrip() {
+        for s in SourceKind::ALL {
+            assert_eq!(SourceKind::parse(s.name()), Some(s));
+        }
+        assert_eq!(SourceKind::parse("imagenet"), None);
+        assert_eq!(SourceKind::default(), SourceKind::Auto);
+    }
+}

@@ -32,11 +32,13 @@ pub struct SharedEnv {
 impl SharedEnv {
     /// Build from a base config (dataset seed = base.seed; backend from
     /// `base.backend` — PJRT artifacts or the hermetic native engine;
-    /// dataset dim adapted to the variant's input geometry, matching
-    /// `run_experiment_full` and the worker fabrics).
+    /// dataset from the resolved [`crate::data::DataPipeline`] — synth
+    /// dim-adapted to the variant's input geometry, or real files under
+    /// `--data-dir` — matching `run_experiment_full` and the worker
+    /// fabrics).
     pub fn new(base: &ExperimentConfig) -> Result<Self> {
         let engine = load_backend(base)?;
-        let dataset = crate::cluster::fabric::fabric_dataset(base, engine.manifest())?;
+        let dataset = crate::data::DataPipeline::from_config(base)?.load(engine.manifest())?;
         let step_time_s = if base.compute.step_time_s > 0.0 {
             base.compute.step_time_s
         } else {

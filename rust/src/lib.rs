@@ -94,6 +94,9 @@
 //! | [`cluster`]   | fabrics: simulated cost model, in-process threads, and the  |
 //! |               | TCP wire protocol + rendezvous (`wire` / `fabric` / `tcp`)  |
 //! | [`checkpoint`]| durable run snapshots (also the tcp fabric's resume format) |
+//! | [`data`]      | pluggable `DataSource` pipeline: synth generator + real     |
+//! |               | MNIST/CIFAR file loaders (`--data-dir`), normalisation,     |
+//! |               | rank-stable sharding, streaming batch planner, §3.4 orders  |
 //! | [`metrics`]   | run records, CSV sinks, per-peer comm byte counters         |
 //! | [`bench`]     | micro-bench harness + the `BENCH_native.json` perf trajectory|
 //!

@@ -316,7 +316,7 @@ impl NativeEngine {
                 }
                 Op::Conv2d { h, w, cin, cout, w_off, b_off } => {
                     let rows = batch * h * w;
-                    let patches = im2col(a_prev, batch, h, w, cin);
+                    let patches = im2col(a_prev, batch, h, w, cin, self.gemm.threads());
                     let mut z = vec![0.0f32; rows * cout];
                     self.gemm.matmul_bias(
                         &patches,
@@ -383,37 +383,78 @@ fn relu_inplace(z: &mut [f32]) {
     }
 }
 
+/// Below this many output elements the patch extraction runs on the
+/// calling thread: spawning costs more than the copy loop down there.
+/// The cut is a pure function of the problem shape (never the thread
+/// budget), so a given input always takes the same path.
+const IM2COL_PAR_MIN: usize = 1 << 16;
+
 /// 3×3 SAME patch extraction, NHWC → [B·H·W, 9·C] with (kh, kw, cin)
 /// feature order — exactly the row-major flattening of the HWIO weight
 /// tensor, so `patches · w.reshape(9·cin, cout)` is the convolution.
-fn im2col(x: &[f32], batch: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+///
+/// Extraction is threaded across the same `std::thread::scope`
+/// row-panel discipline as [`crate::kernels::Gemm`]: the `batch·h`
+/// output image-rows are split into contiguous chunks, each owned by
+/// exactly one thread. Every output element is written once, by its
+/// owning thread, with a value that depends only on the input — so the
+/// partitioning is pure scheduling and the result is **bit-identical at
+/// every thread count** (pinned by `im2col_threads_do_not_change_bits`
+/// below and the engine-level step-bit tests).
+fn im2col(x: &[f32], batch: usize, h: usize, w: usize, c: usize, threads: usize) -> Vec<f32> {
     let pf = 9 * c;
     let mut out = vec![0.0f32; batch * h * w * pf];
-    for n in 0..batch {
-        for oh in 0..h {
-            for ow in 0..w {
-                let row = ((n * h + oh) * w + ow) * pf;
-                for kh in 0..3 {
-                    let ih = oh + kh;
-                    if ih < 1 || ih > h {
-                        continue; // zero padding row
+    let rows = batch * h;
+    let t = if threads <= 1 || out.len() < IM2COL_PAR_MIN {
+        1
+    } else {
+        threads.min(rows)
+    };
+    if t <= 1 {
+        im2col_rows(x, 0, h, w, c, &mut out);
+        return out;
+    }
+    let chunk = rows.div_ceil(t);
+    std::thread::scope(|s| {
+        for (ci, oc) in out.chunks_mut(chunk * w * pf).enumerate() {
+            s.spawn(move || im2col_rows(x, ci * chunk, h, w, c, oc));
+        }
+    });
+    out
+}
+
+/// One thread's share of [`im2col`]: output image-rows `r0 ..` with
+/// `out` the contiguous sub-slice for exactly that range (one row is
+/// the `w·9·c` patch features of one (image, oh) pair). Padding
+/// positions keep their pre-zeroed value.
+fn im2col_rows(x: &[f32], r0: usize, h: usize, w: usize, c: usize, out: &mut [f32]) {
+    let pf = 9 * c;
+    debug_assert_eq!(out.len() % (w * pf), 0);
+    for (ri, orow) in out.chunks_mut(w * pf).enumerate() {
+        let r = r0 + ri;
+        let n = r / h;
+        let oh = r % h;
+        for ow in 0..w {
+            let row = ow * pf;
+            for kh in 0..3 {
+                let ih = oh + kh;
+                if ih < 1 || ih > h {
+                    continue; // zero padding row
+                }
+                let ih = ih - 1;
+                for kw in 0..3 {
+                    let iw = ow + kw;
+                    if iw < 1 || iw > w {
+                        continue; // zero padding col
                     }
-                    let ih = ih - 1;
-                    for kw in 0..3 {
-                        let iw = ow + kw;
-                        if iw < 1 || iw > w {
-                            continue; // zero padding col
-                        }
-                        let iw = iw - 1;
-                        let src = ((n * h + ih) * w + iw) * c;
-                        let dst = row + (kh * 3 + kw) * c;
-                        out[dst..dst + c].copy_from_slice(&x[src..src + c]);
-                    }
+                    let iw = iw - 1;
+                    let src = ((n * h + ih) * w + iw) * c;
+                    let dst = row + (kh * 3 + kw) * c;
+                    orow[dst..dst + c].copy_from_slice(&x[src..src + c]);
                 }
             }
         }
     }
-    out
 }
 
 /// Adjoint of [`im2col`]: scatter-add patch gradients back onto the
@@ -814,7 +855,7 @@ mod tests {
         let mut rng = Rng::new(23);
         let mut x = vec![0.0f32; b * h * w * c];
         rng.fill_normal(&mut x, 0.0, 1.0);
-        let patches = im2col(&x, b, h, w, c);
+        let patches = im2col(&x, b, h, w, c, 1);
         let mut p = vec![0.0f32; patches.len()];
         rng.fill_normal(&mut p, 0.0, 1.0);
         let mut back = vec![0.0f32; x.len()];
@@ -822,6 +863,28 @@ mod tests {
         let lhs: f64 = patches.iter().zip(p.iter()).map(|(&a, &b)| (a * b) as f64).sum();
         let rhs: f64 = x.iter().zip(back.iter()).map(|(&a, &b)| (a * b) as f64).sum();
         assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn im2col_threads_do_not_change_bits() {
+        // Patch extraction is threaded across the row-panel pool; the
+        // partitioning is scheduling only, so every thread count must
+        // produce identical bits — both below and above the parallel
+        // work gate.
+        let mut rng = Rng::new(31);
+        for &(b, h, w, c) in &[(2usize, 4usize, 4usize, 3usize), (4, 16, 16, 8)] {
+            let mut x = vec![0.0f32; b * h * w * c];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            let base = im2col(&x, b, h, w, c, 1);
+            for threads in [2usize, 3, 8] {
+                let got = im2col(&x, b, h, w, c, threads);
+                let same = base.iter().zip(got.iter()).all(|(a, g)| a.to_bits() == g.to_bits());
+                assert!(same, "im2col bits changed at t={threads} for {b}×{h}×{w}×{c}");
+            }
+        }
+        // The second shape genuinely clears the parallel gate
+        // (out.len() = b·h·w·9·c).
+        assert!(4 * 16 * 16 * 9 * 8 >= super::IM2COL_PAR_MIN);
     }
 
     #[test]

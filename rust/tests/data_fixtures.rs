@@ -1,0 +1,137 @@
+//! Golden data-fixture pinning — the `data-fixtures` CI check.
+//!
+//! The four committed files under `tests/fixtures/data/` are tiny,
+//! format-conformant IDX and CIFAR files produced by the deterministic
+//! generators below (pure pixel formulas through the public
+//! `data::idx` / `data::cifar` encoders). The tests:
+//!
+//! 1. re-generate each fixture and compare **byte-for-byte** against
+//!    the committed file, so any drift in the encoders or the formats
+//!    fails CI;
+//! 2. decode the committed bytes and assert known pixel/label values,
+//!    so the parsers are pinned against the on-disk representation
+//!    (not merely against the encoders' own output).
+//!
+//! To regenerate after an intentional format change, run with
+//! `WASGD_REGEN_FIXTURES=1` and commit the rewritten files.
+
+use std::path::PathBuf;
+
+use wasgd::data::{cifar, idx};
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/data")
+}
+
+/// Golden IDX images: 4 images of 6×6, pixel `i = (i·31 + 7) mod 251`.
+fn golden_idx_images() -> Vec<u8> {
+    let px: Vec<u8> = (0..4 * 6 * 6).map(|i| ((i * 31 + 7) % 251) as u8).collect();
+    idx::encode_images(4, 6, 6, &px)
+}
+
+/// Golden IDX labels: `[3, 1, 4, 1]`.
+fn golden_idx_labels() -> Vec<u8> {
+    idx::encode_labels(&[3, 1, 4, 1])
+}
+
+/// Golden CIFAR-10: 2 records, labels `[7, 2]`, pixel `j` of record `k`
+/// `= (j·31 + k·7 + 3) mod 256`.
+fn golden_cifar10() -> Vec<u8> {
+    let file = cifar::CifarFile {
+        labels: vec![7, 2],
+        coarse: Vec::new(),
+        pixels_chw: (0..2 * cifar::PIXELS_PER_RECORD)
+            .map(|i| {
+                let (k, j) = (i / cifar::PIXELS_PER_RECORD, i % cifar::PIXELS_PER_RECORD);
+                ((j * 31 + k * 7 + 3) % 256) as u8
+            })
+            .collect(),
+    };
+    cifar::encode(&file, cifar::CifarFormat::C10)
+}
+
+/// Golden CIFAR-100: 2 records, coarse `[1, 0]`, fine `[42, 99]`,
+/// pixel `j` of record `k` `= (j·37 + k·11 + 5) mod 256`.
+fn golden_cifar100() -> Vec<u8> {
+    let file = cifar::CifarFile {
+        labels: vec![42, 99],
+        coarse: vec![1, 0],
+        pixels_chw: (0..2 * cifar::PIXELS_PER_RECORD)
+            .map(|i| {
+                let (k, j) = (i / cifar::PIXELS_PER_RECORD, i % cifar::PIXELS_PER_RECORD);
+                ((j * 37 + k * 11 + 5) % 256) as u8
+            })
+            .collect(),
+    };
+    cifar::encode(&file, cifar::CifarFormat::C100)
+}
+
+/// Compare (or, under `WASGD_REGEN_FIXTURES`, rewrite) one fixture.
+fn check_fixture(name: &str, generated: Vec<u8>) {
+    let path = fixture_dir().join(name);
+    if std::env::var_os("WASGD_REGEN_FIXTURES").is_some() {
+        std::fs::write(&path, &generated).unwrap();
+        eprintln!("regenerated {}", path.display());
+        return;
+    }
+    let committed = std::fs::read(&path).unwrap_or_else(|e| {
+        panic!("reading {}: {e} (run with WASGD_REGEN_FIXTURES=1?)", path.display())
+    });
+    assert!(
+        generated.len() <= 10 * 1024,
+        "{name}: golden fixtures must stay ≤ 10 KB, got {}",
+        generated.len()
+    );
+    assert_eq!(
+        committed, generated,
+        "{name}: committed fixture drifted from the generator — if the format change is \
+         intentional, regenerate with WASGD_REGEN_FIXTURES=1 and commit"
+    );
+}
+
+#[test]
+fn golden_idx_fixtures_match_generators_byte_for_byte() {
+    check_fixture("golden-images-idx3-ubyte", golden_idx_images());
+    check_fixture("golden-labels-idx1-ubyte", golden_idx_labels());
+}
+
+#[test]
+fn golden_cifar_fixtures_match_generators_byte_for_byte() {
+    check_fixture("golden_cifar10.bin", golden_cifar10());
+    check_fixture("golden_cifar100.bin", golden_cifar100());
+}
+
+#[test]
+fn committed_idx_fixtures_decode_to_known_values() {
+    let bytes = std::fs::read(fixture_dir().join("golden-images-idx3-ubyte")).unwrap();
+    let img = idx::parse_images(&bytes).unwrap();
+    assert_eq!((img.n, img.rows, img.cols), (4, 6, 6));
+    // Spot pixels from the generator formula (i·31 + 7) mod 251.
+    assert_eq!(img.pixels[0], 7);
+    assert_eq!(img.pixels[50], 51);
+    assert_eq!(img.pixels[143], 173);
+
+    let label_bytes = std::fs::read(fixture_dir().join("golden-labels-idx1-ubyte")).unwrap();
+    assert_eq!(idx::parse_labels(&label_bytes).unwrap(), vec![3, 1, 4, 1]);
+}
+
+#[test]
+fn committed_cifar_fixtures_decode_to_known_values() {
+    let bytes = std::fs::read(fixture_dir().join("golden_cifar10.bin")).unwrap();
+    let c10 = cifar::parse(&bytes, cifar::CifarFormat::C10).unwrap();
+    assert_eq!(c10.n(), 2);
+    assert_eq!(c10.labels, vec![7, 2]);
+    assert!(c10.coarse.is_empty());
+    // Spot pixels from (j·31 + k·7 + 3) mod 256.
+    assert_eq!(c10.pixels_chw[5], 158, "record 0, byte 5");
+    assert_eq!(c10.pixels_chw[cifar::PIXELS_PER_RECORD + 100], 38, "record 1, byte 100");
+
+    let bytes = std::fs::read(fixture_dir().join("golden_cifar100.bin")).unwrap();
+    let c100 = cifar::parse(&bytes, cifar::CifarFormat::C100).unwrap();
+    assert_eq!(c100.n(), 2);
+    assert_eq!(c100.coarse, vec![1, 0]);
+    assert_eq!(c100.labels, vec![42, 99]);
+    // Spot pixels from (j·37 + k·11 + 5) mod 256.
+    assert_eq!(c100.pixels_chw[5], 190, "record 0, byte 5");
+    assert_eq!(c100.pixels_chw[cifar::PIXELS_PER_RECORD + 100], 132, "record 1, byte 100");
+}

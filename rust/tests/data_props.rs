@@ -1,0 +1,173 @@
+//! Property suites over the data pipeline (mirroring the
+//! `wire_props.rs` idioms): IDX and CIFAR encodings round-trip exactly,
+//! every malformed input — truncated, oversized, bad-magic,
+//! dimension-lying — is rejected with an error (never a panic or a huge
+//! allocation), and the worker shards partition the train split exactly
+//! and rank-stably.
+
+use proptest::prelude::*;
+
+use wasgd::data::{cifar, idx, shard_range};
+
+fn pixels(max_images: usize, side: usize) -> impl Strategy<Value = (usize, usize, usize, Vec<u8>)> {
+    (0..=max_images, 1..=side, 1..=side).prop_flat_map(|(n, r, c)| {
+        prop::collection::vec(any::<u8>(), n * r * c).prop_map(move |px| (n, r, c, px))
+    })
+}
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(64))]
+
+    /// IDX image tensors round-trip exactly for arbitrary geometry and
+    /// pixel content (including zero images).
+    #[test]
+    fn idx_images_roundtrip((n, rows, cols, px) in pixels(6, 12)) {
+        let bytes = idx::encode_images(n, rows, cols, &px);
+        prop_assert_eq!(bytes.len(), 16 + px.len());
+        let back = idx::parse_images(&bytes).unwrap();
+        prop_assert_eq!(back.n, n);
+        prop_assert_eq!(back.rows, rows);
+        prop_assert_eq!(back.cols, cols);
+        prop_assert_eq!(back.pixels, px);
+    }
+
+    /// IDX label vectors round-trip exactly.
+    #[test]
+    fn idx_labels_roundtrip(labels in prop::collection::vec(any::<u8>(), 0..200)) {
+        let bytes = idx::encode_labels(&labels);
+        prop_assert_eq!(idx::parse_labels(&bytes).unwrap(), labels);
+    }
+
+    /// Every strict prefix of a valid IDX image file is rejected, and so
+    /// is every padded extension — byte length must match the declared
+    /// dims exactly.
+    #[test]
+    fn idx_truncations_and_extensions_rejected((n, rows, cols, px) in pixels(3, 6)) {
+        let bytes = idx::encode_images(n, rows, cols, &px);
+        for cut in 0..bytes.len() {
+            prop_assert!(idx::parse_images(&bytes[..cut]).is_err(), "prefix of {} bytes", cut);
+        }
+        let mut fat = bytes.clone();
+        fat.push(0);
+        prop_assert!(idx::parse_images(&fat).is_err());
+    }
+
+    /// Corrupting any header byte of the magic/dtype/rank prelude to a
+    /// different value is rejected.
+    #[test]
+    fn idx_bad_magic_rejected(
+        (n, rows, cols, px) in pixels(3, 6),
+        at in 0usize..4,
+        val in any::<u8>(),
+    ) {
+        let mut bytes = idx::encode_images(n, rows, cols, &px);
+        prop_assume!(bytes[at] != val);
+        bytes[at] = val;
+        // A corrupted prelude must never parse as the same tensor. (A
+        // rank byte of 1 can legitimately re-parse as a label file —
+        // images-vs-labels confusion is covered by the rank check.)
+        prop_assert!(idx::parse_images(&bytes).is_err());
+    }
+
+    /// Dimension-lying headers (declared product ≠ payload, up to
+    /// overflowing u32 products) error out before allocating.
+    #[test]
+    fn idx_lying_dims_rejected(
+        (n, rows, cols, px) in pixels(3, 6),
+        lie in prop_oneof![Just(u32::MAX), 0u32..64],
+    ) {
+        // Overwrite the image-count dim: any value other than the truth
+        // makes the declared product disagree with the payload length
+        // (or overflow), and must be rejected before allocation.
+        prop_assume!(lie as usize != n);
+        let mut bytes = idx::encode_images(n, rows, cols, &px);
+        bytes[4..8].copy_from_slice(&lie.to_be_bytes());
+        prop_assert!(idx::parse_images(&bytes).is_err());
+    }
+
+    /// CIFAR files round-trip exactly under both flavours.
+    #[test]
+    fn cifar_roundtrip(
+        n in 0usize..4,
+        c100 in any::<bool>(),
+        seed in any::<u32>(),
+    ) {
+        let format = if c100 { cifar::CifarFormat::C100 } else { cifar::CifarFormat::C10 };
+        let file = cifar::CifarFile {
+            labels: (0..n).map(|k| ((k as u32 + seed) % format.classes() as u32) as u8).collect(),
+            coarse: if c100 {
+                (0..n).map(|k| ((k as u32 ^ seed) % 20) as u8).collect()
+            } else {
+                Vec::new()
+            },
+            pixels_chw: (0..n * cifar::PIXELS_PER_RECORD)
+                .map(|i| ((i as u32).wrapping_mul(2654435761).wrapping_add(seed) >> 8) as u8)
+                .collect(),
+        };
+        let bytes = cifar::encode(&file, format);
+        prop_assert_eq!(bytes.len(), n * format.record_len());
+        if n == 0 {
+            // Empty files are rejected (a dataset needs examples).
+            prop_assert!(cifar::parse(&bytes, format).is_err());
+        } else {
+            prop_assert_eq!(cifar::parse(&bytes, format).unwrap(), file);
+        }
+    }
+
+    /// Any byte length that is not a whole number of records is
+    /// rejected, truncated or padded alike.
+    #[test]
+    fn cifar_ragged_lengths_rejected(n in 1usize..3, cut in 1usize..3072) {
+        let format = cifar::CifarFormat::C10;
+        let file = cifar::CifarFile {
+            labels: vec![0; n],
+            coarse: Vec::new(),
+            pixels_chw: vec![7; n * cifar::PIXELS_PER_RECORD],
+        };
+        let bytes = cifar::encode(&file, format);
+        prop_assert!(cifar::parse(&bytes[..bytes.len() - cut], format).is_err());
+        let mut fat = bytes.clone();
+        fat.extend(std::iter::repeat(0u8).take(cut));
+        prop_assert!(cifar::parse(&fat, format).is_err());
+    }
+
+    /// Out-of-range fine labels are rejected with the record named.
+    #[test]
+    fn cifar_bad_labels_rejected(n in 1usize..4, bad_at in 0usize..4, excess in 0u8..100) {
+        let bad_at = bad_at % n;
+        let format = cifar::CifarFormat::C10;
+        let mut file = cifar::CifarFile {
+            labels: vec![1; n],
+            coarse: Vec::new(),
+            pixels_chw: vec![0; n * cifar::PIXELS_PER_RECORD],
+        };
+        file.labels[bad_at] = 10 + excess; // ≥ classes
+        let bytes = cifar::encode(&file, format);
+        let err = cifar::parse(&bytes, format).unwrap_err();
+        prop_assert!(format!("{err}").contains(&format!("record {bad_at}")));
+    }
+
+    /// The p worker shards partition `[0, n)` exactly — no gap, no
+    /// overlap, rank order — and re-deriving any shard yields the same
+    /// bounds (rank-stability under re-runs).
+    #[test]
+    fn shards_partition_exactly_and_rank_stably(n in 0usize..10_000, p in 1usize..64) {
+        let mut cursor = 0usize;
+        for rank in 0..p {
+            let (lo, hi) = shard_range(n, rank, p);
+            prop_assert_eq!(lo, cursor, "rank {} must start where its predecessor ended", rank);
+            prop_assert!(hi >= lo);
+            let again = shard_range(n, rank, p);
+            prop_assert_eq!((lo, hi), again, "rank {} bounds must be stable", rank);
+            cursor = hi;
+        }
+        prop_assert_eq!(cursor, n, "shards must cover the whole split");
+        // Balance: every shard is ⌊n/p⌋ except the last, which absorbs
+        // the remainder.
+        let base = n / p;
+        for rank in 0..p.saturating_sub(1) {
+            let (lo, hi) = shard_range(n, rank, p);
+            prop_assert_eq!(hi - lo, base);
+        }
+    }
+}

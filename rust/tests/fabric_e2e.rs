@@ -8,20 +8,21 @@
 //! scheme, which is what makes the claim structural (one worker loop,
 //! one `CommPolicy` code path) rather than coincidental.
 //!
-//! Everything here is hermetic: native backend, synthetic data, no
-//! artifacts, loopback sockets only.
+//! Everything here is hermetic: native backend, synthetic data (plus a
+//! tiny generated IDX dataset for the real-file leg), no artifacts,
+//! loopback sockets only.
 
 use std::net::TcpListener;
 use std::process::{Command, Stdio};
 use std::thread;
 
-use wasgd::cluster::fabric::{fabric_dataset, planned_steps, run_decentralized_threaded};
+use wasgd::cluster::fabric::{planned_steps, run_decentralized_threaded};
 use wasgd::cluster::tcp::{serve, ServeOptions};
 use wasgd::cluster::threads::run_wasgd_plus_threaded;
 use wasgd::cluster::wire::WireEncoding;
 use wasgd::config::{AlgoKind, BackendKind, ExperimentConfig};
 use wasgd::coordinator::Trainer;
-use wasgd::data::Dataset;
+use wasgd::data::{idx, DataPipeline, Dataset, SourceKind};
 use wasgd::runtime::load_backend;
 
 fn bits(v: &[f32]) -> Vec<u32> {
@@ -52,11 +53,11 @@ fn tiny_cnn_cfg() -> ExperimentConfig {
     cfg
 }
 
-/// Run the simulated trainer (`--fabric sim`) on the fabric's dataset
+/// Run the simulated trainer (`--fabric sim`) on the pipeline's dataset
 /// and return every worker's final parameters.
 fn sim_final_workers(cfg: &ExperimentConfig) -> (Vec<Vec<f32>>, Dataset, usize) {
     let engine = load_backend(cfg).unwrap();
-    let dataset = fabric_dataset(cfg, engine.manifest()).unwrap();
+    let dataset = DataPipeline::from_config(cfg).unwrap().load(engine.manifest()).unwrap();
     let steps = planned_steps(cfg, dataset.n_train(), engine.manifest().batch);
     let mut trainer = Trainer::new(cfg.clone(), engine.as_ref(), &dataset).unwrap();
     let out = trainer.run().unwrap();
@@ -153,4 +154,75 @@ fn acceptance_tcp_four_processes_match_sim_bit_exactly() {
     // The relay fans every panel back out p ways.
     assert!(outcome.comm.total_sent() > outcome.comm.total_received());
     assert!(outcome.comm.peers.iter().all(|peer| peer.sent > 0 && peer.received > 0));
+}
+
+#[test]
+fn idx_backed_tcp_four_processes_match_sim_bit_exactly() {
+    // The data-pipeline acceptance criterion: the same sim ≡ tcp
+    // equivalence on a NON-synth source. A tiny generated IDX dataset
+    // (64 train / 16 test 8×8 images — real files on disk, parsed and
+    // normalised by the idx provider) drives tiny_cnn WASGD+ p=4 as 4
+    // OS processes over loopback TCP; final θ must match `--fabric sim`
+    // bit for bit. The `--data-dir` + resolved source ride the wire
+    // config to every worker process.
+    let dir = std::env::temp_dir().join(format!("wasgd_idx_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let train_px: Vec<u8> = (0..64 * 8 * 8).map(|i| ((i * 37 + 11) % 256) as u8).collect();
+    let test_px: Vec<u8> = (0..16 * 8 * 8).map(|i| ((i * 53 + 29) % 256) as u8).collect();
+    let train_y: Vec<u8> = (0..64).map(|i| (i % 2) as u8).collect();
+    let test_y: Vec<u8> = (0..16).map(|i| ((i + 1) % 2) as u8).collect();
+    std::fs::write(dir.join(idx::FILE_NAMES[0]), idx::encode_images(64, 8, 8, &train_px)).unwrap();
+    std::fs::write(dir.join(idx::FILE_NAMES[1]), idx::encode_labels(&train_y)).unwrap();
+    std::fs::write(dir.join(idx::FILE_NAMES[2]), idx::encode_images(16, 8, 8, &test_px)).unwrap();
+    std::fs::write(dir.join(idx::FILE_NAMES[3]), idx::encode_labels(&test_y)).unwrap();
+
+    let mut cfg = tiny_cnn_cfg();
+    cfg.data_dir = Some(dir.clone());
+    cfg.seed = 23;
+    cfg.tau = 4;
+    cfg.epochs = 0.5; // 64 samples / batch 4 → 16 spe → 8 steps, 2 boundaries
+
+    // `auto` must pick the files up, and the sim trainer must genuinely
+    // be running on them.
+    let pipeline = DataPipeline::from_config(&cfg).unwrap();
+    assert_eq!(pipeline.source_kind(), SourceKind::Idx, "auto resolution missed the files");
+    let (sim, dataset, steps) = sim_final_workers(&cfg);
+    assert_eq!(dataset.dim, 64, "8×8 IDX images through the tiny_cnn geometry");
+    assert_eq!(dataset.n_train(), 64);
+    assert_eq!(steps, 8);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = ServeOptions { cfg: cfg.clone(), encoding: WireEncoding::F32, resume: None };
+    let server = thread::spawn(move || serve(listener, &opts));
+
+    let exe = env!("CARGO_BIN_EXE_wasgd");
+    let children: Vec<_> = (0..cfg.p)
+        .map(|_| {
+            Command::new(exe)
+                .args(["worker", "--connect", &addr])
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawning a wasgd worker process")
+        })
+        .collect();
+
+    let outcome = server.join().unwrap().expect("rendezvous session");
+    for mut child in children {
+        assert!(child.wait().unwrap().success(), "a worker process failed");
+    }
+
+    assert_eq!(outcome.finals.len(), 4);
+    assert_eq!(outcome.rounds, 2, "8 steps at τ=4 are 2 boundaries");
+    assert_eq!(outcome.steps, 8);
+    for (rank, (h, theta)) in outcome.finals.iter().enumerate() {
+        assert!(h.is_finite());
+        assert_eq!(
+            bits(theta),
+            bits(&sim[rank]),
+            "idx-backed tcp rank {rank} diverged from --fabric sim"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
