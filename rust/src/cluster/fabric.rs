@@ -42,6 +42,10 @@ use crate::coordinator::worker::Worker;
 use crate::data::order::judge;
 use crate::data::source::{shard_range, BatchPlanner, DataPipeline};
 use crate::data::{Dataset, RecordWindow};
+use crate::journal::{
+    canonical_comm_bytes, digest_params, rank_journal_path, Event, EventSink, JournalWriter,
+    MembershipChange,
+};
 use crate::rng::Rng;
 use crate::runtime::Backend;
 
@@ -71,6 +75,14 @@ pub trait Collective {
 
     /// Bytes received from peers so far (same convention).
     fn bytes_received(&self) -> u64;
+
+    /// The panel encoding this substrate carries. In-process substrates
+    /// are lossless by construction; the TCP fabric reports its
+    /// negotiated wire encoding so journals record whether the session
+    /// is bit-exactly replayable (`f32`) or inspect-only (`qi8`).
+    fn encoding(&self) -> WireEncoding {
+        WireEncoding::F32
+    }
 }
 
 /// A reusable p-way all-gather barrier carrying one `T` per participant,
@@ -255,6 +267,12 @@ pub struct FabricWorkerOutcome {
 /// comparable to a fresh sim run). The policy charges its communication
 /// to a local [`SimCluster`] mirror, which keeps the cost model's
 /// telemetry available even on a real fabric.
+///
+/// When `journal` is given, the worker records the run as an event
+/// stream: because every all-gather hands it the *whole* cohort's
+/// panels, a single worker's journal carries all p ranks' per-round
+/// digests — identical, on a lossless fabric, to the simulated
+/// trainer's own journal of the same config.
 pub fn run_fabric_worker(
     cfg: &ExperimentConfig,
     engine: &dyn Backend,
@@ -262,6 +280,7 @@ pub fn run_fabric_worker(
     fabric: &mut dyn Collective,
     total_steps: usize,
     initial_params: Option<Vec<f32>>,
+    mut journal: Option<&mut dyn EventSink>,
 ) -> Result<FabricWorkerOutcome> {
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     ensure!(
@@ -274,6 +293,23 @@ pub fn run_fabric_worker(
     let rank = fabric.rank();
     ensure!(p == cfg.p, "fabric has {p} participants but the config says p={}", cfg.p);
     ensure!(rank < p, "rank {rank} out of range for p={p}");
+
+    if let Some(j) = journal.as_mut() {
+        j.emit(&Event::RunStarted {
+            rank: rank as u32,
+            p: p as u32,
+            seed: cfg.seed,
+            encoding: fabric.encoding(),
+            git_rev: crate::bench::git_rev(),
+            config_json: cfg.to_wire_json(),
+            resume: initial_params.iter().cloned().collect(),
+        })?;
+        j.emit(&Event::Membership {
+            epoch: 0,
+            rank: rank as u32,
+            change: MembershipChange::Joined,
+        })?;
+    }
 
     let mut policy = make_policy(cfg);
     let manifest = engine.manifest();
@@ -367,6 +403,21 @@ pub fn run_fabric_worker(
                 );
                 rows.push(row);
             }
+            // Journal the cohort's contributed panels before the policy
+            // rewrites them — the same pre-aggregation vantage point the
+            // simulated trainer journals at.
+            if let Some(j) = journal.as_mut() {
+                let round = (step / cfg.tau) as u64;
+                for (r, row) in rows.iter().enumerate() {
+                    j.emit(&Event::PanelDigest {
+                        round,
+                        rank: r as u32,
+                        digest: digest_params(row),
+                        loss: energies[r],
+                        comm_bytes: canonical_comm_bytes(round, d),
+                    })?;
+                }
+            }
             {
                 let mut ctx = CommContext {
                     params: &mut rows,
@@ -396,6 +447,14 @@ pub fn run_fabric_worker(
         // (serve summary, checkpoints, aggregate's finiteness checks)
         // would choke on.
         mean_energy = worker.energy();
+    }
+
+    if let Some(j) = journal.as_mut() {
+        j.emit(&Event::RunFinished {
+            steps: total_steps as u64,
+            rounds: boundaries,
+            final_digest: digest_params(worker.params()),
+        })?;
     }
 
     Ok(FabricWorkerOutcome {
@@ -437,6 +496,12 @@ pub fn run_decentralized_threaded(
                 let run = || -> Result<FabricWorkerOutcome> {
                     let engine = crate::runtime::load_backend(cfg)?;
                     let mut fabric = LocalCollective::new(Arc::clone(&exchange), rank);
+                    let mut jw = match &cfg.journal {
+                        Some(base) => {
+                            Some(JournalWriter::create(&rank_journal_path(base, rank))?)
+                        }
+                        None => None,
+                    };
                     run_fabric_worker(
                         cfg,
                         engine.as_ref(),
@@ -444,6 +509,7 @@ pub fn run_decentralized_threaded(
                         &mut fabric,
                         total_steps,
                         None,
+                        jw.as_mut().map(|w| w as &mut dyn EventSink),
                     )
                 };
                 let result = run();

@@ -34,6 +34,10 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 use crate::checkpoint::Checkpoint;
 use crate::config::ExperimentConfig;
 use crate::data::source::DataPipeline;
+use crate::journal::{
+    canonical_comm_bytes, digest_cohort, fnv64, rank_journal_path, Event, EventSink, JournalWriter,
+    MembershipChange, RANK_COHORT,
+};
 use crate::metrics::CommCounters;
 use crate::runtime::load_backend;
 
@@ -164,6 +168,10 @@ impl Collective for RemoteCluster {
     fn bytes_received(&self) -> u64 {
         self.bytes_received
     }
+
+    fn encoding(&self) -> WireEncoding {
+        self.encoding
+    }
 }
 
 /// What a rendezvous session runs: the experiment, the panel encoding,
@@ -175,6 +183,13 @@ pub struct ServeOptions {
     pub encoding: WireEncoding,
     /// Resume each rank from `workers[rank]` of this checkpoint.
     pub resume: Option<Checkpoint>,
+    /// Journal the session's event stream here. A resumed session
+    /// *appends*, stitching its segment onto the original journal; a
+    /// fresh session truncates. With the f32 encoding the relay digests
+    /// every rank's raw panel bytes per round (numerics-free: the f32
+    /// panel body IS θ's little-endian bytes), making the journal
+    /// bit-exactly verifiable with `wasgd replay`.
+    pub journal: Option<PathBuf>,
 }
 
 /// What a completed rendezvous session produced.
@@ -273,6 +288,33 @@ pub fn serve(listener: TcpListener, opts: &ServeOptions) -> Result<ServeOutcome>
     let cfg_json = wire_cfg.to_wire_json();
     let mut comm = CommCounters::new(p);
 
+    // Cohort-scope journal: the rendezvous sees every rank's panel, so
+    // its journal carries the whole cohort's digests — and, on resume,
+    // all p checkpoint vectors (workers only ever learn their own),
+    // which is why `wasgd replay` verifies *this* journal for resumed
+    // sessions. Resume appends: the stitched file replays segment by
+    // segment.
+    let journal: Option<Mutex<JournalWriter>> = match &opts.journal {
+        Some(path) => Some(Mutex::new(if opts.resume.is_some() {
+            JournalWriter::append_to(path)?
+        } else {
+            JournalWriter::create(path)?
+        })),
+        None => None,
+    };
+    jemit(
+        journal.as_ref(),
+        &Event::RunStarted {
+            rank: RANK_COHORT,
+            p: p as u32,
+            seed: cfg.seed,
+            encoding: opts.encoding,
+            git_rev: crate::bench::git_rev(),
+            config_json: cfg_json.clone(),
+            resume: opts.resume.as_ref().map(|ck| ck.workers.clone()).unwrap_or_default(),
+        },
+    )?;
+
     // Handshake phase: rank = accept order *of completed handshakes*. A
     // stray connection (port scan, health probe) is dropped — after a
     // bounded read timeout if it stays silent — and the rank re-offered,
@@ -286,6 +328,14 @@ pub fn serve(listener: TcpListener, opts: &ServeOptions) -> Result<ServeOutcome>
         match handshake(&stream, rank, p, &cfg_json, opts) {
             Ok((reader, writer, hello_len, welcome_len)) => {
                 comm.add(rank, welcome_len, hello_len);
+                jemit(
+                    journal.as_ref(),
+                    &Event::Membership {
+                        epoch: 0,
+                        rank: rank as u32,
+                        change: MembershipChange::Joined,
+                    },
+                )?;
                 conns.push((reader, writer));
             }
             Err(e) => {
@@ -305,27 +355,23 @@ pub fn serve(listener: TcpListener, opts: &ServeOptions) -> Result<ServeOutcome>
     // decodes θ (and so can never re-quantise a qi8 panel).
     let exchange: PanelExchange<(f32, Vec<u8>)> = PanelExchange::new(p);
     let finals: Mutex<Vec<Option<(u64, WorkerPanel)>>> = Mutex::new(vec![None; p]);
-    let enc = opts.encoding;
+    let ctx = RelayCtx {
+        exchange: &exchange,
+        finals: &finals,
+        enc: opts.encoding,
+        journal: journal.as_ref(),
+    };
     let results: Vec<Result<RelayStats>> = std::thread::scope(|s| {
-        let exchange = &exchange;
-        let finals = &finals;
+        let ctx = &ctx;
         let handles: Vec<_> = conns
             .into_iter()
             .enumerate()
             .map(|(rank, (mut reader, mut writer))| {
                 s.spawn(move || {
                     let mut stats = RelayStats { sent: 0, received: 0, rounds: 0 };
-                    let result = relay_loop(
-                        rank,
-                        &mut reader,
-                        &mut writer,
-                        exchange,
-                        finals,
-                        enc,
-                        &mut stats,
-                    );
+                    let result = relay_loop(rank, &mut reader, &mut writer, ctx, &mut stats);
                     if let Err(e) = &result {
-                        exchange.poison(&format!("relay for rank {rank} failed: {e}"));
+                        ctx.exchange.poison(&format!("relay for rank {rank} failed: {e}"));
                         let _ = wire::error_frame(&format!("{e}")).write_to(&mut writer);
                     }
                     result.map(|()| stats)
@@ -353,16 +399,39 @@ pub fn serve(listener: TcpListener, opts: &ServeOptions) -> Result<ServeOutcome>
         steps = steps.max(s);
         out.push(panel);
     }
+    jemit(
+        journal.as_ref(),
+        &Event::RunFinished {
+            steps,
+            rounds,
+            final_digest: digest_cohort(out.iter().map(|(_, t)| t.as_slice())),
+        },
+    )?;
     Ok(ServeOutcome { finals: out, rounds, steps, comm })
+}
+
+/// Emit into an optional mutex-shared journal (the rendezvous's relay
+/// threads all funnel through one writer).
+fn jemit(journal: Option<&Mutex<JournalWriter>>, ev: &Event) -> Result<()> {
+    if let Some(j) = journal {
+        j.lock().unwrap().emit(ev)?;
+    }
+    Ok(())
+}
+
+/// Session state shared by every relay handler thread.
+struct RelayCtx<'a> {
+    exchange: &'a PanelExchange<(f32, Vec<u8>)>,
+    finals: &'a Mutex<Vec<Option<(u64, WorkerPanel)>>>,
+    enc: WireEncoding,
+    journal: Option<&'a Mutex<JournalWriter>>,
 }
 
 fn relay_loop(
     rank: usize,
     reader: &mut BufReader<TcpStream>,
     writer: &mut BufWriter<TcpStream>,
-    exchange: &PanelExchange<(f32, Vec<u8>)>,
-    finals: &Mutex<Vec<Option<(u64, WorkerPanel)>>>,
-    enc: WireEncoding,
+    ctx: &RelayCtx,
     stats: &mut RelayStats,
 ) -> Result<()> {
     loop {
@@ -371,9 +440,10 @@ fn relay_loop(
         match frame.kind {
             MsgKind::Panel => {
                 ensure!(
-                    frame.encoding == enc,
-                    "rank {rank} sent a {:?} panel in a {enc:?} session",
-                    frame.encoding
+                    frame.encoding == ctx.enc,
+                    "rank {rank} sent a {:?} panel in a {:?} session",
+                    frame.encoding,
+                    ctx.enc
                 );
                 let panel = RawPanel::parse(&frame)?;
                 ensure!(
@@ -382,8 +452,29 @@ fn relay_loop(
                     panel.round,
                     stats.rounds + 1
                 );
-                let cohort = exchange.exchange(rank, (panel.h, panel.body))?;
-                let reply = cohort_frame_from_raw(panel.round, &cohort[..], enc);
+                let cohort = ctx.exchange.exchange(rank, (panel.h, panel.body))?;
+                // One designated emitter (rank 0's handler) journals the
+                // round's cohort. An f32 panel body is exactly θ's
+                // little-endian bytes, so the relay digests raw wire
+                // bytes without ever decoding parameters — and lands on
+                // the same fnv64 a worker computes over its floats. The
+                // barrier guarantees rank 0 cannot deposit round n+1
+                // before round n published, so rounds journal in order.
+                if rank == 0 && ctx.enc == WireEncoding::F32 {
+                    if let Some(j) = ctx.journal {
+                        let mut w = j.lock().unwrap();
+                        for (r, (h, body)) in cohort.iter().enumerate() {
+                            w.emit(&Event::PanelDigest {
+                                round: panel.round,
+                                rank: r as u32,
+                                digest: fnv64(body),
+                                loss: *h,
+                                comm_bytes: canonical_comm_bytes(panel.round, body.len() / 4),
+                            })?;
+                        }
+                    }
+                }
+                let reply = cohort_frame_from_raw(panel.round, &cohort[..], ctx.enc);
                 reply.write_to(writer)?;
                 stats.sent += reply.encoded_len() as u64;
                 stats.rounds += 1;
@@ -391,7 +482,7 @@ fn relay_loop(
             MsgKind::Final => {
                 let panel = Panel::parse(&frame)?;
                 // A Final's round field is the worker's total step count.
-                finals.lock().unwrap()[rank] = Some((panel.round, (panel.h, panel.theta)));
+                ctx.finals.lock().unwrap()[rank] = Some((panel.round, (panel.h, panel.theta)));
                 // A departed participant can never deposit again. In the
                 // homogeneous case every rank finishes after the same
                 // round, all of whose deposits preceded this Final, so
@@ -399,7 +490,7 @@ fn relay_loop(
                 // budgets (e.g. different --artifacts resolving a
                 // different batch size) it converts what would be a
                 // permanent barrier deadlock into a clean session error.
-                exchange.poison(&format!(
+                ctx.exchange.poison(&format!(
                     "rank {rank} finished after round {}; no further collectives can complete",
                     stats.rounds
                 ));
@@ -420,11 +511,17 @@ fn relay_loop(
 /// resolves `auto` before serving), so a worker that cannot locate the
 /// promised real files fails with a pointed error instead of silently
 /// falling back to synth and de-synchronising the cohort.
+///
+/// `journal_base` journals this worker's view of the run to
+/// `base.rank{r}` (the rank is only known after the handshake; the
+/// suffix keeps p workers sharing one `--journal` value from clobbering
+/// each other — or the rendezvous journal at `base` itself).
 pub fn run_remote_worker(
     addr: &str,
     artifacts_root: Option<PathBuf>,
     threads_override: Option<usize>,
     data_dir_override: Option<PathBuf>,
+    journal_base: Option<PathBuf>,
 ) -> Result<FabricWorkerOutcome> {
     let (mut fabric, welcome) = RemoteCluster::connect(addr)?;
     let mut cfg = ExperimentConfig::from_wire_json(&welcome.config_json)
@@ -441,6 +538,12 @@ pub fn run_remote_worker(
     let engine = load_backend(&cfg)?;
     let dataset = DataPipeline::from_config(&cfg)?.load(engine.manifest())?;
     let total_steps = planned_steps(&cfg, dataset.n_train(), engine.manifest().batch);
+    let mut jw = match &journal_base {
+        Some(base) => {
+            Some(JournalWriter::create(&rank_journal_path(base, welcome.rank as usize))?)
+        }
+        None => None,
+    };
     let mut out = run_fabric_worker(
         &cfg,
         engine.as_ref(),
@@ -448,6 +551,7 @@ pub fn run_remote_worker(
         &mut fabric,
         total_steps,
         welcome.resume,
+        jw.as_mut().map(|w| w as &mut dyn EventSink),
     )?;
     fabric.send_final(out.steps as u64, out.mean_energy, &out.params)?;
     out.bytes_sent = fabric.bytes_sent();
@@ -478,12 +582,13 @@ mod tests {
     fn loopback_session(cfg: &ExperimentConfig, opts_enc: WireEncoding) -> ServeOutcome {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
-        let opts = ServeOptions { cfg: cfg.clone(), encoding: opts_enc, resume: None };
+        let opts =
+            ServeOptions { cfg: cfg.clone(), encoding: opts_enc, resume: None, journal: None };
         let server = thread::spawn(move || serve(listener, &opts));
         let mut workers = Vec::new();
         for _ in 0..cfg.p {
             let addr = addr.clone();
-            workers.push(thread::spawn(move || run_remote_worker(&addr, None, None, None)));
+            workers.push(thread::spawn(move || run_remote_worker(&addr, None, None, None, None)));
         }
         for w in workers {
             w.join().unwrap().unwrap();
@@ -545,12 +650,17 @@ mod tests {
         };
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
-        let opts = ServeOptions { cfg: cfg.clone(), encoding: WireEncoding::F32, resume: Some(ck) };
+        let opts = ServeOptions {
+            cfg: cfg.clone(),
+            encoding: WireEncoding::F32,
+            resume: Some(ck),
+            journal: None,
+        };
         let server = thread::spawn(move || serve(listener, &opts));
         let mut workers = Vec::new();
         for _ in 0..cfg.p {
             let addr = addr.clone();
-            workers.push(thread::spawn(move || run_remote_worker(&addr, None, None, None)));
+            workers.push(thread::spawn(move || run_remote_worker(&addr, None, None, None, None)));
         }
         for w in workers {
             w.join().unwrap().unwrap();
@@ -574,7 +684,8 @@ mod tests {
             workers: vec![vec![0.0; 4]], // 1 worker, session wants 2
         };
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let opts = ServeOptions { cfg, encoding: WireEncoding::F32, resume: Some(ck) };
+        let opts =
+            ServeOptions { cfg, encoding: WireEncoding::F32, resume: Some(ck), journal: None };
         assert!(serve(listener, &opts).is_err());
     }
 
@@ -584,12 +695,12 @@ mod tests {
         cfg.epochs = 4.0; // long enough that the survivor is mid-session
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
-        let opts = ServeOptions { cfg, encoding: WireEncoding::F32, resume: None };
+        let opts = ServeOptions { cfg, encoding: WireEncoding::F32, resume: None, journal: None };
         let server = thread::spawn(move || serve(listener, &opts));
 
         // One real worker…
         let real_addr = addr.clone();
-        let real = thread::spawn(move || run_remote_worker(&real_addr, None, None, None));
+        let real = thread::spawn(move || run_remote_worker(&real_addr, None, None, None, None));
         // …and one that handshakes, then hangs up before its first panel.
         let (fabric, _welcome) = RemoteCluster::connect(&addr).unwrap();
         drop(fabric);

@@ -226,6 +226,11 @@ pub struct ExperimentConfig {
     /// Force a δ-label-blocked sample order (Fig. 3 order-effect study);
     /// disables the order search.
     pub force_delta_order: Option<usize>,
+    /// Write an event-sourced run journal to this path (`--journal`):
+    /// per-round panel digests, replayable with `wasgd replay`. Local
+    /// instrumentation — never transported in the wire JSON (each
+    /// participant decides its own journaling).
+    pub journal: Option<PathBuf>,
 }
 
 impl Default for ExperimentConfig {
@@ -259,6 +264,7 @@ impl Default for ExperimentConfig {
             target_loss: None,
             track_estimation_error: false,
             force_delta_order: None,
+            journal: None,
         }
     }
 }
@@ -422,6 +428,7 @@ impl ExperimentConfig {
         m.insert("algo".to_string(), Json::Str(self.algo.name().to_string()));
         m.insert("backend".to_string(), Json::Str(self.backend.name().to_string()));
         m.insert("p".to_string(), num(self.p as f64));
+        m.insert("backups".to_string(), num(self.backups as f64));
         m.insert("tau".to_string(), num(self.tau as f64));
         m.insert("beta".to_string(), num(self.beta as f64));
         m.insert("a_tilde".to_string(), num(self.a_tilde as f64));
@@ -454,6 +461,16 @@ impl ExperimentConfig {
     /// take their defaults — none of them influence the fabric loop's
     /// numerics. The result always has `fabric = tcp` and is validated.
     pub fn from_wire_json(s: &str) -> anyhow::Result<Self> {
+        Self::from_wire_json_as(s, FabricKind::Tcp)
+    }
+
+    /// [`ExperimentConfig::from_wire_json`] with an explicit fabric for
+    /// the rebuilt config. The tcp handshake wants `Tcp` (workers must
+    /// obey the tcp validation rules); `wasgd replay` wants `Sim`, which
+    /// accepts every scheme a journal can record — a sim-only algorithm
+    /// like async WASGD+ journals a wire config that would be rejected
+    /// under the tcp rules but must still replay.
+    pub fn from_wire_json_as(s: &str, fabric: FabricKind) -> anyhow::Result<Self> {
         let j = Json::parse(s).map_err(|e| anyhow::anyhow!("wire config: {e}"))?;
         let req_f64 = |key: &str| -> anyhow::Result<f64> {
             j.get(key)
@@ -464,7 +481,7 @@ impl ExperimentConfig {
         let dataset = DatasetKind::parse(dataset_s)
             .ok_or_else(|| anyhow::anyhow!("wire config names unknown dataset {dataset_s:?}"))?;
         let mut cfg = Self { dataset, ..Self::default() };
-        cfg.fabric = FabricKind::Tcp;
+        cfg.fabric = fabric;
         // Absent data-source keys default to the pre-DataSpec behaviour
         // (auto with no data dir ⇒ synth), so a newer worker still
         // joins an older rendezvous cleanly.
@@ -492,6 +509,14 @@ impl ExperimentConfig {
         cfg.backend = BackendKind::parse(backend_s)
             .ok_or_else(|| anyhow::anyhow!("wire config names unknown backend {backend_s:?}"))?;
         cfg.p = j.req_usize("p")?;
+        // Optional for wire-format back-compat: configs journaled or
+        // shipped before the key existed read as "no backups".
+        cfg.backups = match j.get("backups") {
+            None | Some(Json::Null) => 0,
+            Some(v) => v.as_usize().ok_or_else(|| {
+                anyhow::anyhow!("wire config backups must be an integer or null")
+            })?,
+        };
         cfg.tau = j.req_usize("tau")?;
         cfg.m = j.req_usize("m")?;
         cfg.c = j.req_usize("c")?;
@@ -694,6 +719,31 @@ mod tests {
         let back = ExperimentConfig::from_wire_json(&Json::Obj(doc).serialize()).unwrap();
         assert_eq!(back.source, SourceKind::Auto);
         assert_eq!(back.data_dir, None);
+    }
+
+    #[test]
+    fn wire_json_as_sim_accepts_every_journaled_scheme() {
+        // `wasgd replay` rebuilds journaled configs under sim rules:
+        // schemes the tcp fabric rejects (sequential, omwu, async
+        // wasgd+) must still round-trip, backups included.
+        let mut cfg = ExperimentConfig::default();
+        cfg.algo = AlgoKind::WasgdPlusAsync;
+        cfg.backups = 2;
+        let json = cfg.to_wire_json();
+        assert!(ExperimentConfig::from_wire_json(&json).is_err(), "async is sim-only on tcp");
+        let back = ExperimentConfig::from_wire_json_as(&json, FabricKind::Sim).unwrap();
+        assert_eq!(back.fabric, FabricKind::Sim);
+        assert_eq!(back.backups, 2, "backups must ride the wire for async replay");
+
+        // Back-compat: a config without the backups key reads as 0.
+        let mut doc = match Json::parse(&json).unwrap() {
+            Json::Obj(m) => m,
+            _ => unreachable!("wire config is an object"),
+        };
+        doc.remove("backups");
+        doc.insert("algo".to_string(), Json::Str("wasgd+".to_string()));
+        let back = ExperimentConfig::from_wire_json(&Json::Obj(doc).serialize()).unwrap();
+        assert_eq!(back.backups, 0);
     }
 
     #[test]

@@ -21,11 +21,16 @@ pub mod worker;
 use anyhow::Result;
 
 use crate::algorithms::{make_policy, CommContext, CommPolicy};
+use crate::cluster::wire::WireEncoding;
 use crate::cluster::SimCluster;
 use crate::config::{AlgoKind, ExperimentConfig};
 use crate::data::order::judge;
 use crate::data::source::{shard_range, BatchPlanner, DataPipeline};
 use crate::data::{Dataset, RecordWindow};
+use crate::journal::{
+    canonical_comm_bytes, digest_cohort, digest_params, Event, EventSink, JournalWriter,
+    MembershipChange, RANK_COHORT,
+};
 use crate::linalg;
 use crate::metrics::{Record, RunLog, Stopwatch};
 use crate::rng::Rng;
@@ -114,6 +119,15 @@ pub struct Trainer<'a> {
     idx_buf: Vec<u32>,
     x_buf: Vec<f32>,
     y_buf: Vec<i32>,
+    /// Event sink when the run is journaled (`cfg.journal` or
+    /// [`Trainer::set_journal`]); the trainer journals the whole cohort
+    /// from its single vantage point ([`RANK_COHORT`]).
+    journal: Option<Box<dyn EventSink + 'a>>,
+    /// The checkpoint vectors this run resumed from (embedded in
+    /// `RunStarted` so the journal segment is replayable on its own).
+    resumed_from: Vec<Vec<f32>>,
+    /// Collective rounds crossed so far.
+    rounds_done: u64,
 }
 
 impl<'a> Trainer<'a> {
@@ -179,6 +193,11 @@ impl<'a> Trainer<'a> {
             workers.push(Worker::new(i, params, planner));
         }
 
+        let journal: Option<Box<dyn EventSink + 'a>> = match &cfg.journal {
+            Some(path) => Some(Box::new(JournalWriter::create(path)?)),
+            None => None,
+        };
+
         Ok(Self {
             window: RecordWindow::new(cfg.tau, cfg.m, cfg.c),
             eval_rng: root.child(7),
@@ -192,7 +211,48 @@ impl<'a> Trainer<'a> {
             idx_buf: Vec::new(),
             x_buf: Vec::new(),
             y_buf: Vec::new(),
+            journal,
+            resumed_from: Vec::new(),
+            rounds_done: 0,
         })
+    }
+
+    /// Attach (or replace) the run's event sink — how `wasgd replay`
+    /// captures the re-executed event stream in memory instead of a
+    /// file.
+    pub fn set_journal(&mut self, sink: Box<dyn EventSink + 'a>) {
+        self.journal = Some(sink);
+    }
+
+    /// Start every worker from the given checkpoint vectors (rank
+    /// order) instead of the seeded init. The vectors are also embedded
+    /// in the journal's `RunStarted`, keeping a resumed segment
+    /// self-contained for replay.
+    pub fn resume_workers(&mut self, initial: &[Vec<f32>]) -> Result<()> {
+        anyhow::ensure!(
+            initial.len() == self.workers.len(),
+            "checkpoint holds {} worker vectors, this run has {} workers",
+            initial.len(),
+            self.workers.len()
+        );
+        for (w, v) in self.workers.iter_mut().zip(initial) {
+            anyhow::ensure!(
+                v.len() == w.params().len(),
+                "checkpoint vector of {} params ≠ model's {}",
+                v.len(),
+                w.params().len()
+            );
+            w.set_params(v.clone());
+        }
+        self.resumed_from = initial.to_vec();
+        Ok(())
+    }
+
+    fn emit_journal(&mut self, ev: &Event) -> Result<()> {
+        if let Some(j) = self.journal.as_mut() {
+            j.emit(ev)?;
+        }
+        Ok(())
     }
 
     /// Steps per epoch per worker (dataset passes ÷ batch).
@@ -200,10 +260,18 @@ impl<'a> Trainer<'a> {
         (self.dataset.n_train() / self.engine.manifest().batch).max(1)
     }
 
-    /// Drive the run to completion.
+    /// Drive the run to completion over the configured epoch budget.
     pub fn run(&mut self) -> Result<RunOutput> {
         let spe = self.steps_per_epoch();
         let total_steps = ((self.cfg.epochs * spe as f64).ceil() as usize).max(1);
+        self.run_for(total_steps)
+    }
+
+    /// Drive the run for an explicit step budget — what `wasgd replay`
+    /// uses to re-execute exactly the steps a journal records (the
+    /// journaled run may have stopped early on `--target-loss`).
+    pub fn run_for(&mut self, total_steps: usize) -> Result<RunOutput> {
+        let spe = self.steps_per_epoch();
         let watch = Stopwatch::new();
         let mut log = RunLog::new(self.cfg.label())
             .tag("dataset", self.dataset.name.clone())
@@ -214,9 +282,29 @@ impl<'a> Trainer<'a> {
             .tag("seed", self.cfg.seed);
         let mut estimation_errors = Vec::new();
 
+        if self.journal.is_some() {
+            self.emit_journal(&Event::RunStarted {
+                rank: RANK_COHORT,
+                p: self.workers.len() as u32,
+                seed: self.cfg.seed,
+                encoding: WireEncoding::F32,
+                git_rev: crate::bench::git_rev(),
+                config_json: self.cfg.to_wire_json(),
+                resume: self.resumed_from.clone(),
+            })?;
+            for i in 0..self.workers.len() {
+                self.emit_journal(&Event::Membership {
+                    epoch: 0,
+                    rank: i as u32,
+                    change: MembershipChange::Joined,
+                })?;
+            }
+        }
+
         // Initial point (iteration 0).
         log.push(self.evaluate(0, 0.0, &watch)?);
 
+        let mut steps_done = 0u64;
         for step in 1..=total_steps {
             let k_in_period = (step - 1) % self.cfg.tau;
             let recorded = self.window.is_recorded(k_in_period);
@@ -224,6 +312,7 @@ impl<'a> Trainer<'a> {
             for wi in 0..self.workers.len() {
                 self.local_step(wi, recorded)?;
             }
+            steps_done = step as u64;
 
             if step % self.cfg.tau == 0 {
                 self.communicate(step as u64, &mut estimation_errors)?;
@@ -243,6 +332,16 @@ impl<'a> Trainer<'a> {
             }
         }
 
+        let final_workers: Vec<Vec<f32>> =
+            self.workers.iter().map(|w| w.params().to_vec()).collect();
+        if self.journal.is_some() {
+            self.emit_journal(&Event::RunFinished {
+                steps: steps_done,
+                rounds: self.rounds_done,
+                final_digest: digest_cohort(final_workers.iter().map(|v| v.as_slice())),
+            })?;
+        }
+
         Ok(RunOutput {
             log,
             estimation_errors,
@@ -251,7 +350,7 @@ impl<'a> Trainer<'a> {
             orders_kept: self.workers.iter().map(|w| w.orders_kept()).sum(),
             orders_redrawn: self.workers.iter().map(|w| w.orders_redrawn()).sum(),
             exec_count: self.engine.exec_count(),
-            final_workers: self.workers.iter().map(|w| w.params().to_vec()).collect(),
+            final_workers,
         })
     }
 
@@ -282,6 +381,30 @@ impl<'a> Trainer<'a> {
         iteration: u64,
         estimation_errors: &mut Vec<(u64, f32)>,
     ) -> Result<()> {
+        self.rounds_done += 1;
+
+        // Journal every rank's contributed panel exactly as the fabrics
+        // see it at the collective's entry: pre-aggregation θ plus the
+        // windowed energy h. This is what makes a sim journal and a tcp
+        // journal of the same run byte-compare equal.
+        if self.journal.is_some() {
+            let round = iteration / self.cfg.tau as u64;
+            let d = self.workers[0].params().len();
+            for i in 0..self.workers.len() {
+                let (digest, loss) = {
+                    let w = &self.workers[i];
+                    (digest_params(w.params()), w.energy())
+                };
+                self.emit_journal(&Event::PanelDigest {
+                    round,
+                    rank: i as u32,
+                    digest,
+                    loss,
+                    comm_bytes: canonical_comm_bytes(round, d),
+                })?;
+            }
+        }
+
         if matches!(self.cfg.algo, AlgoKind::Sequential) {
             // No cohort — still reset windows so energies don't grow.
             for w in self.workers.iter_mut() {

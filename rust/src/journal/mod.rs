@@ -1,0 +1,917 @@
+//! Event-sourced run journal: an append-only, versioned, CRC-protected
+//! record log every run can emit (`--journal PATH`), replayable and
+//! verifiable after the fact with `wasgd replay`.
+//!
+//! The journal turns the repo's bit-exactness contract (`--fabric sim` ≡
+//! threaded ≡ multi-process tcp on lossless f32 panels, pinned by
+//! `tests/fabric_e2e.rs`) into a *universal* auditable property: every
+//! τ-boundary writes one [`Event::PanelDigest`] per rank — an FNV-1a 64
+//! digest of the contributed (pre-aggregation) θ plus the windowed loss
+//! energy h — and `wasgd replay --verify` re-executes the run from the
+//! embedded wire config and diffs every digest bit for bit. Sim runs,
+//! threaded ranks, tcp workers, and the rendezvous node all journal the
+//! *same* stream for the same run, so any of their journals verifies
+//! against a fresh re-execution.
+//!
+//! Record framing follows the `wire.rs` discipline — magic, schema
+//! version, explicit length, validation before allocation — plus a
+//! CRC-32 per record (the wire relies on TCP for integrity; a file on
+//! disk does not get that for free):
+//!
+//! ```text
+//! ┌────────────┬─────────────┬─────────┬─────────────┬────────────┬─────────┬────────────┐
+//! │ magic (4B) │ version u16 │ kind u8 │ reserved u8 │ len u32 LE │ payload │ crc u32 LE │
+//! │  "WSGJ"    │   LE, = 1   │  Event  │     = 0     │  ≤ 256 MiB │  len B  │ IEEE, [0..)│
+//! └────────────┴─────────────┴─────────┴─────────────┴────────────┴─────────┴────────────┘
+//! ```
+//!
+//! The CRC covers header + payload, so *any* single-bit corruption of a
+//! record is detected (CRC-32 catches all 1-bit errors) and reported
+//! with the record index and byte offset. A journal truncated mid-record
+//! (crash, `kill -9`, full disk) is not corruption: [`read_events`]
+//! returns every complete record plus a [`Truncation`] marker, and
+//! replay verifies the complete prefix before reporting the cut.
+//!
+//! [`Event::Membership`] is a stub for the elastic-fabric roadmap item:
+//! today every participant joins at epoch 0 and the epoch never
+//! advances; the variants and wire layout are what a join/leave/crash
+//! stream will need.
+
+pub mod replay;
+pub mod tail;
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::cluster::wire::{Panel, WireEncoding};
+
+/// Journal record magic: the ASCII bytes `WSGJ` (J for journal — kept
+/// distinct from the wire protocol's `WSGD` so a journal file is never
+/// mistaken for a frame capture).
+pub const JOURNAL_MAGIC: [u8; 4] = *b"WSGJ";
+/// Journal schema version (bumped on incompatible record changes).
+pub const JOURNAL_VERSION: u16 = 1;
+/// Bytes of the fixed record header (magic + version + kind + reserved
+/// + len); the trailing CRC-32 adds 4 more after the payload.
+pub const RECORD_HEADER_LEN: usize = 12;
+/// Upper bound on a record payload — rejects hostile/corrupt lengths
+/// before any allocation happens. Sized for a `RunStarted` carrying a
+/// large cohort's resume vectors (p · D · 4 bytes).
+pub const MAX_RECORD_LEN: u32 = 1 << 28;
+/// The `rank` a whole-cohort journal writes (the simulated [`Trainer`]
+/// and the rendezvous node journal all p ranks' digests from one
+/// vantage point); individual fabric workers write their real rank.
+///
+/// [`Trainer`]: crate::coordinator::Trainer
+pub const RANK_COHORT: u32 = u32::MAX;
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC32_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 (IEEE 802.3, the zlib/PNG polynomial) of `bytes`. Detects all
+/// single-bit and all 2-bit errors within a record — the corruption
+/// model fault-injection tests exercise.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Incremental FNV-1a 64-bit hasher — the digest function of
+/// [`Event::PanelDigest`]. Chosen for being trivially portable (pure
+/// integer arithmetic, no dependencies) and stable across platforms.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    /// The FNV-1a 64 offset basis.
+    pub const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    /// The FNV-1a 64 prime.
+    pub const PRIME: u64 = 0x100_0000_01b3;
+
+    /// A fresh hasher at the offset basis.
+    pub fn new() -> Self {
+        Self(Self::OFFSET)
+    }
+
+    /// Absorb `bytes`.
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(Self::PRIME);
+        }
+        self.0 = h;
+    }
+
+    /// The digest of everything absorbed so far.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot FNV-1a 64 of a byte slice.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut f = Fnv64::new();
+    f.update(bytes);
+    f.finish()
+}
+
+/// Digest of one parameter vector: FNV-1a 64 over the little-endian f32
+/// bytes — exactly the bytes a lossless f32 [`Panel`] body carries, so
+/// the tcp relay can digest raw wire bytes without decoding θ and land
+/// on the identical value. Allocation-free.
+pub fn digest_params(params: &[f32]) -> u64 {
+    let mut f = Fnv64::new();
+    for &x in params {
+        f.update(&x.to_le_bytes());
+    }
+    f.finish()
+}
+
+/// Digest of a whole cohort's final state: one chained FNV-1a 64 state
+/// over every rank's parameters in rank order (NOT a hash of per-rank
+/// hashes — rank boundaries are implicit in the fixed element count).
+pub fn digest_cohort<'a, I>(workers: I) -> u64
+where
+    I: IntoIterator<Item = &'a [f32]>,
+{
+    let mut f = Fnv64::new();
+    for row in workers {
+        for &x in row {
+            f.update(&x.to_le_bytes());
+        }
+    }
+    f.finish()
+}
+
+/// The canonical cumulative communication-byte count after `round`
+/// collective rounds of `d`-parameter panels: `round` lossless f32
+/// panel frames. Deterministic across fabrics and encodings by
+/// construction (real measured traffic differs per substrate and rides
+/// in [`CommCounters`](crate::metrics::CommCounters), not the journal),
+/// which is what lets a sim re-execution verify a tcp journal's
+/// `comm_bytes` field bit for bit.
+pub fn canonical_comm_bytes(round: u64, d: usize) -> u64 {
+    round * Panel::wire_len(WireEncoding::F32, d) as u64
+}
+
+/// How a participant's membership changed — the elastic-fabric stub:
+/// today only `Joined` at epoch 0 is ever written.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MembershipChange {
+    /// The rank joined the cohort at this epoch.
+    Joined,
+    /// The rank left cleanly.
+    Left,
+    /// The rank was declared dead.
+    Crashed,
+}
+
+impl MembershipChange {
+    fn as_u8(self) -> u8 {
+        match self {
+            MembershipChange::Joined => 0,
+            MembershipChange::Left => 1,
+            MembershipChange::Crashed => 2,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            0 => MembershipChange::Joined,
+            1 => MembershipChange::Left,
+            2 => MembershipChange::Crashed,
+            _ => return None,
+        })
+    }
+
+    /// Human-readable name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MembershipChange::Joined => "joined",
+            MembershipChange::Left => "left",
+            MembershipChange::Crashed => "crashed",
+        }
+    }
+}
+
+/// One journal record — the event vocabulary of a run.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// A run (or a resumed segment of one) began. Self-contained: the
+    /// embedded wire config plus the resume vectors are everything
+    /// `wasgd replay` needs to re-execute the segment.
+    RunStarted {
+        /// Writer's vantage point: a worker rank, or [`RANK_COHORT`]
+        /// for a whole-cohort journal (sim trainer / rendezvous node).
+        rank: u32,
+        /// Cohort size whose digests this journal carries.
+        p: u32,
+        /// The run's base seed (duplicated from the config for cheap
+        /// inspection).
+        seed: u64,
+        /// Panel encoding of the underlying session. Only lossless
+        /// `f32` journals are bit-exactly replayable.
+        encoding: WireEncoding,
+        /// `git rev-parse --short HEAD` at record time ("unknown"
+        /// outside a work tree).
+        git_rev: String,
+        /// The full [`ExperimentConfig`](crate::config::ExperimentConfig)
+        /// wire JSON — what replay re-executes from.
+        config_json: String,
+        /// Initial parameter vectors when the segment resumed from a
+        /// checkpoint (all p ranks for a cohort journal; empty for a
+        /// fresh start). Worker-scope journals of resumed sessions only
+        /// know their own vector and are rejected by `--verify` with a
+        /// pointer at the cohort journal.
+        resume: Vec<Vec<f32>>,
+    },
+    /// One rank's contributed panel at one τ-boundary, as digested at
+    /// the collective's entry (pre-aggregation).
+    PanelDigest {
+        /// 1-based collective round (boundary index).
+        round: u64,
+        /// The digested rank.
+        rank: u32,
+        /// [`digest_params`] of the rank's contributed θ.
+        digest: u64,
+        /// The rank's windowed loss energy h (raw bits preserved,
+        /// NaN/∞ included).
+        loss: f32,
+        /// [`canonical_comm_bytes`] through this round.
+        comm_bytes: u64,
+    },
+    /// A checkpoint directory was written (informational; replay does
+    /// not diff these).
+    CheckpointWritten {
+        /// Local steps the checkpoint captures.
+        steps: u64,
+        /// [`digest_cohort`] of the checkpointed worker vectors.
+        digest: u64,
+        /// Where the checkpoint was saved.
+        path: String,
+    },
+    /// Membership stub for the elastic fabric (see [`MembershipChange`]).
+    Membership {
+        /// Membership epoch (always 0 today).
+        epoch: u64,
+        /// The rank whose membership changed.
+        rank: u32,
+        /// What happened.
+        change: MembershipChange,
+    },
+    /// The run segment completed.
+    RunFinished {
+        /// Total local SGD steps per worker.
+        steps: u64,
+        /// Collective rounds crossed.
+        rounds: u64,
+        /// Cohort journals: [`digest_cohort`] of every rank's final θ.
+        /// Worker journals: [`digest_params`] of the writer's own θ.
+        final_digest: u64,
+    },
+}
+
+/// Bitwise equality: f32 fields compare by bit pattern so NaN losses
+/// and resume vectors round-trip as equal (the property proptests pin).
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        use Event::*;
+        match (self, other) {
+            (
+                RunStarted { rank, p, seed, encoding, git_rev, config_json, resume },
+                RunStarted {
+                    rank: r2,
+                    p: p2,
+                    seed: s2,
+                    encoding: e2,
+                    git_rev: g2,
+                    config_json: c2,
+                    resume: v2,
+                },
+            ) => {
+                rank == r2
+                    && p == p2
+                    && seed == s2
+                    && encoding == e2
+                    && git_rev == g2
+                    && config_json == c2
+                    && resume.len() == v2.len()
+                    && resume.iter().zip(v2).all(|(a, b)| f32_bits_eq(a, b))
+            }
+            (
+                PanelDigest { round, rank, digest, loss, comm_bytes },
+                PanelDigest { round: r2, rank: k2, digest: d2, loss: l2, comm_bytes: b2 },
+            ) => {
+                round == r2
+                    && rank == k2
+                    && digest == d2
+                    && loss.to_bits() == l2.to_bits()
+                    && comm_bytes == b2
+            }
+            (
+                CheckpointWritten { steps, digest, path },
+                CheckpointWritten { steps: s2, digest: d2, path: p2 },
+            ) => steps == s2 && digest == d2 && path == p2,
+            (
+                Membership { epoch, rank, change },
+                Membership { epoch: e2, rank: r2, change: c2 },
+            ) => epoch == e2 && rank == r2 && change == c2,
+            (
+                RunFinished { steps, rounds, final_digest },
+                RunFinished { steps: s2, rounds: r2, final_digest: d2 },
+            ) => steps == s2 && rounds == r2 && final_digest == d2,
+            _ => false,
+        }
+    }
+}
+
+fn f32_bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+impl Event {
+    /// Human-readable event name (the record-kind vocabulary).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Event::RunStarted { .. } => "RunStarted",
+            Event::PanelDigest { .. } => "PanelDigest",
+            Event::CheckpointWritten { .. } => "CheckpointWritten",
+            Event::Membership { .. } => "Membership",
+            Event::RunFinished { .. } => "RunFinished",
+        }
+    }
+}
+
+fn put_str(s: &str, out: &mut Vec<u8>) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(v: &[f32], out: &mut Vec<u8>) {
+    out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Little-endian payload cursor with truncation checks (the journal's
+/// twin of the wire cursor; kept local so the two formats can evolve
+/// independently).
+struct Cur<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.b.len() >= n, "truncated payload: wanted {n} bytes, have {}", self.b.len());
+        let (head, tail) = self.b.split_at(n);
+        self.b = tail;
+        Ok(head)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(std::str::from_utf8(self.take(n)?).context("payload string is not UTF-8")?.to_string())
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let b = self.take(n.checked_mul(4).context("f32 vector length overflows")?)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn finish(&self) -> Result<()> {
+        ensure!(self.b.is_empty(), "{} trailing bytes in payload", self.b.len());
+        Ok(())
+    }
+}
+
+fn encode_payload(ev: &Event) -> (u8, Vec<u8>) {
+    match ev {
+        Event::RunStarted { rank, p, seed, encoding, git_rev, config_json, resume } => {
+            let resume_len: usize = resume.iter().map(|v| 4 + 4 * v.len()).sum();
+            let mut out = Vec::with_capacity(24 + git_rev.len() + config_json.len() + resume_len);
+            out.extend_from_slice(&rank.to_le_bytes());
+            out.extend_from_slice(&p.to_le_bytes());
+            out.extend_from_slice(&seed.to_le_bytes());
+            out.push(match encoding {
+                WireEncoding::F32 => 0,
+                WireEncoding::Qi8 => 1,
+            });
+            put_str(git_rev, &mut out);
+            put_str(config_json, &mut out);
+            out.extend_from_slice(&(resume.len() as u32).to_le_bytes());
+            for v in resume {
+                put_f32s(v, &mut out);
+            }
+            (1, out)
+        }
+        Event::PanelDigest { round, rank, digest, loss, comm_bytes } => {
+            let mut out = Vec::with_capacity(32);
+            out.extend_from_slice(&round.to_le_bytes());
+            out.extend_from_slice(&rank.to_le_bytes());
+            out.extend_from_slice(&digest.to_le_bytes());
+            out.extend_from_slice(&loss.to_le_bytes());
+            out.extend_from_slice(&comm_bytes.to_le_bytes());
+            (2, out)
+        }
+        Event::CheckpointWritten { steps, digest, path } => {
+            let mut out = Vec::with_capacity(20 + path.len());
+            out.extend_from_slice(&steps.to_le_bytes());
+            out.extend_from_slice(&digest.to_le_bytes());
+            put_str(path, &mut out);
+            (3, out)
+        }
+        Event::Membership { epoch, rank, change } => {
+            let mut out = Vec::with_capacity(13);
+            out.extend_from_slice(&epoch.to_le_bytes());
+            out.extend_from_slice(&rank.to_le_bytes());
+            out.push(change.as_u8());
+            (4, out)
+        }
+        Event::RunFinished { steps, rounds, final_digest } => {
+            let mut out = Vec::with_capacity(24);
+            out.extend_from_slice(&steps.to_le_bytes());
+            out.extend_from_slice(&rounds.to_le_bytes());
+            out.extend_from_slice(&final_digest.to_le_bytes());
+            (5, out)
+        }
+    }
+}
+
+fn decode_payload(kind: u8, payload: &[u8]) -> Result<Event> {
+    let mut cur = Cur::new(payload);
+    let ev = match kind {
+        1 => {
+            let rank = cur.u32()?;
+            let p = cur.u32()?;
+            let seed = cur.u64()?;
+            let encoding = match cur.u8()? {
+                0 => WireEncoding::F32,
+                1 => WireEncoding::Qi8,
+                other => bail!("RunStarted names unknown panel encoding {other}"),
+            };
+            let git_rev = cur.str()?;
+            let config_json = cur.str()?;
+            let count = cur.u32()? as usize;
+            ensure!(count <= 1 << 20, "implausible resume cohort size {count}");
+            let mut resume = Vec::with_capacity(count.min(payload.len() / 4));
+            for _ in 0..count {
+                resume.push(cur.f32s()?);
+            }
+            Event::RunStarted { rank, p, seed, encoding, git_rev, config_json, resume }
+        }
+        2 => Event::PanelDigest {
+            round: cur.u64()?,
+            rank: cur.u32()?,
+            digest: cur.u64()?,
+            loss: cur.f32()?,
+            comm_bytes: cur.u64()?,
+        },
+        3 => Event::CheckpointWritten {
+            steps: cur.u64()?,
+            digest: cur.u64()?,
+            path: cur.str()?,
+        },
+        4 => Event::Membership {
+            epoch: cur.u64()?,
+            rank: cur.u32()?,
+            change: MembershipChange::from_u8(cur.u8()?)
+                .ok_or_else(|| anyhow::anyhow!("unknown membership change"))?,
+        },
+        5 => Event::RunFinished {
+            steps: cur.u64()?,
+            rounds: cur.u64()?,
+            final_digest: cur.u64()?,
+        },
+        other => bail!("unknown journal event kind {other}"),
+    };
+    cur.finish()?;
+    Ok(ev)
+}
+
+/// Serialise one event as a complete journal record (header + payload
+/// + CRC-32 trailer).
+pub fn encode_record(ev: &Event) -> Vec<u8> {
+    let (kind, payload) = encode_payload(ev);
+    let mut out = Vec::with_capacity(RECORD_HEADER_LEN + payload.len() + 4);
+    out.extend_from_slice(&JOURNAL_MAGIC);
+    out.extend_from_slice(&JOURNAL_VERSION.to_le_bytes());
+    out.push(kind);
+    out.push(0); // reserved
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Parse one record from the front of `buf`. Tri-state:
+///
+/// * `Ok(Some((event, consumed)))` — a complete, CRC-valid record;
+/// * `Ok(None)` — `buf` holds a (possibly empty) strict prefix of a
+///   record: more bytes are needed (tailing a growing file, or a
+///   truncated journal);
+/// * `Err` — the bytes are *corrupt*: bad magic / version / kind /
+///   reserved byte / oversized length / CRC mismatch / malformed
+///   payload. All header checks and the CRC run before the payload is
+///   decoded, so nothing is allocated from attacker- or
+///   corruption-controlled lengths.
+pub fn parse_record(buf: &[u8]) -> Result<Option<(Event, usize)>> {
+    if buf.len() < RECORD_HEADER_LEN {
+        return Ok(None);
+    }
+    ensure!(
+        buf[0..4] == JOURNAL_MAGIC,
+        "bad record magic {:02x?} — not a wasgd journal record",
+        &buf[0..4]
+    );
+    let version = u16::from_le_bytes([buf[4], buf[5]]);
+    ensure!(
+        version == JOURNAL_VERSION,
+        "journal schema v{version}, this build reads v{JOURNAL_VERSION}"
+    );
+    let kind = buf[6];
+    ensure!((1..=5).contains(&kind), "unknown journal event kind {kind}");
+    ensure!(buf[7] == 0, "reserved header byte is {:#04x}, expected 0", buf[7]);
+    let len = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]);
+    ensure!(
+        len <= MAX_RECORD_LEN,
+        "record payload of {len} bytes exceeds the {MAX_RECORD_LEN} byte cap"
+    );
+    let total = RECORD_HEADER_LEN + len as usize + 4;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let crc_stored =
+        u32::from_le_bytes([buf[total - 4], buf[total - 3], buf[total - 2], buf[total - 1]]);
+    let crc_actual = crc32(&buf[..RECORD_HEADER_LEN + len as usize]);
+    ensure!(
+        crc_stored == crc_actual,
+        "CRC mismatch (stored {crc_stored:#010x}, computed {crc_actual:#010x})"
+    );
+    let ev = decode_payload(kind, &buf[RECORD_HEADER_LEN..RECORD_HEADER_LEN + len as usize])?;
+    Ok(Some((ev, total)))
+}
+
+/// Anything events can be emitted into: a [`JournalWriter`] on disk, a
+/// [`MemorySink`] during replay.
+pub trait EventSink {
+    /// Record one event.
+    fn emit(&mut self, ev: &Event) -> Result<()>;
+}
+
+impl<S: EventSink + ?Sized> EventSink for &mut S {
+    fn emit(&mut self, ev: &Event) -> Result<()> {
+        (**self).emit(ev)
+    }
+}
+
+/// An append-only journal file. Every record is flushed on emit so a
+/// crashed run leaves at worst one truncated record at the tail — the
+/// case [`read_events`] reports as a [`Truncation`], not corruption.
+pub struct JournalWriter {
+    file: File,
+    path: PathBuf,
+}
+
+impl JournalWriter {
+    /// Start a fresh journal at `path` (truncating any existing file).
+    pub fn create(path: &Path) -> Result<Self> {
+        let file = File::create(path)
+            .with_context(|| format!("creating journal {}", path.display()))?;
+        Ok(Self { file, path: path.to_path_buf() })
+    }
+
+    /// Open `path` for appending (creating it if absent) — how a
+    /// resumed session stitches its segment onto the original journal.
+    pub fn append_to(path: &Path) -> Result<Self> {
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening journal {} for append", path.display()))?;
+        Ok(Self { file, path: path.to_path_buf() })
+    }
+
+    /// Where this journal lives.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl EventSink for JournalWriter {
+    fn emit(&mut self, ev: &Event) -> Result<()> {
+        let rec = encode_record(ev);
+        self.file
+            .write_all(&rec)
+            .and_then(|()| self.file.flush())
+            .with_context(|| format!("appending to journal {}", self.path.display()))
+    }
+}
+
+/// An in-memory sink — what `wasgd replay` attaches to the re-executed
+/// trainer so the fresh event stream can be diffed against the journal.
+#[derive(Debug, Default)]
+pub struct MemorySink {
+    /// Every event emitted, in order.
+    pub events: Vec<Event>,
+}
+
+impl EventSink for MemorySink {
+    fn emit(&mut self, ev: &Event) -> Result<()> {
+        self.events.push(ev.clone());
+        Ok(())
+    }
+}
+
+/// Where a journal stops being parseable: a record cut mid-write (crash
+/// or copy truncation). Everything before `offset` parsed cleanly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Truncation {
+    /// Byte offset of the first incomplete record.
+    pub offset: u64,
+    /// Index of the incomplete record (= number of complete records).
+    pub record: u64,
+}
+
+/// Parse a whole journal byte buffer. Corruption (bad magic / CRC /
+/// payload) is a hard error naming the record index and byte offset; a
+/// *trailing* incomplete record is reported as a [`Truncation`]
+/// alongside every complete event before it.
+pub fn read_events_bytes(buf: &[u8]) -> Result<(Vec<Event>, Option<Truncation>)> {
+    let mut events = Vec::new();
+    let mut off = 0usize;
+    loop {
+        let parsed = parse_record(&buf[off..])
+            .with_context(|| format!("journal record #{} at byte {off}", events.len()))?;
+        match parsed {
+            Some((ev, n)) => {
+                events.push(ev);
+                off += n;
+            }
+            None => {
+                if off == buf.len() {
+                    return Ok((events, None));
+                }
+                return Ok((
+                    events,
+                    Some(Truncation { offset: off as u64, record: events.len() as u64 }),
+                ));
+            }
+        }
+    }
+}
+
+/// [`read_events_bytes`] over a journal file.
+pub fn read_events(path: &Path) -> Result<(Vec<Event>, Option<Truncation>)> {
+    let buf = std::fs::read(path).with_context(|| format!("reading journal {}", path.display()))?;
+    read_events_bytes(&buf).with_context(|| format!("journal {}", path.display()))
+}
+
+/// The per-rank journal path a fabric worker writes when the session
+/// journals to `base`: `base.rank{r}` (the rendezvous/cohort journal
+/// keeps `base` itself).
+pub fn rank_journal_path(base: &Path, rank: usize) -> PathBuf {
+    PathBuf::from(format!("{}.rank{rank}", base.display()))
+}
+
+/// One human-readable timeline line per event — shared by
+/// `wasgd replay --inspect` and `wasgd watch`.
+pub fn format_event(ev: &Event) -> String {
+    fn rank_name(rank: u32) -> String {
+        if rank == RANK_COHORT {
+            "cohort".to_string()
+        } else {
+            rank.to_string()
+        }
+    }
+    match ev {
+        Event::RunStarted { rank, p, seed, encoding, git_rev, config_json, resume } => format!(
+            "RunStarted        scope={} p={p} seed={seed} encoding={} rev={git_rev} \
+             resume={} vector(s) config={} B",
+            rank_name(*rank),
+            encoding.name(),
+            resume.len(),
+            config_json.len()
+        ),
+        Event::PanelDigest { round, rank, digest, loss, comm_bytes } => format!(
+            "PanelDigest       round={round} rank={rank} digest={digest:#018x} loss={loss} \
+             comm_bytes={comm_bytes}"
+        ),
+        Event::CheckpointWritten { steps, digest, path } => format!(
+            "CheckpointWritten steps={steps} digest={digest:#018x} path={path}"
+        ),
+        Event::Membership { epoch, rank, change } => format!(
+            "Membership        epoch={epoch} rank={} {}",
+            rank_name(*rank),
+            change.name()
+        ),
+        Event::RunFinished { steps, rounds, final_digest } => format!(
+            "RunFinished       steps={steps} rounds={rounds} final_digest={final_digest:#018x}"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // The CRC-32/IEEE check value (zlib, PNG, 802.3).
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn fnv64_known_vectors() {
+        assert_eq!(fnv64(b""), Fnv64::OFFSET);
+        assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn digest_params_matches_wire_bytes() {
+        // digest_params over θ == fnv64 over the f32 wire body — the
+        // identity the tcp relay's numerics-free digesting relies on.
+        let theta = vec![1.5f32, -0.0, f32::NAN, 2.25e-17];
+        let bytes: Vec<u8> = theta.iter().flat_map(|x| x.to_le_bytes()).collect();
+        assert_eq!(digest_params(&theta), fnv64(&bytes));
+        // And the cohort digest chains rank order.
+        let cohort = [vec![1.0f32, 2.0], vec![3.0f32]];
+        let flat: Vec<f32> = cohort.iter().flatten().copied().collect();
+        assert_eq!(digest_cohort(cohort.iter().map(|v| v.as_slice())), digest_params(&flat));
+    }
+
+    #[test]
+    fn canonical_comm_bytes_is_round_times_f32_panel() {
+        let d = 1234;
+        assert_eq!(
+            canonical_comm_bytes(3, d),
+            3 * Panel::wire_len(WireEncoding::F32, d) as u64
+        );
+        assert_eq!(canonical_comm_bytes(0, d), 0);
+    }
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::RunStarted {
+                rank: RANK_COHORT,
+                p: 4,
+                seed: 17,
+                encoding: WireEncoding::F32,
+                git_rev: "abc1234".into(),
+                config_json: "{\"p\": 4}".into(),
+                resume: vec![vec![1.0, f32::NAN], vec![-0.0, f32::INFINITY]],
+            },
+            Event::Membership { epoch: 0, rank: 0, change: MembershipChange::Joined },
+            Event::PanelDigest {
+                round: 1,
+                rank: 2,
+                digest: 0xdead_beef_cafe_f00d,
+                loss: f32::NAN,
+                comm_bytes: 16640,
+            },
+            Event::CheckpointWritten { steps: 32, digest: 7, path: "/tmp/ck".into() },
+            Event::RunFinished { steps: 32, rounds: 4, final_digest: 99 },
+        ]
+    }
+
+    #[test]
+    fn every_event_roundtrips_bitwise() {
+        for ev in sample_events() {
+            let rec = encode_record(&ev);
+            let (back, n) = parse_record(&rec).unwrap().expect("complete record");
+            assert_eq!(n, rec.len());
+            assert_eq!(back, ev, "{} did not round-trip", ev.name());
+        }
+    }
+
+    #[test]
+    fn read_events_roundtrip_and_truncation() {
+        let evs = sample_events();
+        let mut buf = Vec::new();
+        for ev in &evs {
+            buf.extend_from_slice(&encode_record(ev));
+        }
+        let (back, trunc) = read_events_bytes(&buf).unwrap();
+        assert_eq!(back, evs);
+        assert!(trunc.is_none());
+
+        // Cut mid-final-record: complete prefix + truncation marker.
+        let last_len = encode_record(evs.last().unwrap()).len();
+        let cut = buf.len() - last_len + 3;
+        let (back, trunc) = read_events_bytes(&buf[..cut]).unwrap();
+        assert_eq!(back.len(), evs.len() - 1);
+        let t = trunc.expect("mid-record cut must be reported");
+        assert_eq!(t.record, (evs.len() - 1) as u64);
+        assert_eq!(t.offset as usize, buf.len() - last_len);
+    }
+
+    #[test]
+    fn corruption_is_a_pointed_error() {
+        let mut buf = Vec::new();
+        for ev in sample_events() {
+            buf.extend_from_slice(&encode_record(&ev));
+        }
+        // Flip one payload bit in record #2.
+        let r0 = encode_record(&sample_events()[0]).len();
+        let r1 = encode_record(&sample_events()[1]).len();
+        let mut bad = buf.clone();
+        bad[r0 + r1 + RECORD_HEADER_LEN + 2] ^= 0x10;
+        let err = read_events_bytes(&bad).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("record #2"), "error must name the record: {msg}");
+        assert!(msg.contains("CRC"), "bit flips surface as CRC mismatches: {msg}");
+    }
+
+    #[test]
+    fn journal_writer_appends_and_reads_back() {
+        let path = std::env::temp_dir()
+            .join(format!("wasgd_journal_unit_{}.jrn", std::process::id()));
+        let evs = sample_events();
+        {
+            let mut w = JournalWriter::create(&path).unwrap();
+            for ev in &evs[..3] {
+                w.emit(ev).unwrap();
+            }
+        }
+        {
+            let mut w = JournalWriter::append_to(&path).unwrap();
+            for ev in &evs[3..] {
+                w.emit(ev).unwrap();
+            }
+        }
+        let (back, trunc) = read_events(&path).unwrap();
+        assert_eq!(back, evs);
+        assert!(trunc.is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rank_paths_are_disjoint_from_base() {
+        let base = Path::new("/tmp/run.jrn");
+        assert_eq!(rank_journal_path(base, 0), Path::new("/tmp/run.jrn.rank0"));
+        assert_eq!(rank_journal_path(base, 3), Path::new("/tmp/run.jrn.rank3"));
+    }
+
+    #[test]
+    fn format_event_is_stable_enough_to_grep() {
+        for ev in sample_events() {
+            let line = format_event(&ev);
+            assert!(line.starts_with(ev.name()), "{line}");
+        }
+    }
+}

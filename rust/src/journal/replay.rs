@@ -1,0 +1,512 @@
+//! `wasgd replay`: re-execute a journaled run from its embedded wire
+//! config and verify every recorded digest bit for bit.
+//!
+//! The verification contract rests on the repo's determinism pillars:
+//!
+//! * the simulated [`Trainer`] and both real fabrics (threaded, tcp)
+//!   run the *same* loop and produce identical per-round panels on
+//!   lossless f32 exchanges (`tests/fabric_e2e.rs`), so a fresh
+//!   `--fabric sim` re-execution is a valid oracle for any f32 journal
+//!   regardless of which substrate wrote it;
+//! * everything stochastic derives from the seed in the wire config —
+//!   replay does not need the original data shuffle, checkpoint files,
+//!   or cluster, only the journal;
+//! * the compute model's `sample_step` is purely *multiplicative* in
+//!   `step_time_s`, so replay pinning a uniform small step time rescales
+//!   every virtual clock by the same factor and preserves the async
+//!   quorum ordering — journaled `wasgd+async` sim runs replay exactly
+//!   even though the original used a calibrated step time;
+//! * evaluation draws from its own child RNG stream and charges no
+//!   simulated time, so replay can disable it without perturbing the
+//!   training numerics.
+//!
+//! Scope limits are surfaced as pointed errors, never wrong answers: a
+//! `qi8` session records no digests (`--inspect` still works); a
+//! *worker-scope* journal of a resumed session is not self-contained
+//! (the worker only ever saw its own resume vector) — the
+//! rendezvous-side journal, which embeds all p vectors, is the
+//! verifiable one.
+//!
+//! [`Trainer`]: crate::coordinator::Trainer
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::cluster::wire::WireEncoding;
+use crate::config::{ExperimentConfig, FabricKind};
+use crate::coordinator::Trainer;
+use crate::data::source::DataPipeline;
+use crate::runtime::load_backend;
+
+use super::{digest_params, format_event, read_events, Event, MemorySink, Truncation, RANK_COHORT};
+
+/// Knobs for a replay run.
+#[derive(Debug, Default)]
+pub struct ReplayOptions {
+    /// Override the journal's `data_dir` — for verifying a journal on a
+    /// machine whose real dataset files live elsewhere.
+    pub data_dir: Option<PathBuf>,
+}
+
+/// The `RunStarted` header of one journal segment.
+#[derive(Clone, Debug)]
+pub struct SegmentHeader {
+    /// Writer's vantage point ([`RANK_COHORT`] or a worker rank).
+    pub rank: u32,
+    /// Cohort size.
+    pub p: u32,
+    /// The run's base seed.
+    pub seed: u64,
+    /// Panel encoding of the journaled session.
+    pub encoding: WireEncoding,
+    /// Git revision at record time.
+    pub git_rev: String,
+    /// The embedded wire config.
+    pub config_json: String,
+    /// Resume vectors (empty for a fresh start).
+    pub resume: Vec<Vec<f32>>,
+}
+
+/// One `PanelDigest` row.
+#[derive(Clone, Copy, Debug)]
+pub struct DigestRow {
+    /// 1-based collective round.
+    pub round: u64,
+    /// The digested rank.
+    pub rank: u32,
+    /// FNV-1a 64 of the rank's contributed θ.
+    pub digest: u64,
+    /// The rank's windowed loss energy (bit-compared).
+    pub loss: f32,
+    /// Canonical cumulative communication bytes.
+    pub comm_bytes: u64,
+}
+
+/// A segment's `RunFinished` row.
+#[derive(Clone, Copy, Debug)]
+pub struct Finish {
+    /// Local steps per worker.
+    pub steps: u64,
+    /// Collective rounds crossed.
+    pub rounds: u64,
+    /// Final digest (cohort- or worker-scope, per the header's rank).
+    pub final_digest: u64,
+}
+
+/// One run segment: a `RunStarted` and everything recorded under it. A
+/// stitched journal (resumed sessions append) holds several, each
+/// self-contained and independently verifiable.
+#[derive(Clone, Debug)]
+pub struct Segment {
+    /// The segment's `RunStarted` header.
+    pub header: SegmentHeader,
+    /// Per-round digests, in emission order (round asc, rank asc).
+    pub digests: Vec<DigestRow>,
+    /// The `RunFinished`, when the segment completed.
+    pub finished: Option<Finish>,
+    /// Index of the segment's first record in the journal.
+    pub first_record: u64,
+}
+
+/// What a successful `--verify` proved.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VerifyReport {
+    /// Run segments re-executed.
+    pub segments: u64,
+    /// Complete collective rounds verified.
+    pub rounds: u64,
+    /// Individual panel digests compared bit-exactly.
+    pub digests: u64,
+    /// Local SGD steps re-executed per worker (summed over segments).
+    pub steps: u64,
+}
+
+impl fmt::Display for VerifyReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "journal verified: {} segment(s), {} round(s), {} digest(s) bit-exact, \
+             {} step(s) re-executed",
+            self.segments, self.rounds, self.digests, self.steps
+        )
+    }
+}
+
+/// Group a journal's event stream into run [`Segment`]s. Events between
+/// a segment's `RunFinished` and the next `RunStarted` (a
+/// `CheckpointWritten` appended by the CLI, say) stay with the finished
+/// segment; digests after a finish, or any event before the first
+/// `RunStarted`, are malformed.
+pub fn segments(events: &[Event]) -> Result<Vec<Segment>> {
+    let mut segs: Vec<Segment> = Vec::new();
+    for (i, ev) in events.iter().enumerate() {
+        match ev {
+            Event::RunStarted { rank, p, seed, encoding, git_rev, config_json, resume } => {
+                segs.push(Segment {
+                    header: SegmentHeader {
+                        rank: *rank,
+                        p: *p,
+                        seed: *seed,
+                        encoding: *encoding,
+                        git_rev: git_rev.clone(),
+                        config_json: config_json.clone(),
+                        resume: resume.clone(),
+                    },
+                    digests: Vec::new(),
+                    finished: None,
+                    first_record: i as u64,
+                });
+            }
+            Event::PanelDigest { round, rank, digest, loss, comm_bytes } => {
+                let seg = segs
+                    .last_mut()
+                    .ok_or_else(|| anyhow!("record #{i}: PanelDigest before any RunStarted"))?;
+                ensure!(
+                    seg.finished.is_none(),
+                    "record #{i}: PanelDigest after the segment's RunFinished"
+                );
+                seg.digests.push(DigestRow {
+                    round: *round,
+                    rank: *rank,
+                    digest: *digest,
+                    loss: *loss,
+                    comm_bytes: *comm_bytes,
+                });
+            }
+            Event::RunFinished { steps, rounds, final_digest } => {
+                let seg = segs
+                    .last_mut()
+                    .ok_or_else(|| anyhow!("record #{i}: RunFinished before any RunStarted"))?;
+                ensure!(seg.finished.is_none(), "record #{i}: duplicate RunFinished");
+                seg.finished =
+                    Some(Finish { steps: *steps, rounds: *rounds, final_digest: *final_digest });
+            }
+            Event::CheckpointWritten { .. } | Event::Membership { .. } => {
+                ensure!(!segs.is_empty(), "record #{i}: event before any RunStarted");
+            }
+        }
+    }
+    Ok(segs)
+}
+
+struct SegStats {
+    rounds: u64,
+    digests: u64,
+    steps: u64,
+}
+
+/// Re-execute every segment of the journal at `path` and verify each
+/// recorded digest bit for bit. Digest verification always runs first;
+/// only then does an incomplete tail (truncated mid-record, or a
+/// segment that never reached `RunFinished`) turn into an error — so
+/// the error message can state exactly how many complete rounds *did*
+/// verify before the cut.
+pub fn verify(path: &Path, opts: &ReplayOptions) -> Result<VerifyReport> {
+    let (events, trunc) = read_events(path)?;
+    let segs = segments(&events).with_context(|| format!("grouping journal {}", path.display()))?;
+    ensure!(
+        !segs.is_empty(),
+        "journal {} holds no RunStarted record — nothing to replay",
+        path.display()
+    );
+    let mut report = VerifyReport::default();
+    let last = segs.len() - 1;
+    for (i, seg) in segs.iter().enumerate() {
+        let stats = verify_segment(seg, opts).with_context(|| {
+            format!("segment #{i} (from journal record #{})", seg.first_record)
+        })?;
+        report.segments += 1;
+        report.rounds += stats.rounds;
+        report.digests += stats.digests;
+        report.steps += stats.steps;
+        if seg.finished.is_none() {
+            if i == last {
+                if let Some(Truncation { offset, record }) = trunc {
+                    bail!(
+                        "journal {} is truncated mid-record at byte {offset} (record \
+                         #{record}): verified {} complete round(s) of segment #{i} \
+                         bit-exactly before the cut",
+                        path.display(),
+                        stats.rounds
+                    );
+                }
+                bail!(
+                    "journal {} ends without RunFinished — a strict prefix of a run \
+                     (verified {} complete round(s) of segment #{i} bit-exactly first)",
+                    path.display(),
+                    stats.rounds
+                );
+            }
+            bail!(
+                "segment #{i} of journal {} ends without RunFinished mid-file — the \
+                 resumed session appended onto an unfinished run",
+                path.display()
+            );
+        }
+    }
+    Ok(report)
+}
+
+fn verify_segment(seg: &Segment, opts: &ReplayOptions) -> Result<SegStats> {
+    let h = &seg.header;
+    ensure!(
+        h.encoding == WireEncoding::F32,
+        "the session used the lossy {} panel encoding, which records no digests and \
+         cannot replay bit-exactly; `wasgd replay --inspect` still shows the timeline",
+        h.encoding.name()
+    );
+    if h.rank != RANK_COHORT {
+        ensure!(
+            h.resume.is_empty(),
+            "this is rank {}'s journal of a RESUMED session — a worker only knows its \
+             own resume vector, so the segment is not self-contained; replay the \
+             rendezvous-side journal, which embeds all {} checkpoint vectors",
+            h.rank,
+            h.p
+        );
+    }
+    let mut cfg = ExperimentConfig::from_wire_json_as(&h.config_json, FabricKind::Sim)
+        .context("parsing the embedded wire config")?;
+    ensure!(
+        cfg.seed == h.seed,
+        "RunStarted records seed {} but the embedded config says {}",
+        h.seed,
+        cfg.seed
+    );
+    if let Some(dir) = &opts.data_dir {
+        cfg.data_dir = Some(dir.clone());
+    }
+    // Replay overrides, all provably outside the training numerics:
+    // evaluation uses its own RNG stream and charges no simulated time;
+    // `sample_step` is multiplicative in `step_time_s`, so one uniform
+    // value rescales every virtual clock identically (preserving the
+    // async quorum order the original calibrated run produced).
+    cfg.eval_every = usize::MAX;
+    cfg.eval_batches = 1;
+    cfg.compute.step_time_s = 1e-3;
+    cfg.journal = None;
+    let local_rev = crate::bench::git_rev();
+    if local_rev != h.git_rev {
+        eprintln!(
+            "replay: journal was recorded at rev {} (this build: {local_rev}); the \
+             digest comparison is still binding",
+            h.git_rev
+        );
+    }
+
+    let max_round = seg.digests.iter().map(|d| d.round).max().unwrap_or(0);
+    let total_steps = match &seg.finished {
+        Some(f) => f.steps as usize,
+        // Truncated tail: re-run through the last journaled boundary.
+        None => max_round as usize * cfg.tau,
+    };
+
+    let engine = load_backend(&cfg)?;
+    let dataset = DataPipeline::from_config(&cfg)?.load(engine.manifest())?;
+    let mut mem = MemorySink::default();
+    let out = {
+        let mut tr = Trainer::new(cfg.clone(), engine.as_ref(), &dataset)?;
+        if !h.resume.is_empty() {
+            tr.resume_workers(&h.resume)?;
+        }
+        tr.set_journal(Box::new(&mut mem));
+        tr.run_for(total_steps)?
+    };
+
+    let mut replayed: Vec<DigestRow> = Vec::new();
+    let mut replayed_finish: Option<Finish> = None;
+    for ev in &mem.events {
+        match ev {
+            Event::PanelDigest { round, rank, digest, loss, comm_bytes } => {
+                replayed.push(DigestRow {
+                    round: *round,
+                    rank: *rank,
+                    digest: *digest,
+                    loss: *loss,
+                    comm_bytes: *comm_bytes,
+                });
+            }
+            Event::RunFinished { steps, rounds, final_digest } => {
+                replayed_finish =
+                    Some(Finish { steps: *steps, rounds: *rounds, final_digest: *final_digest });
+            }
+            _ => {}
+        }
+    }
+
+    // The journal's digests must be a prefix of the replay's (equal when
+    // the segment finished; a truncated tail may have been cut mid-round
+    // while the replay always completes whole rounds).
+    ensure!(
+        replayed.len() >= seg.digests.len(),
+        "replay produced only {} digest(s), journal records {}",
+        replayed.len(),
+        seg.digests.len()
+    );
+    if seg.finished.is_some() {
+        ensure!(
+            replayed.len() == seg.digests.len(),
+            "replay produced {} digest(s), the finished journal records {}",
+            replayed.len(),
+            seg.digests.len()
+        );
+    }
+    for (i, (want, got)) in seg.digests.iter().zip(&replayed).enumerate() {
+        ensure!(
+            want.round == got.round && want.rank == got.rank,
+            "digest #{i}: journal says round {} rank {}, replay emitted round {} rank {}",
+            want.round,
+            want.rank,
+            got.round,
+            got.rank
+        );
+        ensure!(
+            want.digest == got.digest,
+            "θ digest mismatch at round {} rank {}: journal {:#018x}, replay {:#018x}",
+            want.round,
+            want.rank,
+            want.digest,
+            got.digest
+        );
+        ensure!(
+            want.loss.to_bits() == got.loss.to_bits(),
+            "loss mismatch at round {} rank {}: journal {} ({:#010x}), replay {} ({:#010x})",
+            want.round,
+            want.rank,
+            want.loss,
+            want.loss.to_bits(),
+            got.loss,
+            got.loss.to_bits()
+        );
+        ensure!(
+            want.comm_bytes == got.comm_bytes,
+            "comm_bytes mismatch at round {} rank {}: journal {}, replay {}",
+            want.round,
+            want.rank,
+            want.comm_bytes,
+            got.comm_bytes
+        );
+    }
+
+    let mut steps_verified = 0;
+    if let Some(f) = &seg.finished {
+        let rf = replayed_finish.ok_or_else(|| anyhow!("replay never emitted RunFinished"))?;
+        ensure!(
+            rf.steps == f.steps,
+            "journal records {} step(s) but replay ran {}",
+            f.steps,
+            rf.steps
+        );
+        ensure!(
+            rf.rounds == f.rounds,
+            "journal records {} round(s) but replay crossed {}",
+            f.rounds,
+            rf.rounds
+        );
+        if h.rank == RANK_COHORT {
+            ensure!(
+                rf.final_digest == f.final_digest,
+                "final cohort digest mismatch: journal {:#018x}, replay {:#018x}",
+                f.final_digest,
+                rf.final_digest
+            );
+        } else {
+            let r = h.rank as usize;
+            ensure!(
+                r < out.final_workers.len(),
+                "journal claims rank {r} but the replayed cohort has {} workers",
+                out.final_workers.len()
+            );
+            let d = digest_params(&out.final_workers[r]);
+            ensure!(
+                d == f.final_digest,
+                "rank {r} final θ digest mismatch: journal {:#018x}, replay {d:#018x}",
+                f.final_digest
+            );
+        }
+        steps_verified = f.steps;
+    }
+
+    Ok(SegStats {
+        rounds: seg.digests.len() as u64 / u64::from(h.p.max(1)),
+        digests: seg.digests.len() as u64,
+        steps: steps_verified,
+    })
+}
+
+/// Render the journal at `path` as a numbered human-readable timeline
+/// (`wasgd replay --inspect`). Truncation is reported, not fatal.
+pub fn inspect(path: &Path) -> Result<String> {
+    let (events, trunc) = read_events(path)?;
+    let mut out = String::new();
+    for (i, ev) in events.iter().enumerate() {
+        out.push_str(&format!("{i:>6}  {}\n", format_event(ev)));
+    }
+    if let Some(Truncation { offset, record }) = trunc {
+        out.push_str(&format!(
+            "        [journal truncated mid-record at byte {offset} (record #{record})]\n"
+        ));
+    }
+    let runs = events.iter().filter(|e| matches!(e, Event::RunStarted { .. })).count();
+    out.push_str(&format!("{} record(s), {} run segment(s)\n", events.len(), runs));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::MembershipChange;
+    use super::*;
+
+    fn started(rank: u32) -> Event {
+        Event::RunStarted {
+            rank,
+            p: 2,
+            seed: 1,
+            encoding: WireEncoding::F32,
+            git_rev: "r".into(),
+            config_json: "{}".into(),
+            resume: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn segments_group_and_tolerate_trailing_checkpoints() {
+        let evs = vec![
+            started(RANK_COHORT),
+            Event::Membership { epoch: 0, rank: 0, change: MembershipChange::Joined },
+            Event::PanelDigest { round: 1, rank: 0, digest: 1, loss: 0.5, comm_bytes: 10 },
+            Event::RunFinished { steps: 8, rounds: 1, final_digest: 2 },
+            Event::CheckpointWritten { steps: 8, digest: 2, path: "ck".into() },
+            started(RANK_COHORT),
+            Event::PanelDigest { round: 1, rank: 0, digest: 3, loss: 0.25, comm_bytes: 10 },
+        ];
+        let segs = segments(&evs).unwrap();
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[0].digests.len(), 1);
+        assert!(segs[0].finished.is_some());
+        assert_eq!(segs[0].first_record, 0);
+        assert_eq!(segs[1].first_record, 5);
+        assert_eq!(segs[1].digests.len(), 1);
+        assert!(segs[1].finished.is_none(), "second segment is an unfinished tail");
+    }
+
+    #[test]
+    fn segments_reject_events_before_any_run() {
+        let evs =
+            vec![Event::PanelDigest { round: 1, rank: 0, digest: 1, loss: 0.5, comm_bytes: 1 }];
+        let err = segments(&evs).unwrap_err();
+        assert!(format!("{err}").contains("before any RunStarted"));
+    }
+
+    #[test]
+    fn segments_reject_digests_after_finish() {
+        let evs = vec![
+            started(RANK_COHORT),
+            Event::RunFinished { steps: 8, rounds: 1, final_digest: 2 },
+            Event::PanelDigest { round: 2, rank: 0, digest: 1, loss: 0.5, comm_bytes: 1 },
+        ];
+        assert!(segments(&evs).is_err());
+    }
+}

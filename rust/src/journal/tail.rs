@@ -1,0 +1,133 @@
+//! Incremental journal tailing — the engine behind `wasgd watch`.
+//!
+//! A [`WatchState`] remembers how far into a journal file it has read
+//! and, on each [`WatchState::poll`], picks up whatever bytes were
+//! appended since, draining every *complete* record and buffering the
+//! tail of a record still being written. `tail -F` semantics: a journal
+//! that does not exist yet simply yields no events (the run may not
+//! have opened it), while genuine corruption is a hard error.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{parse_record, Event};
+
+/// Cursor over a growing journal file.
+#[derive(Debug, Default)]
+pub struct WatchState {
+    offset: u64,
+    pending: Vec<u8>,
+    records: u64,
+}
+
+impl WatchState {
+    /// A fresh cursor at the start of the journal.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Complete records drained so far.
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    /// Read any newly appended bytes from `path` and return the
+    /// complete events they finish. An absent file yields `Ok(vec![])`;
+    /// corrupt bytes are an error naming the offending record.
+    pub fn poll(&mut self, path: &Path) -> Result<Vec<Event>> {
+        let mut file = match File::open(path) {
+            Ok(f) => f,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => {
+                return Err(e).with_context(|| format!("opening journal {}", path.display()))
+            }
+        };
+        file.seek(SeekFrom::Start(self.offset))
+            .with_context(|| format!("seeking journal {}", path.display()))?;
+        let n = file
+            .read_to_end(&mut self.pending)
+            .with_context(|| format!("reading journal {}", path.display()))?;
+        self.offset += n as u64;
+
+        let mut events = Vec::new();
+        loop {
+            let parsed = parse_record(&self.pending)
+                .with_context(|| format!("journal record #{}", self.records))?;
+            match parsed {
+                Some((ev, consumed)) => {
+                    events.push(ev);
+                    self.records += 1;
+                    self.pending.drain(..consumed);
+                }
+                None => return Ok(events),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{encode_record, MembershipChange};
+    use super::*;
+    use std::io::Write;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("wasgd_tail_{name}_{}.jrn", std::process::id()))
+    }
+
+    #[test]
+    fn missing_file_yields_nothing() {
+        let mut w = WatchState::new();
+        let path = tmp("missing");
+        std::fs::remove_file(&path).ok();
+        assert!(w.poll(&path).unwrap().is_empty());
+        assert_eq!(w.records(), 0);
+    }
+
+    #[test]
+    fn drains_records_as_they_are_appended() {
+        let path = tmp("grow");
+        let ev1 = Event::Membership { epoch: 0, rank: 1, change: MembershipChange::Joined };
+        let ev2 = Event::RunFinished { steps: 8, rounds: 2, final_digest: 42 };
+        let r1 = encode_record(&ev1);
+        let r2 = encode_record(&ev2);
+
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(&r1).unwrap();
+        // ...and the first half of the next record, mid-write.
+        f.write_all(&r2[..r2.len() / 2]).unwrap();
+        f.flush().unwrap();
+
+        let mut w = WatchState::new();
+        let got = w.poll(&path).unwrap();
+        assert_eq!(got, vec![ev1]);
+        assert_eq!(w.records(), 1);
+
+        // Nothing new: the half-record stays buffered, not re-read.
+        assert!(w.poll(&path).unwrap().is_empty());
+
+        f.write_all(&r2[r2.len() / 2..]).unwrap();
+        f.flush().unwrap();
+        let got = w.poll(&path).unwrap();
+        assert_eq!(got, vec![ev2]);
+        assert_eq!(w.records(), 2);
+
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_surfaces_as_an_error() {
+        let path = tmp("corrupt");
+        let mut rec = encode_record(&Event::RunFinished { steps: 1, rounds: 1, final_digest: 7 });
+        let mid = rec.len() - 6; // payload byte: CRC must catch it
+        rec[mid] ^= 0x01;
+        std::fs::write(&path, &rec).unwrap();
+        let mut w = WatchState::new();
+        let err = w.poll(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("record #0"));
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -97,6 +97,8 @@
 //! | [`data`]      | pluggable `DataSource` pipeline: synth generator + real     |
 //! |               | MNIST/CIFAR file loaders (`--data-dir`), normalisation,     |
 //! |               | rank-stable sharding, streaming batch planner, §3.4 orders  |
+//! | [`journal`]   | event-sourced run journal: CRC-framed on-disk event log,    |
+//! |               | FNV-1a 64 panel digests, bit-exact `wasgd replay` verifier  |
 //! | [`metrics`]   | run records, CSV sinks, per-peer comm byte counters         |
 //! | [`bench`]     | micro-bench harness + the `BENCH_native.json` perf trajectory|
 //!
@@ -124,6 +126,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod harness;
+pub mod journal;
 pub mod kernels;
 pub mod linalg;
 pub mod metrics;

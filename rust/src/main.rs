@@ -7,6 +7,8 @@
 //! wasgd serve --listen 0.0.0.0:7777 --workers 4 # rendezvous node
 //! wasgd worker --connect host:7777              # one remote worker
 //! wasgd calibrate --variant mnist_mlp           # measure step time
+//! wasgd run --dataset tiny --journal run.jrn    # event-sourced journal
+//! wasgd replay run.jrn                          # bit-exact verification
 //! wasgd list                                    # algorithms & datasets
 //! ```
 
@@ -23,6 +25,9 @@ use wasgd::config::{AlgoKind, BackendKind, ExperimentConfig, FabricKind};
 use wasgd::coordinator::run_experiment_full;
 use wasgd::data::source::{DataPipeline, SourceKind};
 use wasgd::data::synth::DatasetKind;
+use wasgd::journal::replay::{self, ReplayOptions};
+use wasgd::journal::tail::WatchState;
+use wasgd::journal::{digest_cohort, format_event, Event, EventSink as _, JournalWriter};
 use wasgd::metrics::{format_table, write_csv};
 use wasgd::runtime::{backend_for_variant, Backend as _};
 use wasgd::util::Args;
@@ -38,12 +43,15 @@ USAGE:
                   [--data-dir DIR] [--source auto|synth|idx|cifar]
                   [--fabric sim|tcp] [--encoding f32|qi8]
                   [--target-loss F] [--out FILE.csv] [--save-checkpoint DIR]
-                  [--resume DIR]
+                  [--resume DIR] [--journal FILE]
   wasgd compare   (same flags; runs every algorithm on the sim fabric)
   wasgd serve     --listen ADDR [--workers P] [--encoding f32|qi8]
-                  [--save-checkpoint DIR] [--resume DIR] (+ run flags)
+                  [--save-checkpoint DIR] [--resume DIR] [--journal FILE]
+                  (+ run flags)
   wasgd worker    --connect ADDR [--threads N] [--artifacts DIR]
-                  [--data-dir DIR]
+                  [--data-dir DIR] [--journal BASE]
+  wasgd replay    JOURNAL [--inspect] [--data-dir DIR]
+  wasgd watch     JOURNAL
   wasgd calibrate [--variant V] [--artifacts DIR] [--backend B] [--reps N]
                   [--threads N]
   wasgd list
@@ -78,6 +86,16 @@ fabrics (--fabric, default sim):
         — no center variable. With the default lossless f32 encoding the
         final parameters match --fabric sim bit for bit; --encoding qi8
         quantises panels to i8 (~4x less traffic, lossy).
+
+run journal (--journal, see docs/JOURNAL.md):
+  --journal FILE appends a CRC-framed event log of the run: the full wire
+  config + seed, one FNV-1a 64 digest of every rank's θ at every
+  collective round, checkpoints, and the final cohort digest. The sim
+  trainer and both real fabrics journal the identical stream on lossless
+  f32 panels. On `worker`, --journal BASE writes BASE.rank<r>. Verify a
+  journal bit for bit with `wasgd replay JOURNAL` (re-executes from the
+  embedded config), print its timeline with `replay --inspect`, or tail
+  a live run with `wasgd watch JOURNAL`.
 
 backend → variant support:
   native  all built-in presets, MLP and CNN, zero artifacts:
@@ -138,6 +156,7 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     cfg.epochs = args.num_flag("epochs", 2.0f64)?;
     cfg.seed = args.num_flag("seed", 42u64)?;
     cfg.target_loss = args.opt_num::<f64>("target-loss")?;
+    cfg.journal = args.opt_str("journal").map(PathBuf::from);
     Ok(cfg)
 }
 
@@ -177,6 +196,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         eprintln!("{note}");
     }
     cfg.source = pipeline.source_kind();
+    if let Some(jp) = &cfg.journal {
+        eprintln!("journaling every collective round to {}", jp.display());
+    }
     eprintln!(
         "running {} on {} [{}] (p={}, τ={}, β={}, ã={}, m={}, η={})",
         cfg.algo.name(),
@@ -206,8 +228,24 @@ fn cmd_run(args: &Args) -> Result<()> {
         eprintln!("wrote {path}");
     }
     if let Some(dir) = ckpt_dir {
-        out.to_checkpoint().save(std::path::Path::new(&dir))?;
+        let ck = out.to_checkpoint();
+        ck.save(std::path::Path::new(&dir))?;
+        journal_checkpoint(&cfg, &ck, Path::new(&dir))?;
         eprintln!("checkpoint saved to {dir}");
+    }
+    Ok(())
+}
+
+/// When the run is journaled, append a `CheckpointWritten` record so the
+/// event log also names the durable artifacts the run produced.
+fn journal_checkpoint(cfg: &ExperimentConfig, ck: &Checkpoint, dir: &Path) -> Result<()> {
+    if let Some(jp) = &cfg.journal {
+        let mut w = JournalWriter::append_to(jp)?;
+        w.emit(&Event::CheckpointWritten {
+            steps: ck.iteration,
+            digest: digest_cohort(ck.workers.iter().map(|v| v.as_slice())),
+            path: dir.display().to_string(),
+        })?;
     }
     Ok(())
 }
@@ -232,22 +270,26 @@ fn cmd_run_tcp(cfg: ExperimentConfig, args: &Args) -> Result<()> {
         cfg.p,
         encoding.name()
     );
-    let opts = ServeOptions { cfg: cfg.clone(), encoding, resume };
+    let opts = ServeOptions { cfg: cfg.clone(), encoding, resume, journal: cfg.journal.clone() };
     let server = std::thread::spawn(move || tcp::serve(listener, &opts));
 
     let exe = std::env::current_exe().context("locating the wasgd binary for workers")?;
     let mut children = Vec::with_capacity(cfg.p);
     for _ in 0..cfg.p {
-        let child = std::process::Command::new(&exe)
-            .arg("worker")
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("worker")
             .arg("--connect")
             .arg(addr.to_string())
             .arg("--threads")
             .arg(cfg.threads.to_string())
             .arg("--artifacts")
-            .arg(&cfg.artifacts_root)
-            .spawn()
-            .context("spawning a worker process")?;
+            .arg(&cfg.artifacts_root);
+        if let Some(jp) = &cfg.journal {
+            // Each worker journals its own vantage point next to the
+            // rendezvous log, suffixed `.rank<r>` once its rank is known.
+            cmd.arg("--journal").arg(jp);
+        }
+        let child = cmd.spawn().context("spawning a worker process")?;
         children.push(child);
     }
 
@@ -321,7 +363,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.dataset.name(),
         encoding.name()
     );
-    let opts = ServeOptions { cfg: cfg.clone(), encoding, resume };
+    let opts = ServeOptions { cfg: cfg.clone(), encoding, resume, journal: cfg.journal.clone() };
     let outcome = tcp::serve(listener, &opts)?;
     print_serve_summary(&cfg, encoding, &outcome);
     if let Some(dir) = ckpt_dir {
@@ -338,8 +380,9 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let threads = args.opt_num::<usize>("threads")?;
     let artifacts = args.opt_str("artifacts").map(PathBuf::from);
     let data_dir = args.opt_str("data-dir").map(PathBuf::from);
+    let journal = args.opt_str("journal").map(PathBuf::from);
     args.finish()?;
-    let out = tcp::run_remote_worker(&addr, artifacts, threads, data_dir)?;
+    let out = tcp::run_remote_worker(&addr, artifacts, threads, data_dir, journal)?;
     eprintln!(
         "worker rank {} done: {} steps, {} boundaries, mean energy {:.4}, \
          sent {} B / received {} B",
@@ -381,13 +424,17 @@ fn save_fabric_checkpoint(cfg: &ExperimentConfig, out: &ServeOutcome, dir: &Path
         sim_time_s: 0.0,
         workers: out.finals.iter().map(|(_, theta)| theta.clone()).collect(),
     };
-    ck.save(dir)
+    ck.save(dir)?;
+    journal_checkpoint(cfg, &ck, dir)
 }
 
 fn cmd_compare(args: &Args) -> Result<()> {
     let base = config_from(args)?;
     if base.fabric != FabricKind::Sim {
         bail!("compare sweeps every scheme through the simulated trainer; drop --fabric tcp");
+    }
+    if base.journal.is_some() {
+        bail!("--journal records one run's event stream; compare sweeps every scheme — drop it");
     }
     let out_path = args.opt_str("out");
     args.finish()?;
@@ -410,6 +457,66 @@ fn cmd_compare(args: &Args) -> Result<()> {
         eprintln!("wrote {path}");
     }
     Ok(())
+}
+
+/// Read a bare boolean flag, reclaiming the journal path if the greedy
+/// `--flag value` parser consumed it (`wasgd replay --inspect run.jrn`).
+fn bare_flag(args: &Args, key: &str, reclaimed: &mut Option<String>) -> bool {
+    match args.opt_str(key) {
+        None => false,
+        Some(v) if matches!(v.as_str(), "true" | "1" | "yes") => true,
+        Some(v) => {
+            if reclaimed.is_none() {
+                *reclaimed = Some(v);
+            }
+            true
+        }
+    }
+}
+
+fn cmd_replay(args: &Args) -> Result<()> {
+    let mut path = args.positional().get(1).cloned();
+    let inspect = bare_flag(args, "inspect", &mut path);
+    let verify = bare_flag(args, "verify", &mut path);
+    let data_dir = args.opt_str("data-dir").map(PathBuf::from);
+    args.finish()?;
+    if inspect && verify {
+        bail!("--inspect and --verify are mutually exclusive (--verify is the default)");
+    }
+    let path = PathBuf::from(
+        path.ok_or_else(|| anyhow::anyhow!("replay needs a journal path: wasgd replay RUN.jrn"))?,
+    );
+    if inspect {
+        print!("{}", replay::inspect(&path)?);
+        return Ok(());
+    }
+    let report = replay::verify(&path, &ReplayOptions { data_dir })?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_watch(args: &Args) -> Result<()> {
+    let path = args
+        .positional()
+        .get(1)
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("watch needs a journal path: wasgd watch RUN.jrn"))?;
+    args.finish()?;
+    let path = PathBuf::from(path);
+    let mut state = WatchState::new();
+    loop {
+        let events = state.poll(&path)?;
+        let mut finished = false;
+        for ev in &events {
+            println!("{}", format_event(ev));
+            finished = finished || matches!(ev, Event::RunFinished { .. });
+        }
+        if finished {
+            return Ok(());
+        }
+        std::io::stdout().flush().ok();
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
 }
 
 fn cmd_calibrate(args: &Args) -> Result<()> {
@@ -476,6 +583,8 @@ fn main() -> Result<()> {
         "compare" => cmd_compare(&args),
         "serve" => cmd_serve(&args),
         "worker" => cmd_worker(&args),
+        "replay" => cmd_replay(&args),
+        "watch" => cmd_watch(&args),
         "calibrate" => cmd_calibrate(&args),
         "list" => {
             cmd_list();

@@ -23,10 +23,26 @@ use wasgd::cluster::wire::WireEncoding;
 use wasgd::config::{AlgoKind, BackendKind, ExperimentConfig};
 use wasgd::coordinator::Trainer;
 use wasgd::data::{idx, DataPipeline, Dataset, SourceKind};
+use wasgd::journal::{rank_journal_path, read_events, Event};
 use wasgd::runtime::load_backend;
 
 fn bits(v: &[f32]) -> Vec<u32> {
     v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Every `PanelDigest` row of a journal, loss bit-compared.
+fn digest_rows(path: &std::path::Path) -> Vec<(u64, u32, u64, u32, u64)> {
+    let (events, trunc) = read_events(path).unwrap();
+    assert!(trunc.is_none(), "journal {} is truncated", path.display());
+    events
+        .iter()
+        .filter_map(|ev| match ev {
+            Event::PanelDigest { round, rank, digest, loss, comm_bytes } => {
+                Some((*round, *rank, *digest, loss.to_bits(), *comm_bytes))
+            }
+            _ => None,
+        })
+        .collect()
 }
 
 /// tiny_cnn WASGD+ p=4: the acceptance configuration. 0.25 epochs of
@@ -114,20 +130,36 @@ fn every_fabric_capable_scheme_matches_the_trainer() {
 #[test]
 fn acceptance_tcp_four_processes_match_sim_bit_exactly() {
     // THE acceptance criterion: tiny_cnn WASGD+ p=4 as 4 OS processes
-    // over loopback TCP (lossless f32 panels) vs `--fabric sim`.
+    // over loopback TCP (lossless f32 panels) vs `--fabric sim` — final
+    // θ bits AND the per-round journal digest streams from every vantage
+    // point (sim trainer, tcp rendezvous, each of the 4 worker ranks).
     let cfg = tiny_cnn_cfg();
-    let (sim, _dataset, _steps) = sim_final_workers(&cfg);
+    let jdir = std::env::temp_dir().join(format!("wasgd_jrn_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&jdir).unwrap();
+    let sim_jrn = jdir.join("sim.jrn");
+    let serve_jrn = jdir.join("serve.jrn");
+    let worker_base = jdir.join("worker.jrn");
+
+    let mut sim_cfg = cfg.clone();
+    sim_cfg.journal = Some(sim_jrn.clone());
+    let (sim, _dataset, _steps) = sim_final_workers(&sim_cfg);
 
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
-    let opts = ServeOptions { cfg: cfg.clone(), encoding: WireEncoding::F32, resume: None };
+    let opts = ServeOptions {
+        cfg: cfg.clone(),
+        encoding: WireEncoding::F32,
+        resume: None,
+        journal: Some(serve_jrn.clone()),
+    };
     let server = thread::spawn(move || serve(listener, &opts));
 
     let exe = env!("CARGO_BIN_EXE_wasgd");
+    let worker_base_s = worker_base.to_str().unwrap().to_string();
     let children: Vec<_> = (0..cfg.p)
         .map(|_| {
             Command::new(exe)
-                .args(["worker", "--connect", &addr])
+                .args(["worker", "--connect", &addr, "--journal", &worker_base_s])
                 .stdout(Stdio::null())
                 .stderr(Stdio::null())
                 .spawn()
@@ -154,6 +186,21 @@ fn acceptance_tcp_four_processes_match_sim_bit_exactly() {
     // The relay fans every panel back out p ways.
     assert!(outcome.comm.total_sent() > outcome.comm.total_received());
     assert!(outcome.comm.peers.iter().all(|peer| peer.sent > 0 && peer.received > 0));
+
+    // Satellite: every vantage point journals the SAME digest stream.
+    // 4 rounds × p=4 rows, (round, rank, θ digest, loss bits,
+    // comm_bytes) identical across sim, rendezvous, and all 4 ranks.
+    let serve_rows = digest_rows(&serve_jrn);
+    assert_eq!(serve_rows.len(), 16, "4 rounds × p=4 digests");
+    assert_eq!(digest_rows(&sim_jrn), serve_rows, "sim journal != tcp rendezvous journal");
+    for rank in 0..cfg.p {
+        assert_eq!(
+            digest_rows(&rank_journal_path(&worker_base, rank)),
+            serve_rows,
+            "rank {rank} worker journal diverged from the rendezvous stream"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&jdir);
 }
 
 #[test]
@@ -193,7 +240,8 @@ fn idx_backed_tcp_four_processes_match_sim_bit_exactly() {
 
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
-    let opts = ServeOptions { cfg: cfg.clone(), encoding: WireEncoding::F32, resume: None };
+    let opts =
+        ServeOptions { cfg: cfg.clone(), encoding: WireEncoding::F32, resume: None, journal: None };
     let server = thread::spawn(move || serve(listener, &opts));
 
     let exe = env!("CARGO_BIN_EXE_wasgd");

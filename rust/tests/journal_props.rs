@@ -1,0 +1,211 @@
+//! Property tests for the journal's record framing.
+//!
+//! The contract under test, for *arbitrary* events (including NaN and
+//! ±∞ losses, empty strings, and odd resume geometries):
+//!
+//! * encode → parse is a bitwise round-trip, consuming exactly the
+//!   encoded length;
+//! * a stream of records parses completely; every strict prefix either
+//!   yields fewer events (boundary cut) or reports the truncation
+//!   offset and record index (mid-record cut) — never a clean
+//!   full-length parse, and never a spurious hard error;
+//! * corrupting any framing field (magic, version, kind, reserved,
+//!   length, CRC) or flipping any payload bit is rejected with a
+//!   pointed error, and oversized lengths are rejected *before* any
+//!   allocation could happen.
+
+use proptest::prelude::*;
+
+use wasgd::cluster::wire::WireEncoding;
+use wasgd::journal::{
+    encode_record, parse_record, rank_journal_path, read_events_bytes, Event, MembershipChange,
+    JOURNAL_VERSION, MAX_RECORD_LEN, RECORD_HEADER_LEN,
+};
+
+fn arb_f32_bits() -> impl Strategy<Value = f32> {
+    any::<u32>().prop_map(f32::from_bits)
+}
+
+fn arb_resume() -> impl Strategy<Value = Vec<Vec<f32>>> {
+    prop::collection::vec(prop::collection::vec(arb_f32_bits(), 0..6), 0..3)
+}
+
+fn arb_change() -> impl Strategy<Value = MembershipChange> {
+    prop_oneof![
+        Just(MembershipChange::Joined),
+        Just(MembershipChange::Left),
+        Just(MembershipChange::Crashed),
+    ]
+}
+
+fn arb_event() -> impl Strategy<Value = Event> {
+    prop_oneof![
+        (
+            (any::<u32>(), any::<u32>(), any::<u64>(), any::<bool>()),
+            "[ -~]{0,24}",
+            "[ -~]{0,64}",
+            arb_resume(),
+        )
+            .prop_map(|((rank, p, seed, qi8), git_rev, config_json, resume)| {
+                Event::RunStarted {
+                    rank,
+                    p,
+                    seed,
+                    encoding: if qi8 { WireEncoding::Qi8 } else { WireEncoding::F32 },
+                    git_rev,
+                    config_json,
+                    resume,
+                }
+            }),
+        (any::<u64>(), any::<u32>(), any::<u64>(), arb_f32_bits(), any::<u64>()).prop_map(
+            |(round, rank, digest, loss, comm_bytes)| Event::PanelDigest {
+                round,
+                rank,
+                digest,
+                loss,
+                comm_bytes,
+            }
+        ),
+        (any::<u64>(), any::<u64>(), "[ -~]{0,32}").prop_map(|(steps, digest, path)| {
+            Event::CheckpointWritten { steps, digest, path }
+        }),
+        (any::<u64>(), any::<u32>(), arb_change()).prop_map(|(epoch, rank, change)| {
+            Event::Membership { epoch, rank, change }
+        }),
+        (any::<u64>(), any::<u64>(), any::<u64>()).prop_map(|(steps, rounds, final_digest)| {
+            Event::RunFinished { steps, rounds, final_digest }
+        }),
+    ]
+}
+
+proptest! {
+    #[test]
+    fn encode_parse_is_a_bitwise_roundtrip(ev in arb_event()) {
+        let buf = encode_record(&ev);
+        let (back, consumed) = parse_record(&buf).unwrap().expect("complete record");
+        prop_assert_eq!(consumed, buf.len());
+        // Event's PartialEq compares f32 payloads by bit pattern, so
+        // this holds for NaN and ±∞ losses too.
+        prop_assert_eq!(back, ev);
+    }
+
+    #[test]
+    fn stream_prefixes_never_parse_clean(
+        evs in prop::collection::vec(arb_event(), 1..5),
+        cut_frac in 0.0f64..1.0,
+    ) {
+        let mut stream = Vec::new();
+        let mut boundaries = vec![0usize];
+        for ev in &evs {
+            stream.extend_from_slice(&encode_record(ev));
+            boundaries.push(stream.len());
+        }
+        let (full, trunc) = read_events_bytes(&stream).unwrap();
+        prop_assert!(trunc.is_none());
+        prop_assert_eq!(full.len(), evs.len());
+
+        let cut = (stream.len() as f64 * cut_frac) as usize;
+        prop_assume!(cut < stream.len()); // strict prefixes only
+        let (pre, trunc) = read_events_bytes(&stream[..cut]).unwrap();
+        if boundaries.contains(&cut) {
+            // A record-boundary cut is a well-formed shorter stream;
+            // the missing RunFinished is the replay layer's to flag.
+            prop_assert!(trunc.is_none());
+            prop_assert!(pre.len() < evs.len());
+        } else {
+            let t = trunc.expect("mid-record cut must report a truncation");
+            let start_of_cut_record = *boundaries.iter().filter(|b| **b <= cut).max().unwrap();
+            prop_assert_eq!(t.offset as usize, start_of_cut_record);
+            prop_assert_eq!(t.record as usize, pre.len());
+        }
+    }
+
+    #[test]
+    fn framing_field_corruption_is_rejected(ev in arb_event(), field in 0usize..6) {
+        let mut buf = encode_record(&ev);
+        let expect = match field {
+            0 => {
+                buf[0] ^= 0xFF; // magic
+                "magic"
+            }
+            1 => {
+                buf[4] = buf[4].wrapping_add(1); // version
+                "schema"
+            }
+            2 => {
+                buf[6] = 99; // kind outside 1..=5
+                "kind"
+            }
+            3 => {
+                buf[7] = 7; // reserved must be 0
+                "reserved"
+            }
+            4 => {
+                buf[8..12].copy_from_slice(&u32::MAX.to_le_bytes()); // len
+                "cap"
+            }
+            _ => {
+                let n = buf.len();
+                buf[n - 1] ^= 0x01; // stored CRC
+                "CRC"
+            }
+        };
+        let err = parse_record(&buf).expect_err("corrupt framing must error");
+        let msg = format!("{err:#}");
+        prop_assert!(msg.contains(expect), "wanted {:?} in: {}", expect, msg);
+    }
+
+    #[test]
+    fn any_payload_bitflip_fails_the_crc(
+        ev in arb_event(),
+        sel in any::<prop::sample::Index>(),
+        bit in 0u8..8,
+    ) {
+        let buf = encode_record(&ev);
+        let payload_len = buf.len() - RECORD_HEADER_LEN - 4;
+        prop_assume!(payload_len > 0);
+        let mut bad = buf;
+        bad[RECORD_HEADER_LEN + sel.index(payload_len)] ^= 1 << bit;
+        let err = parse_record(&bad).expect_err("payload flip must fail the CRC");
+        prop_assert!(format!("{err:#}").contains("CRC"));
+    }
+}
+
+#[test]
+fn oversized_length_is_rejected_before_any_allocation() {
+    // A header alone claiming a huge payload: with validation-last this
+    // would be Ok(None) forever (or worse, an attempted allocation).
+    // The cap check runs on the 12 header bytes, so it errors here.
+    let mut buf = Vec::new();
+    buf.extend_from_slice(b"WSGJ");
+    buf.extend_from_slice(&JOURNAL_VERSION.to_le_bytes());
+    buf.push(2); // PanelDigest
+    buf.push(0);
+    buf.extend_from_slice(&(MAX_RECORD_LEN + 1).to_le_bytes());
+    let err = parse_record(&buf).expect_err("oversized len must be rejected from the header");
+    assert!(format!("{err:#}").contains("cap"));
+}
+
+#[test]
+fn nan_and_infinite_losses_roundtrip_bit_exactly() {
+    for loss in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0f32] {
+        let ev = Event::PanelDigest { round: 3, rank: 1, digest: 7, loss, comm_bytes: 9 };
+        let buf = encode_record(&ev);
+        let (back, _) = parse_record(&buf).unwrap().unwrap();
+        match back {
+            Event::PanelDigest { loss: l, .. } => assert_eq!(l.to_bits(), loss.to_bits()),
+            other => panic!("wrong event back: {other:?}"),
+        }
+        assert_eq!(back, ev, "bitwise PartialEq must treat NaN as equal to itself");
+    }
+}
+
+#[test]
+fn rank_journal_paths_are_distinct_suffixes() {
+    let base = std::path::Path::new("/tmp/run.jrn");
+    let p0 = rank_journal_path(base, 0);
+    let p3 = rank_journal_path(base, 3);
+    assert_ne!(p0, p3);
+    assert!(p0.to_string_lossy().ends_with("rank0"));
+    assert!(p3.to_string_lossy().ends_with("rank3"));
+}

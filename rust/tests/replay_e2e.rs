@@ -1,0 +1,303 @@
+//! End-to-end acceptance for the event-sourced run journal and
+//! `wasgd replay`.
+//!
+//! The bar, per the determinism contract the fabrics already pin: a
+//! journaled tiny_cnn WASGD+ p=4 run — both as the simulated trainer
+//! and as 4 genuine OS worker processes over loopback TCP — must
+//! replay **bit for bit** from nothing but the journal file. And any
+//! injected single-bit corruption must be rejected with a pointed
+//! error naming the offending record, never silently absorbed.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::thread;
+
+use wasgd::checkpoint::Checkpoint;
+use wasgd::cluster::tcp::{run_remote_worker, serve, ServeOptions};
+use wasgd::cluster::wire::WireEncoding;
+use wasgd::config::{AlgoKind, BackendKind, ExperimentConfig};
+use wasgd::coordinator::run_experiment_full;
+use wasgd::journal::replay::{self, ReplayOptions};
+use wasgd::journal::{parse_record, rank_journal_path, read_events_bytes};
+
+/// tiny_cnn WASGD+ p=4 — the acceptance configuration (32 local steps,
+/// τ=8 → 4 collective rounds), identical to `tests/fabric_e2e.rs`.
+fn tiny_cnn_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_preset(wasgd::data::synth::DatasetKind::Tiny);
+    cfg.backend = BackendKind::Native;
+    cfg.variant = "tiny_cnn".to_string();
+    cfg.algo = AlgoKind::WasgdPlus;
+    cfg.p = 4;
+    cfg.tau = 8;
+    cfg.m = 2;
+    cfg.c = 1;
+    cfg.lr = 0.05;
+    cfg.seed = 17;
+    cfg.threads = 1;
+    cfg.epochs = 0.25;
+    cfg.eval_every = 16;
+    cfg.eval_batches = 2;
+    cfg.compute.step_time_s = 1e-3;
+    cfg
+}
+
+/// A cheaper journal source for the framing-level fault-injection
+/// sweeps: tiny_mlp WASGD+ p=2, 16 steps (batch 8 → 64 steps/epoch at
+/// 0.25 epochs), τ=4 → 4 rounds.
+fn tiny_mlp_cfg() -> ExperimentConfig {
+    let mut cfg = tiny_cnn_cfg();
+    cfg.variant = "tiny_mlp".to_string();
+    cfg.p = 2;
+    cfg.tau = 4;
+    cfg.seed = 29;
+    cfg
+}
+
+fn temp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("wasgd_replay_{name}_{}", std::process::id()))
+}
+
+/// Byte offsets of every record boundary in a clean journal (including
+/// the end-of-file offset), for surgical truncation.
+fn record_offsets(buf: &[u8]) -> Vec<usize> {
+    let mut offs = vec![0usize];
+    let mut pos = 0usize;
+    while pos < buf.len() {
+        match parse_record(&buf[pos..]).expect("clean journal") {
+            Some((_, consumed)) => {
+                pos += consumed;
+                offs.push(pos);
+            }
+            None => break,
+        }
+    }
+    assert_eq!(pos, buf.len(), "clean journal must parse to the last byte");
+    offs
+}
+
+#[test]
+fn sim_journal_replays_bit_exactly() {
+    // Acceptance leg 1: journal a `--fabric sim` tiny_cnn WASGD+ p=4
+    // run, then re-execute it from nothing but the journal.
+    let jrn = temp_path("sim.jrn");
+    let mut cfg = tiny_cnn_cfg();
+    cfg.journal = Some(jrn.clone());
+    run_experiment_full(&cfg).unwrap();
+
+    let report = replay::verify(&jrn, &ReplayOptions::default()).unwrap();
+    assert_eq!(report.segments, 1);
+    assert_eq!(report.rounds, 4, "32 steps at τ=8 are 4 rounds");
+    assert_eq!(report.digests, 16, "4 rounds × p=4 digests");
+    assert_eq!(report.steps, 32);
+
+    let timeline = replay::inspect(&jrn).unwrap();
+    assert!(timeline.contains("RunStarted"), "inspect lists the header:\n{timeline}");
+    assert!(timeline.contains("PanelDigest"), "inspect lists digests:\n{timeline}");
+    assert!(timeline.contains("RunFinished"), "inspect lists the finish:\n{timeline}");
+    let _ = std::fs::remove_file(&jrn);
+}
+
+#[test]
+fn acceptance_tcp_four_process_journal_replays_bit_exactly() {
+    // Acceptance leg 2: the SAME configuration as 4 real OS worker
+    // processes over loopback TCP. The rendezvous journal (and a worker
+    // rank's own journal) must replay bit for bit through the simulated
+    // trainer — the fabrics' determinism contract, made durable.
+    let cfg = tiny_cnn_cfg();
+    let serve_jrn = temp_path("tcp_serve.jrn");
+    let worker_base = temp_path("tcp_worker.jrn");
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = ServeOptions {
+        cfg: cfg.clone(),
+        encoding: WireEncoding::F32,
+        resume: None,
+        journal: Some(serve_jrn.clone()),
+    };
+    let server = thread::spawn(move || serve(listener, &opts));
+
+    let exe = env!("CARGO_BIN_EXE_wasgd");
+    let worker_base_s = worker_base.to_str().unwrap().to_string();
+    let children: Vec<_> = (0..cfg.p)
+        .map(|_| {
+            Command::new(exe)
+                .args(["worker", "--connect", &addr, "--journal", &worker_base_s])
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawning a wasgd worker process")
+        })
+        .collect();
+    let outcome = server.join().unwrap().expect("rendezvous session");
+    for mut child in children {
+        assert!(child.wait().unwrap().success(), "a worker process failed");
+    }
+    assert_eq!(outcome.steps, 32);
+
+    let report = replay::verify(&serve_jrn, &ReplayOptions::default()).unwrap();
+    assert_eq!(report.segments, 1);
+    assert_eq!(report.digests, 16);
+    assert_eq!(report.steps, 32);
+
+    // A worker's own journal is a fresh-session vantage point on the
+    // same stream — also self-contained, also verifiable.
+    let rank0 = rank_journal_path(&worker_base, 0);
+    let wreport = replay::verify(&rank0, &ReplayOptions::default()).unwrap();
+    assert_eq!(wreport.digests, 16);
+
+    let _ = std::fs::remove_file(&serve_jrn);
+    for r in 0..cfg.p {
+        let _ = std::fs::remove_file(rank_journal_path(&worker_base, r));
+    }
+}
+
+#[test]
+fn every_single_bit_corruption_is_rejected_with_a_pointed_error() {
+    // Fault injection, exhaustively: flip every bit of every byte of a
+    // clean journal. Each flip must either fail the parse with an error
+    // naming the offending record, or (a flip in a length field) turn
+    // into a reported truncation — never a clean full parse.
+    let jrn = temp_path("corrupt.jrn");
+    let mut cfg = tiny_mlp_cfg();
+    cfg.journal = Some(jrn.clone());
+    run_experiment_full(&cfg).unwrap();
+    let clean = std::fs::read(&jrn).unwrap();
+    let (baseline, trunc) = read_events_bytes(&clean).unwrap();
+    assert!(trunc.is_none());
+    assert!(baseline.len() >= 8, "journal should hold header + digests + finish");
+
+    for i in 0..clean.len() {
+        for bit in 0..8u8 {
+            let mut bad = clean.clone();
+            bad[i] ^= 1 << bit;
+            match read_events_bytes(&bad) {
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    assert!(
+                        msg.contains("record #"),
+                        "flip byte {i} bit {bit}: error must name the record, got: {msg}"
+                    );
+                }
+                Ok((evs, t)) => {
+                    // Only a length-field flip can land here: the CRC
+                    // now spans a window past EOF, surfacing as a
+                    // truncation that names the record and offset.
+                    assert!(
+                        t.is_some(),
+                        "flip byte {i} bit {bit} parsed clean ({} events)",
+                        evs.len()
+                    );
+                }
+            }
+        }
+    }
+
+    // The same contract through the full user-facing verify path.
+    for (i, label) in [(1usize, "header"), (clean.len() / 2, "mid"), (clean.len() - 2, "tail")] {
+        let mut bad = clean.clone();
+        bad[i] ^= 0x10;
+        let bad_path = temp_path(&format!("corrupt_{label}.jrn"));
+        std::fs::write(&bad_path, &bad).unwrap();
+        let err = replay::verify(&bad_path, &ReplayOptions::default())
+            .expect_err("corrupted journal must not verify");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("record #") || msg.contains("truncated"),
+            "{label}: error must point at the damage, got: {msg}"
+        );
+        let _ = std::fs::remove_file(&bad_path);
+    }
+    let _ = std::fs::remove_file(&jrn);
+}
+
+#[test]
+fn truncated_journals_replay_the_complete_prefix_then_report_the_cut() {
+    let jrn = temp_path("trunc.jrn");
+    let mut cfg = tiny_mlp_cfg();
+    cfg.journal = Some(jrn.clone());
+    run_experiment_full(&cfg).unwrap();
+    let clean = std::fs::read(&jrn).unwrap();
+    let offs = record_offsets(&clean);
+    assert!(offs.len() > 4);
+
+    // Cut mid-record inside the final record: every complete round
+    // before the cut verifies, then the truncation is reported with its
+    // byte offset.
+    let mid_cut = temp_path("trunc_mid.jrn");
+    std::fs::write(&mid_cut, &clean[..clean.len() - 3]).unwrap();
+    let err = replay::verify(&mid_cut, &ReplayOptions::default())
+        .expect_err("mid-record truncation must not verify clean");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("truncated mid-record"), "got: {msg}");
+    assert!(msg.contains("complete round(s)"), "got: {msg}");
+
+    // Cut exactly at the last record boundary: the RunFinished seal is
+    // gone, so the journal is a strict prefix — all recorded digests
+    // still verify first, then the missing seal is the error.
+    let seal_cut = temp_path("trunc_seal.jrn");
+    std::fs::write(&seal_cut, &clean[..offs[offs.len() - 2]]).unwrap();
+    let err = replay::verify(&seal_cut, &ReplayOptions::default())
+        .expect_err("a sealless prefix must not verify clean");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("RunFinished"), "got: {msg}");
+    assert!(msg.contains("complete round(s)"), "got: {msg}");
+
+    for p in [&jrn, &mid_cut, &seal_cut] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn resumed_tcp_session_stitches_and_replays_end_to_end() {
+    // Checkpoint/resume regression: session 1 journals to PATH, its
+    // finals become a checkpoint (pinning ServeOutcome.steps as the
+    // resume iteration and the f32 resume vectors from PR 4's wire
+    // format), session 2 resumes from it and APPENDS to the same
+    // journal. `wasgd replay` then verifies both stitched segments
+    // independently, end to end.
+    let cfg = tiny_mlp_cfg();
+    let jrn = temp_path("stitch.jrn");
+
+    let run_session = |resume: Option<Checkpoint>| {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let opts = ServeOptions {
+            cfg: cfg.clone(),
+            encoding: WireEncoding::F32,
+            resume,
+            journal: Some(jrn.clone()),
+        };
+        let server = thread::spawn(move || serve(listener, &opts));
+        let workers: Vec<_> = (0..cfg.p)
+            .map(|_| {
+                let addr = addr.clone();
+                thread::spawn(move || run_remote_worker(&addr, None, None, None, None))
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap().expect("in-process worker");
+        }
+        server.join().unwrap().expect("rendezvous session")
+    };
+
+    let first = run_session(None);
+    assert_eq!(first.steps, 16);
+    let ck = Checkpoint {
+        label: "replay-e2e stitch".into(),
+        iteration: first.steps,
+        epoch: cfg.epochs,
+        sim_time_s: 0.0,
+        workers: first.finals.iter().map(|(_, theta)| theta.clone()).collect(),
+    };
+    let second = run_session(Some(ck));
+    assert_eq!(second.steps, 16);
+
+    let report = replay::verify(&jrn, &ReplayOptions::default()).unwrap();
+    assert_eq!(report.segments, 2, "resume must append a second segment");
+    assert_eq!(report.rounds, 8, "4 rounds per session");
+    assert_eq!(report.digests, 16, "4 rounds × p=2, twice");
+    assert_eq!(report.steps, 32, "16 local steps per session");
+    let _ = std::fs::remove_file(&jrn);
+}
