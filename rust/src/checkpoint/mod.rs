@@ -6,6 +6,14 @@
 //! The format is deliberately dumb — `xxd`-able, python-readable with
 //! `np.fromfile(..., '<f4')` — so checkpoints double as an interchange
 //! format with the build-time python side.
+//!
+//! Elastic sessions (`--elastic`, see `docs/FABRIC.md`) reuse the same
+//! format for their **epoch anchors**: at every membership boundary the
+//! rendezvous snapshots the committed cohort panels to
+//! `<ckpt-dir>/epoch_NNNN/` before re-forming, so a crashed session can
+//! be resumed — as a fixed cohort — from the last boundary it survived.
+//! The anchor's cohort digest also rides the journal's `EpochCommitted`
+//! record, which is how `wasgd replay --verify` chains epochs together.
 
 use std::fs;
 use std::io::{Read, Write};

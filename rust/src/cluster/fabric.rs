@@ -85,9 +85,60 @@ pub trait Collective {
     }
 }
 
+/// A graceful end-of-epoch signal from an epoch-scoped collective: the
+/// rendezvous committed the epoch (peer died, peer left, or a queued
+/// joiner is being absorbed), so this worker should reconnect for the
+/// next epoch rather than treat the error as fatal. Carried as the
+/// source of an [`anyhow::Error`] so callers can `downcast_ref` it out
+/// of the failure chain.
+#[derive(Clone, Debug)]
+pub struct EpochEnded {
+    /// Why the epoch was cut — the same diagnostic that rides the
+    /// `EpochCommit` wire frame's reason field.
+    pub reason: String,
+}
+
+impl std::fmt::Display for EpochEnded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "epoch ended: {}", self.reason)
+    }
+}
+
+impl std::error::Error for EpochEnded {}
+
+/// The committed plan for one elastic epoch: its id, member count, the
+/// survivors' previous-epoch ranks (in new-rank order), and the step
+/// budget left in the run. The rendezvous forms one of these at every
+/// boundary; its `members` row order *is* the new rank assignment, so
+/// re-sharding falls out of the existing rank-stable
+/// [`shard_range`](crate::data::source::shard_range).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EpochPlan {
+    /// Epoch id (0 is the initial cohort).
+    pub epoch: u64,
+    /// Committed member count p_e — every collective round of this
+    /// epoch gathers exactly this many panels.
+    pub p: usize,
+    /// For new rank `j < prior.len()`: that member's rank in the
+    /// previous epoch (survivors sort before joiners, so fresh joiners
+    /// occupy ranks `prior.len()..p` and have no prior rank).
+    pub prior: Vec<u32>,
+    /// Local SGD steps remaining in the run's global budget.
+    pub steps: usize,
+}
+
+/// How an exchange stopped: a *cut* ends the epoch gracefully (workers
+/// reconnect), a *poison* aborts the session (workers fail).
+enum EpochEnd {
+    Cut(String),
+    Poisoned(String),
+}
+
 /// A reusable p-way all-gather barrier carrying one `T` per participant,
-/// with explicit *poisoning* so one failed participant releases — rather
-/// than deadlocks — the rest of the cohort.
+/// scoped to one epoch: explicit *poisoning* releases — rather than
+/// deadlocks — the cohort on hard failure, and a *cut* releases it with
+/// a recoverable [`EpochEnded`] so an elastic rendezvous can commit the
+/// next epoch instead of killing the run.
 pub struct PanelExchange<T> {
     inner: Mutex<ExchangeState<T>>,
     cv: Condvar,
@@ -98,7 +149,7 @@ struct ExchangeState<T> {
     slots: Vec<Option<T>>,
     published: Arc<Vec<T>>,
     generation: u64,
-    poisoned: Option<String>,
+    ended: Option<EpochEnd>,
 }
 
 impl<T: Clone> PanelExchange<T> {
@@ -109,7 +160,7 @@ impl<T: Clone> PanelExchange<T> {
                 slots: (0..p).map(|_| None).collect(),
                 published: Arc::new(Vec::new()),
                 generation: 0,
-                poisoned: None,
+                ended: None,
             }),
             cv: Condvar::new(),
             p,
@@ -123,11 +174,12 @@ impl<T: Clone> PanelExchange<T> {
 
     /// Deposit participant `rank`'s contribution; blocks until the round
     /// completes, then returns everyone's (index = rank). Errors if the
-    /// exchange was poisoned (by a failed peer) or on double-deposit.
+    /// exchange was poisoned (by a failed peer), ended by an epoch cut
+    /// (the error's source is an [`EpochEnded`]), or on double-deposit.
     pub fn exchange(&self, rank: usize, v: T) -> Result<Arc<Vec<T>>> {
         let mut st = self.inner.lock().unwrap();
-        if let Some(why) = &st.poisoned {
-            anyhow::bail!("collective aborted: {why}");
+        if let Some(end) = &st.ended {
+            return Err(Self::end_error(end));
         }
         ensure!(st.slots[rank].is_none(), "rank {rank} deposited twice in one round");
         st.slots[rank] = Some(v);
@@ -139,27 +191,71 @@ impl<T: Clone> PanelExchange<T> {
             return Ok(st.published.clone());
         }
         let gen = st.generation;
-        while st.generation == gen && st.poisoned.is_none() {
+        while st.generation == gen && st.ended.is_none() {
             st = self.cv.wait(st).unwrap();
         }
-        // A round that published before (or concurrently with) a poison
+        // A round that published before (or concurrently with) an end
         // still completed: deliver it. Only a round that can never
-        // publish reports the poison.
+        // publish reports the end. The mutex linearizes deposit and
+        // end-marking, so "which round committed" is consistent across
+        // every participant.
         if st.generation != gen {
             return Ok(st.published.clone());
         }
-        let why = st.poisoned.as_deref().unwrap_or("poisoned");
-        anyhow::bail!("collective aborted: {why}");
+        let end = st.ended.as_ref().expect("woke without publish or end");
+        Err(Self::end_error(end))
+    }
+
+    fn end_error(end: &EpochEnd) -> anyhow::Error {
+        match end {
+            EpochEnd::Cut(reason) => anyhow::Error::new(EpochEnded { reason: reason.clone() }),
+            EpochEnd::Poisoned(why) => anyhow::anyhow!("collective aborted: {why}"),
+        }
     }
 
     /// Mark the exchange failed: current and future `exchange` calls
     /// return an error carrying `why` instead of blocking forever.
+    /// First writer wins; a later cut or poison does not overwrite it.
     pub fn poison(&self, why: &str) {
         let mut st = self.inner.lock().unwrap();
-        if st.poisoned.is_none() {
-            st.poisoned = Some(why.to_string());
+        if st.ended.is_none() {
+            st.ended = Some(EpochEnd::Poisoned(why.to_string()));
         }
         self.cv.notify_all();
+    }
+
+    /// End the epoch gracefully: current and future `exchange` calls
+    /// return an error whose source is an [`EpochEnded`] carrying
+    /// `reason`, instead of blocking forever. Rounds already published
+    /// are unaffected. First writer wins, and a prior poison is never
+    /// downgraded to a cut.
+    pub fn cut(&self, reason: &str) {
+        let mut st = self.inner.lock().unwrap();
+        if st.ended.is_none() {
+            st.ended = Some(EpochEnd::Cut(reason.to_string()));
+        }
+        self.cv.notify_all();
+    }
+
+    /// The last fully published round, as `(round, panels)` where
+    /// `round` counts from 1 — `None` if no round ever completed. After
+    /// a cut this is the epoch's committed round: the anchor every
+    /// survivor and the rendezvous agree on.
+    pub fn last_published(&self) -> Option<(u64, Arc<Vec<T>>)> {
+        let st = self.inner.lock().unwrap();
+        (st.generation > 0).then(|| (st.generation, st.published.clone()))
+    }
+
+    /// The reason this exchange's epoch was cut, if it was — `None`
+    /// while running or when the exchange was poisoned instead. The
+    /// first cut wins, so this is the authoritative boundary reason
+    /// even when several relay handlers race to report it.
+    pub fn cut_reason(&self) -> Option<String> {
+        let st = self.inner.lock().unwrap();
+        match &st.ended {
+            Some(EpochEnd::Cut(r)) => Some(r.clone()),
+            _ => None,
+        }
     }
 }
 
@@ -568,8 +664,39 @@ mod tests {
         ex.poison("peer died");
         let err = waiter.join().unwrap().unwrap_err();
         assert!(format!("{err}").contains("peer died"));
+        // A poison is a hard failure, not an epoch boundary.
+        assert!(err.downcast_ref::<EpochEnded>().is_none());
         // Subsequent exchanges fail fast too.
         assert!(ex.exchange(1, 2).is_err());
+    }
+
+    #[test]
+    fn cut_releases_waiters_with_a_recoverable_epoch_end() {
+        let ex: Arc<PanelExchange<u32>> = Arc::new(PanelExchange::new(2));
+        // Complete one round so there is a committed anchor.
+        let a = Arc::clone(&ex);
+        let peer = thread::spawn(move || a.exchange(1, 20));
+        ex.exchange(0, 10).unwrap();
+        peer.join().unwrap().unwrap();
+        assert_eq!(ex.last_published().map(|(r, v)| (r, v.as_ref().clone())), Some((1, vec![
+            10, 20
+        ])));
+
+        // Round 2 never completes: rank 0 deposits, then the epoch is
+        // cut. The waiter gets a downcastable EpochEnded, not a fatal
+        // poison, and the committed round is unchanged.
+        let a = Arc::clone(&ex);
+        let waiter = thread::spawn(move || a.exchange(0, 11));
+        thread::sleep(std::time::Duration::from_millis(20));
+        ex.cut("rank 1 died after completing round 1");
+        let err = waiter.join().unwrap().unwrap_err();
+        let end = err.downcast_ref::<EpochEnded>().expect("cut must surface as EpochEnded");
+        assert!(end.reason.contains("rank 1"));
+        assert_eq!(ex.last_published().map(|(r, _)| r), Some(1));
+        // A cut never upgrades to (or masks) a poison retroactively.
+        ex.poison("too late");
+        let err = ex.exchange(1, 21).unwrap_err();
+        assert!(err.downcast_ref::<EpochEnded>().is_some());
     }
 
     #[test]

@@ -14,20 +14,38 @@
 //! aggregates and holds no center variable; it is a dumb relay, exactly
 //! the role a switch or a gossip overlay would play.
 //!
-//! Failure semantics: a worker that dies poisons the exchange; every
-//! other relay handler then pushes an [`MsgKind::Error`] frame to its
-//! worker so the whole cohort errors out instead of deadlocking.
+//! Failure semantics, fixed cohort: a worker that dies poisons the
+//! exchange with a message naming its rank and last completed round;
+//! every other relay handler then pushes an [`MsgKind::Error`] frame to
+//! its worker so the whole cohort errors out instead of deadlocking.
 //!
-//! Resumable rendezvous: `serve` can start the cohort from a saved
+//! Failure semantics, elastic (`--elastic`, [`ServeOptions::elastic`]):
+//! the session is a sequence of *epochs*, each a fixed-membership
+//! mini-session. Workers heartbeat between panels; a dead or silent
+//! peer, a [`MsgKind::Leave`], or a queued joiner *cuts* the epoch at
+//! the last fully published round instead of poisoning it. Survivors
+//! receive an [`MsgKind::EpochCommit`] and reconnect; the rendezvous
+//! re-forms the cohort (survivors keep rank order, joiners append),
+//! ships every member an anchor row in its [`Welcome`], and the next
+//! epoch proceeds at the new member count — re-sharded automatically,
+//! because `shard_range(n, rank, p)` is a pure function of the new
+//! geometry. Each epoch journals as a self-contained segment terminated
+//! by `EpochCommitted`, so `wasgd replay` verifies the whole run across
+//! membership changes. See `docs/FABRIC.md` for the full state machine.
+//!
+//! Resumable rendezvous: a fixed-cohort `serve` can start from a saved
 //! [`Checkpoint`] (each rank receives its `worker_{i}.f32` parameters in
 //! the Welcome), and the final panels can be written back as a
 //! checkpoint by the CLI — so a multi-process run survives restarts of
-//! the whole fabric.
+//! the whole fabric. Elastic sessions instead write *epoch anchors*
+//! (the committed pre-aggregation panels) at every boundary.
 
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
@@ -42,25 +60,44 @@ use crate::metrics::CommCounters;
 use crate::runtime::load_backend;
 
 use super::fabric::{
-    algo_supports_fabric, planned_steps, run_fabric_worker, Collective, FabricWorkerOutcome,
-    PanelExchange, WorkerPanel,
+    algo_supports_fabric, planned_steps, run_fabric_worker, Collective, EpochEnded, EpochPlan,
+    FabricWorkerOutcome, PanelExchange, WorkerPanel,
 };
 use super::wire::{
-    self, cohort_frame_from_raw, error_text, hello_frame, Cohort, Frame, MsgKind, Panel, RawPanel,
-    Welcome, WireEncoding,
+    self, cohort_frame_from_raw, error_text, hello_frame, Cohort, EpochCommit, Frame, Heartbeat,
+    JoinRequest, Leave, MsgKind, Panel, RawPanel, Welcome, WireEncoding,
 };
 
 /// A remote worker's connection to the rendezvous node — the TCP
 /// implementation of the fabric's all-gather/barrier surface.
 pub struct RemoteCluster {
     reader: BufReader<TcpStream>,
-    writer: BufWriter<TcpStream>,
+    writer: Arc<Mutex<BufWriter<TcpStream>>>,
     rank: usize,
     p: usize,
     encoding: WireEncoding,
     round: u64,
+    completed_round: Arc<AtomicU64>,
     bytes_sent: u64,
+    hb_bytes: Arc<AtomicU64>,
     bytes_received: u64,
+    heartbeat: Option<HeartbeatHandle>,
+}
+
+/// A running heartbeat thread; dropping it stops the beats (and joins
+/// the thread, waiting at most one period).
+struct HeartbeatHandle {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for HeartbeatHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            t.join().ok();
+        }
+    }
 }
 
 impl RemoteCluster {
@@ -69,6 +106,16 @@ impl RemoteCluster {
     /// optional resume parameters). The Welcome frame's encoding byte
     /// announces the session's panel encoding.
     pub fn connect(addr: &str) -> Result<(Self, Welcome)> {
+        Self::connect_as(addr, None)
+    }
+
+    /// Connect as a returning member of an elastic session: `rejoin`
+    /// carries this worker's rank in the epoch that just committed, so
+    /// the rendezvous can seat it before fresh joiners. Fresh workers
+    /// (and fixed-cohort workers) pass `None` and open with a plain
+    /// hello. Blocks until the next epoch forms and the Welcome
+    /// arrives.
+    pub fn connect_as(addr: &str, rejoin: Option<u32>) -> Result<(Self, Welcome)> {
         let stream = TcpStream::connect(addr)
             .with_context(|| format!("connecting to rendezvous at {addr}"))?;
         stream.set_nodelay(true).ok();
@@ -76,9 +123,12 @@ impl RemoteCluster {
         let mut writer = BufWriter::new(stream);
         let mut reader = BufReader::new(read_half);
 
-        let hello = hello_frame();
-        hello.write_to(&mut writer)?;
-        let bytes_sent = hello.encoded_len() as u64;
+        let opening = match rejoin {
+            None => hello_frame(),
+            Some(r) => JoinRequest { prior_rank: Some(r) }.frame(),
+        };
+        opening.write_to(&mut writer)?;
+        let bytes_sent = opening.encoded_len() as u64;
 
         let frame = Frame::read_from(&mut reader).context("waiting for the rendezvous welcome")?;
         let bytes_received = frame.encoded_len() as u64;
@@ -96,13 +146,16 @@ impl RemoteCluster {
         Ok((
             Self {
                 reader,
-                writer,
+                writer: Arc::new(Mutex::new(writer)),
                 rank: welcome.rank as usize,
                 p: welcome.p as usize,
                 encoding: frame.encoding,
                 round: 0,
+                completed_round: Arc::new(AtomicU64::new(0)),
                 bytes_sent,
+                hb_bytes: Arc::new(AtomicU64::new(0)),
                 bytes_received,
+                heartbeat: None,
             },
             welcome,
         ))
@@ -113,12 +166,41 @@ impl RemoteCluster {
         self.encoding
     }
 
+    /// Start a background liveness thread sending one [`Heartbeat`]
+    /// (carrying the last completed round) every `period`. The writer
+    /// is mutex-shared with the training thread, so beats and panels
+    /// never interleave mid-frame. Stops when the cluster is dropped or
+    /// the connection dies. No-op if already beating.
+    pub fn start_heartbeats(&mut self, period: Duration) {
+        if self.heartbeat.is_some() {
+            return;
+        }
+        let writer = Arc::clone(&self.writer);
+        let round = Arc::clone(&self.completed_round);
+        let bytes = Arc::clone(&self.hb_bytes);
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let thread = std::thread::spawn(move || loop {
+            std::thread::sleep(period);
+            if flag.load(Ordering::Relaxed) {
+                return;
+            }
+            let frame = Heartbeat { round: round.load(Ordering::Relaxed) }.frame();
+            let mut w = writer.lock().unwrap();
+            if frame.write_to(&mut *w).is_err() {
+                return;
+            }
+            bytes.fetch_add(frame.encoded_len() as u64, Ordering::Relaxed);
+        });
+        self.heartbeat = Some(HeartbeatHandle { stop, thread: Some(thread) });
+    }
+
     /// Send the final `(mean energy, θ)` panel after the step budget.
     /// `steps` is the total local step count this worker ran (carried in
     /// the panel's round field so checkpoints record real progress).
     pub fn send_final(&mut self, steps: u64, mean_energy: f32, params: &[f32]) -> Result<()> {
         let frame = Panel::frame(MsgKind::Final, steps, mean_energy, params, self.encoding);
-        frame.write_to(&mut self.writer)?;
+        frame.write_to(&mut *self.writer.lock().unwrap())?;
         self.bytes_sent += frame.encoded_len() as u64;
         Ok(())
     }
@@ -136,7 +218,7 @@ impl Collective for RemoteCluster {
     fn all_gather(&mut self, h: f32, params: &[f32]) -> Result<Vec<WorkerPanel>> {
         self.round += 1;
         let frame = Panel::frame(MsgKind::Panel, self.round, h, params, self.encoding);
-        frame.write_to(&mut self.writer)?;
+        frame.write_to(&mut *self.writer.lock().unwrap())?;
         self.bytes_sent += frame.encoded_len() as u64;
 
         let reply = Frame::read_from(&mut self.reader)
@@ -144,6 +226,12 @@ impl Collective for RemoteCluster {
         self.bytes_received += reply.encoded_len() as u64;
         if reply.kind == MsgKind::Error {
             bail!("rendezvous aborted the session: {}", error_text(&reply));
+        }
+        if reply.kind == MsgKind::EpochCommit {
+            // The epoch ended under this round: surface a recoverable
+            // EpochEnded so the worker loop reconnects instead of dying.
+            let commit = EpochCommit::parse(&reply)?;
+            return Err(anyhow::Error::new(EpochEnded { reason: commit.reason }));
         }
         let cohort = Cohort::parse(&reply)?;
         ensure!(
@@ -158,11 +246,12 @@ impl Collective for RemoteCluster {
             cohort.panels.len(),
             self.p
         );
+        self.completed_round.store(self.round, Ordering::Relaxed);
         Ok(cohort.panels)
     }
 
     fn bytes_sent(&self) -> u64 {
-        self.bytes_sent
+        self.bytes_sent + self.hb_bytes.load(Ordering::Relaxed)
     }
 
     fn bytes_received(&self) -> u64 {
@@ -172,6 +261,25 @@ impl Collective for RemoteCluster {
     fn encoding(&self) -> WireEncoding {
         self.encoding
     }
+}
+
+/// Elastic-membership knobs for a rendezvous session (the epoch state
+/// machine of `docs/FABRIC.md`). Present = elastic; absent = the
+/// classic fixed-cohort session.
+pub struct ElasticOptions {
+    /// Commit an epoch only if at least this many workers are present;
+    /// fewer and the session fails rather than limp along.
+    pub min_workers: usize,
+    /// Never grow the cohort past this many workers; extra joiners stay
+    /// parked until a seat frees up.
+    pub max_workers: usize,
+    /// Worker heartbeat period; the relay declares a peer dead after
+    /// 4 missed beats.
+    pub heartbeat_ms: u64,
+    /// Write the committed anchor (pre-aggregation panels of the last
+    /// published round) as a checkpoint under this directory at every
+    /// epoch boundary.
+    pub anchor_dir: Option<PathBuf>,
 }
 
 /// What a rendezvous session runs: the experiment, the panel encoding,
@@ -190,19 +298,26 @@ pub struct ServeOptions {
     /// panel body IS θ's little-endian bytes), making the journal
     /// bit-exactly verifiable with `wasgd replay`.
     pub journal: Option<PathBuf>,
+    /// Run with epoch-based elastic membership instead of a fixed
+    /// cohort: workers may join, leave, and crash at epoch boundaries.
+    pub elastic: Option<ElasticOptions>,
 }
 
 /// What a completed rendezvous session produced.
 #[derive(Clone, Debug)]
 pub struct ServeOutcome {
-    /// Final `(mean energy, θ)` per rank, in rank order.
+    /// Final `(mean energy, θ)` per rank, in rank order (of the final
+    /// epoch's cohort, for elastic sessions).
     pub finals: Vec<WorkerPanel>,
-    /// Collective rounds relayed (τ-boundaries crossed).
+    /// Collective rounds relayed (τ-boundaries crossed), cumulative
+    /// across epochs.
     pub rounds: u64,
     /// Local SGD steps each worker ran (as reported in its Final panel;
-    /// the max across ranks — they agree in a well-formed session).
+    /// the max across ranks — they agree in a well-formed session). For
+    /// elastic sessions, cumulative across epochs.
     pub steps: u64,
-    /// Per-peer relay traffic, feeding the cluster cost model.
+    /// Per-peer relay traffic, feeding the cluster cost model. Elastic
+    /// sessions attribute traffic at epoch-local ranks.
     pub comm: CommCounters,
 }
 
@@ -214,9 +329,12 @@ struct RelayStats {
 
 /// A silent non-protocol connection may stall the handshake read at most
 /// this long before being dropped.
-const HANDSHAKE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
 /// Give up on the session after this many failed handshakes.
 const MAX_BAD_HANDSHAKES: usize = 64;
+/// How long an elastic boundary waits for committed survivors to
+/// reconnect before forming the next epoch with whoever is present.
+const FORMATION_TIMEOUT: Duration = Duration::from_secs(10);
 
 type HandshakeOk = (BufReader<TcpStream>, BufWriter<TcpStream>, u64, u64);
 
@@ -248,14 +366,26 @@ fn handshake(
     Ok((reader, writer, hello.encoded_len() as u64, frame.encoded_len() as u64))
 }
 
-/// Run one rendezvous session to completion: accept `cfg.p` workers
-/// (rank = accept order), handshake each, then relay `(h, θ)` panels
-/// round by round until every worker has delivered its final panel.
+/// Run one rendezvous session to completion. With
+/// [`ServeOptions::elastic`] unset this is the classic fixed cohort:
+/// accept `cfg.p` workers (rank = accept order), handshake each, then
+/// relay `(h, θ)` panels round by round until every worker has delivered
+/// its final panel. With it set, the session advances through epochs
+/// with committed member sets (see the module docs).
 ///
 /// The rendezvous is numerics-free: it never touches θ beyond framing,
 /// so the aggregation stays fully decentralized (each worker applies
-/// Eq. 10+13 itself — no center variable anywhere).
+/// Eq. 10+13 itself — no center variable anywhere). The one exception
+/// is the elastic anchor, which decodes the relay's *own* already-f32
+/// bytes back into floats; no arithmetic is ever performed on them.
 pub fn serve(listener: TcpListener, opts: &ServeOptions) -> Result<ServeOutcome> {
+    match &opts.elastic {
+        None => serve_static(listener, opts),
+        Some(el) => serve_elastic(listener, opts, el),
+    }
+}
+
+fn serve_static(listener: TcpListener, opts: &ServeOptions) -> Result<ServeOutcome> {
     let cfg = &opts.cfg;
     cfg.validate().map_err(|e| anyhow!(e))?;
     ensure!(
@@ -371,7 +501,13 @@ pub fn serve(listener: TcpListener, opts: &ServeOptions) -> Result<ServeOutcome>
                     let mut stats = RelayStats { sent: 0, received: 0, rounds: 0 };
                     let result = relay_loop(rank, &mut reader, &mut writer, ctx, &mut stats);
                     if let Err(e) = &result {
-                        ctx.exchange.poison(&format!("relay for rank {rank} failed: {e}"));
+                        // Name the offending rank AND its last completed
+                        // round, so a dead-peer error localises the
+                        // failure in training time, not just space.
+                        ctx.exchange.poison(&format!(
+                            "relay for rank {rank} failed after round {}: {e}",
+                            stats.rounds
+                        ));
                         let _ = wire::error_frame(&format!("{e}")).write_to(&mut writer);
                     }
                     result.map(|()| stats)
@@ -461,18 +597,7 @@ fn relay_loop(
                 // barrier guarantees rank 0 cannot deposit round n+1
                 // before round n published, so rounds journal in order.
                 if rank == 0 && ctx.enc == WireEncoding::F32 {
-                    if let Some(j) = ctx.journal {
-                        let mut w = j.lock().unwrap();
-                        for (r, (h, body)) in cohort.iter().enumerate() {
-                            w.emit(&Event::PanelDigest {
-                                round: panel.round,
-                                rank: r as u32,
-                                digest: fnv64(body),
-                                loss: *h,
-                                comm_bytes: canonical_comm_bytes(panel.round, body.len() / 4),
-                            })?;
-                        }
-                    }
+                    journal_round(ctx.journal, panel.round, &cohort)?;
                 }
                 let reply = cohort_frame_from_raw(panel.round, &cohort[..], ctx.enc);
                 reply.write_to(writer)?;
@@ -502,6 +627,696 @@ fn relay_loop(
     }
 }
 
+/// Journal one relayed round's cohort digests (the f32 panel body is
+/// θ's little-endian bytes, so `fnv64(body)` equals the worker-side
+/// `digest_params`).
+fn journal_round(
+    journal: Option<&Mutex<JournalWriter>>,
+    round: u64,
+    cohort: &[(f32, Vec<u8>)],
+) -> Result<()> {
+    if let Some(j) = journal {
+        let mut w = j.lock().unwrap();
+        for (r, (h, body)) in cohort.iter().enumerate() {
+            w.emit(&Event::PanelDigest {
+                round,
+                rank: r as u32,
+                digest: fnv64(body),
+                loss: *h,
+                comm_bytes: canonical_comm_bytes(round, body.len() / 4),
+            })?;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Elastic membership: the epoch state machine.
+// ---------------------------------------------------------------------
+
+/// A handshaken connection parked by the acceptor thread, waiting to be
+/// committed into an epoch at the next boundary.
+struct PendingConn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    /// The rank this worker held in the epoch that just committed
+    /// (`None` for a fresh joiner).
+    rejoin: Option<u32>,
+    hello_len: u64,
+}
+
+/// Read one opening frame (hello or join request) and park the
+/// connection; the Welcome is deferred to epoch formation.
+fn elastic_handshake(stream: &TcpStream) -> Result<PendingConn> {
+    stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT)).ok();
+    let read_half = stream.try_clone().context("cloning a worker stream")?;
+    let mut reader = BufReader::new(read_half);
+    let first = Frame::read_from(&mut reader).context("reading the opening frame")?;
+    let rejoin = match first.kind {
+        MsgKind::Hello => None,
+        MsgKind::JoinRequest => JoinRequest::parse(&first)?.prior_rank,
+        other => bail!("opened with {other:?}, expected a hello or join request"),
+    };
+    stream.set_read_timeout(None).ok();
+    let writer = BufWriter::new(stream.try_clone().context("cloning a worker stream")?);
+    Ok(PendingConn { reader, writer, rejoin, hello_len: first.encoded_len() as u64 })
+}
+
+/// How an elastic relay handler ended its epoch.
+enum RelayFate {
+    /// Worker delivered its Final panel — the session is done for it.
+    Finished,
+    /// The epoch was cut; the worker was notified with an
+    /// [`MsgKind::EpochCommit`] and is expected to rejoin.
+    Committed,
+    /// Worker sent a [`MsgKind::Leave`]; it will not rejoin.
+    Left,
+    /// The connection failed (crash, hangup, or missed heartbeats).
+    Dead(String),
+}
+
+struct EpochRelayEnd {
+    stats: RelayStats,
+    fate: RelayFate,
+}
+
+fn serve_elastic(
+    listener: TcpListener,
+    opts: &ServeOptions,
+    el: &ElasticOptions,
+) -> Result<ServeOutcome> {
+    let cfg = &opts.cfg;
+    cfg.validate().map_err(|e| anyhow!(e))?;
+    ensure!(
+        algo_supports_fabric(cfg.algo),
+        "the tcp fabric supports the synchronous decentralized schemes; {} needs --fabric sim",
+        cfg.algo.name()
+    );
+    ensure!(
+        opts.encoding == WireEncoding::F32,
+        "elastic sessions need the lossless f32 encoding: epoch anchors are decoded from the \
+         relayed panel bytes"
+    );
+    ensure!(
+        opts.resume.is_none(),
+        "elastic serve starts from the seed init; --resume needs a fixed cohort"
+    );
+    ensure!(el.min_workers >= 1, "--min-workers must be at least 1");
+    ensure!(
+        el.max_workers >= cfg.p.max(el.min_workers),
+        "--max-workers ({}) must cover both the initial cohort (p={}) and --min-workers ({})",
+        el.max_workers,
+        cfg.p,
+        el.min_workers
+    );
+    ensure!(el.heartbeat_ms >= 1, "--heartbeat-ms must be at least 1");
+
+    // Resolve the data source once and compute the run's global step
+    // budget up front (it is p-independent: sharding happens inside
+    // each worker against the full training split).
+    let pipeline = DataPipeline::from_config(cfg)?;
+    if let Some(note) = pipeline.note() {
+        eprintln!("rendezvous: {note}");
+    }
+    let (n_train, batch) = {
+        let engine = load_backend(cfg)?;
+        let dataset = pipeline.load(engine.manifest())?;
+        (dataset.n_train(), engine.manifest().batch)
+    };
+    let total_budget = planned_steps(cfg, n_train, batch);
+
+    let mut base = cfg.clone();
+    base.source = pipeline.source_kind();
+    base.elastic = true;
+    base.heartbeat_ms = el.heartbeat_ms;
+    base.min_workers = el.min_workers;
+
+    let journal: Option<Mutex<JournalWriter>> = match &opts.journal {
+        Some(path) => Some(Mutex::new(JournalWriter::create(path)?)),
+        None => None,
+    };
+
+    // The acceptor runs for the whole session: it accepts and
+    // handshakes continuously, parking connections until a boundary
+    // commits them into an epoch. Shutdown: flip `done`, then
+    // self-connect to unblock the blocking accept.
+    let pending: Arc<Mutex<Vec<PendingConn>>> = Arc::new(Mutex::new(Vec::new()));
+    let done = Arc::new(AtomicBool::new(false));
+    let local_addr = listener.local_addr().context("reading the listener address")?;
+    let acceptor = {
+        let pending = Arc::clone(&pending);
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            let mut bad = 0usize;
+            while !done.load(Ordering::Relaxed) {
+                let Ok((stream, peer)) = listener.accept() else { continue };
+                if done.load(Ordering::Relaxed) {
+                    return;
+                }
+                stream.set_nodelay(true).ok();
+                match elastic_handshake(&stream) {
+                    Ok(conn) => pending.lock().unwrap().push(conn),
+                    Err(e) => {
+                        bad += 1;
+                        eprintln!("rendezvous: dropping connection from {peer}: {e:#}");
+                        if bad >= MAX_BAD_HANDSHAKES {
+                            return;
+                        }
+                    }
+                }
+            }
+        })
+    };
+
+    let session = elastic_session(&base, el, total_budget, &pending, journal.as_ref());
+
+    done.store(true, Ordering::Relaxed);
+    let _ = TcpStream::connect(local_addr);
+    let _ = acceptor.join();
+    // Anyone still parked has no epoch left to join.
+    for mut c in pending.lock().unwrap().drain(..) {
+        let _ = wire::error_frame("session complete; no epoch to join").write_to(&mut c.writer);
+    }
+    session
+}
+
+/// The epoch loop: form a cohort, run it until it finishes or cuts,
+/// commit, repeat. `base` already carries the resolved data source and
+/// the elastic knobs; each epoch ships a copy with its own `p` and
+/// `step_budget`.
+fn elastic_session(
+    base: &ExperimentConfig,
+    el: &ElasticOptions,
+    total_budget: usize,
+    pending: &Mutex<Vec<PendingConn>>,
+    journal: Option<&Mutex<JournalWriter>>,
+) -> Result<ServeOutcome> {
+    let enc = WireEncoding::F32;
+    let tau = base.tau;
+    let mut comm = CommCounters::new(el.max_workers);
+    // The committed anchor: survivors' pre-aggregation θ rows at the
+    // last published round, keyed by their rank in the epoch that just
+    // ended. `None` until a round commits — members then init from the
+    // seed as usual.
+    let mut anchor: Option<Vec<(u32, Vec<f32>)>> = None;
+    // Ranks (of the previous epoch) expected to rejoin at the boundary.
+    let mut expected: Vec<u32> = Vec::new();
+    // The boundary to journal once the next member set is known:
+    // (committed round, reason).
+    let mut pending_commit: Option<(u64, String)> = None;
+    let mut epoch: u64 = 0;
+    let mut steps_done: usize = 0;
+    let mut total_rounds: u64 = 0;
+
+    loop {
+        let remaining = total_budget - steps_done;
+
+        // ---- formation: wait for the members, then commit the set ----
+        // Epoch 0 blocks for the full initial cohort, like a static
+        // serve; later epochs wait up to FORMATION_TIMEOUT for the
+        // committed survivors before proceeding with whoever is back.
+        let deadline = Instant::now() + FORMATION_TIMEOUT;
+        loop {
+            let q = pending.lock().unwrap();
+            let enough = if epoch == 0 {
+                q.len() >= base.p
+            } else {
+                let back = q
+                    .iter()
+                    .filter(|c| c.rejoin.is_some_and(|r| expected.contains(&r)))
+                    .count();
+                back >= expected.len() || Instant::now() >= deadline
+            };
+            if enough {
+                break;
+            }
+            drop(q);
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let mut taken: Vec<(Option<u32>, PendingConn)> = Vec::new();
+        {
+            let mut q = pending.lock().unwrap();
+            // Survivors first, in previous-rank order — the rank-stable
+            // seating that makes re-sharding deterministic — then fresh
+            // joiners in arrival order, capped at max_workers. Excess
+            // joiners stay parked for the next boundary.
+            for &r in &expected {
+                if let Some(i) = q.iter().position(|c| c.rejoin == Some(r)) {
+                    taken.push((Some(r), q.remove(i)));
+                }
+            }
+            let cap = if epoch == 0 { base.p } else { el.max_workers };
+            while taken.len() < cap && !q.is_empty() {
+                taken.push((None, q.remove(0)));
+            }
+        }
+        let p_e = taken.len();
+        ensure!(
+            p_e >= el.min_workers,
+            "epoch {epoch} cannot form: {p_e} worker(s) present, --min-workers is {}",
+            el.min_workers
+        );
+
+        let prior: Vec<u32> = taken.iter().filter_map(|(r, _)| *r).collect();
+        let plan = EpochPlan { epoch, p: p_e, prior, steps: remaining };
+
+        // Resume rows in new-rank order: survivors get their own anchor
+        // row, fresh joiners clone the first member's row (so every
+        // row's provenance is checkable at replay time).
+        let resume: Option<Vec<Vec<f32>>> = anchor.as_ref().map(|rows| {
+            let find = |r: u32| rows.iter().find(|(q, _)| *q == r).map(|(_, v)| v);
+            let joiner_row = plan.prior.first().and_then(|&r| find(r)).unwrap_or(&rows[0].1);
+            taken
+                .iter()
+                .map(|(old, _)| old.and_then(find).unwrap_or(joiner_row).clone())
+                .collect()
+        });
+        let anchor_digest =
+            resume.as_ref().map(|rows| digest_cohort(rows.iter().map(|v| v.as_slice()))).unwrap_or(0);
+
+        // Journal the boundary. The EpochCommitted terminates the
+        // previous segment with the *actual* next member set (survivors
+        // that never reconnected are recorded as crashed first).
+        if let Some((round, reason)) = pending_commit.take() {
+            for &r in expected.iter().filter(|r| !plan.prior.contains(r)) {
+                jemit(
+                    journal,
+                    &Event::Membership {
+                        epoch: epoch - 1,
+                        rank: r,
+                        change: MembershipChange::Crashed,
+                    },
+                )?;
+            }
+            jemit(
+                journal,
+                &Event::EpochCommitted {
+                    epoch,
+                    round,
+                    members: plan.prior.clone(),
+                    anchor_digest,
+                    reason,
+                },
+            )?;
+        }
+
+        // Open the epoch's segment: a per-epoch config (its own p and
+        // step budget) that replays under `--fabric sim` at this member
+        // set — the per-epoch determinism guarantee.
+        let mut epoch_cfg = base.clone();
+        epoch_cfg.p = p_e;
+        epoch_cfg.step_budget = Some(remaining);
+        let cfg_json = epoch_cfg.to_wire_json();
+        jemit(
+            journal,
+            &Event::RunStarted {
+                rank: RANK_COHORT,
+                p: p_e as u32,
+                seed: base.seed,
+                encoding: enc,
+                git_rev: crate::bench::git_rev(),
+                config_json: cfg_json.clone(),
+                resume: resume.clone().unwrap_or_default(),
+            },
+        )?;
+        for (j, (old, _)) in taken.iter().enumerate() {
+            if epoch == 0 || old.is_none() {
+                jemit(
+                    journal,
+                    &Event::Membership {
+                        epoch,
+                        rank: j as u32,
+                        change: MembershipChange::Joined,
+                    },
+                )?;
+            }
+        }
+
+        // Seat everyone: the Welcome carries rank, p_e, the epoch
+        // config, and the member's anchor row.
+        let mut conns = Vec::with_capacity(p_e);
+        for (j, (_, mut c)) in taken.into_iter().enumerate() {
+            let welcome = Welcome {
+                rank: j as u32,
+                p: p_e as u32,
+                config_json: cfg_json.clone(),
+                resume: resume.as_ref().map(|rows| rows[j].clone()),
+            };
+            let frame = welcome.frame(enc);
+            frame
+                .write_to(&mut c.writer)
+                .with_context(|| format!("welcoming rank {j} into epoch {epoch}"))?;
+            comm.add(j, frame.encoded_len() as u64, c.hello_len);
+            conns.push((c.reader, c.writer));
+        }
+
+        // ---- run the epoch ----
+        let rounds_in_epoch = (remaining / tau) as u64;
+        let exchange: PanelExchange<(f32, Vec<u8>)> = PanelExchange::new(p_e);
+        let finals: Mutex<Vec<Option<(u64, WorkerPanel)>>> = Mutex::new(vec![None; p_e]);
+        let ctx = RelayCtx { exchange: &exchange, finals: &finals, enc, journal };
+        let liveness = Duration::from_millis(el.heartbeat_ms.saturating_mul(4).max(100));
+        let ends: Vec<EpochRelayEnd> = std::thread::scope(|s| {
+            let ctx = &ctx;
+            let handles: Vec<_> = conns
+                .into_iter()
+                .enumerate()
+                .map(|(rank, (mut reader, mut writer))| {
+                    s.spawn(move || {
+                        elastic_relay(
+                            rank,
+                            &mut reader,
+                            &mut writer,
+                            ctx,
+                            pending,
+                            rounds_in_epoch,
+                            liveness,
+                            epoch,
+                        )
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| EpochRelayEnd {
+                        stats: RelayStats { sent: 0, received: 0, rounds: 0 },
+                        fate: RelayFate::Dead("relay thread panicked".to_string()),
+                    })
+                })
+                .collect()
+        });
+        for (rank, end) in ends.iter().enumerate() {
+            comm.add(rank, end.stats.sent, end.stats.received);
+        }
+        let committed_round = exchange.last_published().map(|(r, _)| r).unwrap_or(0);
+        total_rounds += committed_round;
+
+        // ---- session finale ----
+        if ends.iter().all(|e| matches!(e.fate, RelayFate::Finished)) {
+            let finals = finals.into_inner().unwrap();
+            let mut out = Vec::with_capacity(p_e);
+            let mut epoch_steps = 0u64;
+            for (rank, f) in finals.into_iter().enumerate() {
+                let (s, panel) =
+                    f.ok_or_else(|| anyhow!("rank {rank} never delivered its final panel"))?;
+                epoch_steps = epoch_steps.max(s);
+                out.push(panel);
+            }
+            jemit(
+                journal,
+                &Event::RunFinished {
+                    steps: epoch_steps,
+                    rounds: committed_round,
+                    final_digest: digest_cohort(out.iter().map(|(_, t)| t.as_slice())),
+                },
+            )?;
+            return Ok(ServeOutcome {
+                finals: out,
+                rounds: total_rounds,
+                steps: steps_done as u64 + epoch_steps,
+                comm,
+            });
+        }
+        if ends.iter().any(|e| matches!(e.fate, RelayFate::Finished)) {
+            // Known limitation: a death during the finale, after some
+            // ranks already delivered their Final, leaves no budget to
+            // re-form a cohort that could fill the gap.
+            let dead: Vec<String> = ends
+                .iter()
+                .filter_map(|e| match &e.fate {
+                    RelayFate::Dead(r) => Some(r.clone()),
+                    _ => None,
+                })
+                .collect();
+            bail!(
+                "epoch {epoch} ended with a partial finale ({}) — a worker failed during the \
+                 final rounds, too late to re-form the cohort",
+                if dead.is_empty() { "worker left mid-finale".to_string() } else { dead.join("; ") }
+            );
+        }
+
+        // ---- commit the boundary ----
+        let mut next_expected: Vec<u32> = Vec::new();
+        let mut fallback_reason: Option<String> = None;
+        for (rank, end) in ends.iter().enumerate() {
+            match &end.fate {
+                RelayFate::Committed => next_expected.push(rank as u32),
+                RelayFate::Dead(why) => {
+                    jemit(
+                        journal,
+                        &Event::Membership {
+                            epoch,
+                            rank: rank as u32,
+                            change: MembershipChange::Crashed,
+                        },
+                    )?;
+                    fallback_reason.get_or_insert_with(|| why.clone());
+                }
+                RelayFate::Left => {
+                    jemit(
+                        journal,
+                        &Event::Membership {
+                            epoch,
+                            rank: rank as u32,
+                            change: MembershipChange::Left,
+                        },
+                    )?;
+                    fallback_reason
+                        .get_or_insert_with(|| format!("rank {rank} left the cohort"));
+                }
+                RelayFate::Finished => unreachable!("handled above"),
+            }
+        }
+        let reason = exchange
+            .cut_reason()
+            .or(fallback_reason)
+            .unwrap_or_else(|| "epoch boundary".to_string());
+        eprintln!(
+            "rendezvous: committing epoch {} at round {committed_round} \
+             ({} survivor(s)): {reason}",
+            epoch + 1,
+            next_expected.len()
+        );
+
+        steps_done += committed_round as usize * tau;
+        // New anchor: the survivors' rows of the last published round
+        // (the relay's own f32 bytes, decoded — never aggregated), or,
+        // if no round completed, their rows of this epoch's resume.
+        anchor = if next_expected.is_empty() {
+            // Everyone died or left: the next epoch (formed purely from
+            // queued joiners, if any) restarts from the seed init.
+            None
+        } else if committed_round > 0 {
+            let (_, panels) = exchange.last_published().expect("committed_round > 0");
+            Some(
+                next_expected
+                    .iter()
+                    .map(|&r| {
+                        let (_h, body) = &panels[r as usize];
+                        let row: Vec<f32> = body
+                            .chunks_exact(4)
+                            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                            .collect();
+                        (r, row)
+                    })
+                    .collect(),
+            )
+        } else {
+            resume
+                .as_ref()
+                .map(|rows| next_expected.iter().map(|&r| (r, rows[r as usize].clone())).collect())
+        };
+        if let (Some(dir), Some(rows)) = (&el.anchor_dir, &anchor) {
+            let workers: Vec<Vec<f32>> = rows.iter().map(|(_, v)| v.clone()).collect();
+            let ck = Checkpoint {
+                label: format!("epoch {} anchor", epoch + 1),
+                iteration: steps_done as u64,
+                epoch: steps_done as f64 / (n_steps_per_epoch(base, total_budget)),
+                sim_time_s: 0.0,
+                workers,
+            };
+            let path = dir.join(format!("epoch_{:04}", epoch + 1));
+            ck.save(&path)?;
+            jemit(
+                journal,
+                &Event::CheckpointWritten {
+                    steps: steps_done as u64,
+                    digest: digest_cohort(ck.workers.iter().map(|v| v.as_slice())),
+                    path: path.display().to_string(),
+                },
+            )?;
+        }
+
+        pending_commit = Some((committed_round, reason));
+        expected = next_expected;
+        epoch += 1;
+    }
+}
+
+/// Steps per nominal data epoch, for checkpoint metadata only (the
+/// elastic budget is tracked in steps).
+fn n_steps_per_epoch(cfg: &ExperimentConfig, total_budget: usize) -> f64 {
+    if cfg.epochs > 0.0 {
+        total_budget as f64 / cfg.epochs
+    } else {
+        total_budget as f64
+    }
+}
+
+/// One elastic relay handler: the static [`relay_loop`] plus liveness
+/// timeouts, heartbeat/leave frames, the joiner-absorption trigger, and
+/// the commit notification. Never returns an error — every failure is
+/// converted into a cut plus a [`RelayFate::Dead`].
+#[allow(clippy::too_many_arguments)]
+fn elastic_relay(
+    rank: usize,
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut BufWriter<TcpStream>,
+    ctx: &RelayCtx,
+    pending: &Mutex<Vec<PendingConn>>,
+    rounds_in_epoch: u64,
+    liveness: Duration,
+    epoch: u64,
+) -> EpochRelayEnd {
+    let mut stats = RelayStats { sent: 0, received: 0, rounds: 0 };
+    let fate = match elastic_relay_inner(
+        rank,
+        reader,
+        writer,
+        ctx,
+        pending,
+        rounds_in_epoch,
+        liveness,
+        epoch,
+        &mut stats,
+    ) {
+        Ok(fate) => fate,
+        Err(e) => {
+            let verdict = match e.downcast_ref::<std::io::Error>().map(|io| io.kind()) {
+                Some(std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) => format!(
+                    "rank {rank} missed its heartbeats (silent for {liveness:?}) after \
+                     completing round {}",
+                    stats.rounds
+                ),
+                _ => format!("rank {rank} died after completing round {}: {e}", stats.rounds),
+            };
+            ctx.exchange.cut(&verdict);
+            let _ = wire::error_frame(&format!("{e}")).write_to(writer);
+            RelayFate::Dead(verdict)
+        }
+    };
+    EpochRelayEnd { stats, fate }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn elastic_relay_inner(
+    rank: usize,
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut BufWriter<TcpStream>,
+    ctx: &RelayCtx,
+    pending: &Mutex<Vec<PendingConn>>,
+    rounds_in_epoch: u64,
+    liveness: Duration,
+    epoch: u64,
+    stats: &mut RelayStats,
+) -> Result<RelayFate> {
+    // Heartbeats arrive every heartbeat_ms even while the worker
+    // computes, so the relay read may time out aggressively without
+    // bounding τ.
+    reader.get_ref().set_read_timeout(Some(liveness)).ok();
+    loop {
+        let frame = Frame::read_from(reader)?;
+        stats.received += frame.encoded_len() as u64;
+        match frame.kind {
+            MsgKind::Heartbeat => {
+                Heartbeat::parse(&frame)?;
+            }
+            MsgKind::Panel => {
+                ensure!(
+                    frame.encoding == ctx.enc,
+                    "rank {rank} sent a {:?} panel in a {:?} session",
+                    frame.encoding,
+                    ctx.enc
+                );
+                let panel = RawPanel::parse(&frame)?;
+                ensure!(
+                    panel.round == stats.rounds + 1,
+                    "rank {rank} jumped to round {} (expected {})",
+                    panel.round,
+                    stats.rounds + 1
+                );
+                match ctx.exchange.exchange(rank, (panel.h, panel.body)) {
+                    Ok(cohort) => {
+                        if rank == 0 {
+                            journal_round(ctx.journal, panel.round, &cohort)?;
+                        }
+                        let reply = cohort_frame_from_raw(panel.round, &cohort[..], ctx.enc);
+                        reply.write_to(writer)?;
+                        stats.sent += reply.encoded_len() as u64;
+                        stats.rounds += 1;
+                        // Queued joiners force a boundary — but only
+                        // while the epoch still has rounds to give them.
+                        if stats.rounds < rounds_in_epoch {
+                            let waiting = pending.lock().unwrap().len();
+                            if waiting > 0 {
+                                ctx.exchange.cut(&format!(
+                                    "absorbing {waiting} queued joiner(s) after round {}",
+                                    stats.rounds
+                                ));
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        if let Some(end) = e.downcast_ref::<EpochEnded>() {
+                            let commit = commit_frame(ctx, epoch, &end.reason);
+                            commit.write_to(writer)?;
+                            stats.sent += commit.encoded_len() as u64;
+                            return Ok(RelayFate::Committed);
+                        }
+                        return Err(e);
+                    }
+                }
+            }
+            MsgKind::Leave => {
+                let leave = Leave::parse(&frame)?;
+                let reason =
+                    format!("rank {rank} left after completing round {}", leave.round);
+                ctx.exchange.cut(&reason);
+                let _ = commit_frame(ctx, epoch, &reason).write_to(writer);
+                return Ok(RelayFate::Left);
+            }
+            MsgKind::Final => {
+                let panel = Panel::parse(&frame)?;
+                ctx.finals.lock().unwrap()[rank] = Some((panel.round, (panel.h, panel.theta)));
+                ctx.exchange.poison(&format!(
+                    "rank {rank} finished after round {}; no further collectives can complete",
+                    stats.rounds
+                ));
+                return Ok(RelayFate::Finished);
+            }
+            MsgKind::Error => bail!("worker rank {rank} reported: {}", error_text(&frame)),
+            other => bail!("unexpected {other:?} frame from rank {rank} mid-session"),
+        }
+    }
+}
+
+/// The advisory end-of-epoch frame sent to a live worker. The member
+/// set is settled only at formation, so this carries the committed
+/// round and the reason; the authoritative set arrives in the next
+/// Welcome (and is journaled in `EpochCommitted`).
+fn commit_frame(ctx: &RelayCtx, epoch: u64, reason: &str) -> Frame {
+    let round = ctx.exchange.last_published().map(|(r, _)| r).unwrap_or(0);
+    EpochCommit {
+        epoch: epoch + 1,
+        round,
+        members: Vec::new(),
+        anchor_digest: 0,
+        reason: reason.to_string(),
+    }
+    .frame()
+}
+
 /// Run one remote worker end to end: connect, adopt the session config
 /// from the Welcome (CLI `--threads` / `--artifacts` / `--data-dir`
 /// override the local knobs), build engine + data pipeline locally,
@@ -512,10 +1327,17 @@ fn relay_loop(
 /// promised real files fails with a pointed error instead of silently
 /// falling back to synth and de-synchronising the cohort.
 ///
+/// In an elastic session (the welcomed config says `elastic`) the
+/// worker heartbeats between panels and, when the rendezvous commits
+/// the epoch mid-round, reconnects with its rank and trains on through
+/// the next epoch — crashes of *other* workers never kill it.
+///
 /// `journal_base` journals this worker's view of the run to
 /// `base.rank{r}` (the rank is only known after the handshake; the
 /// suffix keeps p workers sharing one `--journal` value from clobbering
-/// each other — or the rendezvous journal at `base` itself).
+/// each other — or the rendezvous journal at `base` itself). Elastic
+/// sessions skip worker-side journals: ranks shift across epochs, so
+/// the rendezvous journal is the authoritative record.
 pub fn run_remote_worker(
     addr: &str,
     artifacts_root: Option<PathBuf>,
@@ -523,40 +1345,85 @@ pub fn run_remote_worker(
     data_dir_override: Option<PathBuf>,
     journal_base: Option<PathBuf>,
 ) -> Result<FabricWorkerOutcome> {
-    let (mut fabric, welcome) = RemoteCluster::connect(addr)?;
-    let mut cfg = ExperimentConfig::from_wire_json(&welcome.config_json)
-        .context("parsing the session config from the welcome")?;
-    if let Some(threads) = threads_override {
-        cfg.threads = threads;
-    }
-    if let Some(root) = artifacts_root {
-        cfg.artifacts_root = root;
-    }
-    if let Some(dir) = data_dir_override {
-        cfg.data_dir = Some(dir);
-    }
-    let engine = load_backend(&cfg)?;
-    let dataset = DataPipeline::from_config(&cfg)?.load(engine.manifest())?;
-    let total_steps = planned_steps(&cfg, dataset.n_train(), engine.manifest().batch);
-    let mut jw = match &journal_base {
-        Some(base) => {
-            Some(JournalWriter::create(&rank_journal_path(base, welcome.rank as usize))?)
+    let mut rejoin: Option<u32> = None;
+    // Cumulative telemetry across epochs of an elastic session.
+    let (mut carry_sent, mut carry_recv) = (0u64, 0u64);
+    let (mut carry_steps, mut carry_rounds) = (0usize, 0u64);
+    loop {
+        let (mut fabric, welcome) = RemoteCluster::connect_as(addr, rejoin)?;
+        let mut cfg = ExperimentConfig::from_wire_json(&welcome.config_json)
+            .context("parsing the session config from the welcome")?;
+        if let Some(threads) = threads_override {
+            cfg.threads = threads;
         }
-        None => None,
-    };
-    let mut out = run_fabric_worker(
-        &cfg,
-        engine.as_ref(),
-        &dataset,
-        &mut fabric,
-        total_steps,
-        welcome.resume,
-        jw.as_mut().map(|w| w as &mut dyn EventSink),
-    )?;
-    fabric.send_final(out.steps as u64, out.mean_energy, &out.params)?;
-    out.bytes_sent = fabric.bytes_sent();
-    out.bytes_received = fabric.bytes_received();
-    Ok(out)
+        if let Some(root) = &artifacts_root {
+            cfg.artifacts_root = root.clone();
+        }
+        if let Some(dir) = &data_dir_override {
+            cfg.data_dir = Some(dir.clone());
+        }
+        let engine = load_backend(&cfg)?;
+        let dataset = DataPipeline::from_config(&cfg)?.load(engine.manifest())?;
+        let total_steps = match cfg.step_budget {
+            Some(budget) => budget,
+            None => planned_steps(&cfg, dataset.n_train(), engine.manifest().batch),
+        };
+        let mut jw = match (&journal_base, cfg.elastic) {
+            (Some(_), true) => {
+                if rejoin.is_none() {
+                    eprintln!(
+                        "worker: --journal is ignored in elastic sessions (ranks shift across \
+                         epochs); the rendezvous journal is the authoritative record"
+                    );
+                }
+                None
+            }
+            (Some(base), false) => {
+                Some(JournalWriter::create(&rank_journal_path(base, welcome.rank as usize))?)
+            }
+            (None, _) => None,
+        };
+        if cfg.elastic {
+            fabric.start_heartbeats(Duration::from_millis(cfg.heartbeat_ms.max(1)));
+        }
+        let result = run_fabric_worker(
+            &cfg,
+            engine.as_ref(),
+            &dataset,
+            &mut fabric,
+            total_steps,
+            welcome.resume.clone(),
+            jw.as_mut().map(|w| w as &mut dyn EventSink),
+        );
+        match result {
+            Ok(mut out) => {
+                fabric.send_final(out.steps as u64, out.mean_energy, &out.params)?;
+                out.bytes_sent = fabric.bytes_sent() + carry_sent;
+                out.bytes_received = fabric.bytes_received() + carry_recv;
+                out.steps += carry_steps;
+                out.boundaries += carry_rounds;
+                return Ok(out);
+            }
+            Err(e) => match e.downcast_ref::<EpochEnded>() {
+                Some(end) if cfg.elastic => {
+                    eprintln!(
+                        "worker rank {}: {end}; rejoining the next epoch",
+                        fabric.rank()
+                    );
+                    carry_sent += fabric.bytes_sent();
+                    carry_recv += fabric.bytes_received();
+                    // Work since the committed round is discarded with
+                    // the epoch; count only full relayed rounds.
+                    carry_rounds += fabric.completed_round.load(Ordering::Relaxed);
+                    carry_steps +=
+                        (fabric.completed_round.load(Ordering::Relaxed) as usize) * cfg.tau;
+                    rejoin = Some(fabric.rank() as u32);
+                    drop(fabric);
+                }
+                _ => return Err(e),
+            },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -582,8 +1449,13 @@ mod tests {
     fn loopback_session(cfg: &ExperimentConfig, opts_enc: WireEncoding) -> ServeOutcome {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
-        let opts =
-            ServeOptions { cfg: cfg.clone(), encoding: opts_enc, resume: None, journal: None };
+        let opts = ServeOptions {
+            cfg: cfg.clone(),
+            encoding: opts_enc,
+            resume: None,
+            journal: None,
+            elastic: None,
+        };
         let server = thread::spawn(move || serve(listener, &opts));
         let mut workers = Vec::new();
         for _ in 0..cfg.p {
@@ -655,6 +1527,7 @@ mod tests {
             encoding: WireEncoding::F32,
             resume: Some(ck),
             journal: None,
+            elastic: None,
         };
         let server = thread::spawn(move || serve(listener, &opts));
         let mut workers = Vec::new();
@@ -684,8 +1557,13 @@ mod tests {
             workers: vec![vec![0.0; 4]], // 1 worker, session wants 2
         };
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let opts =
-            ServeOptions { cfg, encoding: WireEncoding::F32, resume: Some(ck), journal: None };
+        let opts = ServeOptions {
+            cfg,
+            encoding: WireEncoding::F32,
+            resume: Some(ck),
+            journal: None,
+            elastic: None,
+        };
         assert!(serve(listener, &opts).is_err());
     }
 
@@ -695,7 +1573,13 @@ mod tests {
         cfg.epochs = 4.0; // long enough that the survivor is mid-session
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
-        let opts = ServeOptions { cfg, encoding: WireEncoding::F32, resume: None, journal: None };
+        let opts = ServeOptions {
+            cfg,
+            encoding: WireEncoding::F32,
+            resume: None,
+            journal: None,
+            elastic: None,
+        };
         let server = thread::spawn(move || serve(listener, &opts));
 
         // One real worker…
@@ -705,7 +1589,60 @@ mod tests {
         let (fabric, _welcome) = RemoteCluster::connect(&addr).unwrap();
         drop(fabric);
 
-        assert!(server.join().unwrap().is_err(), "serve must report the dead worker");
+        let err = server.join().unwrap().expect_err("serve must report the dead worker");
+        // Satellite: the dead-peer diagnostic names the offending rank
+        // and its last completed round.
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rank 1"), "must name the dead rank: {msg}");
+        assert!(msg.contains("round"), "must name the last completed round: {msg}");
         assert!(real.join().unwrap().is_err(), "the survivor must be released with an error");
+    }
+
+    #[test]
+    fn elastic_session_survives_a_worker_death() {
+        // p=2 elastic session, min 1: one worker dies after its first
+        // round; the survivor is committed into a p=1 epoch and runs to
+        // completion. (The OS-process twin, with SIGKILL and a real
+        // journal replay, lives in tests/fabric_e2e.rs.)
+        let mut cfg = tcp_cfg(2);
+        cfg.epochs = 2.0; // 1024 steps → 128 rounds: plenty to survive
+        cfg.elastic = true;
+        cfg.heartbeat_ms = 50;
+        cfg.min_workers = 1;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let opts = ServeOptions {
+            cfg: cfg.clone(),
+            encoding: WireEncoding::F32,
+            resume: None,
+            journal: None,
+            elastic: Some(ElasticOptions {
+                min_workers: 1,
+                max_workers: 2,
+                heartbeat_ms: 50,
+                anchor_dir: None,
+            }),
+        };
+        let server = thread::spawn(move || serve(listener, &opts));
+
+        // One real worker…
+        let real_addr = addr.clone();
+        let real = thread::spawn(move || run_remote_worker(&real_addr, None, None, None, None));
+        // …and one that completes the handshake and one round, then dies.
+        let (mut fabric, welcome) = RemoteCluster::connect(&addr).unwrap();
+        let quitter_cfg = ExperimentConfig::from_wire_json(&welcome.config_json).unwrap();
+        assert!(quitter_cfg.elastic, "the wire config must announce the elastic session");
+        fabric.start_heartbeats(Duration::from_millis(50));
+        let d = {
+            let engine = load_backend(&quitter_cfg).unwrap();
+            engine.manifest().init_params(quitter_cfg.seed ^ 0x9a9a).len()
+        };
+        let _ = fabric.all_gather(1.0, &vec![0.5f32; d]).unwrap();
+        drop(fabric); // hang up mid-session
+
+        let out = server.join().unwrap().expect("elastic serve must survive the death");
+        assert_eq!(out.finals.len(), 1, "the final epoch runs at p=1");
+        let survivor = real.join().unwrap().expect("survivor must complete");
+        assert!(survivor.steps >= 1024, "survivor's cumulative steps cover the budget");
     }
 }

@@ -64,6 +64,20 @@ pub enum MsgKind {
     Final,
     /// Either direction: fatal session error; payload is a UTF-8 message.
     Error,
+    /// Worker → rendezvous: periodic liveness beat carrying the worker's
+    /// last completed collective round (elastic sessions only).
+    Heartbeat,
+    /// Worker → rendezvous: ask to join the next epoch. Sent instead of
+    /// [`MsgKind::Hello`] by a worker rejoining after an epoch commit
+    /// (carrying its previous rank) or by a fresh late connector.
+    JoinRequest,
+    /// Worker → rendezvous: graceful departure at the next epoch
+    /// boundary, carrying the worker's last completed round.
+    Leave,
+    /// Rendezvous → worker: the current epoch is over — epoch id,
+    /// committed member set, anchor-checkpoint digest and a
+    /// human-readable reason. Workers reconnect for the next epoch.
+    EpochCommit,
 }
 
 impl MsgKind {
@@ -75,6 +89,10 @@ impl MsgKind {
             MsgKind::Cohort => 4,
             MsgKind::Final => 5,
             MsgKind::Error => 6,
+            MsgKind::Heartbeat => 7,
+            MsgKind::JoinRequest => 8,
+            MsgKind::Leave => 9,
+            MsgKind::EpochCommit => 10,
         }
     }
 
@@ -86,6 +104,10 @@ impl MsgKind {
             4 => MsgKind::Cohort,
             5 => MsgKind::Final,
             6 => MsgKind::Error,
+            7 => MsgKind::Heartbeat,
+            8 => MsgKind::JoinRequest,
+            9 => MsgKind::Leave,
+            10 => MsgKind::EpochCommit,
             _ => return None,
         })
     }
@@ -510,6 +532,178 @@ impl Welcome {
     }
 }
 
+/// A worker's periodic liveness beat (elastic sessions): "I am alive and
+/// have completed this many collective rounds." The relay resets its
+/// read deadline on any frame, so heartbeats keep an idle-looking but
+/// healthy worker (mid-τ local steps) from being declared dead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Heartbeat {
+    /// Last collective round the worker completed (0 before the first).
+    pub round: u64,
+}
+
+impl Heartbeat {
+    /// Build the wire frame.
+    pub fn frame(&self) -> Frame {
+        Frame {
+            kind: MsgKind::Heartbeat,
+            encoding: WireEncoding::F32,
+            payload: self.round.to_le_bytes().to_vec(),
+        }
+    }
+
+    /// Parse a [`MsgKind::Heartbeat`] frame.
+    pub fn parse(frame: &Frame) -> Result<Heartbeat> {
+        ensure!(
+            frame.kind == MsgKind::Heartbeat,
+            "expected a heartbeat frame, got {:?}",
+            frame.kind
+        );
+        let mut cur = Cur::new(&frame.payload);
+        let round = cur.u64()?;
+        cur.finish()?;
+        Ok(Heartbeat { round })
+    }
+}
+
+/// A worker asking to join the next epoch of an elastic session: either
+/// a survivor rejoining after an [`MsgKind::EpochCommit`] (carrying the
+/// rank it held in the committed epoch, so the rendezvous can hand it
+/// back its own anchor row) or a fresh late connector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JoinRequest {
+    /// The rank this worker held in the epoch that just committed;
+    /// `None` for a fresh joiner.
+    pub prior_rank: Option<u32>,
+}
+
+impl JoinRequest {
+    /// Build the wire frame (marker byte 0 = fresh, 1 = rejoin + rank).
+    pub fn frame(&self) -> Frame {
+        let mut payload = Vec::with_capacity(5);
+        match self.prior_rank {
+            None => payload.push(0),
+            Some(r) => {
+                payload.push(1);
+                payload.extend_from_slice(&r.to_le_bytes());
+            }
+        }
+        Frame { kind: MsgKind::JoinRequest, encoding: WireEncoding::F32, payload }
+    }
+
+    /// Parse a [`MsgKind::JoinRequest`] frame.
+    pub fn parse(frame: &Frame) -> Result<JoinRequest> {
+        ensure!(
+            frame.kind == MsgKind::JoinRequest,
+            "expected a join-request frame, got {:?}",
+            frame.kind
+        );
+        let mut cur = Cur::new(&frame.payload);
+        let prior_rank = match cur.u8()? {
+            0 => None,
+            1 => Some(cur.u32()?),
+            other => bail!("bad join marker {other}"),
+        };
+        cur.finish()?;
+        Ok(JoinRequest { prior_rank })
+    }
+}
+
+/// A worker's graceful goodbye: it departs at the next epoch boundary
+/// instead of simply vanishing, so the commit reason can say "left"
+/// rather than "died".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Leave {
+    /// Last collective round the worker completed.
+    pub round: u64,
+}
+
+impl Leave {
+    /// Build the wire frame.
+    pub fn frame(&self) -> Frame {
+        Frame {
+            kind: MsgKind::Leave,
+            encoding: WireEncoding::F32,
+            payload: self.round.to_le_bytes().to_vec(),
+        }
+    }
+
+    /// Parse a [`MsgKind::Leave`] frame.
+    pub fn parse(frame: &Frame) -> Result<Leave> {
+        ensure!(frame.kind == MsgKind::Leave, "expected a leave frame, got {:?}", frame.kind);
+        let mut cur = Cur::new(&frame.payload);
+        let round = cur.u64()?;
+        cur.finish()?;
+        Ok(Leave { round })
+    }
+}
+
+/// The rendezvous telling a surviving worker that the current epoch is
+/// over. Advisory on the wire — the worker uses it to log and to know it
+/// should reconnect with a [`JoinRequest`]; the authoritative record is
+/// the journal's `EpochCommitted` event. The member set here is the
+/// survivors known at send time (epoch-local ranks of the epoch that
+/// just ended).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EpochCommit {
+    /// Id of the epoch being *opened* (the one that just ended plus 1).
+    pub epoch: u64,
+    /// The collective round the ending epoch committed at (its anchor
+    /// round; 0 when the epoch never completed a round).
+    pub round: u64,
+    /// Surviving members' ranks in the epoch that just ended.
+    pub members: Vec<u32>,
+    /// FNV-1a 64 digest of the anchor checkpoint (cohort digest of the
+    /// committed round's panels), 0 when there is no anchor.
+    pub anchor_digest: u64,
+    /// Human-readable reason for the commit (who died/left/joined).
+    pub reason: String,
+}
+
+impl EpochCommit {
+    /// Build the wire frame.
+    pub fn frame(&self) -> Frame {
+        let mut payload = Vec::with_capacity(28 + 4 * self.members.len() + self.reason.len());
+        payload.extend_from_slice(&self.epoch.to_le_bytes());
+        payload.extend_from_slice(&self.round.to_le_bytes());
+        payload.extend_from_slice(&(self.members.len() as u32).to_le_bytes());
+        for &r in &self.members {
+            payload.extend_from_slice(&r.to_le_bytes());
+        }
+        payload.extend_from_slice(&self.anchor_digest.to_le_bytes());
+        payload.extend_from_slice(&(self.reason.len() as u32).to_le_bytes());
+        payload.extend_from_slice(self.reason.as_bytes());
+        Frame { kind: MsgKind::EpochCommit, encoding: WireEncoding::F32, payload }
+    }
+
+    /// Parse a [`MsgKind::EpochCommit`] frame.
+    pub fn parse(frame: &Frame) -> Result<EpochCommit> {
+        ensure!(
+            frame.kind == MsgKind::EpochCommit,
+            "expected an epoch-commit frame, got {:?}",
+            frame.kind
+        );
+        let mut cur = Cur::new(&frame.payload);
+        let epoch = cur.u64()?;
+        let round = cur.u64()?;
+        let n = cur.u32()? as usize;
+        ensure!(n <= 1 << 20, "implausible member count {n}");
+        // Each member occupies 4 payload bytes, so a lying count cannot
+        // reserve more than the payload justifies.
+        let mut members = Vec::with_capacity(n.min(frame.payload.len() / 4));
+        for _ in 0..n {
+            members.push(cur.u32()?);
+        }
+        let anchor_digest = cur.u64()?;
+        let reason_len = cur.u32()? as usize;
+        let reason = std::str::from_utf8(cur.take(reason_len)?)
+            .context("epoch-commit reason is not UTF-8")?
+            .to_string();
+        cur.finish()?;
+        Ok(EpochCommit { epoch, round, members, anchor_digest, reason })
+    }
+}
+
 /// The opening handshake frame a worker sends (empty payload; the header
 /// carries the version).
 pub fn hello_frame() -> Frame {
@@ -717,6 +911,83 @@ mod tests {
         let mut trailing = good.clone();
         trailing.payload.push(0xAB);
         assert!(Panel::parse(&trailing).is_err());
+    }
+
+    #[test]
+    fn elastic_frames_roundtrip() {
+        let hb = Heartbeat { round: 42 };
+        assert_eq!(Heartbeat::parse(&roundtrip(&hb.frame())).unwrap(), hb);
+
+        for prior_rank in [None, Some(0), Some(3), Some(u32::MAX)] {
+            let j = JoinRequest { prior_rank };
+            assert_eq!(JoinRequest::parse(&roundtrip(&j.frame())).unwrap(), j);
+        }
+
+        let l = Leave { round: u64::MAX };
+        assert_eq!(Leave::parse(&roundtrip(&l.frame())).unwrap(), l);
+
+        let c = EpochCommit {
+            epoch: 2,
+            round: 17,
+            members: vec![0, 2, 3],
+            anchor_digest: 0xdead_beef_cafe_f00d,
+            reason: "rank 1 died after completing round 17: connection reset".to_string(),
+        };
+        assert_eq!(EpochCommit::parse(&roundtrip(&c.frame())).unwrap(), c);
+
+        // Empty member set and empty reason are legal (round-0 commit).
+        let c0 = EpochCommit {
+            epoch: 1,
+            round: 0,
+            members: vec![],
+            anchor_digest: 0,
+            reason: String::new(),
+        };
+        assert_eq!(EpochCommit::parse(&roundtrip(&c0.frame())).unwrap(), c0);
+    }
+
+    #[test]
+    fn elastic_frames_reject_malformed_payloads() {
+        // Bad join marker.
+        let mut bad = JoinRequest { prior_rank: None }.frame();
+        bad.payload[0] = 7;
+        assert!(JoinRequest::parse(&bad).is_err());
+
+        // Truncated rejoin rank.
+        let mut short = JoinRequest { prior_rank: Some(3) }.frame();
+        short.payload.truncate(3);
+        assert!(JoinRequest::parse(&short).is_err());
+
+        // Trailing garbage after a heartbeat round.
+        let mut trailing = Heartbeat { round: 1 }.frame();
+        trailing.payload.push(0);
+        assert!(Heartbeat::parse(&trailing).is_err());
+
+        let commit = EpochCommit {
+            epoch: 1,
+            round: 3,
+            members: vec![0, 1],
+            anchor_digest: 9,
+            reason: "x".to_string(),
+        };
+        // A lying member count is rejected without over-allocating.
+        let mut lying = commit.frame();
+        lying.payload[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(EpochCommit::parse(&lying).is_err());
+        // A reason length pointing past the payload end is rejected.
+        let mut lying_reason = commit.frame();
+        let off = lying_reason.payload.len() - 1 - 4; // reason(1) + len(4)
+        lying_reason.payload[off..off + 4].copy_from_slice(&1024u32.to_le_bytes());
+        assert!(EpochCommit::parse(&lying_reason).is_err());
+        // Every strict prefix of the frame bytes is rejected.
+        let mut bytes = Vec::new();
+        commit.frame().write_to(&mut bytes).unwrap();
+        for k in 0..bytes.len() {
+            assert!(
+                Frame::read_from(&mut Cursor::new(&bytes[..k])).is_err(),
+                "prefix of {k} bytes must not parse"
+            );
+        }
     }
 
     #[test]

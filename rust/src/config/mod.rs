@@ -231,6 +231,24 @@ pub struct ExperimentConfig {
     /// instrumentation — never transported in the wire JSON (each
     /// participant decides its own journaling).
     pub journal: Option<PathBuf>,
+    /// Epoch-based elastic membership (`--elastic`, tcp fabric only):
+    /// workers may join, leave, and crash at epoch boundaries instead
+    /// of a single death poisoning the cohort. Rides the wire JSON so
+    /// welcomed workers know to heartbeat and to rejoin after an
+    /// `EpochCommit`. See `docs/FABRIC.md`.
+    pub elastic: bool,
+    /// Worker heartbeat period in milliseconds (`--heartbeat-ms`,
+    /// elastic sessions only); the rendezvous declares a peer dead
+    /// after ~4 silent periods.
+    pub heartbeat_ms: u64,
+    /// Fewest workers an elastic epoch may commit with
+    /// (`--min-workers`); the session errors out below this.
+    pub min_workers: usize,
+    /// Absolute step budget overriding the epochs-derived plan. The
+    /// elastic rendezvous sets this per epoch (remaining steps), so the
+    /// per-epoch wire config replays as a self-contained run; `None`
+    /// (the CLI default) plans from `epochs` as usual.
+    pub step_budget: Option<usize>,
 }
 
 impl Default for ExperimentConfig {
@@ -265,6 +283,10 @@ impl Default for ExperimentConfig {
             track_estimation_error: false,
             force_delta_order: None,
             journal: None,
+            elastic: false,
+            heartbeat_ms: 500,
+            min_workers: 1,
+            step_budget: None,
         }
     }
 }
@@ -403,6 +425,17 @@ impl ExperimentConfig {
                 );
             }
         }
+        // Elastic knobs are checked regardless of fabric: `wasgd
+        // replay` rebuilds elastic epoch configs under sim rules, and
+        // they must validate there too.
+        if self.elastic {
+            if self.heartbeat_ms == 0 {
+                return Err("--heartbeat-ms must be ≥ 1".into());
+            }
+            if self.min_workers == 0 {
+                return Err("--min-workers must be ≥ 1".into());
+            }
+        }
         Ok(())
     }
 
@@ -450,6 +483,16 @@ impl ExperimentConfig {
             "force_delta_order".to_string(),
             match self.force_delta_order {
                 Some(d) => num(d as f64),
+                None => Json::Null,
+            },
+        );
+        m.insert("elastic".to_string(), Json::Bool(self.elastic));
+        m.insert("heartbeat_ms".to_string(), num(self.heartbeat_ms as f64));
+        m.insert("min_workers".to_string(), num(self.min_workers as f64));
+        m.insert(
+            "step_budget".to_string(),
+            match self.step_budget {
+                Some(s) => num(s as f64),
                 None => Json::Null,
             },
         );
@@ -540,6 +583,33 @@ impl ExperimentConfig {
             None | Some(Json::Null) => None,
             Some(v) => Some(v.as_usize().ok_or_else(|| {
                 anyhow::anyhow!("wire config force_delta_order must be an integer or null")
+            })?),
+        };
+        // Elastic keys are optional for wire-format back-compat: a v1
+        // config (journaled or served before elasticity existed) reads
+        // as a fixed-cohort session with the default knobs.
+        cfg.elastic = match j.get("elastic") {
+            None | Some(Json::Null) => false,
+            Some(Json::Bool(b)) => *b,
+            Some(_) => anyhow::bail!("wire config elastic must be a boolean or null"),
+        };
+        cfg.heartbeat_ms = match j.get("heartbeat_ms") {
+            None | Some(Json::Null) => 500,
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("wire config heartbeat_ms must be an integer"))?
+                as u64,
+        };
+        cfg.min_workers = match j.get("min_workers") {
+            None | Some(Json::Null) => 1,
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("wire config min_workers must be an integer"))?,
+        };
+        cfg.step_budget = match j.get("step_budget") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_usize().ok_or_else(|| {
+                anyhow::anyhow!("wire config step_budget must be an integer or null")
             })?),
         };
         cfg.validate().map_err(|e| anyhow::anyhow!("wire config invalid: {e}"))?;
@@ -645,6 +715,10 @@ mod tests {
         cfg.easgd_alpha = Some(0.125);
         cfg.source = SourceKind::Cifar;
         cfg.data_dir = Some(PathBuf::from("/srv/data/cifar"));
+        cfg.elastic = true;
+        cfg.heartbeat_ms = 250;
+        cfg.min_workers = 3;
+        cfg.step_budget = Some(4096);
         let json = cfg.to_wire_json();
         let back = ExperimentConfig::from_wire_json(&json).unwrap();
         assert_eq!(back.dataset, cfg.dataset);
@@ -671,6 +745,10 @@ mod tests {
             cfg.easgd_alpha.unwrap().to_bits(),
             "a custom EASGD α must reach the workers bit-exactly"
         );
+        assert!(back.elastic, "the elastic flag must ride the wire");
+        assert_eq!(back.heartbeat_ms, 250);
+        assert_eq!(back.min_workers, 3);
+        assert_eq!(back.step_budget, Some(4096), "the epoch's step budget must ride the wire");
 
         // Awkward f32 bit patterns survive too.
         cfg.beta = 0.700000048f32;
@@ -719,6 +797,41 @@ mod tests {
         let back = ExperimentConfig::from_wire_json(&Json::Obj(doc).serialize()).unwrap();
         assert_eq!(back.source, SourceKind::Auto);
         assert_eq!(back.data_dir, None);
+    }
+
+    #[test]
+    fn wire_json_without_elastic_keys_reads_as_a_fixed_cohort() {
+        // A v1 config (pre-elasticity) must still parse: fixed cohort,
+        // default heartbeat knobs, epochs-derived step budget.
+        let mut cfg = ExperimentConfig::default();
+        cfg.fabric = FabricKind::Tcp;
+        let mut doc = match Json::parse(&cfg.to_wire_json()).unwrap() {
+            Json::Obj(m) => m,
+            _ => unreachable!("wire config is an object"),
+        };
+        for key in ["elastic", "heartbeat_ms", "min_workers", "step_budget"] {
+            doc.remove(key);
+        }
+        let back = ExperimentConfig::from_wire_json(&Json::Obj(doc).serialize()).unwrap();
+        assert!(!back.elastic);
+        assert_eq!(back.heartbeat_ms, 500);
+        assert_eq!(back.min_workers, 1);
+        assert_eq!(back.step_budget, None);
+    }
+
+    #[test]
+    fn elastic_knobs_are_validated_even_under_sim_rules() {
+        // `wasgd replay` rebuilds elastic epoch configs as sim; the
+        // combination must validate (and bad knobs must not).
+        let mut cfg = ExperimentConfig::default();
+        cfg.elastic = true;
+        cfg.step_budget = Some(0); // an epilogue epoch: legal
+        assert!(cfg.validate().is_ok(), "elastic + sim is the replay path");
+        cfg.heartbeat_ms = 0;
+        assert!(cfg.validate().is_err());
+        cfg.heartbeat_ms = 500;
+        cfg.min_workers = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

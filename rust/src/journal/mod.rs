@@ -32,10 +32,14 @@
 //! returns every complete record plus a [`Truncation`] marker, and
 //! replay verifies the complete prefix before reporting the cut.
 //!
-//! [`Event::Membership`] is a stub for the elastic-fabric roadmap item:
-//! today every participant joins at epoch 0 and the epoch never
-//! advances; the variants and wire layout are what a join/leave/crash
-//! stream will need.
+//! Elastic sessions (`--elastic`) advance through *epochs*: each epoch
+//! is journaled as its own self-contained segment (a `RunStarted` with
+//! the epoch's member count and anchor vectors), [`Event::Membership`]
+//! records every join/leave/crash at the epoch-local rank, and
+//! [`Event::EpochCommitted`] terminates a non-final epoch's segment
+//! with the committed round, the survivors' ranks, and the anchor
+//! digest that seeds the next epoch — the chain `wasgd replay` verifies
+//! across membership changes (see `docs/FABRIC.md`).
 
 pub mod replay;
 pub mod tail;
@@ -182,8 +186,9 @@ pub fn canonical_comm_bytes(round: u64, d: usize) -> u64 {
     round * Panel::wire_len(WireEncoding::F32, d) as u64
 }
 
-/// How a participant's membership changed — the elastic-fabric stub:
-/// today only `Joined` at epoch 0 is ever written.
+/// How a participant's membership changed. Fixed-cohort sessions only
+/// ever write `Joined` at epoch 0; elastic sessions write the full
+/// join/leave/crash stream at epoch-local ranks.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MembershipChange {
     /// The rank joined the cohort at this epoch.
@@ -278,11 +283,13 @@ pub enum Event {
         /// Where the checkpoint was saved.
         path: String,
     },
-    /// Membership stub for the elastic fabric (see [`MembershipChange`]).
+    /// One membership change (see [`MembershipChange`]). Fixed cohorts
+    /// write `Joined` at epoch 0 per rank; elastic sessions write the
+    /// full stream, with `rank` epoch-local.
     Membership {
-        /// Membership epoch (always 0 today).
+        /// Membership epoch the change belongs to.
         epoch: u64,
-        /// The rank whose membership changed.
+        /// The (epoch-local) rank whose membership changed.
         rank: u32,
         /// What happened.
         change: MembershipChange,
@@ -296,6 +303,25 @@ pub enum Event {
         /// Cohort journals: [`digest_cohort`] of every rank's final θ.
         /// Worker journals: [`digest_params`] of the writer's own θ.
         final_digest: u64,
+    },
+    /// An elastic epoch ended at a boundary: its segment is complete
+    /// (this is a segment terminator, like [`Event::RunFinished`], but
+    /// the run continues in the next segment at the new member set).
+    EpochCommitted {
+        /// Id of the epoch being *opened* (the terminated epoch + 1).
+        epoch: u64,
+        /// The collective round the ending epoch committed at (0 when
+        /// it never completed a round).
+        round: u64,
+        /// Survivors' ranks *in the epoch that just ended*, in the rank
+        /// order they take in the next epoch. New ranks ≥ `members.len()`
+        /// in the next segment are fresh joiners.
+        members: Vec<u32>,
+        /// [`digest_cohort`] of the anchor the next epoch resumes from
+        /// (0 when there is no anchor — a fresh-init restart).
+        anchor_digest: u64,
+        /// Human-readable reason (who died/left/joined, at what round).
+        reason: String,
     },
 }
 
@@ -348,6 +374,10 @@ impl PartialEq for Event {
                 RunFinished { steps, rounds, final_digest },
                 RunFinished { steps: s2, rounds: r2, final_digest: d2 },
             ) => steps == s2 && rounds == r2 && final_digest == d2,
+            (
+                EpochCommitted { epoch, round, members, anchor_digest, reason },
+                EpochCommitted { epoch: e2, round: r2, members: m2, anchor_digest: a2, reason: s2 },
+            ) => epoch == e2 && round == r2 && members == m2 && anchor_digest == a2 && reason == s2,
             _ => false,
         }
     }
@@ -366,6 +396,7 @@ impl Event {
             Event::CheckpointWritten { .. } => "CheckpointWritten",
             Event::Membership { .. } => "Membership",
             Event::RunFinished { .. } => "RunFinished",
+            Event::EpochCommitted { .. } => "EpochCommitted",
         }
     }
 }
@@ -487,6 +518,18 @@ fn encode_payload(ev: &Event) -> (u8, Vec<u8>) {
             out.extend_from_slice(&final_digest.to_le_bytes());
             (5, out)
         }
+        Event::EpochCommitted { epoch, round, members, anchor_digest, reason } => {
+            let mut out = Vec::with_capacity(32 + 4 * members.len() + reason.len());
+            out.extend_from_slice(&epoch.to_le_bytes());
+            out.extend_from_slice(&round.to_le_bytes());
+            out.extend_from_slice(&(members.len() as u32).to_le_bytes());
+            for &m in members {
+                out.extend_from_slice(&m.to_le_bytes());
+            }
+            out.extend_from_slice(&anchor_digest.to_le_bytes());
+            put_str(reason, &mut out);
+            (6, out)
+        }
     }
 }
 
@@ -535,6 +578,19 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Event> {
             rounds: cur.u64()?,
             final_digest: cur.u64()?,
         },
+        6 => {
+            let epoch = cur.u64()?;
+            let round = cur.u64()?;
+            let count = cur.u32()? as usize;
+            ensure!(count <= 1 << 20, "implausible committed member count {count}");
+            let mut members = Vec::with_capacity(count.min(payload.len() / 4));
+            for _ in 0..count {
+                members.push(cur.u32()?);
+            }
+            let anchor_digest = cur.u64()?;
+            let reason = cur.str()?;
+            Event::EpochCommitted { epoch, round, members, anchor_digest, reason }
+        }
         other => bail!("unknown journal event kind {other}"),
     };
     cur.finish()?;
@@ -583,7 +639,7 @@ pub fn parse_record(buf: &[u8]) -> Result<Option<(Event, usize)>> {
         "journal schema v{version}, this build reads v{JOURNAL_VERSION}"
     );
     let kind = buf[6];
-    ensure!((1..=5).contains(&kind), "unknown journal event kind {kind}");
+    ensure!((1..=6).contains(&kind), "unknown journal event kind {kind}");
     ensure!(buf[7] == 0, "reserved header byte is {:#04x}, expected 0", buf[7]);
     let len = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]);
     ensure!(
@@ -761,6 +817,11 @@ pub fn format_event(ev: &Event) -> String {
         Event::RunFinished { steps, rounds, final_digest } => format!(
             "RunFinished       steps={steps} rounds={rounds} final_digest={final_digest:#018x}"
         ),
+        Event::EpochCommitted { epoch, round, members, anchor_digest, reason } => format!(
+            "EpochCommitted    epoch={epoch} members={} round={round} \
+             anchor={anchor_digest:#018x} reason={reason:?}",
+            members.len()
+        ),
     }
 }
 
@@ -825,6 +886,13 @@ mod tests {
                 comm_bytes: 16640,
             },
             Event::CheckpointWritten { steps: 32, digest: 7, path: "/tmp/ck".into() },
+            Event::EpochCommitted {
+                epoch: 1,
+                round: 3,
+                members: vec![0, 2, 3],
+                anchor_digest: 0x1122_3344_5566_7788,
+                reason: "rank 1 died after completing round 3".into(),
+            },
             Event::RunFinished { steps: 32, rounds: 4, final_digest: 99 },
         ]
     }

@@ -40,7 +40,10 @@ use crate::coordinator::Trainer;
 use crate::data::source::DataPipeline;
 use crate::runtime::load_backend;
 
-use super::{digest_params, format_event, read_events, Event, MemorySink, Truncation, RANK_COHORT};
+use super::{
+    digest_cohort, digest_params, format_event, read_events, Event, MemorySink, Truncation,
+    RANK_COHORT,
+};
 
 /// Knobs for a replay run.
 #[derive(Debug, Default)]
@@ -95,9 +98,29 @@ pub struct Finish {
     pub final_digest: u64,
 }
 
+/// A segment's terminating `EpochCommitted` row: this epoch was cut at
+/// `round` and the run continued in the *next* segment with the listed
+/// survivors. Mutually exclusive with [`Finish`].
+#[derive(Clone, Debug)]
+pub struct Commit {
+    /// Id of the epoch being opened by the commit.
+    pub epoch: u64,
+    /// Last fully published round of the committed (this) segment.
+    pub round: u64,
+    /// Survivors' ranks *in this segment*, listed in their next-segment
+    /// rank order — the cross-epoch anchor chain.
+    pub members: Vec<u32>,
+    /// `digest_cohort` over the next segment's resume rows (0 = the
+    /// next epoch starts from the seed init).
+    pub anchor_digest: u64,
+    /// Human-readable boundary reason (who died/left/joined).
+    pub reason: String,
+}
+
 /// One run segment: a `RunStarted` and everything recorded under it. A
-/// stitched journal (resumed sessions append) holds several, each
-/// self-contained and independently verifiable.
+/// stitched journal (resumed sessions append, elastic sessions emit one
+/// segment per epoch) holds several, each self-contained and
+/// independently verifiable.
 #[derive(Clone, Debug)]
 pub struct Segment {
     /// The segment's `RunStarted` header.
@@ -106,6 +129,9 @@ pub struct Segment {
     pub digests: Vec<DigestRow>,
     /// The `RunFinished`, when the segment completed.
     pub finished: Option<Finish>,
+    /// The `EpochCommitted`, when the segment was cut at an elastic
+    /// epoch boundary instead of finishing.
+    pub committed: Option<Commit>,
     /// Index of the segment's first record in the journal.
     pub first_record: u64,
 }
@@ -121,6 +147,9 @@ pub struct VerifyReport {
     pub digests: u64,
     /// Local SGD steps re-executed per worker (summed over segments).
     pub steps: u64,
+    /// Elastic epoch boundaries whose anchor chain (committed panels →
+    /// next epoch's resume rows) was verified.
+    pub commits: u64,
 }
 
 impl fmt::Display for VerifyReport {
@@ -130,7 +159,11 @@ impl fmt::Display for VerifyReport {
             "journal verified: {} segment(s), {} round(s), {} digest(s) bit-exact, \
              {} step(s) re-executed",
             self.segments, self.rounds, self.digests, self.steps
-        )
+        )?;
+        if self.commits > 0 {
+            write!(f, ", {} epoch boundary(ies) chained", self.commits)?;
+        }
+        Ok(())
     }
 }
 
@@ -156,6 +189,7 @@ pub fn segments(events: &[Event]) -> Result<Vec<Segment>> {
                     },
                     digests: Vec::new(),
                     finished: None,
+                    committed: None,
                     first_record: i as u64,
                 });
             }
@@ -166,6 +200,10 @@ pub fn segments(events: &[Event]) -> Result<Vec<Segment>> {
                 ensure!(
                     seg.finished.is_none(),
                     "record #{i}: PanelDigest after the segment's RunFinished"
+                );
+                ensure!(
+                    seg.committed.is_none(),
+                    "record #{i}: PanelDigest after the segment's EpochCommitted"
                 );
                 seg.digests.push(DigestRow {
                     round: *round,
@@ -180,8 +218,29 @@ pub fn segments(events: &[Event]) -> Result<Vec<Segment>> {
                     .last_mut()
                     .ok_or_else(|| anyhow!("record #{i}: RunFinished before any RunStarted"))?;
                 ensure!(seg.finished.is_none(), "record #{i}: duplicate RunFinished");
+                ensure!(
+                    seg.committed.is_none(),
+                    "record #{i}: RunFinished after the segment's EpochCommitted"
+                );
                 seg.finished =
                     Some(Finish { steps: *steps, rounds: *rounds, final_digest: *final_digest });
+            }
+            Event::EpochCommitted { epoch, round, members, anchor_digest, reason } => {
+                let seg = segs
+                    .last_mut()
+                    .ok_or_else(|| anyhow!("record #{i}: EpochCommitted before any RunStarted"))?;
+                ensure!(
+                    seg.finished.is_none(),
+                    "record #{i}: EpochCommitted after the segment's RunFinished"
+                );
+                ensure!(seg.committed.is_none(), "record #{i}: duplicate EpochCommitted");
+                seg.committed = Some(Commit {
+                    epoch: *epoch,
+                    round: *round,
+                    members: members.clone(),
+                    anchor_digest: *anchor_digest,
+                    reason: reason.clone(),
+                });
             }
             Event::CheckpointWritten { .. } | Event::Membership { .. } => {
                 ensure!(!segs.is_empty(), "record #{i}: event before any RunStarted");
@@ -221,6 +280,22 @@ pub fn verify(path: &Path, opts: &ReplayOptions) -> Result<VerifyReport> {
         report.rounds += stats.rounds;
         report.digests += stats.digests;
         report.steps += stats.steps;
+        if let Some(c) = &seg.committed {
+            // An elastic epoch boundary: the segment was verified up to
+            // its committed round above; now chain it onto the next
+            // epoch's resume rows.
+            ensure!(
+                i < last,
+                "segment #{i} of journal {} commits epoch {} but the journal ends before \
+                 that epoch's RunStarted — truncated at the boundary",
+                path.display(),
+                c.epoch
+            );
+            verify_commit_chain(i, seg, c, &segs[i + 1])
+                .with_context(|| format!("epoch boundary after segment #{i}"))?;
+            report.commits += 1;
+            continue;
+        }
         if seg.finished.is_none() {
             if i == last {
                 if let Some(Truncation { offset, record }) = trunc {
@@ -247,6 +322,95 @@ pub fn verify(path: &Path, opts: &ReplayOptions) -> Result<VerifyReport> {
         }
     }
     Ok(report)
+}
+
+/// Verify one elastic epoch boundary: the committed segment's last
+/// published panels must be *exactly* the next segment's resume rows,
+/// survivor by survivor — the anchor chain that makes a journal with
+/// membership changes verifiable end to end.
+///
+/// `c.members[j]` is the rank (in `seg`) of the worker seated at rank
+/// `j` of `next`; ranks `j ≥ members.len()` are fresh joiners, which
+/// the rendezvous seeds with the first member's row.
+fn verify_commit_chain(i: usize, seg: &Segment, c: &Commit, next: &Segment) -> Result<()> {
+    let max_round = seg.digests.iter().map(|d| d.round).max().unwrap_or(0);
+    ensure!(
+        c.round == max_round,
+        "EpochCommitted says round {} but the segment's digests reach round {max_round}",
+        c.round
+    );
+    let resume = &next.header.resume;
+    if resume.is_empty() {
+        // The next epoch starts from the seed init (the boundary hit
+        // before any round committed in a fresh-init epoch).
+        ensure!(
+            c.anchor_digest == 0,
+            "next segment resumes from the seed init but the commit records anchor \
+             {:#018x}",
+            c.anchor_digest
+        );
+        return Ok(());
+    }
+    ensure!(
+        resume.len() == next.header.p as usize,
+        "next segment welcomes p={} but carries {} resume row(s)",
+        next.header.p,
+        resume.len()
+    );
+    ensure!(
+        c.members.len() <= resume.len(),
+        "commit lists {} survivor(s) for a next epoch of p={}",
+        c.members.len(),
+        resume.len()
+    );
+    let got = digest_cohort(resume.iter().map(|v| v.as_slice()));
+    ensure!(
+        got == c.anchor_digest,
+        "anchor digest mismatch at the boundary: commit records {:#018x}, the next \
+         segment's resume rows digest to {got:#018x}",
+        c.anchor_digest
+    );
+    for (j, row) in resume.iter().enumerate() {
+        let d = digest_params(row);
+        if let Some(&old) = c.members.get(j) {
+            let want = if c.round > 0 {
+                seg.digests
+                    .iter()
+                    .find(|r| r.round == c.round && r.rank == old)
+                    .map(|r| r.digest)
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "segment #{i} has no digest for rank {old} at committed round {}",
+                            c.round
+                        )
+                    })?
+            } else {
+                // Cut before any round published: survivors carry this
+                // epoch's own resume rows forward unchanged.
+                let prev = &seg.header.resume;
+                ensure!(
+                    (old as usize) < prev.len(),
+                    "commit names rank {old} but segment #{i} resumed only {} row(s)",
+                    prev.len()
+                );
+                digest_params(&prev[old as usize])
+            };
+            ensure!(
+                d == want,
+                "anchor chain broken at next-epoch rank {j} (was rank {old}): committed \
+                 panel digests to {want:#018x}, resume row to {d:#018x}",
+            );
+        } else {
+            // A fresh joiner clones the first member's anchor row.
+            let d0 = digest_params(&resume[0]);
+            ensure!(
+                d == d0,
+                "joiner at next-epoch rank {j} carries row {d:#018x}, expected the first \
+                 member's anchor {d0:#018x}",
+            );
+        }
+    }
+    Ok(())
 }
 
 fn verify_segment(seg: &Segment, opts: &ReplayOptions) -> Result<SegStats> {
@@ -508,5 +672,106 @@ mod tests {
             Event::PanelDigest { round: 2, rank: 0, digest: 1, loss: 0.5, comm_bytes: 1 },
         ];
         assert!(segments(&evs).is_err());
+    }
+
+    fn committed(epoch: u64, round: u64, members: Vec<u32>, anchor_digest: u64) -> Event {
+        Event::EpochCommitted { epoch, round, members, anchor_digest, reason: "test".into() }
+    }
+
+    #[test]
+    fn segments_attach_epoch_commits_and_reject_stragglers() {
+        let evs = vec![
+            started(RANK_COHORT),
+            Event::PanelDigest { round: 1, rank: 0, digest: 1, loss: 0.5, comm_bytes: 10 },
+            Event::Membership { epoch: 0, rank: 1, change: MembershipChange::Crashed },
+            committed(1, 1, vec![0], 7),
+            started(RANK_COHORT),
+            Event::RunFinished { steps: 8, rounds: 1, final_digest: 2 },
+        ];
+        let segs = segments(&evs).unwrap();
+        assert_eq!(segs.len(), 2);
+        let c = segs[0].committed.as_ref().expect("first segment was committed");
+        assert_eq!((c.epoch, c.round, c.anchor_digest), (1, 1, 7));
+        assert_eq!(c.members, vec![0]);
+        assert!(segs[0].finished.is_none());
+        assert!(segs[1].committed.is_none());
+
+        // A digest, finish, or second commit after the commit is malformed.
+        for bad in [
+            Event::PanelDigest { round: 2, rank: 0, digest: 1, loss: 0.5, comm_bytes: 1 },
+            Event::RunFinished { steps: 8, rounds: 1, final_digest: 2 },
+            committed(2, 1, vec![0], 7),
+        ] {
+            let evs = vec![started(RANK_COHORT), committed(1, 0, vec![], 0), bad];
+            assert!(segments(&evs).is_err());
+        }
+    }
+
+    #[test]
+    fn commit_chain_checks_anchor_rows_survivor_by_survivor() {
+        // Segment 0: p=2, committed at round 1 with rank 1 surviving
+        // (seated at rank 0 of the next epoch) plus one fresh joiner.
+        let row: Vec<f32> = vec![1.0, 2.0, 3.0];
+        let other: Vec<f32> = vec![4.0, 5.0, 6.0];
+        let resume = vec![row.clone(), row.clone()];
+        let anchor = digest_cohort(resume.iter().map(|v| v.as_slice()));
+        let seg0 = Segment {
+            header: SegmentHeader {
+                rank: RANK_COHORT,
+                p: 2,
+                seed: 1,
+                encoding: WireEncoding::F32,
+                git_rev: "r".into(),
+                config_json: "{}".into(),
+                resume: Vec::new(),
+            },
+            digests: vec![
+                DigestRow {
+                    round: 1,
+                    rank: 0,
+                    digest: digest_params(&other),
+                    loss: 0.5,
+                    comm_bytes: 1,
+                },
+                DigestRow {
+                    round: 1,
+                    rank: 1,
+                    digest: digest_params(&row),
+                    loss: 0.5,
+                    comm_bytes: 1,
+                },
+            ],
+            finished: None,
+            committed: Some(Commit {
+                epoch: 1,
+                round: 1,
+                members: vec![1],
+                anchor_digest: anchor,
+                reason: "rank 0 died".into(),
+            }),
+            first_record: 0,
+        };
+        let mut seg1 = Segment {
+            header: SegmentHeader { p: 2, resume, ..seg0.header.clone() },
+            digests: Vec::new(),
+            finished: None,
+            committed: None,
+            first_record: 4,
+        };
+        let c = seg0.committed.clone().unwrap();
+        verify_commit_chain(0, &seg0, &c, &seg1).expect("a well-formed chain verifies");
+
+        // Survivor carrying the wrong row breaks the chain.
+        seg1.header.resume[0] = other.clone();
+        assert!(verify_commit_chain(0, &seg0, &c, &seg1).is_err());
+
+        // Fresh-init boundary: empty resume demands a zero anchor digest.
+        seg1.header.resume = Vec::new();
+        let fresh = Commit { round: 0, members: vec![], anchor_digest: 0, ..c.clone() };
+        let mut seg0_fresh = seg0.clone();
+        seg0_fresh.digests.clear();
+        verify_commit_chain(0, &seg0_fresh, &fresh, &seg1).expect("fresh-init chain verifies");
+        let lying = Commit { anchor_digest: 9, ..fresh };
+        assert!(verify_commit_chain(0, &seg0_fresh, &lying, &seg1).is_err());
     }
 }

@@ -44,10 +44,13 @@ USAGE:
                   [--fabric sim|tcp] [--encoding f32|qi8]
                   [--target-loss F] [--out FILE.csv] [--save-checkpoint DIR]
                   [--resume DIR] [--journal FILE]
+                  [--elastic] [--heartbeat-ms N] [--min-workers N]
+                  [--max-workers N]
   wasgd compare   (same flags; runs every algorithm on the sim fabric)
   wasgd serve     --listen ADDR [--workers P] [--encoding f32|qi8]
                   [--save-checkpoint DIR] [--resume DIR] [--journal FILE]
-                  (+ run flags)
+                  [--elastic] [--heartbeat-ms N] [--min-workers N]
+                  [--max-workers N] (+ run flags)
   wasgd worker    --connect ADDR [--threads N] [--artifacts DIR]
                   [--data-dir DIR] [--journal BASE]
   wasgd replay    JOURNAL [--inspect] [--data-dir DIR]
@@ -86,6 +89,18 @@ fabrics (--fabric, default sim):
         — no center variable. With the default lossless f32 encoding the
         final parameters match --fabric sim bit for bit; --encoding qi8
         quantises panels to i8 (~4x less traffic, lossy).
+
+elastic membership (--elastic, tcp only; see docs/FABRIC.md):
+  the session advances through epochs with committed member sets:
+  workers heartbeat every --heartbeat-ms (default 500), a crash or
+  `Leave` cuts the epoch at its last published round instead of killing
+  the cohort, and survivors plus any queued joiners re-form at the
+  boundary from the committed anchor (re-sharded by the rank-stable
+  shard rule). --min-workers (default 1) floors the cohort;
+  --max-workers (serve/run, default p) caps growth. --save-checkpoint
+  DIR also writes per-boundary anchors to DIR/epoch_NNNN. Each epoch
+  journals as a self-contained segment, so `wasgd replay` verifies runs
+  across membership changes.
 
 run journal (--journal, see docs/JOURNAL.md):
   --journal FILE appends a CRC-framed event log of the run: the full wire
@@ -157,7 +172,34 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     cfg.seed = args.num_flag("seed", 42u64)?;
     cfg.target_loss = args.opt_num::<f64>("target-loss")?;
     cfg.journal = args.opt_str("journal").map(PathBuf::from);
+    cfg.elastic = args.bool_flag("elastic");
+    cfg.heartbeat_ms = args.num_flag("heartbeat-ms", 500u64)?;
+    cfg.min_workers = args.num_flag("min-workers", 1usize)?;
     Ok(cfg)
+}
+
+/// Build the rendezvous-side elastic options when `--elastic` is on.
+/// `--max-workers` caps cohort growth (default: the initial p — leavers
+/// can be replaced but the cohort never grows); `--save-checkpoint DIR`
+/// doubles as the epoch-anchor directory.
+fn elastic_from(
+    cfg: &ExperimentConfig,
+    args: &Args,
+    ckpt_dir: Option<&str>,
+) -> Result<Option<tcp::ElasticOptions>> {
+    let max_workers = args.opt_num::<usize>("max-workers")?;
+    if !cfg.elastic {
+        if max_workers.is_some() {
+            bail!("--max-workers sizes an elastic session; add --elastic");
+        }
+        return Ok(None);
+    }
+    Ok(Some(tcp::ElasticOptions {
+        min_workers: cfg.min_workers,
+        max_workers: max_workers.unwrap_or(cfg.p).max(cfg.p),
+        heartbeat_ms: cfg.heartbeat_ms,
+        anchor_dir: ckpt_dir.map(PathBuf::from),
+    }))
 }
 
 fn encoding_from(args: &Args) -> Result<WireEncoding> {
@@ -184,6 +226,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     if args.opt_str("resume").is_some() {
         bail!("--resume restarts a tcp rendezvous; add --fabric tcp (or use `wasgd serve`)");
+    }
+    if cfg.elastic {
+        bail!("--elastic is epoch-based membership for real workers; add --fabric tcp");
     }
     let out_path = args.opt_str("out");
     let ckpt_dir = args.opt_str("save-checkpoint");
@@ -260,17 +305,21 @@ fn cmd_run_tcp(cfg: ExperimentConfig, args: &Args) -> Result<()> {
     let ckpt_dir = args.opt_str("save-checkpoint");
     let encoding = encoding_from(args)?;
     let resume = resume_from(args)?;
+    let elastic = elastic_from(&cfg, args, ckpt_dir.as_deref())?;
     args.finish()?;
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
 
+    let is_elastic = elastic.is_some();
     let listener = TcpListener::bind("127.0.0.1:0").context("binding the loopback rendezvous")?;
     let addr = listener.local_addr()?;
     eprintln!(
-        "fabric tcp: rendezvous on {addr}, spawning {} worker processes ({} panels)",
+        "fabric tcp: rendezvous on {addr}, spawning {} worker processes ({} panels{})",
         cfg.p,
-        encoding.name()
+        encoding.name(),
+        if is_elastic { ", elastic" } else { "" }
     );
-    let opts = ServeOptions { cfg: cfg.clone(), encoding, resume, journal: cfg.journal.clone() };
+    let opts =
+        ServeOptions { cfg: cfg.clone(), encoding, resume, journal: cfg.journal.clone(), elastic };
     let server = std::thread::spawn(move || tcp::serve(listener, &opts));
 
     let exe = std::env::current_exe().context("locating the wasgd binary for workers")?;
@@ -296,6 +345,7 @@ fn cmd_run_tcp(cfg: ExperimentConfig, args: &Args) -> Result<()> {
     // Wait for the session, watching the children: a worker that dies
     // before (or without) connecting would otherwise leave the
     // rendezvous blocked in accept/relay forever.
+    let mut reported = vec![false; children.len()];
     let outcome = loop {
         if server.is_finished() {
             break server.join().map_err(|_| anyhow::anyhow!("rendezvous thread panicked"))?;
@@ -303,19 +353,29 @@ fn cmd_run_tcp(cfg: ExperimentConfig, args: &Args) -> Result<()> {
         let mut dead = None;
         for (i, child) in children.iter_mut().enumerate() {
             if let Some(status) = child.try_wait()? {
-                if !status.success() {
+                if !status.success() && !reported[i] {
+                    reported[i] = true;
                     dead = Some((i, status));
                 }
             }
         }
         if let Some((i, status)) = dead {
-            for child in children.iter_mut() {
-                let _ = child.kill();
+            if is_elastic {
+                // An elastic session absorbs the death at the next epoch
+                // boundary; the survivors keep training.
+                eprintln!(
+                    "worker process {i} exited with {status}; continuing at the next \
+                     epoch boundary"
+                );
+            } else {
+                for child in children.iter_mut() {
+                    let _ = child.kill();
+                }
+                for child in children.iter_mut() {
+                    let _ = child.wait();
+                }
+                bail!("worker process {i} exited with {status} before the session completed");
             }
-            for child in children.iter_mut() {
-                let _ = child.wait();
-            }
-            bail!("worker process {i} exited with {status} before the session completed");
         }
         std::thread::sleep(std::time::Duration::from_millis(50));
     };
@@ -327,7 +387,11 @@ fn cmd_run_tcp(cfg: ExperimentConfig, args: &Args) -> Result<()> {
     }
     let outcome = outcome?;
     if failures > 0 {
-        bail!("{failures} worker process(es) exited with an error");
+        if is_elastic {
+            eprintln!("{failures} worker process(es) died; the session completed without them");
+        } else {
+            bail!("{failures} worker process(es) exited with an error");
+        }
     }
     print_serve_summary(&cfg, encoding, &outcome);
     if let Some(dir) = ckpt_dir {
@@ -347,6 +411,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let encoding = encoding_from(args)?;
     let resume = resume_from(args)?;
     let ckpt_dir = args.opt_str("save-checkpoint");
+    let elastic = elastic_from(&cfg, args, ckpt_dir.as_deref())?;
     args.finish()?;
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
 
@@ -357,13 +422,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("listening on {}", listener.local_addr()?);
     std::io::stdout().flush().ok();
     eprintln!(
-        "rendezvous for {} × {} on {} ({} panels); waiting for workers…",
+        "rendezvous for {} × {} on {} ({} panels{}); waiting for workers…",
         cfg.p,
         cfg.algo.name(),
         cfg.dataset.name(),
-        encoding.name()
+        encoding.name(),
+        if elastic.is_some() { ", elastic" } else { "" }
     );
-    let opts = ServeOptions { cfg: cfg.clone(), encoding, resume, journal: cfg.journal.clone() };
+    let opts =
+        ServeOptions { cfg: cfg.clone(), encoding, resume, journal: cfg.journal.clone(), elastic };
     let outcome = tcp::serve(listener, &opts)?;
     print_serve_summary(&cfg, encoding, &outcome);
     if let Some(dir) = ckpt_dir {

@@ -15,19 +15,37 @@
 use std::net::TcpListener;
 use std::process::{Command, Stdio};
 use std::thread;
+use std::time::Duration;
 
 use wasgd::cluster::fabric::{planned_steps, run_decentralized_threaded};
-use wasgd::cluster::tcp::{serve, ServeOptions};
+use wasgd::cluster::tcp::{serve, ElasticOptions, ServeOptions};
 use wasgd::cluster::threads::run_wasgd_plus_threaded;
 use wasgd::cluster::wire::WireEncoding;
 use wasgd::config::{AlgoKind, BackendKind, ExperimentConfig};
 use wasgd::coordinator::Trainer;
 use wasgd::data::{idx, DataPipeline, Dataset, SourceKind};
+use wasgd::journal::replay::{self, ReplayOptions};
 use wasgd::journal::{rank_journal_path, read_events, Event};
 use wasgd::runtime::load_backend;
 
 fn bits(v: &[f32]) -> Vec<u32> {
     v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Poll a journal the rendezvous is still appending to until `pred`
+/// holds on its event stream. A torn tail record (`Truncation`) is
+/// expected while the writer is live, so it is tolerated here — only
+/// the parsed prefix feeds the predicate.
+fn wait_for_journal(path: &std::path::Path, what: &str, pred: impl Fn(&[Event]) -> bool) {
+    for _ in 0..12_000 {
+        if let Ok((events, _trunc)) = read_events(path) {
+            if pred(&events) {
+                return;
+            }
+        }
+        thread::sleep(Duration::from_millis(1));
+    }
+    panic!("timed out waiting for {what} in {}", path.display());
 }
 
 /// Every `PanelDigest` row of a journal, loss bit-compared.
@@ -151,6 +169,7 @@ fn acceptance_tcp_four_processes_match_sim_bit_exactly() {
         encoding: WireEncoding::F32,
         resume: None,
         journal: Some(serve_jrn.clone()),
+        elastic: None,
     };
     let server = thread::spawn(move || serve(listener, &opts));
 
@@ -240,8 +259,13 @@ fn idx_backed_tcp_four_processes_match_sim_bit_exactly() {
 
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
-    let opts =
-        ServeOptions { cfg: cfg.clone(), encoding: WireEncoding::F32, resume: None, journal: None };
+    let opts = ServeOptions {
+        cfg: cfg.clone(),
+        encoding: WireEncoding::F32,
+        resume: None,
+        journal: None,
+        elastic: None,
+    };
     let server = thread::spawn(move || serve(listener, &opts));
 
     let exe = env!("CARGO_BIN_EXE_wasgd");
@@ -273,4 +297,166 @@ fn idx_backed_tcp_four_processes_match_sim_bit_exactly() {
         );
     }
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn elastic_tcp_survives_a_sigkilled_worker() {
+    // Elastic acceptance #1: 4 OS worker processes, one SIGKILLed
+    // mid-run — no Leave frame, no TCP FIN courtesy; the rendezvous
+    // only learns from the silence. It must cut the epoch, commit with
+    // the 3 survivors, re-form at p=3 from the anchor checkpoint, and
+    // drain the full step budget — with the loss still decreasing and
+    // the stitched journal replay-verifiable across the membership
+    // change.
+    let mut cfg = tiny_cnn_cfg();
+    cfg.tau = 2; // many cheap rounds: the kill lands mid-run, not post-run
+    cfg.epochs = 2.0; // 256 local steps → 128 boundaries
+    cfg.elastic = true;
+    cfg.heartbeat_ms = 100;
+    cfg.min_workers = 2;
+    let jdir = std::env::temp_dir().join(format!("wasgd_elastic_kill_{}", std::process::id()));
+    std::fs::create_dir_all(&jdir).unwrap();
+    let serve_jrn = jdir.join("serve.jrn");
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = ServeOptions {
+        cfg: cfg.clone(),
+        encoding: WireEncoding::F32,
+        resume: None,
+        journal: Some(serve_jrn.clone()),
+        elastic: Some(ElasticOptions {
+            min_workers: 2,
+            max_workers: 4,
+            heartbeat_ms: 100,
+            anchor_dir: None,
+        }),
+    };
+    let server = thread::spawn(move || serve(listener, &opts));
+
+    let exe = env!("CARGO_BIN_EXE_wasgd");
+    let mut children: Vec<_> = (0..cfg.p)
+        .map(|_| {
+            Command::new(exe)
+                .args(["worker", "--connect", &addr])
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawning a wasgd worker process")
+        })
+        .collect();
+
+    // Let the cohort publish at least one full round, then kill.
+    wait_for_journal(&serve_jrn, "the first collective round", |events| {
+        events.iter().filter(|ev| matches!(ev, Event::PanelDigest { .. })).count() >= 4
+    });
+    children[1].kill().expect("SIGKILL the victim worker");
+    let mut victim = children.remove(1);
+
+    let outcome = server.join().unwrap().expect("elastic rendezvous session");
+    assert_eq!(outcome.finals.len(), 3, "the session must finish at p=3");
+    assert_eq!(outcome.steps, 256, "the survivors absorb the full step budget");
+    assert!(!victim.wait().unwrap().success(), "the victim was SIGKILLed");
+    for mut child in children {
+        assert!(child.wait().unwrap().success(), "a surviving worker process failed");
+    }
+
+    // The loss keeps decreasing across the membership change: the mean
+    // over the first round's 4 digests beats the final round's 3.
+    let rows = digest_rows(&serve_jrn);
+    let mean = |r: &[(u64, u32, u64, u32, u64)]| {
+        r.iter().map(|&(_, _, _, lb, _)| f64::from(f32::from_bits(lb))).sum::<f64>()
+            / r.len() as f64
+    };
+    let first = mean(&rows[..4]);
+    let last = mean(&rows[rows.len() - 3..]);
+    assert!(
+        last < first,
+        "loss must keep decreasing across the kill: round 1 mean {first}, final mean {last}"
+    );
+
+    // The stitched journal — epoch 0 at p=4, the boundary, epoch 1 at
+    // p=3 — replays bit-exactly, anchor chain included.
+    let report = replay::verify(&serve_jrn, &ReplayOptions::default())
+        .expect("replay across the membership change");
+    assert!(report.segments >= 2, "the kill must split the run into epochs");
+    assert!(report.commits >= 1, "the epoch boundary must be chained");
+    let _ = std::fs::remove_dir_all(&jdir);
+}
+
+#[test]
+fn elastic_tcp_absorbs_a_late_joiner() {
+    // Elastic acceptance #2: a p=2 session is under way when a third
+    // worker connects. The rendezvous parks it, cuts the epoch at the
+    // next boundary, and re-forms at p=3 with the joiner seated and
+    // seeded from the anchor — and the whole stitched journal still
+    // replay-verifies.
+    let mut cfg = tiny_cnn_cfg();
+    cfg.p = 2;
+    cfg.tau = 2;
+    cfg.epochs = 4.0; // 512 local steps → 256 boundaries: room to join mid-run
+    cfg.elastic = true;
+    cfg.heartbeat_ms = 100;
+    cfg.min_workers = 1;
+    let jdir = std::env::temp_dir().join(format!("wasgd_elastic_join_{}", std::process::id()));
+    std::fs::create_dir_all(&jdir).unwrap();
+    let serve_jrn = jdir.join("serve.jrn");
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = ServeOptions {
+        cfg: cfg.clone(),
+        encoding: WireEncoding::F32,
+        resume: None,
+        journal: Some(serve_jrn.clone()),
+        elastic: Some(ElasticOptions {
+            min_workers: 1,
+            max_workers: 3,
+            heartbeat_ms: 100,
+            anchor_dir: None,
+        }),
+    };
+    let server = thread::spawn(move || serve(listener, &opts));
+
+    let exe = env!("CARGO_BIN_EXE_wasgd");
+    let spawn_worker = || {
+        Command::new(exe)
+            .args(["worker", "--connect", &addr])
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning a wasgd worker process")
+    };
+    let mut children: Vec<_> = (0..cfg.p).map(|_| spawn_worker()).collect();
+
+    // Once the p=2 cohort has a round on the books, the latecomer knocks.
+    wait_for_journal(&serve_jrn, "the first collective round", |events| {
+        events.iter().filter(|ev| matches!(ev, Event::PanelDigest { .. })).count() >= 2
+    });
+    children.push(spawn_worker());
+
+    let outcome = server.join().unwrap().expect("elastic rendezvous session");
+    assert_eq!(outcome.finals.len(), 3, "the joiner must be seated by the finale");
+    assert_eq!(outcome.steps, 512, "the budget is conserved across the re-form");
+    for mut child in children {
+        assert!(child.wait().unwrap().success(), "a worker process failed");
+    }
+
+    let (events, trunc) = read_events(&serve_jrn).unwrap();
+    assert!(trunc.is_none(), "the finished serve journal must be whole");
+    assert!(
+        events.iter().any(|ev| matches!(
+            ev,
+            Event::EpochCommitted { reason, .. } if reason.contains("joiner")
+        )),
+        "the boundary reason must name the queued joiner"
+    );
+    let segs = replay::segments(&events).unwrap();
+    assert!(segs.len() >= 2, "the join must open a new epoch segment");
+    assert_eq!(segs[1].header.p, 3, "the second epoch runs at p=3");
+
+    let report = replay::verify(&serve_jrn, &ReplayOptions::default())
+        .expect("replay across the join");
+    assert!(report.commits >= 1, "the absorption boundary must be chained");
+    let _ = std::fs::remove_dir_all(&jdir);
 }

@@ -75,6 +75,16 @@ fn arb_event() -> impl Strategy<Value = Event> {
         (any::<u64>(), any::<u64>(), any::<u64>()).prop_map(|(steps, rounds, final_digest)| {
             Event::RunFinished { steps, rounds, final_digest }
         }),
+        (
+            any::<u64>(),
+            any::<u64>(),
+            prop::collection::vec(any::<u32>(), 0..5),
+            any::<u64>(),
+            "[ -~]{0,24}",
+        )
+            .prop_map(|(epoch, round, members, anchor_digest, reason)| {
+                Event::EpochCommitted { epoch, round, members, anchor_digest, reason }
+            }),
     ]
 }
 
@@ -133,7 +143,7 @@ proptest! {
                 "schema"
             }
             2 => {
-                buf[6] = 99; // kind outside 1..=5
+                buf[6] = 99; // kind outside 1..=6
                 "kind"
             }
             3 => {
@@ -197,6 +207,29 @@ fn nan_and_infinite_losses_roundtrip_bit_exactly() {
             other => panic!("wrong event back: {other:?}"),
         }
         assert_eq!(back, ev, "bitwise PartialEq must treat NaN as equal to itself");
+    }
+}
+
+#[test]
+fn membership_and_epoch_commit_records_roundtrip_populated() {
+    // The elastic path writes these with real payloads (not the empty
+    // defaults the generators favour) — pin one populated instance of
+    // each so the encoding of every field is exercised deterministically.
+    let evs = [
+        Event::Membership { epoch: 4, rank: 2, change: MembershipChange::Crashed },
+        Event::EpochCommitted {
+            epoch: 5,
+            round: 17,
+            members: vec![0, 2, 3],
+            anchor_digest: 0xdead_beef_cafe_f00d,
+            reason: "rank 1 missed its heartbeats (silent for 400ms) after round 17".to_string(),
+        },
+    ];
+    for ev in evs {
+        let buf = encode_record(&ev);
+        let (back, consumed) = parse_record(&buf).unwrap().expect("complete record");
+        assert_eq!(consumed, buf.len());
+        assert_eq!(back, ev);
     }
 }
 

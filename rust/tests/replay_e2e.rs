@@ -115,6 +115,7 @@ fn acceptance_tcp_four_process_journal_replays_bit_exactly() {
         encoding: WireEncoding::F32,
         resume: None,
         journal: Some(serve_jrn.clone()),
+        elastic: None,
     };
     let server = thread::spawn(move || serve(listener, &opts));
 
@@ -268,6 +269,7 @@ fn resumed_tcp_session_stitches_and_replays_end_to_end() {
             encoding: WireEncoding::F32,
             resume,
             journal: Some(jrn.clone()),
+            elastic: None,
         };
         let server = thread::spawn(move || serve(listener, &opts));
         let workers: Vec<_> = (0..cfg.p)

@@ -9,7 +9,10 @@ use std::io::Cursor;
 
 use proptest::prelude::*;
 
-use wasgd::cluster::wire::{Cohort, Frame, MsgKind, Panel, Welcome, WireEncoding};
+use wasgd::cluster::wire::{
+    Cohort, EpochCommit, Frame, Heartbeat, JoinRequest, Leave, MsgKind, Panel, Welcome,
+    WireEncoding,
+};
 
 fn frame_bytes(frame: &Frame) -> Vec<u8> {
     let mut bytes = Vec::new();
@@ -167,6 +170,97 @@ proptest! {
         // Overwrite the inner length prefix at round(8) + h(4).
         frame.payload[12..16].copy_from_slice(&(lie * 4).to_le_bytes());
         prop_assert!(Panel::parse(&frame).is_err());
+    }
+
+    /// The four elastic frames (heartbeat, join request, leave, epoch
+    /// commit) round-trip exactly for arbitrary field values.
+    #[test]
+    fn elastic_frames_roundtrip(
+        round in any::<u64>(),
+        rejoin in prop::option::of(any::<u32>()),
+        epoch in any::<u64>(),
+        members in prop::collection::vec(any::<u32>(), 0..8),
+        anchor in any::<u64>(),
+        reason in "[ -~]{0,48}",
+    ) {
+        let hb = Heartbeat { round };
+        prop_assert_eq!(Heartbeat::parse(&reread(&hb.frame())).unwrap(), hb);
+        let jr = JoinRequest { prior_rank: rejoin };
+        prop_assert_eq!(JoinRequest::parse(&reread(&jr.frame())).unwrap(), jr);
+        let lv = Leave { round };
+        prop_assert_eq!(Leave::parse(&reread(&lv.frame())).unwrap(), lv);
+        let ec = EpochCommit { epoch, round, members, anchor_digest: anchor, reason };
+        let back = EpochCommit::parse(&reread(&ec.frame())).unwrap();
+        prop_assert_eq!(back, ec);
+    }
+
+    /// Every strict prefix of every elastic frame is rejected, just like
+    /// the training frames — a half-received membership message never
+    /// parses.
+    #[test]
+    fn truncated_elastic_frames_rejected(
+        round in any::<u64>(),
+        rejoin in prop::option::of(any::<u32>()),
+        members in prop::collection::vec(any::<u32>(), 0..6),
+        reason in "[ -~]{0,24}",
+    ) {
+        let frames = [
+            Heartbeat { round }.frame(),
+            JoinRequest { prior_rank: rejoin }.frame(),
+            Leave { round }.frame(),
+            EpochCommit { epoch: 3, round, members, anchor_digest: 7, reason }.frame(),
+        ];
+        for frame in &frames {
+            let bytes = frame_bytes(frame);
+            for k in 0..bytes.len() {
+                prop_assert!(
+                    Frame::read_from(&mut Cursor::new(&bytes[..k])).is_err(),
+                    "prefix of {} / {} bytes parsed as {:?}", k, bytes.len(), frame.kind
+                );
+            }
+            prop_assert!(Frame::read_from(&mut Cursor::new(&bytes)).is_ok());
+        }
+    }
+
+    /// Field-level corruption of the elastic frames is rejected before
+    /// any allocation or over-read: a bad join marker byte, a member
+    /// count lying past the payload end, an implausibly huge member
+    /// count, and a reason length lying past the payload end.
+    #[test]
+    fn corrupted_elastic_fields_rejected(
+        members in prop::collection::vec(any::<u32>(), 0..6),
+        reason in "[ -~]{0,24}",
+        marker in 2u8..=255,
+    ) {
+        let mut jr = JoinRequest { prior_rank: Some(3) }.frame();
+        jr.payload[0] = marker;
+        prop_assert!(JoinRequest::parse(&jr).is_err(), "join marker {} parsed", marker);
+
+        let ec = EpochCommit {
+            epoch: 1,
+            round: 2,
+            members: members.clone(),
+            anchor_digest: 3,
+            reason: reason.clone(),
+        };
+
+        // Member count lying past the payload end: validate, don't read.
+        let mut lying_count = ec.frame();
+        lying_count.payload[16..20]
+            .copy_from_slice(&(members.len() as u32 + 1000).to_le_bytes());
+        prop_assert!(EpochCommit::parse(&lying_count).is_err());
+
+        // An implausible count is rejected before any allocation.
+        let mut huge_count = ec.frame();
+        huge_count.payload[16..20].copy_from_slice(&(1u32 << 21).to_le_bytes());
+        prop_assert!(EpochCommit::parse(&huge_count).is_err());
+
+        // Reason length lying past the payload end.
+        let mut lying_reason = ec.frame();
+        let at = 8 + 8 + 4 + 4 * members.len() + 8;
+        lying_reason.payload[at..at + 4]
+            .copy_from_slice(&(reason.len() as u32 + 1000).to_le_bytes());
+        prop_assert!(EpochCommit::parse(&lying_reason).is_err());
     }
 }
 
