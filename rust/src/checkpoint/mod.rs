@@ -17,7 +17,7 @@
 
 use std::fs;
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
@@ -117,6 +117,54 @@ impl Checkpoint {
     }
 }
 
+/// Scan `dir` for epoch-anchor subdirectories (`epoch_NNNN/`, written by
+/// an elastic rendezvous at every commit boundary) and return the
+/// highest-numbered one as `(epoch_index, path)`. `Ok(None)` when the
+/// directory is missing or holds no anchors — callers decide whether
+/// that is an error.
+pub fn latest_epoch_anchor(dir: &Path) -> Result<Option<(u64, PathBuf)>> {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(None),
+    };
+    let mut best: Option<(u64, PathBuf)> = None;
+    for entry in entries {
+        let entry = entry.with_context(|| format!("scanning {}", dir.display()))?;
+        let name = entry.file_name();
+        let Some(idx) = name
+            .to_str()
+            .and_then(|n| n.strip_prefix("epoch_"))
+            .and_then(|n| n.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        if best.as_ref().is_none_or(|(b, _)| idx > *b) {
+            best = Some((idx, entry.path()));
+        }
+    }
+    Ok(best)
+}
+
+/// Resolve `--resume DIR` to a checkpoint: a plain checkpoint directory
+/// (`state.json` present) loads directly; otherwise the directory is
+/// treated as an elastic session's anchor root and the **latest**
+/// `epoch_NNNN/` anchor inside it is loaded. Errors name both shapes so
+/// a typo'd path gets a pointed message rather than a bare ENOENT.
+pub fn load_resume_dir(dir: &Path) -> Result<Checkpoint> {
+    if dir.join("state.json").is_file() {
+        return Checkpoint::load(dir);
+    }
+    match latest_epoch_anchor(dir)? {
+        Some((idx, path)) => Checkpoint::load(&path)
+            .with_context(|| format!("loading epoch anchor {idx} from {}", path.display())),
+        None => anyhow::bail!(
+            "{}: neither a checkpoint (no state.json) nor an elastic anchor root \
+             (no epoch_NNNN/ subdirectories)",
+            dir.display()
+        ),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,5 +224,48 @@ mod tests {
     #[test]
     fn load_missing_dir_errors() {
         assert!(Checkpoint::load(Path::new("/nonexistent/wasgd")).is_err());
+    }
+
+    #[test]
+    fn latest_epoch_anchor_picks_the_highest_index() {
+        let dir = tmpdir("anchors");
+        assert_eq!(latest_epoch_anchor(&dir).unwrap(), None, "missing dir is not an error");
+        sample().save(&dir.join("epoch_0001")).unwrap();
+        sample().save(&dir.join("epoch_0003")).unwrap();
+        sample().save(&dir.join("epoch_0002")).unwrap();
+        fs::create_dir_all(dir.join("not_an_anchor")).unwrap();
+        let (idx, path) = latest_epoch_anchor(&dir).unwrap().expect("anchors present");
+        assert_eq!(idx, 3);
+        assert_eq!(path, dir.join("epoch_0003"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_resume_dir_prefers_plain_checkpoint_then_latest_anchor() {
+        let dir = tmpdir("resume");
+        // Anchor-root shape: no state.json at the top, anchors inside.
+        let mut early = sample();
+        early.iteration = 100;
+        early.save(&dir.join("epoch_0001")).unwrap();
+        let mut late = sample();
+        late.iteration = 200;
+        late.save(&dir.join("epoch_0002")).unwrap();
+        assert_eq!(load_resume_dir(&dir).unwrap().iteration, 200);
+        // Plain-checkpoint shape wins once state.json exists at the top.
+        let mut top = sample();
+        top.iteration = 999;
+        top.save(&dir).unwrap();
+        assert_eq!(load_resume_dir(&dir).unwrap().iteration, 999);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_resume_dir_names_both_shapes_on_miss() {
+        let dir = tmpdir("miss");
+        fs::create_dir_all(&dir).unwrap();
+        let err = load_resume_dir(&dir).unwrap_err().to_string();
+        assert!(err.contains("state.json"), "{err}");
+        assert!(err.contains("epoch_NNNN"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
     }
 }

@@ -86,8 +86,9 @@ pub trait Collective {
 }
 
 /// A graceful end-of-epoch signal from an epoch-scoped collective: the
-/// rendezvous committed the epoch (peer died, peer left, or a queued
-/// joiner is being absorbed), so this worker should reconnect for the
+/// rendezvous committed the epoch (peer died, peer left, a queued
+/// joiner is being absorbed, or a peer exhausted its step budget and
+/// sent its `Final` panel), so this worker should reconnect for the
 /// next epoch rather than treat the error as fatal. Carried as the
 /// source of an [`anyhow::Error`] so callers can `downcast_ref` it out
 /// of the failure chain.
@@ -216,6 +217,12 @@ impl<T: Clone> PanelExchange<T> {
     /// Mark the exchange failed: current and future `exchange` calls
     /// return an error carrying `why` instead of blocking forever.
     /// First writer wins; a later cut or poison does not overwrite it.
+    ///
+    /// Poison is for *unrecoverable* faults (protocol violations, IO
+    /// errors on a fixed cohort). Recoverable boundaries — including a
+    /// rank reaching its finale and sending `Final` while peers still
+    /// train — use [`cut`](Self::cut), so elastic survivors re-form
+    /// instead of aborting.
     pub fn poison(&self, why: &str) {
         let mut st = self.inner.lock().unwrap();
         if st.ended.is_none() {
@@ -229,6 +236,11 @@ impl<T: Clone> PanelExchange<T> {
     /// `reason`, instead of blocking forever. Rounds already published
     /// are unaffected. First writer wins, and a prior poison is never
     /// downgraded to a cut.
+    ///
+    /// The elastic relay cuts at every recoverable boundary: a death, a
+    /// leave, a joiner being absorbed, and a rank's `Final` panel during
+    /// the finale — in the last case survivors still owing finals re-form
+    /// into an epilogue epoch with a zero-step budget to deliver theirs.
     pub fn cut(&self, reason: &str) {
         let mut st = self.inner.lock().unwrap();
         if st.ended.is_none() {

@@ -37,19 +37,23 @@
 //! [`Checkpoint`] (each rank receives its `worker_{i}.f32` parameters in
 //! the Welcome), and the final panels can be written back as a
 //! checkpoint by the CLI — so a multi-process run survives restarts of
-//! the whole fabric. Elastic sessions instead write *epoch anchors*
-//! (the committed pre-aggregation panels) at every boundary.
+//! the whole fabric. Elastic sessions write *epoch anchors* (the
+//! committed pre-aggregation panels) to `DIR/epoch_NNNN/` at every
+//! boundary — plus a terminal anchor on completion — and can be resumed
+//! from them: `--resume DIR` on an elastic serve seeds the first epoch's
+//! formation from the latest anchor's rows, journaled as a round-0
+//! commit so the stitched journal still verifies survivor by survivor.
 
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use crate::checkpoint::Checkpoint;
+use crate::checkpoint::{latest_epoch_anchor, Checkpoint};
 use crate::config::ExperimentConfig;
 use crate::data::source::DataPipeline;
 use crate::journal::{
@@ -319,6 +323,11 @@ pub struct ServeOutcome {
     /// Per-peer relay traffic, feeding the cluster cost model. Elastic
     /// sessions attribute traffic at epoch-local ranks.
     pub comm: CommCounters,
+    /// Every epoch boundary's human-readable commit reason, in order
+    /// (who died/left/joined/finished, at what round — the same strings
+    /// the journal's `EpochCommitted` records carry). Empty for
+    /// fixed-cohort sessions, which have no boundaries.
+    pub commit_reasons: Vec<String>,
 }
 
 struct RelayStats {
@@ -543,7 +552,7 @@ fn serve_static(listener: TcpListener, opts: &ServeOptions) -> Result<ServeOutco
             final_digest: digest_cohort(out.iter().map(|(_, t)| t.as_slice())),
         },
     )?;
-    Ok(ServeOutcome { finals: out, rounds, steps, comm })
+    Ok(ServeOutcome { finals: out, rounds, steps, comm, commit_reasons: Vec::new() })
 }
 
 /// Emit into an optional mutex-shared journal (the rendezvous's relay
@@ -717,10 +726,15 @@ fn serve_elastic(
         "elastic sessions need the lossless f32 encoding: epoch anchors are decoded from the \
          relayed panel bytes"
     );
-    ensure!(
-        opts.resume.is_none(),
-        "elastic serve starts from the seed init; --resume needs a fixed cohort"
-    );
+    if let Some(ck) = &opts.resume {
+        // Geometry is deliberately NOT pinned to p: the anchor's rows
+        // are keyed by the prior cohort's ranks, and the rank-stable
+        // shard rule re-shards whatever cohort actually forms.
+        ensure!(
+            !ck.workers.is_empty(),
+            "resume checkpoint carries no worker rows; nothing to seed the epoch from"
+        );
+    }
     ensure!(el.min_workers >= 1, "--min-workers must be at least 1");
     ensure!(
         el.max_workers >= cfg.p.max(el.min_workers),
@@ -751,8 +765,30 @@ fn serve_elastic(
     base.heartbeat_ms = el.heartbeat_ms;
     base.min_workers = el.min_workers;
 
+    // A resumed session *appends*, stitching its segments onto the
+    // original journal. The resume boundary is journaled as a round-0
+    // EpochCommitted — but only when the file actually ends in the
+    // killed run's unterminated segment; resuming against a fresh (or
+    // absent) journal starts a self-contained file whose first
+    // RunStarted carries the anchor rows instead.
+    let mut stitch_commit = false;
     let journal: Option<Mutex<JournalWriter>> = match &opts.journal {
-        Some(path) => Some(Mutex::new(JournalWriter::create(path)?)),
+        Some(path) => Some(Mutex::new(if opts.resume.is_some() {
+            if let Ok((evs, _)) = crate::journal::read_events(path) {
+                let mut open = false;
+                for ev in &evs {
+                    match ev {
+                        Event::RunStarted { .. } => open = true,
+                        Event::RunFinished { .. } | Event::EpochCommitted { .. } => open = false,
+                        _ => {}
+                    }
+                }
+                stitch_commit = open;
+            }
+            JournalWriter::append_to(path)?
+        } else {
+            JournalWriter::create(path)?
+        })),
         None => None,
     };
 
@@ -767,34 +803,45 @@ fn serve_elastic(
         let pending = Arc::clone(&pending);
         let done = Arc::clone(&done);
         std::thread::spawn(move || {
-            let mut bad = 0usize;
             while !done.load(Ordering::Relaxed) {
                 let Ok((stream, peer)) = listener.accept() else { continue };
                 if done.load(Ordering::Relaxed) {
                     return;
                 }
                 stream.set_nodelay(true).ok();
-                match elastic_handshake(&stream) {
+                // Handshake off the accept path: a stray connection that
+                // never speaks (port scan, health probe) blocks only its
+                // own thread for HANDSHAKE_TIMEOUT — a legitimate joiner
+                // behind it is accepted and seated immediately. Threads
+                // are detached so a silent stray can't stall shutdown;
+                // unlike the fixed-cohort serve, a long-lived elastic
+                // session never aborts on bad handshakes, it only logs
+                // them.
+                let pending = Arc::clone(&pending);
+                std::thread::spawn(move || match elastic_handshake(&stream) {
                     Ok(conn) => pending.lock().unwrap().push(conn),
                     Err(e) => {
-                        bad += 1;
                         eprintln!("rendezvous: dropping connection from {peer}: {e:#}");
-                        if bad >= MAX_BAD_HANDSHAKES {
-                            return;
-                        }
                     }
-                }
+                });
             }
         })
     };
 
-    let session = elastic_session(&base, el, total_budget, &pending, journal.as_ref());
+    let session =
+        elastic_session(&base, el, total_budget, &pending, journal.as_ref(), opts.resume.as_ref(), stitch_commit);
 
     done.store(true, Ordering::Relaxed);
     let _ = TcpStream::connect(local_addr);
     let _ = acceptor.join();
-    // Anyone still parked has no epoch left to join.
-    for mut c in pending.lock().unwrap().drain(..) {
+    // Anyone still parked has no epoch left to join. Collect under the
+    // lock, notify outside it: the notification is blocking IO and
+    // late handshake threads may still be pushing.
+    let parked: Vec<PendingConn> = {
+        let mut q = pending.lock().unwrap();
+        q.drain(..).collect()
+    };
+    for mut c in parked {
         let _ = wire::error_frame("session complete; no epoch to join").write_to(&mut c.writer);
     }
     session
@@ -804,12 +851,22 @@ fn serve_elastic(
 /// commit, repeat. `base` already carries the resolved data source and
 /// the elastic knobs; each epoch ships a copy with its own `p` and
 /// `step_budget`.
+///
+/// With `resume_ck`, the first formation is seeded from the checkpoint's
+/// rows (an epoch anchor of a previous session of this run) instead of
+/// the seed init: rows are keyed by their index — the anchor file's row
+/// order IS the killed epoch's rank order — and the boundary is
+/// journaled as a round-0 `EpochCommitted` when `stitch_commit` says the
+/// journal still ends in that killed epoch's segment.
+#[allow(clippy::too_many_arguments)]
 fn elastic_session(
     base: &ExperimentConfig,
     el: &ElasticOptions,
     total_budget: usize,
     pending: &Mutex<Vec<PendingConn>>,
     journal: Option<&Mutex<JournalWriter>>,
+    resume_ck: Option<&Checkpoint>,
+    stitch_commit: bool,
 ) -> Result<ServeOutcome> {
     let enc = WireEncoding::F32;
     let tau = base.tau;
@@ -827,18 +884,66 @@ fn elastic_session(
     let mut epoch: u64 = 0;
     let mut steps_done: usize = 0;
     let mut total_rounds: u64 = 0;
+    let mut commit_reasons: Vec<String> = Vec::new();
+    // Finals banked across epochs: a partial finale (a worker died or
+    // left after some ranks sent `Final`) banks what arrived and
+    // re-forms the rest as an epilogue epoch over the remaining budget.
+    let mut banked: Vec<WorkerPanel> = Vec::new();
+    let mut banked_steps: u64 = 0;
+    // Resume boundary: the first formation seats fresh hellos into the
+    // anchor's prior ranks positionally (a resumed worker pool is new
+    // OS processes — they cannot know the dead session's ranks).
+    let mut resume_boundary = false;
+    if let Some(ck) = resume_ck {
+        let k = ck.workers.len();
+        anchor = Some(
+            ck.workers.iter().enumerate().map(|(i, v)| (i as u32, v.clone())).collect(),
+        );
+        expected = (0..k as u32).collect();
+        steps_done = (ck.iteration as usize).min(total_budget);
+        // Continue the on-disk anchor numbering past whatever the dead
+        // session wrote, so new boundaries never clobber old anchors.
+        let label_idx = ck
+            .label
+            .strip_prefix("epoch ")
+            .and_then(|s| s.strip_suffix(" anchor"))
+            .and_then(|s| s.parse::<u64>().ok());
+        let disk_idx = el
+            .anchor_dir
+            .as_deref()
+            .and_then(|d| latest_epoch_anchor(d).ok().flatten())
+            .map(|(i, _)| i);
+        epoch = label_idx.into_iter().chain(disk_idx).max().unwrap_or(0) + 1;
+        let reason = format!(
+            "resumed from the epoch anchor at step {steps_done} ({} of {total_budget} steps \
+             remaining, {k} anchor row(s))",
+            total_budget - steps_done
+        );
+        if stitch_commit {
+            // Terminate the killed segment with a round-0 commit: its
+            // published-but-uncommitted rounds are discarded (the next
+            // segment resumes from the killed segment's own resume
+            // rows), which is exactly what round 0 means to the chain
+            // verifier.
+            pending_commit = Some((0, reason.clone()));
+        }
+        commit_reasons.push(reason);
+        resume_boundary = true;
+    }
+    let first_epoch = epoch;
 
     loop {
         let remaining = total_budget - steps_done;
 
         // ---- formation: wait for the members, then commit the set ----
-        // Epoch 0 blocks for the full initial cohort, like a static
-        // serve; later epochs wait up to FORMATION_TIMEOUT for the
-        // committed survivors before proceeding with whoever is back.
+        // The first epoch (0, or the resumed index) blocks for the full
+        // initial cohort, like a static serve; later epochs wait up to
+        // FORMATION_TIMEOUT for the committed survivors before
+        // proceeding with whoever is back.
         let deadline = Instant::now() + FORMATION_TIMEOUT;
         loop {
             let q = pending.lock().unwrap();
-            let enough = if epoch == 0 {
+            let enough = if epoch == first_epoch {
                 q.len() >= base.p
             } else {
                 let back = q
@@ -865,11 +970,31 @@ fn elastic_session(
                     taken.push((Some(r), q.remove(i)));
                 }
             }
-            let cap = if epoch == 0 { base.p } else { el.max_workers };
-            while taken.len() < cap && !q.is_empty() {
-                taken.push((None, q.remove(0)));
+            let cap = if epoch == first_epoch { base.p } else { el.max_workers };
+            if resume_boundary {
+                // A resumed pool is fresh OS processes connecting with
+                // plain hellos; seat them as the anchor's prior ranks
+                // positionally so each inherits a distinct anchor row
+                // (and `shard_range` re-shards exactly as it would at a
+                // live boundary). Extra workers past the anchor's rows
+                // are fresh joiners.
+                let mut unclaimed: Vec<u32> = expected
+                    .iter()
+                    .copied()
+                    .filter(|r| !taken.iter().any(|(o, _)| *o == Some(*r)))
+                    .collect();
+                while taken.len() < cap && !q.is_empty() {
+                    let old =
+                        if unclaimed.is_empty() { None } else { Some(unclaimed.remove(0)) };
+                    taken.push((old, q.remove(0)));
+                }
+            } else {
+                while taken.len() < cap && !q.is_empty() {
+                    taken.push((None, q.remove(0)));
+                }
             }
         }
+        resume_boundary = false;
         let p_e = taken.len();
         ensure!(
             p_e >= el.min_workers,
@@ -1012,48 +1137,65 @@ fn elastic_session(
         let committed_round = exchange.last_published().map(|(r, _)| r).unwrap_or(0);
         total_rounds += committed_round;
 
-        // ---- session finale ----
+        // ---- collect the finals this epoch delivered ----
+        let epoch_finals = finals.into_inner().unwrap();
+        let mut epoch_final_rows: Vec<WorkerPanel> = Vec::new();
+        let mut epoch_steps = 0u64;
+        for (s, panel) in epoch_finals.into_iter().flatten() {
+            epoch_steps = epoch_steps.max(s);
+            epoch_final_rows.push(panel);
+        }
+
+        // ---- session finale: every member delivered its Final ----
         if ends.iter().all(|e| matches!(e.fate, RelayFate::Finished)) {
-            let finals = finals.into_inner().unwrap();
-            let mut out = Vec::with_capacity(p_e);
-            let mut epoch_steps = 0u64;
-            for (rank, f) in finals.into_iter().enumerate() {
-                let (s, panel) =
-                    f.ok_or_else(|| anyhow!("rank {rank} never delivered its final panel"))?;
-                epoch_steps = epoch_steps.max(s);
-                out.push(panel);
-            }
+            // The journaled digest covers only THIS segment's cohort —
+            // that is what a replay of the segment reproduces. Finals
+            // banked from earlier partial finales ride only the outcome.
             jemit(
                 journal,
                 &Event::RunFinished {
                     steps: epoch_steps,
                     rounds: committed_round,
-                    final_digest: digest_cohort(out.iter().map(|(_, t)| t.as_slice())),
+                    final_digest: digest_cohort(
+                        epoch_final_rows.iter().map(|(_, t)| t.as_slice()),
+                    ),
                 },
             )?;
+            let steps = (steps_done as u64 + epoch_steps).max(banked_steps);
+            let mut out = banked;
+            out.extend(epoch_final_rows);
+            if let Some(dir) = &el.anchor_dir {
+                // Terminal anchor: the completed run's final rows, so the
+                // anchor directory of a finished session always ends in a
+                // loadable state.
+                save_epoch_anchor(
+                    dir,
+                    base,
+                    total_budget,
+                    journal,
+                    "terminal anchor".to_string(),
+                    epoch + 1,
+                    steps,
+                    out.iter().map(|(_, t)| t.clone()).collect(),
+                )?;
+            }
             return Ok(ServeOutcome {
                 finals: out,
                 rounds: total_rounds,
-                steps: steps_done as u64 + epoch_steps,
+                steps,
                 comm,
+                commit_reasons,
             });
         }
-        if ends.iter().any(|e| matches!(e.fate, RelayFate::Finished)) {
-            // Known limitation: a death during the finale, after some
-            // ranks already delivered their Final, leaves no budget to
-            // re-form a cohort that could fill the gap.
-            let dead: Vec<String> = ends
-                .iter()
-                .filter_map(|e| match &e.fate {
-                    RelayFate::Dead(r) => Some(r.clone()),
-                    _ => None,
-                })
-                .collect();
-            bail!(
-                "epoch {epoch} ended with a partial finale ({}) — a worker failed during the \
-                 final rounds, too late to re-form the cohort",
-                if dead.is_empty() { "worker left mid-finale".to_string() } else { dead.join("; ") }
-            );
+        // A partial finale — some ranks delivered their Final before a
+        // death or leave cut the epoch. Bank what arrived; the members
+        // still owing theirs re-form below as an epilogue epoch over
+        // whatever budget remains (possibly zero — the 0-step worker
+        // path exists for exactly this) and deliver there.
+        let partial_finale = !epoch_final_rows.is_empty();
+        if partial_finale {
+            banked_steps = banked_steps.max(steps_done as u64 + epoch_steps);
+            banked.extend(epoch_final_rows);
         }
 
         // ---- commit the boundary ----
@@ -1085,13 +1227,24 @@ fn elastic_session(
                     fallback_reason
                         .get_or_insert_with(|| format!("rank {rank} left the cohort"));
                 }
-                RelayFate::Finished => unreachable!("handled above"),
+                // Banked above; its Membership record was journaled by
+                // the relay the moment the Final arrived.
+                RelayFate::Finished => {}
             }
         }
-        let reason = exchange
-            .cut_reason()
-            .or(fallback_reason)
-            .unwrap_or_else(|| "epoch boundary".to_string());
+        let reason = if partial_finale {
+            // The interesting fact at a finale boundary is who FAILED to
+            // deliver; the exchange's first-cut verdict would name a
+            // finisher instead of the dead rank.
+            fallback_reason.unwrap_or_else(|| {
+                format!("re-forming to collect the finale after round {committed_round}")
+            })
+        } else {
+            exchange
+                .cut_reason()
+                .or(fallback_reason)
+                .unwrap_or_else(|| "epoch boundary".to_string())
+        };
         eprintln!(
             "rendezvous: committing epoch {} at round {committed_round} \
              ({} survivor(s)): {reason}",
@@ -1100,6 +1253,50 @@ fn elastic_session(
         );
 
         steps_done += committed_round as usize * tau;
+
+        // ---- completing from the bank: no cohort left to re-form ----
+        if !banked.is_empty() && next_expected.is_empty() {
+            // Every member still owing a Final died or left, and the
+            // ranks that finished are already banked: re-forming
+            // mid-finale from queued joiners would train a fresh cohort,
+            // not finish this one. Complete from the bank instead.
+            // `final_digest: 0` is the partial-finale sentinel — there is
+            // no live cohort to digest; steps, rounds, and every
+            // per-round digest still verify on replay.
+            jemit(
+                journal,
+                &Event::RunFinished {
+                    steps: epoch_steps.max(committed_round * tau as u64),
+                    rounds: committed_round,
+                    final_digest: 0,
+                },
+            )?;
+            eprintln!(
+                "rendezvous: completing from {} banked final(s): {reason}",
+                banked.len()
+            );
+            commit_reasons.push(reason);
+            let steps = banked_steps.max(steps_done as u64);
+            if let Some(dir) = &el.anchor_dir {
+                save_epoch_anchor(
+                    dir,
+                    base,
+                    total_budget,
+                    journal,
+                    "terminal anchor (partial finale)".to_string(),
+                    epoch + 1,
+                    steps,
+                    banked.iter().map(|(_, t)| t.clone()).collect(),
+                )?;
+            }
+            return Ok(ServeOutcome {
+                finals: banked,
+                rounds: total_rounds,
+                steps,
+                comm,
+                commit_reasons,
+            });
+        }
         // New anchor: the survivors' rows of the last published round
         // (the relay's own f32 bytes, decoded — never aggregated), or,
         // if no round completed, their rows of this epoch's resume.
@@ -1128,30 +1325,59 @@ fn elastic_session(
                 .map(|rows| next_expected.iter().map(|&r| (r, rows[r as usize].clone())).collect())
         };
         if let (Some(dir), Some(rows)) = (&el.anchor_dir, &anchor) {
-            let workers: Vec<Vec<f32>> = rows.iter().map(|(_, v)| v.clone()).collect();
-            let ck = Checkpoint {
-                label: format!("epoch {} anchor", epoch + 1),
-                iteration: steps_done as u64,
-                epoch: steps_done as f64 / (n_steps_per_epoch(base, total_budget)),
-                sim_time_s: 0.0,
-                workers,
-            };
-            let path = dir.join(format!("epoch_{:04}", epoch + 1));
-            ck.save(&path)?;
-            jemit(
+            save_epoch_anchor(
+                dir,
+                base,
+                total_budget,
                 journal,
-                &Event::CheckpointWritten {
-                    steps: steps_done as u64,
-                    digest: digest_cohort(ck.workers.iter().map(|v| v.as_slice())),
-                    path: path.display().to_string(),
-                },
+                format!("epoch {} anchor", epoch + 1),
+                epoch + 1,
+                steps_done as u64,
+                rows.iter().map(|(_, v)| v.clone()).collect(),
             )?;
         }
 
+        commit_reasons.push(reason.clone());
         pending_commit = Some((committed_round, reason));
         expected = next_expected;
         epoch += 1;
     }
+}
+
+/// Persist `workers` as the standard-format anchor checkpoint
+/// `dir/epoch_NNNN/` — a boundary anchor or the terminal anchor of a
+/// completed session — and journal the write. The row order is the
+/// next (or final) epoch's rank order, which is what makes index-keyed
+/// resume consistent with the journal's anchor chain.
+#[allow(clippy::too_many_arguments)]
+fn save_epoch_anchor(
+    dir: &Path,
+    base: &ExperimentConfig,
+    total_budget: usize,
+    journal: Option<&Mutex<JournalWriter>>,
+    label: String,
+    index: u64,
+    steps: u64,
+    workers: Vec<Vec<f32>>,
+) -> Result<()> {
+    let ck = Checkpoint {
+        label,
+        iteration: steps,
+        epoch: steps as f64 / n_steps_per_epoch(base, total_budget),
+        sim_time_s: 0.0,
+        workers,
+    };
+    let path = dir.join(format!("epoch_{index:04}"));
+    ck.save(&path)?;
+    jemit(
+        journal,
+        &Event::CheckpointWritten {
+            steps,
+            digest: digest_cohort(ck.workers.iter().map(|v| v.as_slice())),
+            path: path.display().to_string(),
+        },
+    )?;
+    Ok(())
 }
 
 /// Steps per nominal data epoch, for checkpoint metadata only (the
@@ -1289,8 +1515,20 @@ fn elastic_relay_inner(
             MsgKind::Final => {
                 let panel = Panel::parse(&frame)?;
                 ctx.finals.lock().unwrap()[rank] = Some((panel.round, (panel.h, panel.theta)));
-                ctx.exchange.poison(&format!(
-                    "rank {rank} finished after round {}; no further collectives can complete",
+                jemit(
+                    ctx.journal,
+                    &Event::Membership {
+                        epoch,
+                        rank: rank as u32,
+                        change: MembershipChange::Finished,
+                    },
+                )?;
+                // A *cut*, not a poison: a finished rank can join no
+                // further collectives, but the epoch is recoverable —
+                // members caught mid-exchange commit and re-form as the
+                // epilogue epoch that collects the remaining finals.
+                ctx.exchange.cut(&format!(
+                    "rank {rank} finished after round {}; collecting the cohort's finals",
                     stats.rounds
                 ));
                 return Ok(RelayFate::Finished);
@@ -1644,5 +1882,54 @@ mod tests {
         assert_eq!(out.finals.len(), 1, "the final epoch runs at p=1");
         let survivor = real.join().unwrap().expect("survivor must complete");
         assert!(survivor.steps >= 1024, "survivor's cumulative steps cover the budget");
+    }
+
+    #[test]
+    fn stray_socket_does_not_stall_elastic_admission() {
+        // Regression: the acceptor once handshook serially (and the
+        // boundary drain held the pending lock across blocking IO), so
+        // one silent connection stalled every joiner behind it for
+        // HANDSHAKE_TIMEOUT. Handshakes now run on detached threads: a
+        // stray that never speaks must not delay a legitimate cohort.
+        let mut cfg = tcp_cfg(2);
+        cfg.elastic = true;
+        cfg.heartbeat_ms = 50;
+        cfg.min_workers = 1;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let opts = ServeOptions {
+            cfg: cfg.clone(),
+            encoding: WireEncoding::F32,
+            resume: None,
+            journal: None,
+            elastic: Some(ElasticOptions {
+                min_workers: 1,
+                max_workers: 2,
+                heartbeat_ms: 50,
+                anchor_dir: None,
+            }),
+        };
+        let start = Instant::now();
+        let server = thread::spawn(move || serve(listener, &opts));
+        // The stray connects first and never speaks, holding its socket
+        // open across the whole session.
+        let stray = TcpStream::connect(&addr).unwrap();
+        let mut workers = Vec::new();
+        for _ in 0..cfg.p {
+            let addr = addr.clone();
+            workers.push(thread::spawn(move || run_remote_worker(&addr, None, None, None, None)));
+        }
+        for w in workers {
+            w.join().unwrap().unwrap();
+        }
+        let out = server.join().unwrap().expect("the cohort completes despite the stray");
+        assert_eq!(out.finals.len(), 2);
+        assert!(
+            start.elapsed() < Duration::from_secs(20),
+            "admission stalled behind the stray (took {:?}; the serial acceptor would \
+             block a full HANDSHAKE_TIMEOUT)",
+            start.elapsed()
+        );
+        drop(stray);
     }
 }

@@ -188,7 +188,7 @@ pub fn canonical_comm_bytes(round: u64, d: usize) -> u64 {
 
 /// How a participant's membership changed. Fixed-cohort sessions only
 /// ever write `Joined` at epoch 0; elastic sessions write the full
-/// join/leave/crash stream at epoch-local ranks.
+/// join/leave/crash/finish stream at epoch-local ranks.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MembershipChange {
     /// The rank joined the cohort at this epoch.
@@ -197,6 +197,11 @@ pub enum MembershipChange {
     Left,
     /// The rank was declared dead.
     Crashed,
+    /// The rank exhausted its step budget and sent its `Final` panel.
+    /// In an elastic session this cuts the epoch (a finished rank can
+    /// join no further collectives); the rendezvous banks the final and
+    /// re-forms the remaining ranks if any still owe theirs.
+    Finished,
 }
 
 impl MembershipChange {
@@ -205,6 +210,7 @@ impl MembershipChange {
             MembershipChange::Joined => 0,
             MembershipChange::Left => 1,
             MembershipChange::Crashed => 2,
+            MembershipChange::Finished => 3,
         }
     }
 
@@ -213,6 +219,7 @@ impl MembershipChange {
             0 => MembershipChange::Joined,
             1 => MembershipChange::Left,
             2 => MembershipChange::Crashed,
+            3 => MembershipChange::Finished,
             _ => return None,
         })
     }
@@ -223,6 +230,7 @@ impl MembershipChange {
             MembershipChange::Joined => "joined",
             MembershipChange::Left => "left",
             MembershipChange::Crashed => "crashed",
+            MembershipChange::Finished => "finished",
         }
     }
 }
@@ -302,6 +310,12 @@ pub enum Event {
         rounds: u64,
         /// Cohort journals: [`digest_cohort`] of every rank's final θ.
         /// Worker journals: [`digest_params`] of the writer's own θ.
+        /// **0 is a sentinel**: an elastic session that completed from
+        /// banked finals (every remaining rank crashed or left after
+        /// the first `Final` panel of a partial finale) has no live
+        /// cohort left to digest; verification checks steps, rounds,
+        /// and every per-round digest but skips the final cohort
+        /// comparison for such a segment.
         final_digest: u64,
     },
     /// An elastic epoch ended at a boundary: its segment is complete
@@ -692,7 +706,24 @@ impl JournalWriter {
 
     /// Open `path` for appending (creating it if absent) — how a
     /// resumed session stitches its segment onto the original journal.
+    ///
+    /// A SIGKILLed writer can leave one torn record at the tail; its
+    /// header's length field would otherwise swallow the first appended
+    /// record and turn a clean [`Truncation`] into hard corruption. The
+    /// torn tail is truncated away before appending, so the stitched
+    /// file stays parseable end to end.
     pub fn append_to(path: &Path) -> Result<Self> {
+        if let Ok(buf) = std::fs::read(path) {
+            if let Ok((_, Some(t))) = read_events_bytes(&buf) {
+                let f = OpenOptions::new()
+                    .write(true)
+                    .open(path)
+                    .with_context(|| format!("opening journal {} to trim", path.display()))?;
+                f.set_len(t.offset).with_context(|| {
+                    format!("trimming torn record #{} in {}", t.record, path.display())
+                })?;
+            }
+        }
         let file = OpenOptions::new()
             .create(true)
             .append(true)
@@ -886,6 +917,7 @@ mod tests {
                 comm_bytes: 16640,
             },
             Event::CheckpointWritten { steps: 32, digest: 7, path: "/tmp/ck".into() },
+            Event::Membership { epoch: 0, rank: 1, change: MembershipChange::Finished },
             Event::EpochCommitted {
                 epoch: 1,
                 round: 3,
@@ -964,6 +996,34 @@ mod tests {
         }
         let (back, trunc) = read_events(&path).unwrap();
         assert_eq!(back, evs);
+        assert!(trunc.is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn append_to_trims_a_torn_tail_before_stitching() {
+        let path = std::env::temp_dir()
+            .join(format!("wasgd_journal_torn_{}.jrn", std::process::id()));
+        let evs = sample_events();
+        {
+            let mut w = JournalWriter::create(&path).unwrap();
+            for ev in &evs[..3] {
+                w.emit(ev).unwrap();
+            }
+        }
+        // Simulate a SIGKILL mid-write: leave half a record at the tail.
+        let torn = encode_record(&evs[3]);
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&torn[..torn.len() / 2]).unwrap();
+        drop(f);
+        {
+            let mut w = JournalWriter::append_to(&path).unwrap();
+            for ev in &evs[3..] {
+                w.emit(ev).unwrap();
+            }
+        }
+        let (back, trunc) = read_events(&path).unwrap();
+        assert_eq!(back, evs, "torn tail must be trimmed, not stitched over");
         assert!(trunc.is_none());
         std::fs::remove_file(&path).ok();
     }

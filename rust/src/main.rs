@@ -98,9 +98,14 @@ elastic membership (--elastic, tcp only; see docs/FABRIC.md):
   boundary from the committed anchor (re-sharded by the rank-stable
   shard rule). --min-workers (default 1) floors the cohort;
   --max-workers (serve/run, default p) caps growth. --save-checkpoint
-  DIR also writes per-boundary anchors to DIR/epoch_NNNN. Each epoch
-  journals as a self-contained segment, so `wasgd replay` verifies runs
-  across membership changes.
+  DIR also writes per-boundary anchors to DIR/epoch_NNNN (plus a
+  terminal anchor on completion). A killed elastic session restarts
+  with --resume DIR: the rendezvous reloads the latest anchor, seeds
+  the first formation from its rows, and stitches the journal with a
+  round-0 commit. A worker death during the finale re-forms the
+  survivors instead of erroring. Each epoch journals as a
+  self-contained segment, so `wasgd replay` verifies runs across
+  membership changes and resume boundaries.
 
 run journal (--journal, see docs/JOURNAL.md):
   --journal FILE appends a CRC-framed event log of the run: the full wire
@@ -210,7 +215,9 @@ fn encoding_from(args: &Args) -> Result<WireEncoding> {
 fn resume_from(args: &Args) -> Result<Option<Checkpoint>> {
     args.opt_str("resume")
         .map(|dir| {
-            Checkpoint::load(Path::new(&dir))
+            // A plain checkpoint dir loads directly; an elastic anchor
+            // root resolves to its latest DIR/epoch_NNNN/ anchor.
+            wasgd::checkpoint::load_resume_dir(Path::new(&dir))
                 .with_context(|| format!("loading resume checkpoint from {dir}"))
         })
         .transpose()

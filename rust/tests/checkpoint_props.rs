@@ -1,0 +1,146 @@
+//! Property tests for epoch-anchor checkpoints.
+//!
+//! The elastic rendezvous snapshots the committed cohort to
+//! `<dir>/epoch_NNNN/` at every membership boundary and journals the
+//! cohort digest in the matching `EpochCommitted.anchor_digest`. The
+//! resume contract, for arbitrary cohorts (NaN and ±∞ parameters
+//! included):
+//!
+//! * anchor save → reload is a bit-exact round trip, so the reloaded
+//!   rows' [`digest_cohort`] equals the digest the journal committed —
+//!   which is exactly what lets `wasgd replay --verify` chain a resumed
+//!   session back onto the anchor it restarted from;
+//! * `latest_epoch_anchor` picks the highest-numbered anchor regardless
+//!   of save order, terminal anchors included;
+//! * a plain root checkpoint (a completed run) wins over any anchor.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use proptest::prelude::*;
+
+use wasgd::checkpoint::{latest_epoch_anchor, load_resume_dir, Checkpoint};
+use wasgd::journal::digest_cohort;
+
+static CASE: AtomicUsize = AtomicUsize::new(0);
+
+/// A fresh scratch directory per proptest case, so shrinking never
+/// replays onto a dirty tree.
+fn case_dir() -> std::path::PathBuf {
+    let n = CASE.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("wasgd_ckpt_props_{}_{}", std::process::id(), n))
+}
+
+fn arb_f32_bits() -> impl Strategy<Value = f32> {
+    any::<u32>().prop_map(f32::from_bits)
+}
+
+/// A cohort: p equal-length rows. The loader derives d from `state.json`
+/// and insists every worker file matches it, as every real cohort does.
+fn arb_cohort() -> impl Strategy<Value = Vec<Vec<f32>>> {
+    (1usize..5, 1usize..33).prop_flat_map(|(p, d)| {
+        prop::collection::vec(prop::collection::vec(arb_f32_bits(), d), p)
+    })
+}
+
+/// An anchor checkpoint shaped the way the rendezvous writes them: the
+/// boundary label for a live commit, the terminal label for a finale.
+fn anchor(index: u64, terminal: bool, workers: Vec<Vec<f32>>, steps: u64) -> Checkpoint {
+    Checkpoint {
+        label: if terminal {
+            "wasgd+ terminal anchor (partial finale)".to_string()
+        } else {
+            format!("wasgd+ epoch {index} anchor")
+        },
+        iteration: steps,
+        epoch: steps as f64 / 128.0,
+        sim_time_s: steps as f64 * 1e-3,
+        workers,
+    }
+}
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(64))]
+
+    #[test]
+    fn anchor_roundtrip_preserves_the_committed_cohort_digest(
+        cohorts in prop::collection::vec(arb_cohort(), 1..4),
+        base in 0u64..40,
+        stride in 1u64..5,
+        terminal_last in any::<bool>(),
+        steps in 0u64..10_000,
+    ) {
+        let dir = case_dir();
+        // Anchors land at strictly increasing indices but are saved in
+        // reverse, to prove the scan does not lean on write order.
+        let indexed: Vec<(u64, &Vec<Vec<f32>>)> = cohorts
+            .iter()
+            .enumerate()
+            .map(|(i, rows)| (base + stride * i as u64, rows))
+            .collect();
+        for (k, (idx, rows)) in indexed.iter().enumerate().rev() {
+            let terminal = terminal_last && k == indexed.len() - 1;
+            let ck = anchor(*idx, terminal, (*rows).clone(), steps + idx);
+            ck.save(&dir.join(format!("epoch_{idx:04}"))).unwrap();
+        }
+        let (latest_idx, latest_path) =
+            latest_epoch_anchor(&dir).unwrap().expect("anchors were saved");
+        let (want_idx, want_rows) = indexed.last().unwrap();
+        prop_assert_eq!(latest_idx, *want_idx);
+
+        // The journaled `anchor_digest` is `digest_cohort` over the
+        // committed rows; the reloaded anchor must land on the identical
+        // value — bit-exact through the `.f32` files, NaN rows included.
+        let want_digest = digest_cohort(want_rows.iter().map(|r| r.as_slice()));
+        let direct = Checkpoint::load(&latest_path).unwrap();
+        prop_assert_eq!(
+            digest_cohort(direct.workers.iter().map(|r| r.as_slice())),
+            want_digest
+        );
+
+        let resumed = load_resume_dir(&dir).unwrap();
+        prop_assert_eq!(
+            digest_cohort(resumed.workers.iter().map(|r| r.as_slice())),
+            want_digest
+        );
+        prop_assert_eq!(resumed.iteration, steps + *want_idx);
+        if terminal_last {
+            prop_assert!(
+                resumed.label.contains("terminal anchor"),
+                "terminal label lost: {:?}",
+                resumed.label
+            );
+        } else {
+            prop_assert!(resumed.label.contains("anchor"));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn a_root_checkpoint_beats_every_anchor(
+        root_rows in arb_cohort(),
+        anchor_rows in arb_cohort(),
+        idx in 0u64..99,
+    ) {
+        let dir = case_dir();
+        anchor(idx, false, anchor_rows, 7)
+            .save(&dir.join(format!("epoch_{idx:04}")))
+            .unwrap();
+        let root = Checkpoint {
+            label: "wasgd+ tiny_cnn p=2 (completed)".to_string(),
+            iteration: 256,
+            epoch: 2.0,
+            sim_time_s: 1.0,
+            workers: root_rows.clone(),
+        };
+        root.save(&dir).unwrap();
+        // A completed run's own state.json outranks any boundary anchor:
+        // resuming a finished session must restart from its final rows.
+        let resumed = load_resume_dir(&dir).unwrap();
+        prop_assert_eq!(resumed.iteration, 256);
+        prop_assert_eq!(
+            digest_cohort(resumed.workers.iter().map(|r| r.as_slice())),
+            digest_cohort(root_rows.iter().map(|r| r.as_slice()))
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -17,15 +17,16 @@ use std::process::{Command, Stdio};
 use std::thread;
 use std::time::Duration;
 
-use wasgd::cluster::fabric::{planned_steps, run_decentralized_threaded};
-use wasgd::cluster::tcp::{serve, ElasticOptions, ServeOptions};
+use wasgd::checkpoint::load_resume_dir;
+use wasgd::cluster::fabric::{planned_steps, run_decentralized_threaded, Collective};
+use wasgd::cluster::tcp::{serve, ElasticOptions, RemoteCluster, ServeOptions};
 use wasgd::cluster::threads::run_wasgd_plus_threaded;
 use wasgd::cluster::wire::WireEncoding;
 use wasgd::config::{AlgoKind, BackendKind, ExperimentConfig};
 use wasgd::coordinator::Trainer;
 use wasgd::data::{idx, DataPipeline, Dataset, SourceKind};
 use wasgd::journal::replay::{self, ReplayOptions};
-use wasgd::journal::{rank_journal_path, read_events, Event};
+use wasgd::journal::{rank_journal_path, read_events, Event, MembershipChange};
 use wasgd::runtime::load_backend;
 
 fn bits(v: &[f32]) -> Vec<u32> {
@@ -459,4 +460,276 @@ fn elastic_tcp_absorbs_a_late_joiner() {
         .expect("replay across the join");
     assert!(report.commits >= 1, "the absorption boundary must be chained");
     let _ = std::fs::remove_dir_all(&jdir);
+}
+
+#[test]
+fn elastic_tcp_resumes_from_epoch_anchors() {
+    // Elastic acceptance #3: the whole rendezvous — process, sockets,
+    // journal writer — is SIGKILLed mid-epoch, then revived with
+    // `--resume DIR`. The revival loads the latest `epoch_NNNN/` anchor,
+    // seeds its first formation from the anchor's rows, stitches a
+    // round-0 resume commit onto the torn journal, and drains the rest
+    // of the budget — with the loss still decreasing end to end and the
+    // stitched journal replay-verifying across the resume boundary.
+    let dir = std::env::temp_dir().join(format!("wasgd_elastic_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let serve_jrn = dir.join("serve.jrn");
+    let anchors = dir.join("anchors");
+
+    // Phase 1: a p=3 elastic session as a genuine OS process, so the
+    // kill takes the acceptor, the relays, and the journal file handle
+    // with it. `--listen :0` + the machine-parseable first stdout line
+    // avoid any port race.
+    let exe = env!("CARGO_BIN_EXE_wasgd");
+    let mut serve_child = Command::new(exe)
+        .args([
+            "serve", "--listen", "127.0.0.1:0", "--backend", "native", "--variant", "tiny_cnn",
+            "--algo", "wasgd+", "--p", "3", "--tau", "2", "--m", "2", "--c", "1", "--lr", "0.05",
+            "--seed", "17", "--epochs", "2.0", "--eval-every", "16", "--elastic",
+            "--heartbeat-ms", "100", "--min-workers", "1", "--max-workers", "3",
+        ])
+        .arg("--journal")
+        .arg(&serve_jrn)
+        .arg("--save-checkpoint")
+        .arg(&anchors)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning the rendezvous process");
+    let addr = {
+        use std::io::BufRead;
+        let mut line = String::new();
+        std::io::BufReader::new(serve_child.stdout.take().unwrap()).read_line(&mut line).unwrap();
+        line.trim()
+            .strip_prefix("listening on ")
+            .unwrap_or_else(|| panic!("unexpected rendezvous banner: {line:?}"))
+            .to_string()
+    };
+    let spawn_worker = |addr: &str| {
+        Command::new(exe)
+            .args(["worker", "--connect", addr])
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning a wasgd worker process")
+    };
+    let mut children: Vec<_> = (0..3).map(|_| spawn_worker(&addr)).collect();
+
+    // A worker dies once the p=3 cohort has rounds on the books, so a
+    // live boundary commits and writes an epoch anchor for the two
+    // survivors before the rendezvous itself is killed.
+    wait_for_journal(&serve_jrn, "the first rounds at p=3", |events| {
+        events.iter().filter(|ev| matches!(ev, Event::PanelDigest { .. })).count() >= 6
+    });
+    children[0].kill().expect("SIGKILL the victim worker");
+    wait_for_journal(&serve_jrn, "post-boundary progress at p=2", |events| {
+        let anchored = events.iter().any(|ev| matches!(ev, Event::CheckpointWritten { .. }));
+        let starts: Vec<usize> = events
+            .iter()
+            .enumerate()
+            .filter(|(_, ev)| matches!(ev, Event::RunStarted { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        anchored
+            && starts.len() >= 2
+            && events[starts[1]..]
+                .iter()
+                .filter(|ev| matches!(ev, Event::PanelDigest { .. }))
+                .count()
+                >= 4
+    });
+    serve_child.kill().expect("SIGKILL the rendezvous mid-epoch");
+    let _ = serve_child.wait();
+    for mut child in children.drain(..) {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+
+    // Phase 2: revive from the anchor root. The latest anchor carries
+    // the two survivors' committed rows; the revived base config is
+    // sized to match, but the step budget must name the original run's.
+    let ck = load_resume_dir(&anchors).expect("the anchor root must resolve to a checkpoint");
+    assert!(ck.label.contains("anchor"), "phase 1 must leave an epoch anchor, got {:?}", ck.label);
+    let survivors = ck.workers.len();
+    assert_eq!(survivors, 2, "the live boundary committed two survivors");
+    assert!(ck.iteration > 0, "the anchor records the committed steps");
+
+    let mut cfg = tiny_cnn_cfg();
+    cfg.p = survivors;
+    cfg.tau = 2;
+    cfg.epochs = 2.0; // same 256-step budget as phase 1 (budget is p-independent)
+    cfg.elastic = true;
+    cfg.heartbeat_ms = 100;
+    cfg.min_workers = 1;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr2 = listener.local_addr().unwrap().to_string();
+    let opts = ServeOptions {
+        cfg: cfg.clone(),
+        encoding: WireEncoding::F32,
+        resume: Some(ck),
+        journal: Some(serve_jrn.clone()),
+        elastic: Some(ElasticOptions {
+            min_workers: 1,
+            max_workers: 3,
+            heartbeat_ms: 100,
+            anchor_dir: Some(anchors.clone()),
+        }),
+    };
+    let server = thread::spawn(move || serve(listener, &opts));
+    let children: Vec<_> = (0..survivors).map(|_| spawn_worker(&addr2)).collect();
+
+    let outcome = server.join().unwrap().expect("the revived session completes");
+    for mut child in children {
+        assert!(child.wait().unwrap().success(), "a revived worker process failed");
+    }
+    assert_eq!(outcome.finals.len(), survivors);
+    assert_eq!(outcome.steps, 256, "kill + resume must still drain the full step budget");
+    assert!(
+        outcome.commit_reasons.first().is_some_and(|r| r.contains("resumed from the epoch anchor")),
+        "the revived session's first boundary is the resume commit: {:?}",
+        outcome.commit_reasons
+    );
+
+    // The loss keeps decreasing from the original run's first round
+    // (p=3) through the revived run's finale.
+    let rows = digest_rows(&serve_jrn);
+    let mean = |r: &[(u64, u32, u64, u32, u64)]| {
+        r.iter().map(|&(_, _, _, lb, _)| f64::from(f32::from_bits(lb))).sum::<f64>()
+            / r.len() as f64
+    };
+    let first = mean(&rows[..3]);
+    let last = mean(&rows[rows.len() - survivors..]);
+    assert!(
+        last < first,
+        "loss must keep decreasing across the kill + resume: round 1 mean {first}, final {last}"
+    );
+
+    // The stitched journal — the p=3 epoch, the live boundary, the
+    // killed epoch's torn tail terminated by the round-0 resume commit,
+    // the revived segments — replays bit-exactly end to end.
+    let report = replay::verify(&serve_jrn, &ReplayOptions::default())
+        .expect("replay across the resume boundary");
+    assert!(report.segments >= 3, "kill + resume must leave >= 3 segments, got {}", report.segments);
+    assert!(report.commits >= 2, "live boundary + resume boundary must chain, got {}", report.commits);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn elastic_tcp_reforms_through_a_finale_death() {
+    // Elastic acceptance #4: a worker dies AFTER the cohort's last
+    // collective round, while `Final` panels are in flight. The session
+    // must bank the finals that arrived, re-form the survivors into a
+    // zero-step epilogue instead of erroring with a partial finale,
+    // complete from the bank, and name the dead rank and its last
+    // completed round in the commit reason.
+    let mut cfg = tiny_cnn_cfg();
+    cfg.p = 3; // 32 steps at tau=8 → exactly 4 rounds, then the finale
+    cfg.elastic = true;
+    cfg.heartbeat_ms = 100;
+    cfg.min_workers = 1;
+    let dir = std::env::temp_dir().join(format!("wasgd_finale_death_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let serve_jrn = dir.join("serve.jrn");
+    let anchors = dir.join("anchors");
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = ServeOptions {
+        cfg: cfg.clone(),
+        encoding: WireEncoding::F32,
+        resume: None,
+        journal: Some(serve_jrn.clone()),
+        elastic: Some(ElasticOptions {
+            min_workers: 1,
+            max_workers: 3,
+            heartbeat_ms: 100,
+            anchor_dir: Some(anchors.clone()),
+        }),
+    };
+    let server = thread::spawn(move || serve(listener, &opts));
+
+    // The mole connects first (arrival order is seating order → rank 0),
+    // heartbeats dutifully, joins all four collective rounds — and then
+    // hangs up without ever sending its Final. Because a relay can only
+    // commit from inside the Panel arm, a worker that heartbeats through
+    // its last round and closes its socket is deterministically reported
+    // dead "after completing round 4", never silently committed.
+    let mole_addr = addr.clone();
+    let mole = thread::spawn(move || {
+        let (mut fabric, welcome) = RemoteCluster::connect(&mole_addr).unwrap();
+        assert_eq!(fabric.rank(), 0, "the mole connected first, so it is seated as rank 0");
+        let mcfg = ExperimentConfig::from_wire_json(&welcome.config_json).unwrap();
+        assert!(mcfg.elastic, "the wire config must announce the elastic session");
+        fabric.start_heartbeats(Duration::from_millis(100));
+        let d = {
+            let engine = load_backend(&mcfg).unwrap();
+            engine.manifest().init_params(mcfg.seed ^ 0x9a9a).len()
+        };
+        for _ in 0..4 {
+            fabric.all_gather(1.0, &vec![0.5f32; d]).unwrap();
+        }
+        drop(fabric); // the socket dies with the cohort's finals in flight
+    });
+    // The mole's handshake lands before the real pair connects, pinning
+    // its rank-0 seat.
+    thread::sleep(Duration::from_millis(300));
+    let exe = env!("CARGO_BIN_EXE_wasgd");
+    let children: Vec<_> = (0..2)
+        .map(|_| {
+            Command::new(exe)
+                .args(["worker", "--connect", &addr])
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawning a wasgd worker process")
+        })
+        .collect();
+
+    let outcome = server.join().unwrap().expect("the session completes from banked finals");
+    mole.join().unwrap();
+    for mut child in children {
+        assert!(child.wait().unwrap().success(), "a surviving worker process failed");
+    }
+
+    assert_eq!(outcome.finals.len(), 2, "both survivors' finals are delivered");
+    assert_eq!(outcome.steps, 32, "the banked finals carry the full budget");
+    assert_eq!(outcome.rounds, 4, "every collective round completed before the death");
+    let reason = outcome.commit_reasons.last().expect("the finale boundary records a reason");
+    assert!(
+        reason.contains("rank 0") && reason.contains("round 4"),
+        "the commit reason must name the dead rank and its last completed round: {reason:?}"
+    );
+
+    // Journal shape: both survivors' Finished memberships, rank 0's
+    // crash, and a RunFinished carrying the partial-finale sentinel
+    // (final_digest 0 — there is no full-cohort final to digest).
+    // No replay::verify here: the mole's junk panels are in the digest
+    // stream by design; the resume test above covers verification.
+    let (events, trunc) = read_events(&serve_jrn).unwrap();
+    assert!(trunc.is_none(), "the finished serve journal must be whole");
+    let finished = events
+        .iter()
+        .filter(|ev| matches!(ev, Event::Membership { change: MembershipChange::Finished, .. }))
+        .count();
+    assert_eq!(finished, 2, "both survivors' finals were journaled as Finished");
+    assert!(
+        events.iter().any(|ev| matches!(
+            ev,
+            Event::Membership { rank: 0, change: MembershipChange::Crashed, .. }
+        )),
+        "rank 0's finale death must be journaled as Crashed"
+    );
+    assert!(
+        events.iter().any(|ev| matches!(ev, Event::RunFinished { final_digest: 0, .. })),
+        "a banked-finals completion journals the final_digest sentinel"
+    );
+
+    // Even this session leaves a terminal anchor, so it is resumable.
+    let ck = load_resume_dir(&anchors).expect("the terminal anchor must resolve");
+    assert!(ck.label.contains("terminal anchor"), "unexpected anchor label {:?}", ck.label);
+    assert_eq!(ck.workers.len(), 2, "the terminal anchor holds the survivors' rows");
+    assert_eq!(ck.iteration, 32);
+    let _ = std::fs::remove_dir_all(&dir);
 }

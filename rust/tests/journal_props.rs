@@ -35,6 +35,7 @@ fn arb_change() -> impl Strategy<Value = MembershipChange> {
         Just(MembershipChange::Joined),
         Just(MembershipChange::Left),
         Just(MembershipChange::Crashed),
+        Just(MembershipChange::Finished),
     ]
 }
 
