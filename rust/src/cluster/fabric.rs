@@ -49,11 +49,196 @@ use crate::journal::{
 use crate::rng::Rng;
 use crate::runtime::Backend;
 
-use super::wire::{Cohort, Panel, WireEncoding};
+use super::wire::{lossy_apply, topk_indices, Cohort, Panel, WireEncoding};
 
 /// One worker's contribution to a collective round: its windowed loss
 /// energy h and its flat parameter vector θ.
 pub type WorkerPanel = (f32, Vec<f32>);
+
+/// Which peers' panels each rank aggregates per collective round
+/// (`--topology full|ring|gossip:F`).
+///
+/// * `full` — every rank aggregates the whole cohort (the bit-exact
+///   oracle, and the only topology elastic sessions support).
+/// * `ring` — the rendezvous *delivers* the cohort one neighbour hop at
+///   a time (p−1 single-panel messages, origin `(rank − s) mod p` at
+///   hop s) instead of one p-panel message. After the full rotation the
+///   gathered content is identical to `full`, so with f32 panels the
+///   numerics are bit-identical — a strong structural test that the
+///   topology machinery itself never perturbs the aggregation.
+/// * `gossip:F` — peer sampling (cf. Blot et al. 2016, arXiv
+///   1611.09726): each rank aggregates its own panel plus `F`
+///   deterministically sampled peers', with the Eq. 10/13 weights
+///   renormalized over the actually-received subset (the Boltzmann /
+///   inverse-loss normalisations are subset-local already, so this
+///   falls out of handing the policy the subset's energies).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Topology {
+    /// Full-cohort gather — everyone sees everyone, every round.
+    #[default]
+    Full,
+    /// Neighbour-hop delivery of the full cohort; content ≡ `full`.
+    Ring,
+    /// Deterministic peer sampling with this many peers per round.
+    Gossip {
+        /// Sampled peers per rank per round (≥ 1; clamped to p−1).
+        fanout: u32,
+    },
+}
+
+impl Topology {
+    /// Every topology family, in CLI listing order (the gossip entry
+    /// carries a representative fanout of 2).
+    pub const ALL: [Topology; 3] = [Topology::Full, Topology::Ring, Topology::Gossip { fanout: 2 }];
+
+    /// Topology family name (fanout-free; see [`Topology::label`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Full => "full",
+            Topology::Ring => "ring",
+            Topology::Gossip { .. } => "gossip",
+        }
+    }
+
+    /// Full CLI spelling, including the gossip fanout (`gossip:2`).
+    /// `parse(label())` round-trips for every topology.
+    pub fn label(&self) -> String {
+        match self {
+            Topology::Full => "full".to_string(),
+            Topology::Ring => "ring".to_string(),
+            Topology::Gossip { fanout } => format!("gossip:{fanout}"),
+        }
+    }
+
+    /// Parse a CLI name (`full`, `ring`, `gossip:F` with `F ≥ 1`);
+    /// `None` for anything unknown or out of range.
+    pub fn parse(s: &str) -> Option<Self> {
+        if let Some(f) = s.strip_prefix("gossip:") {
+            let fanout: u32 = f.parse().ok()?;
+            if fanout == 0 {
+                return None;
+            }
+            return Some(Topology::Gossip { fanout });
+        }
+        Some(match s {
+            "full" => Topology::Full,
+            "ring" => Topology::Ring,
+            _ => return None,
+        })
+    }
+}
+
+/// splitmix64 finalizer — the tiny keyed hash behind the gossip peer
+/// sampler. Private to keep the schedule in one place.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// The origin ranks whose panels rank `rank` aggregates in collective
+/// round `round` (1-based), ascending, always containing `rank` itself.
+///
+/// This is a pure function of `(topology, p, rank, round, seed)` — the
+/// relay, every worker, and the replaying simulator all compute the
+/// same schedule with no extra wire traffic. Full and ring gather
+/// everyone; gossip draws `fanout` distinct peers by a keyed partial
+/// Fisher–Yates shuffle.
+pub fn round_origins(
+    topology: Topology,
+    p: usize,
+    rank: usize,
+    round: u64,
+    seed: u64,
+) -> Vec<usize> {
+    match topology {
+        Topology::Full | Topology::Ring => (0..p).collect(),
+        Topology::Gossip { fanout } => {
+            let mut others: Vec<usize> = (0..p).filter(|&j| j != rank).collect();
+            let n = others.len();
+            let f = (fanout as usize).min(n);
+            let mut state = mix64(seed ^ mix64(round) ^ mix64(0x6055_1950 ^ rank as u64));
+            for i in 0..f {
+                state = mix64(state);
+                let j = i + (state % (n - i) as u64) as usize;
+                others.swap(i, j);
+            }
+            let mut sel = others[..f].to_vec();
+            sel.push(rank);
+            sel.sort_unstable();
+            sel
+        }
+    }
+}
+
+/// Per-worker panel codec: the error-feedback state a lossy encoding
+/// threads from round to round, plus the sender-side mirror of what
+/// every receiver decodes.
+///
+/// Top-k error feedback (cf. EF-SGD): the transmitted panel is the
+/// *compensated* vector `θ + residual`; whatever the top-k selection
+/// drops stays in the residual and is re-injected next round, so
+/// compression error is deferred, never lost. The residual is updated
+/// *by construction* (kept coordinates zeroed, dropped coordinates
+/// copied bit-for-bit), never by floating-point subtraction — so
+/// `decoded + residual` re-assembles the compensated panel bit-exactly,
+/// `-0.0`/NaN/±∞ included (pinned by `tests/comm_props.rs`).
+///
+/// Residuals are per-session, in-memory state: a `--resume` or an
+/// elastic re-formation starts them at zero (see `docs/FABRIC.md`).
+pub struct PanelCodec {
+    enc: WireEncoding,
+    residual: Vec<f32>,
+}
+
+impl PanelCodec {
+    /// A fresh codec for a `d`-parameter panel under `enc` (the
+    /// residual starts at zero and only exists for top-k).
+    pub fn new(enc: WireEncoding, d: usize) -> Self {
+        let residual = match enc {
+            WireEncoding::TopK { .. } => vec![0.0; d],
+            WireEncoding::F32 | WireEncoding::Qi8 => Vec::new(),
+        };
+        Self { enc, residual }
+    }
+
+    /// The panel this worker transmits for its current params: the
+    /// error-compensated `θ + residual` for top-k, θ verbatim otherwise.
+    pub fn outgoing(&self, params: &[f32]) -> Vec<f32> {
+        match self.enc {
+            WireEncoding::TopK { .. } => {
+                params.iter().zip(&self.residual).map(|(t, r)| t + r).collect()
+            }
+            WireEncoding::F32 | WireEncoding::Qi8 => params.to_vec(),
+        }
+    }
+
+    /// Commit `outgoing` as transmitted: fold the dropped coordinates
+    /// into the residual and return the decoded panel — bit-identical
+    /// to what every receiver of the encoded bytes decodes.
+    pub fn committed(&mut self, outgoing: &[f32]) -> Vec<f32> {
+        match self.enc {
+            WireEncoding::TopK { k_ppm } => {
+                self.residual.clear();
+                self.residual.extend_from_slice(outgoing);
+                let mut decoded = vec![0.0f32; outgoing.len()];
+                for i in topk_indices(outgoing, k_ppm) {
+                    decoded[i as usize] = outgoing[i as usize];
+                    self.residual[i as usize] = 0.0;
+                }
+                decoded
+            }
+            WireEncoding::F32 => outgoing.to_vec(),
+            WireEncoding::Qi8 => lossy_apply(WireEncoding::Qi8, outgoing),
+        }
+    }
+
+    /// The current residual (empty for lossless/qi8 encodings).
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+}
 
 /// The all-gather/barrier surface every fabric substrate provides — the
 /// seam between the decentralized loop and the transport underneath it.
@@ -76,10 +261,11 @@ pub trait Collective {
     /// Bytes received from peers so far (same convention).
     fn bytes_received(&self) -> u64;
 
-    /// The panel encoding this substrate carries. In-process substrates
-    /// are lossless by construction; the TCP fabric reports its
-    /// negotiated wire encoding so journals record whether the session
-    /// is bit-exactly replayable (`f32`) or inspect-only (`qi8`).
+    /// The panel encoding this substrate carries: what journals record
+    /// so replay knows whether the session is bit-exactly replayable
+    /// (`f32`, and `topk` — deterministically lossy — too) or
+    /// inspect-only (`qi8`). Substrates that apply a lossy mode report
+    /// the rate-bearing session encoding, not a header-derived family.
     fn encoding(&self) -> WireEncoding {
         WireEncoding::F32
     }
@@ -274,19 +460,52 @@ impl<T: Clone> PanelExchange<T> {
 /// The in-process [`Collective`]: worker threads of one process meeting
 /// at a shared [`PanelExchange`] — the concurrency substrate of
 /// `--fabric sim` (the channel stands in for the NIC). Byte counters
-/// report the *wire-equivalent* f32 frame sizes so the cost model sees
-/// the same traffic either way.
+/// report the *wire-equivalent* frame sizes of the configured
+/// encoding × topology so the cost model and the comm-quality tests see
+/// the same traffic a TCP session would measure.
+///
+/// Lossy encodings are applied at deposit time (each rank publishes the
+/// encode→decode round trip of its panel), so every peer — the
+/// depositor included — aggregates exactly what a TCP cohort would have
+/// decoded from the wire bytes.
 pub struct LocalCollective {
     exchange: Arc<PanelExchange<WorkerPanel>>,
     rank: usize,
+    encoding: WireEncoding,
+    topology: Topology,
+    seed: u64,
+    round: u64,
     bytes_sent: u64,
     bytes_received: u64,
 }
 
 impl LocalCollective {
-    /// Attach rank `rank` to a shared exchange.
+    /// Attach rank `rank` to a shared exchange (lossless f32 panels,
+    /// full-cohort gather).
     pub fn new(exchange: Arc<PanelExchange<WorkerPanel>>, rank: usize) -> Self {
-        Self { exchange, rank, bytes_sent: 0, bytes_received: 0 }
+        Self::with_modes(exchange, rank, WireEncoding::F32, Topology::Full, 0)
+    }
+
+    /// Attach rank `rank` with an explicit panel encoding and exchange
+    /// topology (`seed` keys the gossip peer sampler; unused by
+    /// full/ring).
+    pub fn with_modes(
+        exchange: Arc<PanelExchange<WorkerPanel>>,
+        rank: usize,
+        encoding: WireEncoding,
+        topology: Topology,
+        seed: u64,
+    ) -> Self {
+        Self {
+            exchange,
+            rank,
+            encoding,
+            topology,
+            seed,
+            round: 0,
+            bytes_sent: 0,
+            bytes_received: 0,
+        }
     }
 }
 
@@ -302,10 +521,29 @@ impl Collective for LocalCollective {
     fn all_gather(&mut self, h: f32, params: &[f32]) -> Result<Vec<WorkerPanel>> {
         let d = params.len();
         let p = self.p();
-        let cohort = self.exchange.exchange(self.rank, (h, params.to_vec()))?;
-        self.bytes_sent += Panel::wire_len(WireEncoding::F32, d) as u64;
-        self.bytes_received += Cohort::wire_len(WireEncoding::F32, d, p) as u64;
-        Ok(cohort.as_ref().clone())
+        self.round += 1;
+        let decoded = lossy_apply(self.encoding, params);
+        let cohort = self.exchange.exchange(self.rank, (h, decoded))?;
+        self.bytes_sent += Panel::wire_len(self.encoding, d) as u64;
+        match self.topology {
+            Topology::Full => {
+                self.bytes_received += Cohort::wire_len(self.encoding, d, p) as u64;
+                Ok(cohort.as_ref().clone())
+            }
+            Topology::Ring => {
+                // Content ≡ full; the wire-equivalent delivery is p−1
+                // single-panel hops instead of one p-panel message.
+                self.bytes_received +=
+                    ((p - 1) * Cohort::wire_len(self.encoding, d, 1)) as u64;
+                Ok(cohort.as_ref().clone())
+            }
+            Topology::Gossip { .. } => {
+                let origins = round_origins(self.topology, p, self.rank, self.round, self.seed);
+                self.bytes_received +=
+                    Cohort::wire_len(self.encoding, d, origins.len()) as u64;
+                Ok(origins.iter().map(|&o| cohort[o].clone()).collect())
+            }
+        }
     }
 
     fn bytes_sent(&self) -> u64 {
@@ -314,6 +552,10 @@ impl Collective for LocalCollective {
 
     fn bytes_received(&self) -> u64 {
         self.bytes_received
+    }
+
+    fn encoding(&self) -> WireEncoding {
+        self.encoding
     }
 }
 
@@ -470,6 +712,9 @@ pub fn run_fabric_worker(
         dataset.train_y.clone(),
     );
     let mut worker = Worker::new(rank, params, planner);
+    // Error-feedback state for lossy encodings: the codec carries the
+    // dropped coordinates from round to round (zero-sized for f32/qi8).
+    let mut codec = PanelCodec::new(fabric.encoding(), worker.params().len());
     let window = RecordWindow::new(cfg.tau, cfg.m, cfg.c);
     // Dormant cost-model mirror: policies charge communication here so
     // the modelled comm/wait telemetry exists on real fabrics too. It
@@ -493,16 +738,34 @@ pub fn run_fabric_worker(
         }
 
         if step % cfg.tau == 0 {
+            let round = (step / cfg.tau) as u64;
             let h = worker.energy();
-            let cohort = fabric.all_gather(h, worker.params())?;
-            ensure!(cohort.len() == p, "cohort has {} panels, expected {p}", cohort.len());
+            // Transmit the error-compensated panel (θ + residual for
+            // top-k, θ verbatim otherwise) …
+            let outgoing = codec.outgoing(worker.params());
+            let cohort = fabric.all_gather(h, &outgoing)?;
+            // … and commit it: fold the dropped coordinates back into
+            // the residual, keep the sender-side mirror of the decode.
+            let own_decoded = codec.committed(&outgoing);
+            let origins = round_origins(cfg.topology, p, rank, round, cfg.seed);
             ensure!(
-                cohort[rank].0.to_bits() == h.to_bits(),
+                cohort.len() == origins.len(),
+                "round {round} gathered {} panels, topology {} expected {}",
+                cohort.len(),
+                cfg.topology.label(),
+                origins.len()
+            );
+            let own_pos = origins
+                .iter()
+                .position(|&o| o == rank)
+                .expect("a rank always aggregates its own panel");
+            ensure!(
+                cohort[own_pos].0.to_bits() == h.to_bits(),
                 "fabric corrupted rank {rank}'s own panel"
             );
             let energies: Vec<f32> = cohort.iter().map(|(e, _)| *e).collect();
             let d = worker.params().len();
-            let mut rows = Vec::with_capacity(p);
+            let mut rows = Vec::with_capacity(origins.len());
             for (j, (_, row)) in cohort.into_iter().enumerate() {
                 ensure!(
                     row.len() == d,
@@ -511,17 +774,26 @@ pub fn run_fabric_worker(
                 );
                 rows.push(row);
             }
-            // Journal the cohort's contributed panels before the policy
+            // The gathered own row must be bit-identical to the local
+            // encode→decode mirror — any divergence means the fabric
+            // (or the codec) altered the panel in flight.
+            ensure!(
+                digest_params(&rows[own_pos]) == digest_params(&own_decoded),
+                "fabric corrupted rank {rank}'s own panel body"
+            );
+            // Journal the gathered decoded panels before the policy
             // rewrites them — the same pre-aggregation vantage point the
-            // simulated trainer journals at.
+            // simulated trainer journals at. Digests are over what this
+            // rank *actually aggregated* (post-decode), so a
+            // deterministically lossy run still replays bit-exactly
+            // from its own journal.
             if let Some(j) = journal.as_mut() {
-                let round = (step / cfg.tau) as u64;
-                for (r, row) in rows.iter().enumerate() {
+                for (i, row) in rows.iter().enumerate() {
                     j.emit(&Event::PanelDigest {
                         round,
-                        rank: r as u32,
+                        rank: origins[i] as u32,
                         digest: digest_params(row),
-                        loss: energies[r],
+                        loss: energies[i],
                         comm_bytes: canonical_comm_bytes(round, d),
                     })?;
                 }
@@ -540,9 +812,9 @@ pub fn run_fabric_worker(
                 };
                 policy.at_boundary(&mut ctx)?;
             }
-            worker.set_params(rows.swap_remove(rank));
+            worker.set_params(rows.swap_remove(own_pos));
             if policy.uses_order_search() {
-                worker.record_judge_score(judge(&energies, rank));
+                worker.record_judge_score(judge(&energies, own_pos));
             }
             mean_energy = h / window.recorded_count().max(1) as f32;
             worker.reset_energy();
@@ -603,7 +875,13 @@ pub fn run_decentralized_threaded(
             handles.push(s.spawn(move || {
                 let run = || -> Result<FabricWorkerOutcome> {
                     let engine = crate::runtime::load_backend(cfg)?;
-                    let mut fabric = LocalCollective::new(Arc::clone(&exchange), rank);
+                    let mut fabric = LocalCollective::with_modes(
+                        Arc::clone(&exchange),
+                        rank,
+                        cfg.encoding,
+                        cfg.topology,
+                        cfg.seed,
+                    );
                     let mut jw = match &cfg.journal {
                         Some(base) => {
                             Some(JournalWriter::create(&rank_journal_path(base, rank))?)
@@ -735,6 +1013,111 @@ mod tests {
         // Tiny datasets: steps-per-epoch floors at 1.
         cfg.epochs = 3.0;
         assert_eq!(planned_steps(&cfg, 4, 8), 3);
+    }
+
+    #[test]
+    fn topology_names_roundtrip() {
+        for t in Topology::ALL {
+            assert_eq!(Topology::parse(&t.label()), Some(t), "{t:?}");
+        }
+        assert_eq!(Topology::parse("gossip:3"), Some(Topology::Gossip { fanout: 3 }));
+        assert_eq!(Topology::parse("gossip:0"), None, "fanout 0 samples nobody");
+        assert_eq!(Topology::parse("gossip:"), None);
+        assert_eq!(Topology::parse("mesh"), None);
+        assert_eq!(Topology::default(), Topology::Full);
+    }
+
+    #[test]
+    fn round_origins_full_and_ring_gather_everyone() {
+        for t in [Topology::Full, Topology::Ring] {
+            for rank in 0..4 {
+                assert_eq!(round_origins(t, 4, rank, 7, 42), vec![0, 1, 2, 3]);
+            }
+        }
+    }
+
+    #[test]
+    fn gossip_origins_are_deterministic_self_inclusive_and_vary_by_round() {
+        let p = 8;
+        let fanout = 2;
+        let t = Topology::Gossip { fanout };
+        let mut saw_different_rounds = false;
+        for rank in 0..p {
+            let first = round_origins(t, p, rank, 1, 42);
+            // Deterministic: same inputs, same subset.
+            assert_eq!(first, round_origins(t, p, rank, 1, 42));
+            // Own rank always included; fanout peers; ascending; unique.
+            assert_eq!(first.len(), 1 + fanout as usize);
+            assert!(first.contains(&rank), "rank {rank} missing from {first:?}");
+            assert!(first.windows(2).all(|w| w[0] < w[1]), "{first:?} not strictly ascending");
+            assert!(first.iter().all(|&o| o < p));
+            if first != round_origins(t, p, rank, 2, 42) {
+                saw_different_rounds = true;
+            }
+        }
+        assert!(saw_different_rounds, "the sample must vary across rounds");
+        // Fanout clamps to p−1 (everyone) without duplication.
+        let all = round_origins(Topology::Gossip { fanout: 99 }, 3, 1, 5, 7);
+        assert_eq!(all, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn panel_codec_error_feedback_invariant() {
+        let enc = WireEncoding::TopK { k_ppm: 400_000 }; // keep 2 of 5
+        let mut codec = PanelCodec::new(enc, 5);
+        let params = [1.0f32, -4.0, 0.25, 3.0, -0.0];
+        // Round 1: residual is zero, outgoing ≡ params.
+        let out1 = codec.outgoing(&params);
+        assert_eq!(out1, params.to_vec());
+        let dec1 = codec.committed(&out1);
+        // decoded + residual re-assembles the compensated panel
+        // bit-for-bit: kept coords travel, dropped coords stay local.
+        for i in 0..5 {
+            let (d, r) = (dec1[i], codec.residual()[i]);
+            if d.to_bits() == 0 && r.to_bits() == out1[i].to_bits() {
+                continue; // dropped
+            }
+            assert_eq!(d.to_bits(), out1[i].to_bits(), "kept coord {i} must be bit-exact");
+            assert_eq!(r, 0.0, "kept coord {i} must leave no residual");
+        }
+        // |−4| and |3| are the top 2.
+        assert_eq!(dec1[1], -4.0);
+        assert_eq!(dec1[3], 3.0);
+        assert_eq!(codec.residual()[0], 1.0);
+        // Round 2 with unchanged params: the residual re-injects the
+        // dropped coordinates into the compensated panel.
+        let out2 = codec.outgoing(&params);
+        assert_eq!(out2[0], 2.0, "1.0 param + 1.0 residual");
+        // Lossless codecs are pass-through with no residual state.
+        let mut f32c = PanelCodec::new(WireEncoding::F32, 5);
+        let o = f32c.outgoing(&params);
+        assert_eq!(f32c.committed(&o), params.to_vec());
+        assert!(f32c.residual().is_empty());
+    }
+
+    #[test]
+    fn local_collective_gossip_returns_the_subset_in_origin_order() {
+        let p = 4;
+        let t = Topology::Gossip { fanout: 1 };
+        let ex: Arc<PanelExchange<WorkerPanel>> = Arc::new(PanelExchange::new(p));
+        let mut handles = Vec::new();
+        for rank in 0..p {
+            let ex = Arc::clone(&ex);
+            handles.push(thread::spawn(move || {
+                let mut c = LocalCollective::with_modes(ex, rank, WireEncoding::F32, t, 99);
+                let got = c.all_gather(rank as f32, &[rank as f32 * 10.0]).unwrap();
+                (rank, got)
+            }));
+        }
+        for h in handles {
+            let (rank, got) = h.join().unwrap();
+            let origins = round_origins(t, p, rank, 1, 99);
+            assert_eq!(got.len(), origins.len());
+            for (row, &o) in got.iter().zip(origins.iter()) {
+                assert_eq!(row.0, o as f32, "row order must follow ascending origins");
+                assert_eq!(row.1, vec![o as f32 * 10.0]);
+            }
+        }
     }
 
     #[test]

@@ -57,19 +57,20 @@ use crate::checkpoint::{latest_epoch_anchor, Checkpoint};
 use crate::config::ExperimentConfig;
 use crate::data::source::DataPipeline;
 use crate::journal::{
-    canonical_comm_bytes, digest_cohort, fnv64, rank_journal_path, Event, EventSink, JournalWriter,
-    MembershipChange, RANK_COHORT,
+    canonical_comm_bytes, digest_cohort, digest_params, fnv64, rank_journal_path, Event, EventSink,
+    JournalWriter, MembershipChange, RANK_COHORT,
 };
 use crate::metrics::CommCounters;
 use crate::runtime::load_backend;
 
 use super::fabric::{
-    algo_supports_fabric, planned_steps, run_fabric_worker, Collective, EpochEnded, EpochPlan,
-    FabricWorkerOutcome, PanelExchange, WorkerPanel,
+    algo_supports_fabric, planned_steps, round_origins, run_fabric_worker, Collective, EpochEnded,
+    EpochPlan, FabricWorkerOutcome, PanelExchange, Topology, WorkerPanel,
 };
 use super::wire::{
-    self, cohort_frame_from_raw, error_text, hello_frame, Cohort, EpochCommit, Frame, Heartbeat,
-    JoinRequest, Leave, MsgKind, Panel, RawPanel, Welcome, WireEncoding,
+    self, cohort_frame_from_raw, decode_vec, error_text, hello_frame, lossy_apply, Cohort,
+    EpochCommit, Frame, Heartbeat, JoinRequest, Leave, MsgKind, Panel, RawPanel, Welcome,
+    WireEncoding,
 };
 
 /// A remote worker's connection to the rendezvous node — the TCP
@@ -80,6 +81,8 @@ pub struct RemoteCluster {
     rank: usize,
     p: usize,
     encoding: WireEncoding,
+    topology: Topology,
+    seed: u64,
     round: u64,
     completed_round: Arc<AtomicU64>,
     bytes_sent: u64,
@@ -154,6 +157,8 @@ impl RemoteCluster {
                 rank: welcome.rank as usize,
                 p: welcome.p as usize,
                 encoding: frame.encoding,
+                topology: Topology::Full,
+                seed: 0,
                 round: 0,
                 completed_round: Arc::new(AtomicU64::new(0)),
                 bytes_sent,
@@ -168,6 +173,49 @@ impl RemoteCluster {
     /// The session's panel encoding (dictated by the rendezvous node).
     pub fn encoding(&self) -> WireEncoding {
         self.encoding
+    }
+
+    /// Adopt the session's full communication modes from the welcomed
+    /// wire config. The Welcome frame's header byte only carries the
+    /// encoding *family* (a top-k header cannot spell its rate), so the
+    /// worker upgrades to the rate-bearing encoding — and learns the
+    /// exchange topology and the seed keying the gossip sampler — from
+    /// the config JSON before its first collective.
+    pub fn adopt_modes(
+        &mut self,
+        encoding: WireEncoding,
+        topology: Topology,
+        seed: u64,
+    ) -> Result<()> {
+        ensure!(
+            encoding.id() == self.encoding.id(),
+            "the welcome announced the {} encoding family but the session config says {}",
+            self.encoding.name(),
+            encoding.name()
+        );
+        ensure!(self.round == 0, "communication modes must be adopted before the first round");
+        self.encoding = encoding;
+        self.topology = topology;
+        self.seed = seed;
+        Ok(())
+    }
+
+    /// Read one relay reply, counting its bytes and converting Error /
+    /// EpochCommit frames into the corresponding failure modes.
+    fn read_reply(&mut self) -> Result<Frame> {
+        let reply = Frame::read_from(&mut self.reader)
+            .with_context(|| format!("waiting for cohort of round {}", self.round))?;
+        self.bytes_received += reply.encoded_len() as u64;
+        if reply.kind == MsgKind::Error {
+            bail!("rendezvous aborted the session: {}", error_text(&reply));
+        }
+        if reply.kind == MsgKind::EpochCommit {
+            // The epoch ended under this round: surface a recoverable
+            // EpochEnded so the worker loop reconnects instead of dying.
+            let commit = EpochCommit::parse(&reply)?;
+            return Err(anyhow::Error::new(EpochEnded { reason: commit.reason }));
+        }
+        Ok(reply)
     }
 
     /// Start a background liveness thread sending one [`Heartbeat`]
@@ -202,8 +250,12 @@ impl RemoteCluster {
     /// Send the final `(mean energy, θ)` panel after the step budget.
     /// `steps` is the total local step count this worker ran (carried in
     /// the panel's round field so checkpoints record real progress).
+    /// Finals always ride the lossless f32 encoding — they are the
+    /// session's end state (checkpoints, the serve summary, bit-exact
+    /// cross-topology comparisons), not part of the per-round traffic a
+    /// lossy mode compresses.
     pub fn send_final(&mut self, steps: u64, mean_energy: f32, params: &[f32]) -> Result<()> {
-        let frame = Panel::frame(MsgKind::Final, steps, mean_energy, params, self.encoding);
+        let frame = Panel::frame(MsgKind::Final, steps, mean_energy, params, WireEncoding::F32);
         frame.write_to(&mut *self.writer.lock().unwrap())?;
         self.bytes_sent += frame.encoded_len() as u64;
         Ok(())
@@ -225,33 +277,79 @@ impl Collective for RemoteCluster {
         frame.write_to(&mut *self.writer.lock().unwrap())?;
         self.bytes_sent += frame.encoded_len() as u64;
 
-        let reply = Frame::read_from(&mut self.reader)
-            .with_context(|| format!("waiting for cohort of round {}", self.round))?;
-        self.bytes_received += reply.encoded_len() as u64;
-        if reply.kind == MsgKind::Error {
-            bail!("rendezvous aborted the session: {}", error_text(&reply));
-        }
-        if reply.kind == MsgKind::EpochCommit {
-            // The epoch ended under this round: surface a recoverable
-            // EpochEnded so the worker loop reconnects instead of dying.
-            let commit = EpochCommit::parse(&reply)?;
-            return Err(anyhow::Error::new(EpochEnded { reason: commit.reason }));
-        }
-        let cohort = Cohort::parse(&reply)?;
-        ensure!(
-            cohort.round == self.round,
-            "cohort carries round {}, expected {}",
-            cohort.round,
-            self.round
-        );
-        ensure!(
-            cohort.panels.len() == self.p,
-            "cohort has {} panels, expected {}",
-            cohort.panels.len(),
-            self.p
-        );
+        let panels = match self.topology {
+            Topology::Full => {
+                let cohort = Cohort::parse(&self.read_reply()?)?;
+                ensure!(
+                    cohort.round == self.round,
+                    "cohort carries round {}, expected {}",
+                    cohort.round,
+                    self.round
+                );
+                ensure!(
+                    cohort.panels.len() == self.p,
+                    "cohort has {} panels, expected {}",
+                    cohort.panels.len(),
+                    self.p
+                );
+                cohort.panels
+            }
+            Topology::Ring => {
+                // The relay delivers the cohort one neighbour hop at a
+                // time: p−1 single-panel frames, the s-th carrying rank
+                // (rank − s) mod p's panel. The own slot is filled from
+                // the local encode→decode mirror — the relay never
+                // echoes a rank its own panel in ring mode — so the
+                // assembled content is identical to a full gather.
+                let mut slots: Vec<Option<WorkerPanel>> =
+                    (0..self.p).map(|_| None).collect();
+                slots[self.rank] = Some((h, lossy_apply(self.encoding, params)));
+                for s in 1..self.p {
+                    let cohort = Cohort::parse(&self.read_reply()?)?;
+                    ensure!(
+                        cohort.round == self.round,
+                        "ring hop {s} carries round {}, expected {}",
+                        cohort.round,
+                        self.round
+                    );
+                    ensure!(
+                        cohort.panels.len() == 1,
+                        "ring hop {s} carries {} panels, expected 1",
+                        cohort.panels.len()
+                    );
+                    let origin = (self.rank + self.p - s) % self.p;
+                    ensure!(
+                        slots[origin].is_none(),
+                        "ring hop {s} duplicates rank {origin}'s panel"
+                    );
+                    slots[origin] = cohort.panels.into_iter().next();
+                }
+                slots.into_iter().map(|s| s.expect("every ring slot is filled")).collect()
+            }
+            Topology::Gossip { .. } => {
+                // One subset frame, rows in ascending-origin order —
+                // the schedule is a pure function both sides compute.
+                let origins =
+                    round_origins(self.topology, self.p, self.rank, self.round, self.seed);
+                let cohort = Cohort::parse(&self.read_reply()?)?;
+                ensure!(
+                    cohort.round == self.round,
+                    "cohort carries round {}, expected {}",
+                    cohort.round,
+                    self.round
+                );
+                ensure!(
+                    cohort.panels.len() == origins.len(),
+                    "gossip round {} delivered {} panels, the sampling schedule expects {}",
+                    self.round,
+                    cohort.panels.len(),
+                    origins.len()
+                );
+                cohort.panels
+            }
+        };
         self.completed_round.store(self.round, Ordering::Relaxed);
-        Ok(cohort.panels)
+        Ok(panels)
     }
 
     fn bytes_sent(&self) -> u64 {
@@ -422,6 +520,11 @@ fn serve_static(listener: TcpListener, opts: &ServeOptions) -> Result<ServeOutco
         }
         let mut c = cfg.clone();
         c.source = pipeline.source_kind();
+        // The Welcome header byte carries only the encoding *family*; the
+        // wire config is where workers learn the authoritative rate-bearing
+        // encoding (e.g. topk:0.01), the topology, and the schedule seed —
+        // adopted via `RemoteCluster::adopt_modes` before round 1.
+        c.encoding = opts.encoding;
         c
     };
     let cfg_json = wire_cfg.to_wire_json();
@@ -498,6 +601,8 @@ fn serve_static(listener: TcpListener, opts: &ServeOptions) -> Result<ServeOutco
         exchange: &exchange,
         finals: &finals,
         enc: opts.encoding,
+        topology: cfg.topology,
+        seed: cfg.seed,
         journal: journal.as_ref(),
     };
     let results: Vec<Result<RelayStats>> = std::thread::scope(|s| {
@@ -569,6 +674,12 @@ struct RelayCtx<'a> {
     exchange: &'a PanelExchange<(f32, Vec<u8>)>,
     finals: &'a Mutex<Vec<Option<(u64, WorkerPanel)>>>,
     enc: WireEncoding,
+    /// Who receives whose panel each round. The exchange barrier is
+    /// still full-cohort under every topology — sparsity lives in the
+    /// *reply* direction only.
+    topology: Topology,
+    /// Session seed, keying the gossip sampling schedule.
+    seed: u64,
     journal: Option<&'a Mutex<JournalWriter>>,
 }
 
@@ -585,10 +696,10 @@ fn relay_loop(
         match frame.kind {
             MsgKind::Panel => {
                 ensure!(
-                    frame.encoding == ctx.enc,
-                    "rank {rank} sent a {:?} panel in a {:?} session",
-                    frame.encoding,
-                    ctx.enc
+                    frame.encoding.id() == ctx.enc.id(),
+                    "rank {rank} sent a {} panel in a {} session",
+                    frame.encoding.name(),
+                    ctx.enc.name()
                 );
                 let panel = RawPanel::parse(&frame)?;
                 ensure!(
@@ -599,18 +710,50 @@ fn relay_loop(
                 );
                 let cohort = ctx.exchange.exchange(rank, (panel.h, panel.body))?;
                 // One designated emitter (rank 0's handler) journals the
-                // round's cohort. An f32 panel body is exactly θ's
-                // little-endian bytes, so the relay digests raw wire
-                // bytes without ever decoding parameters — and lands on
-                // the same fnv64 a worker computes over its floats. The
-                // barrier guarantees rank 0 cannot deposit round n+1
-                // before round n published, so rounds journal in order.
-                if rank == 0 && ctx.enc == WireEncoding::F32 {
-                    journal_round(ctx.journal, panel.round, &cohort)?;
+                // round's cohort — the exchange is a full barrier under
+                // every topology, so the relay always sees all p panels.
+                // The barrier also guarantees rank 0 cannot deposit
+                // round n+1 before round n published, so rounds journal
+                // in order.
+                if rank == 0 {
+                    journal_round(ctx.journal, panel.round, &cohort, ctx.enc)?;
                 }
-                let reply = cohort_frame_from_raw(panel.round, &cohort[..], ctx.enc);
-                reply.write_to(writer)?;
-                stats.sent += reply.encoded_len() as u64;
+                let p = cohort.len();
+                match ctx.topology {
+                    Topology::Full => {
+                        let reply = cohort_frame_from_raw(panel.round, &cohort[..], ctx.enc);
+                        reply.write_to(writer)?;
+                        stats.sent += reply.encoded_len() as u64;
+                    }
+                    Topology::Ring => {
+                        // p−1 neighbour hops: the s-th frame carries
+                        // rank (rank − s) mod p's panel. The worker
+                        // fills its own slot locally, so the assembled
+                        // cohort content equals a full gather.
+                        for s in 1..p {
+                            let origin = (rank + p - s) % p;
+                            let reply = cohort_frame_from_raw(
+                                panel.round,
+                                std::slice::from_ref(&cohort[origin]),
+                                ctx.enc,
+                            );
+                            reply.write_to(writer)?;
+                            stats.sent += reply.encoded_len() as u64;
+                        }
+                    }
+                    Topology::Gossip { .. } => {
+                        // One subset frame: this rank's sampled origins
+                        // for the round (self-inclusive, ascending), per
+                        // the schedule both sides compute from the seed.
+                        let origins =
+                            round_origins(ctx.topology, p, rank, panel.round, ctx.seed);
+                        let sub: Vec<(f32, Vec<u8>)> =
+                            origins.iter().map(|&o| cohort[o].clone()).collect();
+                        let reply = cohort_frame_from_raw(panel.round, &sub[..], ctx.enc);
+                        reply.write_to(writer)?;
+                        stats.sent += reply.encoded_len() as u64;
+                    }
+                }
                 stats.rounds += 1;
             }
             MsgKind::Final => {
@@ -636,25 +779,42 @@ fn relay_loop(
     }
 }
 
-/// Journal one relayed round's cohort digests (the f32 panel body is
-/// θ's little-endian bytes, so `fnv64(body)` equals the worker-side
-/// `digest_params`).
+/// Journal one relayed round's cohort digests, over the panels *as a
+/// worker decodes them* — that is what every rank aggregated, so lossy
+/// sessions still replay bit-exactly. An f32 panel body is exactly θ's
+/// little-endian bytes, so `fnv64(body)` equals the worker-side
+/// `digest_params` without decoding; a top-k body is deterministic, so
+/// decoding it reproduces the dense panel every worker committed. qi8
+/// journals no digests (its decode is not part of any replay contract —
+/// `wasgd replay --verify` rejects qi8 journals outright).
 fn journal_round(
     journal: Option<&Mutex<JournalWriter>>,
     round: u64,
     cohort: &[(f32, Vec<u8>)],
+    enc: WireEncoding,
 ) -> Result<()> {
-    if let Some(j) = journal {
-        let mut w = j.lock().unwrap();
-        for (r, (h, body)) in cohort.iter().enumerate() {
-            w.emit(&Event::PanelDigest {
-                round,
-                rank: r as u32,
-                digest: fnv64(body),
-                loss: *h,
-                comm_bytes: canonical_comm_bytes(round, body.len() / 4),
-            })?;
-        }
+    let Some(j) = journal else { return Ok(()) };
+    if let WireEncoding::Qi8 = enc {
+        return Ok(());
+    }
+    let mut w = j.lock().unwrap();
+    for (r, (h, body)) in cohort.iter().enumerate() {
+        let (digest, d) = match enc {
+            WireEncoding::F32 => (fnv64(body), body.len() / 4),
+            WireEncoding::TopK { .. } => {
+                let theta = decode_vec(enc, body)
+                    .with_context(|| format!("digesting rank {r}'s round-{round} panel"))?;
+                (digest_params(&theta), theta.len())
+            }
+            WireEncoding::Qi8 => unreachable!("qi8 returned above"),
+        };
+        w.emit(&Event::PanelDigest {
+            round,
+            rank: r as u32,
+            digest,
+            loss: *h,
+            comm_bytes: canonical_comm_bytes(round, d),
+        })?;
     }
     Ok(())
 }
@@ -725,6 +885,11 @@ fn serve_elastic(
         opts.encoding == WireEncoding::F32,
         "elastic sessions need the lossless f32 encoding: epoch anchors are decoded from the \
          relayed panel bytes"
+    );
+    ensure!(
+        cfg.topology == Topology::Full,
+        "elastic sessions need the full topology: ring/gossip schedules are keyed by a fixed \
+         cohort geometry, which re-formation breaks"
     );
     if let Some(ck) = &opts.resume {
         // Geometry is deliberately NOT pinned to p: the anchor's rows
@@ -1099,7 +1264,17 @@ fn elastic_session(
         let rounds_in_epoch = (remaining / tau) as u64;
         let exchange: PanelExchange<(f32, Vec<u8>)> = PanelExchange::new(p_e);
         let finals: Mutex<Vec<Option<(u64, WorkerPanel)>>> = Mutex::new(vec![None; p_e]);
-        let ctx = RelayCtx { exchange: &exchange, finals: &finals, enc, journal };
+        // Elastic sessions are f32 + full by construction (config
+        // validation rejects lossy/sparse modes there — EF residuals and
+        // gossip schedules don't survive re-formation).
+        let ctx = RelayCtx {
+            exchange: &exchange,
+            finals: &finals,
+            enc,
+            topology: Topology::Full,
+            seed: base.seed,
+            journal,
+        };
         let liveness = Duration::from_millis(el.heartbeat_ms.saturating_mul(4).max(100));
         let ends: Vec<EpochRelayEnd> = std::thread::scope(|s| {
             let ctx = &ctx;
@@ -1460,10 +1635,10 @@ fn elastic_relay_inner(
             }
             MsgKind::Panel => {
                 ensure!(
-                    frame.encoding == ctx.enc,
-                    "rank {rank} sent a {:?} panel in a {:?} session",
-                    frame.encoding,
-                    ctx.enc
+                    frame.encoding.id() == ctx.enc.id(),
+                    "rank {rank} sent a {} panel in a {} session",
+                    frame.encoding.name(),
+                    ctx.enc.name()
                 );
                 let panel = RawPanel::parse(&frame)?;
                 ensure!(
@@ -1475,7 +1650,7 @@ fn elastic_relay_inner(
                 match ctx.exchange.exchange(rank, (panel.h, panel.body)) {
                     Ok(cohort) => {
                         if rank == 0 {
-                            journal_round(ctx.journal, panel.round, &cohort)?;
+                            journal_round(ctx.journal, panel.round, &cohort, ctx.enc)?;
                         }
                         let reply = cohort_frame_from_raw(panel.round, &cohort[..], ctx.enc);
                         reply.write_to(writer)?;
@@ -1600,6 +1775,10 @@ pub fn run_remote_worker(
         if let Some(dir) = &data_dir_override {
             cfg.data_dir = Some(dir.clone());
         }
+        // The Welcome header announced only the encoding *family*; the
+        // wire config carries the full modes (rate-bearing encoding,
+        // topology, seed) — adopt them before the first round.
+        fabric.adopt_modes(cfg.encoding, cfg.topology, cfg.seed)?;
         let engine = load_backend(&cfg)?;
         let dataset = DataPipeline::from_config(&cfg)?.load(engine.manifest())?;
         let total_steps = match cfg.step_budget {
@@ -1740,6 +1919,55 @@ mod tests {
             qi8_out.comm.total_sent() * 2 < f32_out.comm.total_sent(),
             "qi8 {} B vs f32 {} B",
             qi8_out.comm.total_sent(),
+            f32_out.comm.total_sent()
+        );
+    }
+
+    #[test]
+    fn ring_topology_with_f32_matches_full_bit_for_bit() {
+        // The ring delivers the same cohort content as the full gather,
+        // one neighbour hop at a time — with a lossless encoding the
+        // final parameters must be bit-identical.
+        let cfg = tcp_cfg(2);
+        let full = loopback_session(&cfg, WireEncoding::F32);
+        let mut ring_cfg = cfg.clone();
+        ring_cfg.topology = Topology::Ring;
+        let ring = loopback_session(&ring_cfg, WireEncoding::F32);
+        assert_eq!(ring.rounds, full.rounds);
+        assert_eq!(ring.finals.len(), full.finals.len());
+        for (rank, ((fh, ft), (rh, rt))) in
+            full.finals.iter().zip(ring.finals.iter()).enumerate()
+        {
+            assert_eq!(fh.to_bits(), rh.to_bits(), "rank {rank} final energy diverged");
+            let f: Vec<u32> = ft.iter().map(|v| v.to_bits()).collect();
+            let r: Vec<u32> = rt.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(f, r, "rank {rank}: ring f32 must be bit-identical to full f32");
+        }
+    }
+
+    #[test]
+    fn topk_ring_session_completes_with_much_less_traffic() {
+        // The acceptance-criteria combination in-process: top-k panels
+        // over a ring, against the lossless/full oracle's byte counts.
+        // τ=2 gives 8 rounds, so round traffic dwarfs the fixed
+        // handshake bytes both sessions share.
+        let mut cfg = tcp_cfg(2);
+        cfg.tau = 2;
+        let f32_out = loopback_session(&cfg, WireEncoding::F32);
+        let mut topk_cfg = cfg.clone();
+        topk_cfg.topology = Topology::Ring;
+        let topk_out = loopback_session(&topk_cfg, WireEncoding::TopK { k_ppm: 10_000 });
+        assert_eq!(topk_out.rounds, f32_out.rounds);
+        for (h, theta) in &topk_out.finals {
+            assert!(h.is_finite());
+            assert!(theta.iter().all(|v| v.is_finite()));
+        }
+        // 1% of coordinates at 8 bytes each ≈ 2% of the dense panel;
+        // relay→worker traffic must come in far under the oracle's.
+        assert!(
+            topk_out.comm.total_sent() * 5 < f32_out.comm.total_sent(),
+            "topk ring {} B vs f32 full {} B",
+            topk_out.comm.total_sent(),
             f32_out.comm.total_sent()
         );
     }

@@ -18,7 +18,12 @@
 //! files), so a threaded run, a TCP run, and the simulated trainer
 //! produce **bit-identical** final parameters for every data source
 //! (pinned by `tests/fabric_e2e.rs`; the exchange itself is
-//! stress-tested in `tests/allgather_props.rs`).
+//! stress-tested in `tests/allgather_props.rs`). That identity holds
+//! under every *deterministic* encoding × topology combination —
+//! lossless f32, deterministically lossy top-k, full, ring, and gossip
+//! all run the same codec and schedule on all three substrates (the
+//! lossy modes just aren't bit-comparable to a *lossless* run; see
+//! `docs/FABRIC.md` for the two test tiers).
 
 use anyhow::Result;
 

@@ -20,6 +20,15 @@
 //!   4× smaller on the wire; lossy (≤ scale/2 per element), so it trades
 //!   bit-reproducibility for bandwidth — the paper's large-τ regime in
 //!   byte form.
+//! * **topk** — top-k magnitude sparsification: `dim u32 | k u32 |
+//!   k strictly-increasing u32 indices | k raw f32 values`. Only the
+//!   `k = ⌈dim·rate⌉` largest-magnitude coordinates travel; the
+//!   transmitted values themselves are raw bits (NaN payloads included),
+//!   so the *selection* is lossy but the decode of what was kept is
+//!   bit-exact and fully deterministic. Senders keep the dropped
+//!   coordinates in an error-feedback residual and re-inject them into
+//!   the next round's panel (see `cluster/fabric.rs`), so compression
+//!   error is deferred, not lost.
 //!
 //! Loss energies `h` and all counters are always raw (never quantised):
 //! they are tiny and they steer the Boltzmann weights, where a half-step
@@ -122,22 +131,100 @@ pub enum WireEncoding {
     /// Symmetric linear i8 quantisation with a per-vector f32 scale —
     /// ~4× smaller, lossy (≤ scale/2 per element).
     Qi8,
+    /// Top-k magnitude sparsification: only the `⌈dim·k_ppm/10⁶⌉`
+    /// largest-magnitude coordinates travel, as strictly-increasing
+    /// indices plus raw f32 bits. The rate rides as parts-per-million
+    /// so the encoding stays `Eq`/`Copy` (`10_000` ⇒ `topk:0.01`).
+    ///
+    /// The frame *header* byte carries only the family id: a decoded
+    /// header reconstructs `TopK { k_ppm: 0 }`, which is sufficient
+    /// because the body is self-describing (`dim` and `k` are in the
+    /// payload). The rate-bearing value lives in the session config and
+    /// is only needed to *encode*.
+    TopK {
+        /// Keep-rate in parts-per-million of the panel dimension.
+        k_ppm: u32,
+    },
+}
+
+/// Number of coordinates a top-k encoding keeps for a `dim`-element
+/// vector at `k_ppm` parts-per-million: `min(dim, ⌈dim·k_ppm/10⁶⌉)`.
+/// The ceiling means any non-zero rate keeps at least one coordinate of
+/// a non-empty vector; `k_ppm = 0` keeps none.
+pub fn topk_k(dim: usize, k_ppm: u32) -> usize {
+    ((dim as u64 * k_ppm as u64).div_ceil(1_000_000) as usize).min(dim)
+}
+
+/// The indices a top-k encoding keeps, in strictly increasing order.
+///
+/// Selection is fully deterministic, including for non-finite values:
+/// candidates are ranked by `|x|` under `f32::total_cmp` descending
+/// (NaN magnitudes rank above +∞), ties broken by ascending index, and
+/// the kept set is then re-sorted ascending for the wire.
+pub fn topk_indices(v: &[f32], k_ppm: u32) -> Vec<u32> {
+    let k = topk_k(v.len(), k_ppm);
+    let mut idx: Vec<u32> = (0..v.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        let (ma, mb) = (v[a as usize].abs(), v[b as usize].abs());
+        mb.total_cmp(&ma).then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx
+}
+
+/// What a receiver decodes from a top-k encoding of `v`: zeros
+/// everywhere except the kept coordinates, which carry `v`'s raw bits.
+/// This is the sender's local mirror of its own transmitted panel —
+/// encode→decode with no wire in between.
+pub fn topk_apply(v: &[f32], k_ppm: u32) -> Vec<f32> {
+    let mut out = vec![0.0f32; v.len()];
+    for i in topk_indices(v, k_ppm) {
+        out[i as usize] = v[i as usize];
+    }
+    out
 }
 
 impl WireEncoding {
-    /// Every encoding, in wire-id order.
-    pub const ALL: [WireEncoding; 2] = [WireEncoding::F32, WireEncoding::Qi8];
+    /// Every encoding family, in wire-id order (the top-k entry carries
+    /// a representative 1% rate).
+    pub const ALL: [WireEncoding; 3] =
+        [WireEncoding::F32, WireEncoding::Qi8, WireEncoding::TopK { k_ppm: 10_000 }];
 
-    /// CLI name (`--encoding f32|qi8`).
+    /// Encoding family name (rate-free; see [`WireEncoding::label`] for
+    /// the rate-bearing CLI spelling).
     pub fn name(&self) -> &'static str {
         match self {
             WireEncoding::F32 => "f32",
             WireEncoding::Qi8 => "qi8",
+            WireEncoding::TopK { .. } => "topk",
         }
     }
 
-    /// Parse a CLI name; `None` for anything unknown.
+    /// Full CLI spelling, including the top-k rate (`topk:0.01`).
+    /// `parse(label())` round-trips for every encoding.
+    pub fn label(&self) -> String {
+        match self {
+            WireEncoding::F32 => "f32".to_string(),
+            WireEncoding::Qi8 => "qi8".to_string(),
+            WireEncoding::TopK { k_ppm } => format!("topk:{}", *k_ppm as f64 / 1e6),
+        }
+    }
+
+    /// Parse a CLI name (`f32`, `qi8`, `topk:R` with rate `R ∈ (0, 1]`);
+    /// `None` for anything unknown or out of range.
     pub fn parse(s: &str) -> Option<Self> {
+        if let Some(rate) = s.strip_prefix("topk:") {
+            let r: f64 = rate.parse().ok()?;
+            if !(r > 0.0 && r <= 1.0) {
+                return None;
+            }
+            let k_ppm = (r * 1e6).round() as u32;
+            if k_ppm == 0 {
+                return None;
+            }
+            return Some(WireEncoding::TopK { k_ppm });
+        }
         Some(match s {
             "f32" => WireEncoding::F32,
             "qi8" => WireEncoding::Qi8,
@@ -145,10 +232,14 @@ impl WireEncoding {
         })
     }
 
-    fn as_u8(self) -> u8 {
+    /// The wire id this encoding puts in the frame header. Only the
+    /// *family* travels in the header; the top-k rate rides in the
+    /// session config (the body is self-describing to decode).
+    pub fn id(self) -> u8 {
         match self {
             WireEncoding::F32 => 0,
             WireEncoding::Qi8 => 1,
+            WireEncoding::TopK { .. } => 2,
         }
     }
 
@@ -156,17 +247,40 @@ impl WireEncoding {
         Some(match v {
             0 => WireEncoding::F32,
             1 => WireEncoding::Qi8,
+            // The header only names the family; decode never needs the
+            // rate, so a parsed frame carries the zero-rate placeholder.
+            2 => WireEncoding::TopK { k_ppm: 0 },
             _ => return None,
         })
     }
 
     /// Encoded byte length of an `n`-element vector body (excluding the
-    /// `u32` length prefix messages put in front of it).
+    /// `u32` length prefix messages put in front of it). For top-k this
+    /// depends on the rate, so size accounting must use the session's
+    /// rate-bearing encoding, not one reconstructed from a header.
     pub fn encoded_vec_len(&self, n: usize) -> usize {
         match self {
             WireEncoding::F32 => 4 * n,
             WireEncoding::Qi8 => 4 + n,
+            WireEncoding::TopK { k_ppm } => 8 + 8 * topk_k(n, *k_ppm),
         }
+    }
+}
+
+/// What a receiver decodes from `v` encoded under `enc` — the canonical
+/// encode→decode round trip with no wire in between. The identity for
+/// f32; the deterministic lossy transform for qi8 and top-k. Senders use
+/// this to mirror their own transmitted panel locally (e.g. under the
+/// ring topology, where the relay never echoes a rank its own panel).
+pub fn lossy_apply(enc: WireEncoding, v: &[f32]) -> Vec<f32> {
+    match enc {
+        WireEncoding::F32 => v.to_vec(),
+        WireEncoding::Qi8 => {
+            let mut body = Vec::with_capacity(enc.encoded_vec_len(v.len()));
+            encode_vec(enc, v, &mut body);
+            decode_vec(enc, &body).expect("self-encoded qi8 body decodes")
+        }
+        WireEncoding::TopK { k_ppm } => topk_apply(v, k_ppm),
     }
 }
 
@@ -199,7 +313,7 @@ impl Frame {
         head[0..4].copy_from_slice(&MAGIC);
         head[4..6].copy_from_slice(&VERSION.to_le_bytes());
         head[6] = self.kind.as_u8();
-        head[7] = self.encoding.as_u8();
+        head[7] = self.encoding.id();
         head[8..12].copy_from_slice(&(self.payload.len() as u32).to_le_bytes());
         w.write_all(&head).context("writing frame header")?;
         w.write_all(&self.payload).context("writing frame payload")?;
@@ -254,12 +368,27 @@ fn encode_vec(enc: WireEncoding, v: &[f32], out: &mut Vec<u8>) {
                 out.push(q as u8);
             }
         }
+        WireEncoding::TopK { k_ppm } => {
+            let idx = topk_indices(v, k_ppm);
+            out.reserve(8 + 8 * idx.len());
+            out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+            out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+            for &i in &idx {
+                out.extend_from_slice(&i.to_le_bytes());
+            }
+            for &i in &idx {
+                out.extend_from_slice(&v[i as usize].to_le_bytes());
+            }
+        }
     }
 }
 
 /// Decode a vector body produced by [`encode_vec`] (element count is
-/// implied by the byte length).
-fn decode_vec(enc: WireEncoding, bytes: &[u8]) -> Result<Vec<f32>> {
+/// implied by the byte length). Crate-visible so the relay can digest
+/// the decoded panels of deterministically lossy sessions without
+/// re-framing them; top-k bodies are self-describing, so the encoding's
+/// rate field is irrelevant here.
+pub(crate) fn decode_vec(enc: WireEncoding, bytes: &[u8]) -> Result<Vec<f32>> {
     match enc {
         WireEncoding::F32 => {
             ensure!(bytes.len() % 4 == 0, "f32 vector body of {} bytes is ragged", bytes.len());
@@ -273,6 +402,39 @@ fn decode_vec(enc: WireEncoding, bytes: &[u8]) -> Result<Vec<f32>> {
             let scale = f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
             ensure!(scale.is_finite() && scale >= 0.0, "qi8 scale {scale} is invalid");
             Ok(bytes[4..].iter().map(|&b| scale * (b as i8) as f32).collect())
+        }
+        WireEncoding::TopK { .. } => {
+            // Everything is validated against the byte length *before*
+            // the dense output vector is allocated: a lying count, an
+            // out-of-range index, a duplicate, or an unsorted pair all
+            // reject while only the (already length-checked) input
+            // bytes are held.
+            ensure!(bytes.len() >= 8, "top-k vector body shorter than its dim/count header");
+            let dim = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as usize;
+            let k = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+            ensure!(dim <= MAX_FRAME_LEN as usize / 4, "implausible top-k dim {dim}");
+            ensure!(k <= dim, "top-k count {k} exceeds dim {dim}");
+            ensure!(
+                bytes.len() == 8 + 8 * k,
+                "top-k body of {} bytes does not match count {k}",
+                bytes.len()
+            );
+            let (ib, vb) = bytes[8..].split_at(4 * k);
+            let mut prev: Option<u32> = None;
+            for c in ib.chunks_exact(4) {
+                let i = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                ensure!((i as usize) < dim, "top-k index {i} out of range for dim {dim}");
+                if let Some(p) = prev {
+                    ensure!(i > p, "top-k indices not strictly increasing ({p} then {i})");
+                }
+                prev = Some(i);
+            }
+            let mut out = vec![0.0f32; dim];
+            for (c, v) in ib.chunks_exact(4).zip(vb.chunks_exact(4)) {
+                let i = u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as usize;
+                out[i] = f32::from_le_bytes([v[0], v[1], v[2], v[3]]);
+            }
+            Ok(out)
         }
     }
 }
@@ -835,7 +997,9 @@ mod tests {
                     resume: resume.clone(),
                 };
                 let frame = roundtrip(&w.frame(enc));
-                assert_eq!(frame.encoding, enc, "session encoding rides the header");
+                // Only the family id rides the header (a top-k rate
+                // travels in the session config, not the frame).
+                assert_eq!(frame.encoding.id(), enc.id(), "encoding family rides the header");
                 let back = Welcome::parse(&frame).unwrap();
                 assert_eq!(back, w, "{enc:?}");
             }
@@ -874,6 +1038,13 @@ mod tests {
         let mut bad = bytes.clone();
         bad[7] = 9;
         assert!(Frame::read_from(&mut Cursor::new(&bad)).is_err(), "bad encoding");
+        // Family id 2 (top-k) is known, so it parses at the frame layer.
+        let mut topk = bytes.clone();
+        topk[7] = 2;
+        assert_eq!(
+            Frame::read_from(&mut Cursor::new(&topk)).unwrap().encoding,
+            WireEncoding::TopK { k_ppm: 0 }
+        );
 
         // Oversized length is rejected before any allocation.
         let mut bad = bytes.clone();
@@ -993,9 +1164,102 @@ mod tests {
     #[test]
     fn encoding_names_roundtrip() {
         for e in WireEncoding::ALL {
-            assert_eq!(WireEncoding::parse(e.name()), Some(e));
+            assert_eq!(WireEncoding::parse(&e.label()), Some(e), "{e:?}");
         }
+        assert_eq!(WireEncoding::parse("f32"), Some(WireEncoding::F32));
+        assert_eq!(WireEncoding::parse("topk:0.01"), Some(WireEncoding::TopK { k_ppm: 10_000 }));
+        assert_eq!(WireEncoding::TopK { k_ppm: 10_000 }.label(), "topk:0.01");
         assert_eq!(WireEncoding::parse("i4"), None);
+        assert_eq!(WireEncoding::parse("topk:0"), None, "zero rate keeps nothing");
+        assert_eq!(WireEncoding::parse("topk:1.5"), None, "rate above 1");
+        assert_eq!(WireEncoding::parse("topk:-0.1"), None, "negative rate");
+        assert_eq!(WireEncoding::parse("topk:"), None, "missing rate");
         assert_eq!(WireEncoding::default(), WireEncoding::F32);
+    }
+
+    #[test]
+    fn topk_selection_is_deterministic_and_sorted() {
+        // |x| descending with index tie-break; kept set re-sorted
+        // ascending for the wire.
+        let v = [1.0f32, -3.0, 3.0, 0.5, -0.5];
+        assert_eq!(topk_indices(&v, 400_000), vec![1, 2]); // k = ⌈5·0.4⌉ = 2
+        assert_eq!(topk_indices(&v, 1_000_000), vec![0, 1, 2, 3, 4]);
+        assert_eq!(topk_indices(&v, 0), Vec::<u32>::new());
+        // NaN magnitude outranks +∞ under total_cmp.
+        let w = [f32::INFINITY, 1.0, f32::NAN];
+        assert_eq!(topk_indices(&w, 400_000), vec![0, 2]);
+        // topk_k edges: any non-zero rate keeps ≥ 1; k never exceeds dim.
+        assert_eq!(topk_k(1000, 1), 1);
+        assert_eq!(topk_k(0, 500_000), 0);
+        assert_eq!(topk_k(3, 1_000_000), 3);
+    }
+
+    #[test]
+    fn topk_roundtrip_is_bit_exact_on_kept_coordinates() {
+        let theta = vec![0.25f32, -8.5, f32::NAN, 0.0, f32::NEG_INFINITY, 1e-30, -2.0];
+        let enc = WireEncoding::TopK { k_ppm: 500_000 }; // k = ⌈7·0.5⌉ = 4
+        let f = Panel::frame(MsgKind::Panel, 3, 0.75, &theta, enc);
+        assert_eq!(f.encoded_len(), Panel::wire_len(enc, theta.len()));
+        let p = Panel::parse(&roundtrip(&f)).unwrap();
+        let expect = topk_apply(&theta, 500_000);
+        assert_eq!(p.theta.len(), theta.len());
+        for (a, b) in p.theta.iter().zip(expect.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // k = 0 and k = dim edge cases round-trip too.
+        for (ppm, label) in [(0u32, "k=0"), (1_000_000, "k=dim")] {
+            let e = WireEncoding::TopK { k_ppm: ppm };
+            let f = Panel::frame(MsgKind::Panel, 1, 0.0, &theta, e);
+            assert_eq!(f.encoded_len(), Panel::wire_len(e, theta.len()), "{label}");
+            let p = Panel::parse(&roundtrip(&f)).unwrap();
+            for (a, b) in p.theta.iter().zip(topk_apply(&theta, ppm).iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{label}");
+            }
+        }
+    }
+
+    #[test]
+    fn topk_rejects_lying_indices_and_counts() {
+        let enc = WireEncoding::TopK { k_ppm: 500_000 };
+        let good = Panel::frame(MsgKind::Panel, 1, 0.0, &[1.0f32, 2.0, 3.0, 4.0], enc);
+        assert!(Panel::parse(&good).is_ok());
+        // Body layout inside the panel payload: round(8) + h(4) +
+        // veclen(4) + dim(4) + k(4) + indices + values.
+        let dim_off = 16;
+        let k_off = 20;
+        let idx_off = 24;
+
+        // Count larger than the bytes justify.
+        let mut lying_count = good.clone();
+        lying_count.payload[k_off..k_off + 4].copy_from_slice(&100u32.to_le_bytes());
+        assert!(Panel::parse(&lying_count).is_err(), "lying count");
+
+        // Count above dim.
+        let mut over_dim = good.clone();
+        over_dim.payload[dim_off..dim_off + 4].copy_from_slice(&1u32.to_le_bytes());
+        assert!(Panel::parse(&over_dim).is_err(), "k > dim");
+
+        // Index out of range.
+        let mut oob = good.clone();
+        oob.payload[idx_off..idx_off + 4].copy_from_slice(&9u32.to_le_bytes());
+        assert!(Panel::parse(&oob).is_err(), "index ≥ dim");
+
+        // Duplicate / unsorted indices (k = 2 here: indices 2 then 3).
+        let mut dup = good.clone();
+        let second = idx_off + 4;
+        let first = u32::from_le_bytes(dup.payload[idx_off..idx_off + 4].try_into().unwrap());
+        dup.payload[second..second + 4].copy_from_slice(&first.to_le_bytes());
+        assert!(Panel::parse(&dup).is_err(), "duplicate index");
+        let mut unsorted = good.clone();
+        let a: [u8; 4] = unsorted.payload[idx_off..idx_off + 4].try_into().unwrap();
+        let b: [u8; 4] = unsorted.payload[second..second + 4].try_into().unwrap();
+        unsorted.payload[idx_off..idx_off + 4].copy_from_slice(&b);
+        unsorted.payload[second..second + 4].copy_from_slice(&a);
+        assert!(Panel::parse(&unsorted).is_err(), "unsorted indices");
+
+        // Implausible dim is rejected before the dense vector allocates.
+        let mut huge = good.clone();
+        huge.payload[dim_off..dim_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Panel::parse(&huge).is_err(), "implausible dim");
     }
 }

@@ -10,6 +10,8 @@
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
+use crate::cluster::fabric::Topology;
+use crate::cluster::wire::WireEncoding;
 use crate::cluster::{ComputeModel, FabricConfig};
 use crate::data::source::{DataSpec, SourceKind};
 use crate::data::synth::DatasetKind;
@@ -249,6 +251,16 @@ pub struct ExperimentConfig {
     /// per-epoch wire config replays as a self-contained run; `None`
     /// (the CLI default) plans from `epochs` as usual.
     pub step_budget: Option<usize>,
+    /// Panel wire encoding (`--encoding f32|qi8|topk:R`). Rides the wire
+    /// JSON because the top-k *rate* determines the numerics every
+    /// worker (and `wasgd replay`) must reproduce — the frame header
+    /// only carries the encoding family.
+    pub encoding: WireEncoding,
+    /// Exchange topology (`--topology full|ring|gossip:F`): which peers'
+    /// panels each rank aggregates per round. Rides the wire JSON so
+    /// every participant computes the same deterministic exchange
+    /// schedule. See `docs/FABRIC.md`.
+    pub topology: Topology,
 }
 
 impl Default for ExperimentConfig {
@@ -287,6 +299,8 @@ impl Default for ExperimentConfig {
             heartbeat_ms: 500,
             min_workers: 1,
             step_budget: None,
+            encoding: WireEncoding::F32,
+            topology: Topology::Full,
         }
     }
 }
@@ -435,6 +449,49 @@ impl ExperimentConfig {
             if self.min_workers == 0 {
                 return Err("--min-workers must be ≥ 1".into());
             }
+            if self.encoding != WireEncoding::F32 {
+                return Err(format!(
+                    "--elastic requires --encoding f32 (epoch anchors are decoded from the \
+                     relayed panel bytes), got {}",
+                    self.encoding.label()
+                ));
+            }
+            if self.topology != Topology::Full {
+                return Err(format!(
+                    "--elastic requires --topology full (epoch anchors need every member's \
+                     panel at the commit boundary), got {}",
+                    self.topology.label()
+                ));
+            }
+        }
+        // Topology rules hold on every fabric: replay rebuilds tcp
+        // configs under sim rules and must re-run the same schedule.
+        match self.topology {
+            Topology::Full => {}
+            Topology::Ring => {
+                if self.p < 2 {
+                    return Err("--topology ring needs p ≥ 2".into());
+                }
+            }
+            Topology::Gossip { fanout } => {
+                if self.p < 2 {
+                    return Err("--topology gossip needs p ≥ 2".into());
+                }
+                if fanout == 0 {
+                    return Err("--topology gossip:F needs fanout ≥ 1".into());
+                }
+                match self.algo {
+                    AlgoKind::Spsgd | AlgoKind::Wasgd | AlgoKind::WasgdPlus => {}
+                    other => {
+                        return Err(format!(
+                            "--topology gossip renormalizes stateless per-round weights over \
+                             the sampled subset; {} carries cross-round aggregation state and \
+                             needs --topology full or ring",
+                            other.name()
+                        ))
+                    }
+                }
+            }
         }
         Ok(())
     }
@@ -496,6 +553,8 @@ impl ExperimentConfig {
                 None => Json::Null,
             },
         );
+        m.insert("encoding".to_string(), Json::Str(self.encoding.label()));
+        m.insert("topology".to_string(), Json::Str(self.topology.label()));
         Json::Obj(m).serialize()
     }
 
@@ -611,6 +670,31 @@ impl ExperimentConfig {
             Some(v) => Some(v.as_usize().ok_or_else(|| {
                 anyhow::anyhow!("wire config step_budget must be an integer or null")
             })?),
+        };
+        // Encoding/topology keys are optional for wire-format
+        // back-compat: a config journaled or shipped before lossy modes
+        // existed reads as the lossless full-cohort session it was.
+        cfg.encoding = match j.get("encoding") {
+            None | Some(Json::Null) => WireEncoding::F32,
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("wire config encoding must be a string"))?;
+                WireEncoding::parse(s).ok_or_else(|| {
+                    anyhow::anyhow!("wire config names unknown panel encoding {s:?}")
+                })?
+            }
+        };
+        cfg.topology = match j.get("topology") {
+            None | Some(Json::Null) => Topology::Full,
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("wire config topology must be a string"))?;
+                Topology::parse(s).ok_or_else(|| {
+                    anyhow::anyhow!("wire config names unknown exchange topology {s:?}")
+                })?
+            }
         };
         cfg.validate().map_err(|e| anyhow::anyhow!("wire config invalid: {e}"))?;
         Ok(cfg)
@@ -857,6 +941,70 @@ mod tests {
         doc.insert("algo".to_string(), Json::Str("wasgd+".to_string()));
         let back = ExperimentConfig::from_wire_json(&Json::Obj(doc).serialize()).unwrap();
         assert_eq!(back.backups, 0);
+    }
+
+    #[test]
+    fn wire_json_carries_encoding_and_topology() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.fabric = FabricKind::Tcp;
+        cfg.encoding = WireEncoding::TopK { k_ppm: 10_000 };
+        cfg.topology = Topology::Ring;
+        let back = ExperimentConfig::from_wire_json(&cfg.to_wire_json()).unwrap();
+        assert_eq!(back.encoding, WireEncoding::TopK { k_ppm: 10_000 });
+        assert_eq!(back.topology, Topology::Ring);
+
+        cfg.topology = Topology::Gossip { fanout: 2 };
+        let back = ExperimentConfig::from_wire_json(&cfg.to_wire_json()).unwrap();
+        assert_eq!(back.topology, Topology::Gossip { fanout: 2 });
+    }
+
+    #[test]
+    fn wire_json_without_encoding_keys_reads_as_lossless_full() {
+        // A pre-lossy-modes config must still parse: f32 panels over
+        // the full-cohort gather.
+        let mut cfg = ExperimentConfig::default();
+        cfg.fabric = FabricKind::Tcp;
+        let mut doc = match Json::parse(&cfg.to_wire_json()).unwrap() {
+            Json::Obj(m) => m,
+            _ => unreachable!("wire config is an object"),
+        };
+        for key in ["encoding", "topology"] {
+            doc.remove(key);
+        }
+        let back = ExperimentConfig::from_wire_json(&Json::Obj(doc).serialize()).unwrap();
+        assert_eq!(back.encoding, WireEncoding::F32);
+        assert_eq!(back.topology, Topology::Full);
+    }
+
+    #[test]
+    fn topology_and_lossy_mode_validation_rules() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.topology = Topology::Ring;
+        assert!(cfg.validate().is_ok(), "ring at p=4");
+        cfg.p = 1;
+        assert!(cfg.validate().is_err(), "ring needs p ≥ 2");
+        cfg.p = 4;
+        cfg.topology = Topology::Gossip { fanout: 0 };
+        assert!(cfg.validate().is_err(), "gossip needs fanout ≥ 1");
+        cfg.topology = Topology::Gossip { fanout: 2 };
+        assert!(cfg.validate().is_ok(), "wasgd+ gossip is the headline sparse path");
+        cfg.algo = AlgoKind::Easgd;
+        assert!(cfg.validate().is_err(), "easgd's center state is not subset-safe");
+        cfg.algo = AlgoKind::Mmwu;
+        assert!(cfg.validate().is_err(), "mwu's weight state is not subset-safe");
+        cfg.algo = AlgoKind::Wasgd;
+        assert!(cfg.validate().is_ok());
+
+        // Elastic sessions stay on the lossless full-cohort path.
+        let mut el = ExperimentConfig::default();
+        el.elastic = true;
+        el.encoding = WireEncoding::TopK { k_ppm: 10_000 };
+        assert!(el.validate().is_err(), "elastic anchors need f32 panels");
+        el.encoding = WireEncoding::F32;
+        el.topology = Topology::Ring;
+        assert!(el.validate().is_err(), "elastic anchors need the full gather");
+        el.topology = Topology::Full;
+        assert!(el.validate().is_ok());
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub mod worker;
 use anyhow::Result;
 
 use crate::algorithms::{make_policy, CommContext, CommPolicy};
-use crate::cluster::wire::WireEncoding;
+use crate::cluster::fabric::{round_origins, PanelCodec, Topology};
 use crate::cluster::SimCluster;
 use crate::config::{AlgoKind, ExperimentConfig};
 use crate::data::order::judge;
@@ -112,6 +112,9 @@ pub struct Trainer<'a> {
     cluster: SimCluster,
     policy: Box<dyn CommPolicy>,
     workers: Vec<Worker>,
+    /// Per-worker panel codecs: the error-feedback residual state of
+    /// lossy encodings (zero-sized for f32). Indexed like `workers`.
+    codecs: Vec<PanelCodec>,
     window: RecordWindow,
     eval_rng: Rng,
     comm_rng: Rng,
@@ -166,6 +169,7 @@ impl<'a> Trainer<'a> {
         anyhow::ensure!(n >= batch, "dataset smaller than one batch");
 
         let mut workers = Vec::with_capacity(p_total);
+        let mut codecs = Vec::with_capacity(p_total);
         for i in 0..p_total {
             // The one rank-stable sharding rule every execution layer
             // shares (backups mirror their primary's shard).
@@ -190,6 +194,7 @@ impl<'a> Trainer<'a> {
                 cfg.force_delta_order,
                 dataset.train_y.clone(),
             );
+            codecs.push(PanelCodec::new(cfg.encoding, params.len()));
             workers.push(Worker::new(i, params, planner));
         }
 
@@ -208,6 +213,7 @@ impl<'a> Trainer<'a> {
             cluster,
             policy,
             workers,
+            codecs,
             idx_buf: Vec::new(),
             x_buf: Vec::new(),
             y_buf: Vec::new(),
@@ -227,7 +233,9 @@ impl<'a> Trainer<'a> {
     /// Start every worker from the given checkpoint vectors (rank
     /// order) instead of the seeded init. The vectors are also embedded
     /// in the journal's `RunStarted`, keeping a resumed segment
-    /// self-contained for replay.
+    /// self-contained for replay. Error-feedback residuals are *not*
+    /// checkpointed: a resumed lossy run starts them at zero (see
+    /// `docs/FABRIC.md`).
     pub fn resume_workers(&mut self, initial: &[Vec<f32>]) -> Result<()> {
         anyhow::ensure!(
             initial.len() == self.workers.len(),
@@ -287,7 +295,7 @@ impl<'a> Trainer<'a> {
                 rank: RANK_COHORT,
                 p: self.workers.len() as u32,
                 seed: self.cfg.seed,
-                encoding: WireEncoding::F32,
+                encoding: self.cfg.encoding,
                 git_rev: crate::bench::git_rev(),
                 config_json: self.cfg.to_wire_json(),
                 resume: self.resumed_from.clone(),
@@ -382,19 +390,28 @@ impl<'a> Trainer<'a> {
         estimation_errors: &mut Vec<(u64, f32)>,
     ) -> Result<()> {
         self.rounds_done += 1;
+        let round = iteration / self.cfg.tau as u64;
 
-        // Journal every rank's contributed panel exactly as the fabrics
-        // see it at the collective's entry: pre-aggregation θ plus the
-        // windowed energy h. This is what makes a sim journal and a tcp
-        // journal of the same run byte-compare equal.
+        // Run every worker's panel through its codec first: transmit the
+        // error-compensated vector, fold the dropped coordinates into the
+        // residual, and keep the decoded panel — bit-identical to what a
+        // TCP cohort would decode from the wire bytes. For f32 this is θ
+        // verbatim, so lossless runs are unchanged byte for byte.
+        let mut decoded: Vec<Vec<f32>> = Vec::with_capacity(self.workers.len());
+        for (codec, w) in self.codecs.iter_mut().zip(self.workers.iter()) {
+            let outgoing = codec.outgoing(w.params());
+            decoded.push(codec.committed(&outgoing));
+        }
+
+        // Journal every rank's panel exactly as the fabrics see it at
+        // the collective's entry: the *decoded* pre-aggregation θ plus
+        // the windowed energy h. This is what makes a sim journal and a
+        // tcp journal of the same run byte-compare equal — lossy modes
+        // included, because both sides digest the post-decode panels.
         if self.journal.is_some() {
-            let round = iteration / self.cfg.tau as u64;
-            let d = self.workers[0].params().len();
+            let d = decoded[0].len();
             for i in 0..self.workers.len() {
-                let (digest, loss) = {
-                    let w = &self.workers[i];
-                    (digest_params(w.params()), w.energy())
-                };
+                let (digest, loss) = (digest_params(&decoded[i]), self.workers[i].energy());
                 self.emit_journal(&Event::PanelDigest {
                     round,
                     rank: i as u32,
@@ -439,10 +456,61 @@ impl<'a> Trainer<'a> {
         let msg_bytes = self.engine.manifest().message_bytes();
 
         if self.cfg.algo == AlgoKind::WasgdPlusAsync {
-            self.communicate_async(&energies, msg_bytes)?;
+            self.communicate_async(&decoded, &energies, msg_bytes)?;
+        } else if let Topology::Gossip { .. } = self.cfg.topology {
+            // Peer sampling: each worker aggregates only its sampled
+            // subset, exactly as `run_fabric_worker` does — the policy
+            // (stateless for every gossip-eligible scheme) runs once per
+            // worker over the sub-cohort, so the Eq. 10/13 weights
+            // renormalize over the actually-received panels. Each
+            // sub-gather charges the cost model separately: under gossip
+            // there is no single cohort-wide collective to amortize.
+            let p = self.workers.len();
+            let mut new_params: Vec<Vec<f32>> = Vec::with_capacity(p);
+            let mut judge_scores: Vec<f32> = Vec::with_capacity(p);
+            for i in 0..p {
+                let origins = round_origins(self.cfg.topology, p, i, round, self.cfg.seed);
+                let own_pos = origins
+                    .iter()
+                    .position(|&o| o == i)
+                    .expect("a rank always aggregates its own panel");
+                let mut sub: Vec<Vec<f32>> =
+                    origins.iter().map(|&o| decoded[o].clone()).collect();
+                let sub_h: Vec<f32> = origins.iter().map(|&o| energies[o]).collect();
+                let mut ctx = CommContext {
+                    params: &mut sub,
+                    energies: &sub_h,
+                    engine: self.engine,
+                    cluster: &mut self.cluster,
+                    cfg: &self.cfg,
+                    rng: &mut self.comm_rng,
+                    msg_bytes,
+                    full_losses: full_losses.as_deref(),
+                    iteration,
+                };
+                self.policy.at_boundary(&mut ctx)?;
+                new_params.push(sub.swap_remove(own_pos));
+                judge_scores.push(judge(&sub_h, own_pos));
+            }
+            for (w, p) in self.workers.iter_mut().zip(new_params.into_iter()) {
+                w.set_params(p);
+            }
+            // §3.4 order search over the subset each worker actually saw
+            // (mirrors the fabric worker's judge call bit for bit).
+            if self.policy.uses_order_search() {
+                for (w, s) in self.workers.iter_mut().zip(judge_scores) {
+                    w.record_judge_score(s);
+                }
+            }
+            for w in self.workers.iter_mut() {
+                w.reset_energy();
+            }
+            return Ok(());
         } else {
-            let mut params: Vec<Vec<f32>> =
-                self.workers.iter().map(|w| w.params().to_vec()).collect();
+            // Full and ring both gather the whole cohort (ring is only a
+            // different *delivery* of identical content), so one policy
+            // call rewrites every row, as before.
+            let mut params = decoded;
             let mut ctx = CommContext {
                 params: &mut params,
                 energies: &energies,
@@ -490,12 +558,17 @@ impl<'a> Trainer<'a> {
 
     /// Algorithm 4: every worker aggregates with the first p−1 peers (by
     /// simulated clock) among the p+b−1 others; stragglers are ignored.
-    fn communicate_async(&mut self, energies: &[f32], msg_bytes: usize) -> Result<()> {
+    /// `snapshot` holds the codec-decoded boundary panels (θ verbatim
+    /// under the lossless default).
+    fn communicate_async(
+        &mut self,
+        snapshot: &[Vec<f32>],
+        energies: &[f32],
+        msg_bytes: usize,
+    ) -> Result<()> {
         let p = self.cfg.p;
         let total = self.workers.len();
         let need = p.saturating_sub(1).max(1);
-        let snapshot: Vec<Vec<f32>> =
-            self.workers.iter().map(|w| w.params().to_vec()).collect();
         let clocks = self.cluster.clocks.clone();
 
         let mut new_params: Vec<Vec<f32>> = Vec::with_capacity(total);

@@ -250,8 +250,10 @@ pub enum Event {
         /// The run's base seed (duplicated from the config for cheap
         /// inspection).
         seed: u64,
-        /// Panel encoding of the underlying session. Only lossless
-        /// `f32` journals are bit-exactly replayable.
+        /// Panel encoding of the underlying session. Deterministic
+        /// encodings (lossless `f32`, deterministically lossy `topk`)
+        /// journal bit-exactly replayable digests; `qi8` journals are
+        /// inspect-only.
         encoding: WireEncoding,
         /// `git rev-parse --short HEAD` at record time ("unknown"
         /// outside a work tree).
@@ -490,10 +492,16 @@ fn encode_payload(ev: &Event) -> (u8, Vec<u8>) {
             out.extend_from_slice(&rank.to_le_bytes());
             out.extend_from_slice(&p.to_le_bytes());
             out.extend_from_slice(&seed.to_le_bytes());
-            out.push(match encoding {
-                WireEncoding::F32 => 0,
-                WireEncoding::Qi8 => 1,
-            });
+            match encoding {
+                WireEncoding::F32 => out.push(0),
+                WireEncoding::Qi8 => out.push(1),
+                // Rate-bearing: the tag byte is followed by k_ppm, so a
+                // replayed session reconstructs the exact sparsifier.
+                WireEncoding::TopK { k_ppm } => {
+                    out.push(2);
+                    out.extend_from_slice(&k_ppm.to_le_bytes());
+                }
+            }
             put_str(git_rev, &mut out);
             put_str(config_json, &mut out);
             out.extend_from_slice(&(resume.len() as u32).to_le_bytes());
@@ -557,6 +565,7 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Event> {
             let encoding = match cur.u8()? {
                 0 => WireEncoding::F32,
                 1 => WireEncoding::Qi8,
+                2 => WireEncoding::TopK { k_ppm: cur.u32()? },
                 other => bail!("RunStarted names unknown panel encoding {other}"),
             };
             let git_rev = cur.str()?;
@@ -907,6 +916,15 @@ mod tests {
                 git_rev: "abc1234".into(),
                 config_json: "{\"p\": 4}".into(),
                 resume: vec![vec![1.0, f32::NAN], vec![-0.0, f32::INFINITY]],
+            },
+            Event::RunStarted {
+                rank: 1,
+                p: 2,
+                seed: 5,
+                encoding: WireEncoding::TopK { k_ppm: 10_000 },
+                git_rev: "abc1234".into(),
+                config_json: "{}".into(),
+                resume: vec![],
             },
             Event::Membership { epoch: 0, rank: 0, change: MembershipChange::Joined },
             Event::PanelDigest {

@@ -20,12 +20,18 @@
 //!   simulated time, so replay can disable it without perturbing the
 //!   training numerics.
 //!
+//! Digests cover every *deterministic* encoding: lossless f32, and
+//! deterministically lossy top-k (the sparsifier and its error-feedback
+//! residual are pure functions of the panel stream a replay
+//! regenerates, so a lossy session's digests still verify bit for bit).
+//!
 //! Scope limits are surfaced as pointed errors, never wrong answers: a
 //! `qi8` session records no digests (`--inspect` still works); a
 //! *worker-scope* journal of a resumed session is not self-contained
-//! (the worker only ever saw its own resume vector) — the
-//! rendezvous-side journal, which embeds all p vectors, is the
-//! verifiable one.
+//! (the worker only ever saw its own resume vector), and a worker-scope
+//! journal of a *gossip* session carries only sampled subsets — in both
+//! cases the rendezvous-side journal, which digests all p ranks every
+//! round, is the verifiable one.
 //!
 //! [`Trainer`]: crate::coordinator::Trainer
 
@@ -34,6 +40,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
+use crate::cluster::fabric::Topology;
 use crate::cluster::wire::WireEncoding;
 use crate::config::{ExperimentConfig, FabricKind};
 use crate::coordinator::Trainer;
@@ -432,8 +439,12 @@ fn verify_commit_chain(i: usize, seg: &Segment, c: &Commit, next: &Segment) -> R
 
 fn verify_segment(seg: &Segment, opts: &ReplayOptions) -> Result<SegStats> {
     let h = &seg.header;
+    // Deterministic encodings replay bit-exactly: lossless f32 trivially,
+    // top-k because the sparsifier (and its error-feedback residual) is a
+    // pure function of the panel stream the replay regenerates. qi8 is
+    // the one encoding that records no digests at all.
     ensure!(
-        h.encoding == WireEncoding::F32,
+        matches!(h.encoding, WireEncoding::F32 | WireEncoding::TopK { .. }),
         "the session used the lossy {} panel encoding, which records no digests and \
          cannot replay bit-exactly; `wasgd replay --inspect` still shows the timeline",
         h.encoding.name()
@@ -450,6 +461,17 @@ fn verify_segment(seg: &Segment, opts: &ReplayOptions) -> Result<SegStats> {
     }
     let mut cfg = ExperimentConfig::from_wire_json_as(&h.config_json, FabricKind::Sim)
         .context("parsing the embedded wire config")?;
+    if h.rank != RANK_COHORT {
+        ensure!(
+            !matches!(cfg.topology, Topology::Gossip { .. }),
+            "this is rank {}'s journal of a GOSSIP session — a worker journals only the \
+             sampled subset it received each round, which cannot prefix-match a full \
+             re-execution; replay the rendezvous-side journal, which digests all {} \
+             ranks every round",
+            h.rank,
+            h.p
+        );
+    }
     ensure!(
         cfg.seed == h.seed,
         "RunStarted records seed {} but the embedded config says {}",

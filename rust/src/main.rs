@@ -19,6 +19,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use wasgd::checkpoint::Checkpoint;
+use wasgd::cluster::fabric::Topology;
 use wasgd::cluster::tcp::{self, ServeOptions, ServeOutcome};
 use wasgd::cluster::wire::WireEncoding;
 use wasgd::config::{AlgoKind, BackendKind, ExperimentConfig, FabricKind};
@@ -41,13 +42,15 @@ USAGE:
                   [--eval-every N] [--seed N] [--backups N] [--variant V]
                   [--artifacts DIR] [--backend B] [--threads N]
                   [--data-dir DIR] [--source auto|synth|idx|cifar]
-                  [--fabric sim|tcp] [--encoding f32|qi8]
+                  [--fabric sim|tcp] [--encoding f32|qi8|topk:R]
+                  [--topology full|ring|gossip:N]
                   [--target-loss F] [--out FILE.csv] [--save-checkpoint DIR]
                   [--resume DIR] [--journal FILE]
                   [--elastic] [--heartbeat-ms N] [--min-workers N]
                   [--max-workers N]
   wasgd compare   (same flags; runs every algorithm on the sim fabric)
-  wasgd serve     --listen ADDR [--workers P] [--encoding f32|qi8]
+  wasgd serve     --listen ADDR [--workers P] [--encoding f32|qi8|topk:R]
+                  [--topology full|ring|gossip:N]
                   [--save-checkpoint DIR] [--resume DIR] [--journal FILE]
                   [--elastic] [--heartbeat-ms N] [--min-workers N]
                   [--max-workers N] (+ run flags)
@@ -88,7 +91,18 @@ fabrics (--fabric, default sim):
         rendezvous and every worker applies the Eq. 10+13 update locally
         — no center variable. With the default lossless f32 encoding the
         final parameters match --fabric sim bit for bit; --encoding qi8
-        quantises panels to i8 (~4x less traffic, lossy).
+        quantises panels to i8 (~4x less traffic, lossy); --encoding
+        topk:R keeps the R-fraction largest-|v| coordinates per panel
+        with per-worker error-feedback residuals (deterministically
+        lossy: sim, threaded, and tcp still match bit for bit).
+
+exchange topologies (--topology, default full; see docs/FABRIC.md):
+  full       every round delivers all p panels (the Eq. 10/13 gather).
+  ring       same cohort content delivered one neighbour hop at a time —
+             bit-identical numerics to full under any encoding.
+  gossip:N   each round every rank aggregates a seeded random sample of
+             N peers plus itself; Eq. 10/13 weights renormalize over the
+             received subset (wasgd/wasgd+/spsgd only).
 
 elastic membership (--elastic, tcp only; see docs/FABRIC.md):
   the session advances through epochs with committed member sets:
@@ -180,6 +194,14 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     cfg.elastic = args.bool_flag("elastic");
     cfg.heartbeat_ms = args.num_flag("heartbeat-ms", 500u64)?;
     cfg.min_workers = args.num_flag("min-workers", 1usize)?;
+    let encoding_s = args.str_flag("encoding", "f32");
+    cfg.encoding = WireEncoding::parse(&encoding_s).ok_or_else(|| {
+        anyhow::anyhow!("unknown encoding {encoding_s:?} (f32, qi8, or topk:R with 0<R≤1)")
+    })?;
+    let topology_s = args.str_flag("topology", "full");
+    cfg.topology = Topology::parse(&topology_s).ok_or_else(|| {
+        anyhow::anyhow!("unknown topology {topology_s:?} (full, ring, or gossip:N with N≥1)")
+    })?;
     Ok(cfg)
 }
 
@@ -207,11 +229,6 @@ fn elastic_from(
     }))
 }
 
-fn encoding_from(args: &Args) -> Result<WireEncoding> {
-    let s = args.str_flag("encoding", "f32");
-    WireEncoding::parse(&s).ok_or_else(|| anyhow::anyhow!("unknown encoding {s:?} (f32 or qi8)"))
-}
-
 fn resume_from(args: &Args) -> Result<Option<Checkpoint>> {
     args.opt_str("resume")
         .map(|dir| {
@@ -227,9 +244,6 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mut cfg = config_from(args)?;
     if cfg.fabric == FabricKind::Tcp {
         return cmd_run_tcp(cfg, args);
-    }
-    if args.opt_str("encoding").is_some() {
-        bail!("--encoding selects the tcp wire format; add --fabric tcp");
     }
     if args.opt_str("resume").is_some() {
         bail!("--resume restarts a tcp rendezvous; add --fabric tcp (or use `wasgd serve`)");
@@ -310,7 +324,7 @@ fn cmd_run_tcp(cfg: ExperimentConfig, args: &Args) -> Result<()> {
         bail!("--out records the simulated trainer's curve; use --fabric sim (or serve/worker)");
     }
     let ckpt_dir = args.opt_str("save-checkpoint");
-    let encoding = encoding_from(args)?;
+    let encoding = cfg.encoding;
     let resume = resume_from(args)?;
     let elastic = elastic_from(&cfg, args, ckpt_dir.as_deref())?;
     args.finish()?;
@@ -320,9 +334,10 @@ fn cmd_run_tcp(cfg: ExperimentConfig, args: &Args) -> Result<()> {
     let listener = TcpListener::bind("127.0.0.1:0").context("binding the loopback rendezvous")?;
     let addr = listener.local_addr()?;
     eprintln!(
-        "fabric tcp: rendezvous on {addr}, spawning {} worker processes ({} panels{})",
+        "fabric tcp: rendezvous on {addr}, spawning {} worker processes ({} panels, {} topology{})",
         cfg.p,
-        encoding.name(),
+        encoding.label(),
+        cfg.topology.label(),
         if is_elastic { ", elastic" } else { "" }
     );
     let opts =
@@ -415,7 +430,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.p = w;
     }
     let listen = args.str_flag("listen", "127.0.0.1:0");
-    let encoding = encoding_from(args)?;
+    let encoding = cfg.encoding;
     let resume = resume_from(args)?;
     let ckpt_dir = args.opt_str("save-checkpoint");
     let elastic = elastic_from(&cfg, args, ckpt_dir.as_deref())?;
@@ -429,11 +444,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("listening on {}", listener.local_addr()?);
     std::io::stdout().flush().ok();
     eprintln!(
-        "rendezvous for {} × {} on {} ({} panels{}); waiting for workers…",
+        "rendezvous for {} × {} on {} ({} panels, {} topology{}); waiting for workers…",
         cfg.p,
         cfg.algo.name(),
         cfg.dataset.name(),
-        encoding.name(),
+        encoding.label(),
+        cfg.topology.label(),
         if elastic.is_some() { ", elastic" } else { "" }
     );
     let opts =

@@ -1,0 +1,137 @@
+//! Property suites over the communication-efficiency layer
+//! (`cluster::fabric::PanelCodec` + the exchange topologies): the
+//! error-feedback residual partitions the compensated panel exactly (no
+//! gradient mass is ever lost, bit for bit), a fixed residual drains to
+//! zero under repeated encoding, and the ring topology with the
+//! lossless f32 encoding is bit-identical to the full gather — the
+//! invariants `docs/FABRIC.md` files under "Lossy modes and the two
+//! test tiers".
+
+use proptest::prelude::*;
+
+use wasgd::cluster::fabric::{PanelCodec, Topology};
+use wasgd::cluster::threads::run_wasgd_plus_threaded;
+use wasgd::cluster::wire::{topk_indices, topk_k, WireEncoding};
+use wasgd::config::{BackendKind, ExperimentConfig};
+use wasgd::data::synth::DatasetKind;
+
+fn finite_f32() -> impl Strategy<Value = f32> {
+    prop_oneof![
+        -1e20f32..1e20f32,
+        -1.0f32..1.0f32,
+        Just(0.0f32),
+        Just(-0.0f32),
+        Just(f32::MIN_POSITIVE),
+    ]
+}
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(64))]
+
+    /// The error-feedback invariant, for any keep-rate: `committed`
+    /// splits the compensated outgoing panel into (decoded, residual)
+    /// with *disjoint support and raw bits* — kept coordinates carry
+    /// the outgoing value in the decoded panel and exactly +0.0 in the
+    /// residual, dropped coordinates the reverse. Nothing is subtracted
+    /// in floating point, so decoded + residual reconstructs the
+    /// outgoing panel bit for bit and no gradient mass is ever lost.
+    #[test]
+    fn error_feedback_partitions_the_compensated_panel(
+        theta in prop::collection::vec(finite_f32(), 0..200),
+        prior in prop::collection::vec(finite_f32(), 0..200),
+        k_ppm in 0u32..=1_000_000,
+    ) {
+        let d = theta.len().min(prior.len());
+        let (theta, prior) = (&theta[..d], &prior[..d]);
+        let enc = WireEncoding::TopK { k_ppm };
+        let mut codec = PanelCodec::new(enc, d);
+        // Seed a non-trivial residual state: commit one round first.
+        let first = codec.outgoing(prior);
+        codec.committed(&first);
+
+        let outgoing = codec.outgoing(theta);
+        let decoded = codec.committed(&outgoing);
+        let residual = codec.residual();
+        prop_assert_eq!(decoded.len(), d);
+        prop_assert_eq!(residual.len(), d);
+
+        let kept = topk_indices(&outgoing, k_ppm);
+        prop_assert_eq!(kept.len(), topk_k(d, k_ppm));
+        let mut is_kept = vec![false; d];
+        for &i in &kept {
+            is_kept[i as usize] = true;
+        }
+        for i in 0..d {
+            if is_kept[i] {
+                prop_assert_eq!(decoded[i].to_bits(), outgoing[i].to_bits());
+                prop_assert_eq!(residual[i].to_bits(), 0.0f32.to_bits());
+            } else {
+                prop_assert_eq!(decoded[i].to_bits(), 0.0f32.to_bits());
+                prop_assert_eq!(residual[i].to_bits(), outgoing[i].to_bits());
+            }
+            // The merge form of the same fact: whichever side holds the
+            // coordinate holds the outgoing panel's raw bits.
+            let merged = if is_kept[i] { decoded[i] } else { residual[i] };
+            prop_assert_eq!(merged.to_bits(), outgoing[i].to_bits());
+        }
+    }
+
+    /// Feeding the codec the zero panel transmits pure residual each
+    /// round: every round drains the top-k remaining coordinates and
+    /// adds nothing back, so the residual hits exactly zero within
+    /// ⌈d/k⌉ rounds and stays there — dropped coordinates are delayed,
+    /// never lost.
+    #[test]
+    fn residual_drains_to_zero_under_repeated_encoding(
+        theta in prop::collection::vec(finite_f32(), 1..120),
+        k_ppm in 1u32..=1_000_000,
+    ) {
+        let d = theta.len();
+        let k = topk_k(d, k_ppm);
+        let mut codec = PanelCodec::new(WireEncoding::TopK { k_ppm }, d);
+        let out = codec.outgoing(&theta);
+        codec.committed(&out);
+
+        let zero = vec![0.0f32; d];
+        let rounds = d.div_ceil(k);
+        for _ in 0..rounds {
+            let out = codec.outgoing(&zero);
+            codec.committed(&out);
+        }
+        prop_assert!(
+            codec.residual().iter().all(|r| r.abs() == 0.0),
+            "residual not drained after {} rounds: {:?}", rounds, codec.residual()
+        );
+        // And stays drained: one more zero round transmits nothing new.
+        let out = codec.outgoing(&zero);
+        codec.committed(&out);
+        prop_assert!(codec.residual().iter().all(|r| r.abs() == 0.0));
+    }
+}
+
+/// The ring topology delivers the same cohort content as the full
+/// gather, one neighbour hop at a time — with the lossless f32 encoding
+/// the threaded fabric's final parameters must be bit-identical at
+/// every cohort size, odd and even.
+#[test]
+fn ring_f32_matches_full_gather_bit_for_bit() {
+    for p in [2usize, 3, 5] {
+        let mut cfg = ExperimentConfig::paper_preset(DatasetKind::Tiny);
+        cfg.backend = BackendKind::Native;
+        cfg.p = p;
+        cfg.tau = 16;
+        cfg.m = 4;
+        cfg.c = 2;
+        let full = run_wasgd_plus_threaded(&cfg, 64).unwrap();
+        cfg.topology = Topology::Ring;
+        let ring = run_wasgd_plus_threaded(&cfg, 64).unwrap();
+        assert_eq!(full.final_energies.len(), p);
+        for (a, b) in full.final_energies.iter().zip(ring.final_energies.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "p={p}: final energies diverged");
+        }
+        let fa: Vec<u32> = full.params.iter().map(|v| v.to_bits()).collect();
+        let ra: Vec<u32> = ring.params.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(fa, ra, "p={p}: ring f32 must match full f32 bit for bit");
+        assert!(ring.comm_bytes > 0);
+    }
+}

@@ -18,7 +18,7 @@ use std::thread;
 use std::time::Duration;
 
 use wasgd::checkpoint::load_resume_dir;
-use wasgd::cluster::fabric::{planned_steps, run_decentralized_threaded, Collective};
+use wasgd::cluster::fabric::{planned_steps, run_decentralized_threaded, Collective, Topology};
 use wasgd::cluster::tcp::{serve, ElasticOptions, RemoteCluster, ServeOptions};
 use wasgd::cluster::threads::run_wasgd_plus_threaded;
 use wasgd::cluster::wire::WireEncoding;
@@ -298,6 +298,174 @@ fn idx_backed_tcp_four_processes_match_sim_bit_exactly() {
         );
     }
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The convergence-quality tier (docs/FABRIC.md, "Lossy modes and the
+/// two test tiers"). Top-k panels cannot meet the bit-exact oracle by
+/// design, so they are accepted statistically instead: a seeded
+/// mnist_cnn short run under `--encoding topk:0.01` must land within a
+/// documented ε of the lossless run's final windowed loss, and the
+/// *measured* comm counters — not an estimate — must show the sparse
+/// panels cost under 10% of the dense f32 bytes.
+///
+/// Ignored under the default (bit-exact) tier and run by the CI
+/// `comm-quality` job in release mode, so a statistical band can never
+/// mask a determinism regression — and a flaky seed never blocks the
+/// deterministic jobs.
+#[test]
+#[ignore = "statistical tier: run by the comm-quality CI job (release mode, fixed seed)"]
+fn topk_converges_within_epsilon_of_lossless() {
+    // The acceptance band for seed 41 at this 32-step budget. The
+    // lossless run only descends modestly in 32 steps (≈0.2–0.5 below
+    // the ln(10) start), so an absolute band this wide still catches
+    // divergence, a codec that corrupts panels, or error feedback
+    // failing to re-inject dropped mass — while tolerating the real
+    // (bounded) sparsification lag of a 1% keep-rate, whose aggregate
+    // re-sparsifies every worker's panel at each boundary.
+    const EPSILON: f32 = 0.75;
+    // 10-class uniform-prediction baseline ln(10) ≈ 2.3026 plus batch
+    // noise: the lossy run must at minimum never do *worse* than an
+    // untrained model.
+    const UNIFORM_BASELINE: f32 = 2.6;
+
+    let mut cfg = ExperimentConfig::paper_preset(wasgd::data::synth::DatasetKind::MnistLike);
+    cfg.backend = BackendKind::Native;
+    cfg.variant = "mnist_cnn".to_string();
+    cfg.algo = AlgoKind::WasgdPlus;
+    cfg.p = 4;
+    cfg.tau = 8;
+    cfg.m = 2;
+    cfg.c = 1;
+    cfg.lr = 0.02;
+    cfg.seed = 41;
+    cfg.threads = 1;
+    cfg.compute.step_time_s = 1e-3;
+    let steps = 32; // 4 collective rounds at τ=8
+
+    let lossless = run_wasgd_plus_threaded(&cfg, steps).unwrap();
+    cfg.encoding = WireEncoding::TopK { k_ppm: 10_000 };
+    let lossy = run_wasgd_plus_threaded(&cfg, steps).unwrap();
+
+    let mean = |e: &[f32]| e.iter().sum::<f32>() / e.len() as f32;
+    let base = mean(&lossless.final_energies);
+    let sparse = mean(&lossy.final_energies);
+    assert!(base.is_finite() && sparse.is_finite(), "windowed losses must stay finite");
+    assert!(base < 2.45, "the lossless oracle itself failed to train: {base}");
+    assert!(
+        sparse < UNIFORM_BASELINE,
+        "topk:0.01 diverged past the uniform-prediction baseline: {sparse}"
+    );
+    assert!(
+        sparse - base <= EPSILON,
+        "topk:0.01 final loss {sparse} strayed more than ε={EPSILON} from lossless {base}"
+    );
+
+    // The bytes claim is pinned by the counters the fabric actually
+    // measured. mnist_cnn has 20 490 parameters: a dense f32 body is
+    // 81 960 B while topk:0.01 ships 205 index/value pairs ≈ 1 648 B,
+    // so 10× headroom holds with the frame overhead included.
+    assert!(lossless.comm_bytes > 0 && lossy.comm_bytes > 0);
+    assert!(
+        lossy.comm_bytes * 10 < lossless.comm_bytes,
+        "topk bytes {} must be <10% of f32 bytes {}",
+        lossy.comm_bytes,
+        lossless.comm_bytes
+    );
+}
+
+#[test]
+fn acceptance_lossy_tcp_four_processes_ring_and_topk() {
+    // The lossy-mode acceptance criterion, at the same 4-OS-process
+    // rigor as the f32 acceptance test above: (1) `--topology ring`
+    // with f32 is bit-identical to the full gather — same finals, same
+    // journal digest stream — because the ring delivers the identical
+    // cohort content one hop at a time; (2) a `--encoding topk:0.01
+    // --topology ring` session completes, its journal replay-verifies
+    // bit for bit (top-k is deterministically lossy), and its measured
+    // relay traffic is under 10% of the dense f32 session's.
+    let mut cfg = tiny_cnn_cfg();
+    cfg.tau = 2; // 16 rounds: panel traffic dwarfs the fixed handshake bytes
+    let jdir = std::env::temp_dir().join(format!("wasgd_lossy_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&jdir).unwrap();
+
+    let exe = env!("CARGO_BIN_EXE_wasgd");
+    let run_session = |cfg: &ExperimentConfig, jrn: &std::path::Path| {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let opts = ServeOptions {
+            cfg: cfg.clone(),
+            encoding: cfg.encoding,
+            resume: None,
+            journal: Some(jrn.to_path_buf()),
+            elastic: None,
+        };
+        let server = thread::spawn(move || serve(listener, &opts));
+        let children: Vec<_> = (0..cfg.p)
+            .map(|_| {
+                Command::new(exe)
+                    .args(["worker", "--connect", &addr])
+                    .stdout(Stdio::null())
+                    .stderr(Stdio::null())
+                    .spawn()
+                    .expect("spawning a wasgd worker process")
+            })
+            .collect();
+        let outcome = server.join().unwrap().expect("rendezvous session");
+        for mut child in children {
+            assert!(child.wait().unwrap().success(), "a worker process failed");
+        }
+        outcome
+    };
+
+    let full_jrn = jdir.join("full_f32.jrn");
+    let ring_jrn = jdir.join("ring_f32.jrn");
+    let topk_jrn = jdir.join("ring_topk.jrn");
+
+    let full = run_session(&cfg, &full_jrn);
+    cfg.topology = Topology::Ring;
+    let ring = run_session(&cfg, &ring_jrn);
+    cfg.encoding = WireEncoding::TopK { k_ppm: 10_000 }; // --encoding topk:0.01
+    let topk = run_session(&cfg, &topk_jrn);
+
+    // (1) ring + f32 ≡ full + f32, bit for bit, at p=4.
+    assert_eq!(full.rounds, 16, "32 steps at τ=2 are 16 boundaries");
+    assert_eq!(ring.rounds, 16);
+    assert_eq!(full.finals.len(), 4);
+    assert_eq!(ring.finals.len(), 4);
+    for (rank, ((fh, ft), (rh, rt))) in full.finals.iter().zip(ring.finals.iter()).enumerate() {
+        assert_eq!(fh.to_bits(), rh.to_bits(), "rank {rank}: ring final energy diverged");
+        assert_eq!(bits(ft), bits(rt), "rank {rank}: ring f32 θ must match full f32 bit for bit");
+    }
+    assert_eq!(
+        digest_rows(&ring_jrn),
+        digest_rows(&full_jrn),
+        "the ring session's journal must carry the full gather's digest stream"
+    );
+    replay::verify(&ring_jrn, &ReplayOptions::default())
+        .expect("the ring+f32 journal replay-verifies");
+
+    // (2) topk:0.01 + ring completes, and its deterministic journal
+    // replay-verifies bit for bit — the digests are over the *decoded*
+    // panels every rank actually aggregated.
+    assert_eq!(topk.finals.len(), 4);
+    assert_eq!(topk.rounds, 16);
+    assert_eq!(topk.steps, 32);
+    for (h, theta) in &topk.finals {
+        assert!(h.is_finite());
+        assert_eq!(theta.len(), full.finals[0].1.len(), "finals always ride f32, full-width");
+    }
+    replay::verify(&topk_jrn, &ReplayOptions::default())
+        .expect("the topk+ring journal replay-verifies");
+
+    // (3) the measured relay counters — not an estimate — show the
+    // sparse session under 10% of the dense one.
+    assert!(
+        topk.comm.total_sent() * 10 < full.comm.total_sent(),
+        "topk relay traffic {} must be <10% of f32 {}",
+        topk.comm.total_sent(),
+        full.comm.total_sent()
+    );
+    let _ = std::fs::remove_dir_all(&jdir);
 }
 
 #[test]

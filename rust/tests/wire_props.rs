@@ -1,17 +1,18 @@
 //! Property suites over the TCP fabric's wire protocol
 //! (`cluster::wire`): framing round trips exactly (f32 panels are
-//! bit-lossless, qi8 panels are bounded-error and smaller), ragged
-//! cohort rows survive, and every malformed input — truncated frames,
-//! corrupted headers, lying inner lengths — is rejected with an error,
-//! never a panic or a bogus parse.
+//! bit-lossless, qi8 panels are bounded-error and smaller, top-k panels
+//! decode to exactly `topk_apply` of the original), ragged cohort rows
+//! survive, and every malformed input — truncated frames, corrupted
+//! headers, lying inner lengths, lying sparse indices/counts — is
+//! rejected with an error, never a panic or a bogus parse.
 
 use std::io::Cursor;
 
 use proptest::prelude::*;
 
 use wasgd::cluster::wire::{
-    Cohort, EpochCommit, Frame, Heartbeat, JoinRequest, Leave, MsgKind, Panel, Welcome,
-    WireEncoding,
+    topk_apply, topk_indices, topk_k, Cohort, EpochCommit, Frame, Heartbeat, JoinRequest, Leave,
+    MsgKind, Panel, Welcome, WireEncoding,
 };
 
 fn frame_bytes(frame: &Frame) -> Vec<u8> {
@@ -113,6 +114,102 @@ proptest! {
                 }
             }
         }
+    }
+
+    /// Top-k panels round-trip to exactly `topk_apply` of the original —
+    /// kept coordinates carry raw bits, dropped ones decode to zero —
+    /// and the kept index set is strictly increasing. Decoding needs no
+    /// rate: `reread` rebuilds the encoding from the header, which only
+    /// carries the family (the reconstructed rate field is 0).
+    #[test]
+    fn panel_topk_roundtrip_is_topk_apply(
+        round in any::<u64>(),
+        h in finite_f32(),
+        theta in theta_vec(300),
+        k_ppm in prop_oneof![Just(1u32), 1u32..1_000_000, Just(1_000_000u32)],
+    ) {
+        let enc = WireEncoding::TopK { k_ppm };
+        let frame = Panel::frame(MsgKind::Panel, round, h, &theta, enc);
+        prop_assert_eq!(frame.encoded_len(), Panel::wire_len(enc, theta.len()));
+        let back = Panel::parse(&reread(&frame)).unwrap();
+        prop_assert_eq!(back.round, round);
+        prop_assert_eq!(back.h.to_bits(), h.to_bits());
+        prop_assert_eq!(back.theta.len(), theta.len());
+        let want = topk_apply(&theta, k_ppm);
+        for (a, b) in back.theta.iter().zip(want.iter()) {
+            prop_assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let idx = topk_indices(&theta, k_ppm);
+        prop_assert_eq!(idx.len(), topk_k(theta.len(), k_ppm));
+        for w in idx.windows(2) {
+            prop_assert!(w[0] < w[1], "kept indices must strictly increase");
+        }
+    }
+
+    /// Every strict prefix of a top-k frame is rejected, like the other
+    /// encodings — the sparse body never parses half-received.
+    #[test]
+    fn truncated_topk_frames_rejected(
+        theta in theta_vec(24),
+        k_ppm in 1u32..=1_000_000,
+    ) {
+        let enc = WireEncoding::TopK { k_ppm };
+        let bytes = frame_bytes(&Panel::frame(MsgKind::Panel, 1, 0.5, &theta, enc));
+        for k in 0..bytes.len() {
+            prop_assert!(
+                Frame::read_from(&mut Cursor::new(&bytes[..k])).is_err(),
+                "prefix of {} bytes parsed", k
+            );
+        }
+        prop_assert!(Frame::read_from(&mut Cursor::new(&bytes)).is_ok());
+    }
+
+    /// Lying top-k metadata — an index past the dim, a duplicated or
+    /// unsorted index pair, a count that disagrees with the byte length,
+    /// a count above the dim — is rejected while only the length-checked
+    /// input bytes are held (validate before the dense allocation).
+    /// Body layout inside a Panel payload: round(8) h(4) len(4), then
+    /// dim u32 | k u32 | k indices | k values.
+    #[test]
+    fn lying_topk_fields_rejected(theta in prop::collection::vec(finite_f32(), 2..40)) {
+        let dim = theta.len() as u32;
+        let enc = WireEncoding::TopK { k_ppm: 1_000_000 }; // k = dim ≥ 2
+        let good = Panel::frame(MsgKind::Panel, 1, 0.0, &theta, enc);
+        prop_assert!(Panel::parse(&good).is_ok());
+
+        // Index out of range: the last index is rewritten to dim.
+        let mut oob = good.clone();
+        let last = 24 + 4 * (dim as usize - 1);
+        oob.payload[last..last + 4].copy_from_slice(&dim.to_le_bytes());
+        prop_assert!(Panel::parse(&oob).is_err(), "index == dim parsed");
+
+        // Duplicate index: indices[1] = indices[0].
+        let mut dup = good.clone();
+        let (a, b) = (24, 28);
+        let first: [u8; 4] = dup.payload[a..a + 4].try_into().unwrap();
+        dup.payload[b..b + 4].copy_from_slice(&first);
+        prop_assert!(Panel::parse(&dup).is_err(), "duplicate index parsed");
+
+        // Unsorted pair: swap indices[0] and indices[1].
+        let mut unsorted = good.clone();
+        let (x, y): ([u8; 4], [u8; 4]) = (
+            unsorted.payload[a..a + 4].try_into().unwrap(),
+            unsorted.payload[b..b + 4].try_into().unwrap(),
+        );
+        unsorted.payload[a..a + 4].copy_from_slice(&y);
+        unsorted.payload[b..b + 4].copy_from_slice(&x);
+        prop_assert!(Panel::parse(&unsorted).is_err(), "unsorted indices parsed");
+
+        // Count lying past the byte length (validated before allocation).
+        let mut lying_k = good.clone();
+        lying_k.payload[20..24].copy_from_slice(&(dim - 1).to_le_bytes());
+        prop_assert!(Panel::parse(&lying_k).is_err(), "count/byte-length mismatch parsed");
+
+        // Count above the dim — and an implausible dim is rejected
+        // before the dense output vector exists.
+        let mut huge = good.clone();
+        huge.payload[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        prop_assert!(Panel::parse(&huge).is_err(), "implausible dim parsed");
     }
 
     /// Welcomes round-trip their rank/p/config/resume payloads.
@@ -262,6 +359,52 @@ proptest! {
             .copy_from_slice(&(reason.len() as u32 + 1000).to_le_bytes());
         prop_assert!(EpochCommit::parse(&lying_reason).is_err());
     }
+}
+
+#[test]
+fn topk_edge_rates_roundtrip() {
+    let theta = vec![3.0f32, -1.0, 0.5, -4.0, 0.0, 2.0];
+
+    // k = 0 (the zero rate is unreachable from the CLI, which demands
+    // R > 0, but the codec itself must handle it): an empty kept set
+    // decodes to the all-zero panel.
+    let zero = WireEncoding::TopK { k_ppm: 0 };
+    let frame = Panel::frame(MsgKind::Panel, 1, 0.25, &theta, zero);
+    assert_eq!(frame.encoded_len(), Panel::wire_len(zero, theta.len()));
+    let back = Panel::parse(&frame).unwrap();
+    assert_eq!(back.theta, vec![0.0f32; theta.len()]);
+
+    // k = dim: the full rate keeps everything, bit-exactly — top-k at
+    // rate 1 degenerates to (a fatter) f32.
+    let full = WireEncoding::TopK { k_ppm: 1_000_000 };
+    let back = Panel::parse(&Panel::frame(MsgKind::Panel, 1, 0.25, &theta, full)).unwrap();
+    for (a, b) in back.theta.iter().zip(theta.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // The empty vector is fine at any rate.
+    let back = Panel::parse(&Panel::frame(MsgKind::Panel, 1, 0.0, &[], full)).unwrap();
+    assert!(back.theta.is_empty());
+}
+
+#[test]
+fn specials_survive_topk_framing_bit_exactly() {
+    // Non-finite magnitudes rank deterministically (NaN above +∞ under
+    // total_cmp) and kept values carry raw bits — a NaN coordinate
+    // survives sparsification unmangled rather than poisoning the codec.
+    let theta = vec![1.0f32, f32::NAN, -2.0, f32::INFINITY, f32::NEG_INFINITY, -0.0];
+    let enc = WireEncoding::TopK { k_ppm: 500_000 }; // keep 3 of 6
+    let idx = topk_indices(&theta, 500_000);
+    assert_eq!(idx, vec![1, 3, 4], "NaN then ±∞ outrank every finite magnitude");
+    let back = Panel::parse(&Panel::frame(MsgKind::Panel, 7, f32::NAN, &theta, enc)).unwrap();
+    assert_eq!(back.h.to_bits(), f32::NAN.to_bits());
+    let want = topk_apply(&theta, 500_000);
+    for (a, b) in back.theta.iter().zip(want.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    assert_eq!(back.theta[1].to_bits(), f32::NAN.to_bits());
+    assert_eq!(back.theta[3], f32::INFINITY);
+    assert_eq!(back.theta[4], f32::NEG_INFINITY);
 }
 
 #[test]
